@@ -1,0 +1,127 @@
+//! End-to-end embodied-captioning driver — the full system on a real
+//! workload (DESIGN.md "end-to-end validation" deliverable).
+//!
+//! Loads the trained BLIP-2-like captioner, serves a Poisson request
+//! stream through the complete coordinator (router → scheduler → batcher →
+//! quantized agent encoder → simulated 5 GHz WLAN → server decoder), for
+//! all four design algorithms, and reports CIDEr / simulated delay &
+//! energy / wall-clock throughput per algorithm.
+//!
+//!   cargo run --release --example embodied_captioning [-- --requests 64]
+
+use qaci::bench_harness::Table;
+use qaci::coordinator::batcher::BatcherConfig;
+use qaci::coordinator::engine::{Engine, EngineConfig};
+use qaci::coordinator::router::{QosPolicy, Router};
+use qaci::coordinator::scheduler::{Algorithm, Scheduler};
+use qaci::data::eval::EvalSet;
+use qaci::data::vocab::Vocab;
+use qaci::data::workload::{generate, Arrival};
+use qaci::quant::Scheme;
+use qaci::rl::env::BudgetRanges;
+use qaci::rl::PpoConfig;
+use qaci::runtime::executor::CoModel;
+use qaci::runtime::Registry;
+use qaci::system::channel::Channel;
+use qaci::system::Platform;
+use qaci::util::cli::Args;
+use qaci::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let n_requests = args.usize("requests", 48);
+    let reg = Registry::open(&qaci::artifacts_dir())?;
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco")?;
+    let vocab = Vocab::from_manifest(&reg.manifest)?;
+    let mut model = CoModel::load(&reg, "blip2ish")?;
+    let platform = Platform::paper_blip2()
+        .with_workload(model.agent_flops, model.server_flops);
+    let lambda = model.agent_weights.lambda;
+
+    // QoS budgets scaled to this platform's measured FLOPs: interactive is
+    // delay-tight, background is energy-tight
+    let t_scale = platform.min_delay(16.0);
+    let e_ref = qaci::system::energy::total_energy(
+        &platform, 8.0, platform.device.f_max / 2.0, platform.server.f_max / 2.0);
+    let policy = QosPolicy::new(&[
+        ("interactive", 1.2 * t_scale, 8.0 * e_ref),
+        ("standard", 2.0 * t_scale, 2.0 * e_ref),
+        ("background", 6.0 * t_scale, 0.5 * e_ref),
+    ]);
+
+    println!(
+        "embodied captioning: {} requests over {} eval scenes, λ={lambda:.1}",
+        n_requests,
+        eval.len()
+    );
+    let mut table = Table::new(
+        "end-to-end co-inference (BLIP-2-like on COCO-like)",
+        &["algorithm", "CIDEr(x100)", "mean b̂", "sim T p95 [ms]", "sim E mean [mJ]",
+          "wall [req/s]", "QoS viol"],
+    );
+
+    for alg in [
+        Algorithm::Proposed,
+        Algorithm::Ppo,
+        Algorithm::FixedFreq,
+        Algorithm::FeasibleRandom,
+    ] {
+        let mut scheduler =
+            Scheduler::new(platform, lambda, alg, Scheme::Uniform, 11);
+        if alg == Algorithm::Ppo {
+            let ranges = BudgetRanges {
+                t0: (0.8 * t_scale, 7.0 * t_scale),
+                e0: (0.3 * e_ref, 10.0 * e_ref),
+            };
+            scheduler.train_ppo(ranges, PpoConfig::default());
+        }
+        let router = Router::new(policy.clone(), scheduler);
+        let requests = generate(
+            n_requests,
+            eval.len(),
+            Arrival::Poisson { lambda_rps: 100.0 },
+            17,
+        );
+        let mut engine = Engine::new(
+            &mut model,
+            router,
+            &vocab,
+            &eval,
+            Channel::wlan_5ghz(5),
+            EngineConfig { batcher: BatcherConfig { max_batch: 4, max_wait_s: 0.02 } },
+        );
+        let sw = Stopwatch::start();
+        let telemetry = engine.run(requests)?;
+        let wall = sw.elapsed_s();
+
+        let mean_bits: f64 = telemetry.records.iter().map(|r| r.b_hat as f64).sum::<f64>()
+            / telemetry.len().max(1) as f64;
+        let mut delays = qaci::util::timer::Samples::new();
+        for r in &telemetry.records {
+            delays.push(r.t_sim_total() * 1e3);
+        }
+        table.row(&[
+            format!("{} ({} rejected)", alg.name(), telemetry.rejected),
+            format!("{:.1}", telemetry.cider_x100(&eval.refs)),
+            format!("{mean_bits:.1}"),
+            format!("{:.2}", delays.p95()),
+            format!("{:.3}", telemetry.total_energy_j() / telemetry.len().max(1) as f64 * 1e3),
+            format!("{:.1}", telemetry.len() as f64 / wall),
+            format!("{}", telemetry.qos_violations()),
+        ]);
+    }
+    table.print();
+
+    // show a few captions from the proposed configuration
+    println!("\nsample captions (proposed design, standard class):");
+    let mut scheduler =
+        Scheduler::new(platform, lambda, Algorithm::Proposed, Scheme::Uniform, 11);
+    let (t0, e0) = policy.budget("standard").unwrap();
+    let plan = scheduler.plan(t0, e0).unwrap();
+    for i in 0..4.min(eval.len()) {
+        let toks = model.infer(eval.sample(i), 1, plan.design.b_hat, Scheme::Uniform)?;
+        println!("  scene {i}: \"{}\"", vocab.detokenize(&toks[0]));
+        println!("      ref: \"{}\"", eval.refs[i][0]);
+    }
+    Ok(())
+}

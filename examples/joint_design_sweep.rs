@@ -1,0 +1,109 @@
+//! Joint-design sweep: how the chosen bit-width, frequencies and the
+//! rate–distortion objective move across (T0, E0) budgets, for the
+//! proposed design vs every baseline — the optimizer in isolation, no
+//! model execution (fast).
+//!
+//!   cargo run --release --example joint_design_sweep
+
+use qaci::bench_harness::Table;
+use qaci::opt::{bisection, feasible_random, fixed_freq, sca, Problem};
+use qaci::system::Platform;
+
+const LAMBDA: f64 = 15.0;
+
+fn fmt_design(d: Option<qaci::opt::Design>) -> (String, String) {
+    match d {
+        Some(d) => (
+            format!("{}", d.b_hat),
+            format!("{:.2}/{:.2}", d.f / 1e9, d.f_tilde / 1e9),
+        ),
+        None => ("--".into(), "infeasible".into()),
+    }
+}
+
+fn main() {
+    let platform = Platform::paper_blip2();
+    println!(
+        "platform: paper BLIP-2 (N={:.1} GFLOP, Ñ={:.1} GFLOP, λ={LAMBDA})",
+        platform.n_flop_agent / 1e9,
+        platform.n_flop_server / 1e9
+    );
+
+    // delay sweep at fixed E0 = 2 J (Fig. 5-left shape)
+    let mut t = Table::new(
+        "delay sweep @ E0 = 2.0 J",
+        &["T0 [s]", "proposed b̂", "f/f̃ [GHz]", "exact b̂", "fixed-freq b̂",
+          "rand mean gap", "proposed gap"],
+    );
+    for t0 in [2.50, 2.75, 3.00, 3.25, 3.50, 3.75, 4.00] {
+        let prob = Problem::new(platform, LAMBDA, t0, 2.0);
+        let proposed = sca::solve(&prob, sca::ScaOptions::default());
+        let (b_str, f_str) = fmt_design(proposed.as_ref().map(|r| r.design));
+        let exact = bisection::solve(&prob);
+        let ff = fixed_freq::solve(&prob);
+        let rand_gap = feasible_random::mean_objective(&prob, 400, 42)
+            .map(|g| format!("{g:.2e}"))
+            .unwrap_or_else(|| "--".into());
+        t.row(&[
+            format!("{t0:.2}"),
+            b_str,
+            f_str,
+            exact.map(|e| e.design.b_hat.to_string()).unwrap_or("--".into()),
+            ff.map(|d| d.b_hat.to_string()).unwrap_or("--".into()),
+            rand_gap,
+            proposed
+                .map(|r| format!("{:.2e}", r.objective))
+                .unwrap_or_else(|| "--".into()),
+        ]);
+    }
+    t.print();
+
+    // energy sweep at fixed T0 = 3.5 s (Fig. 5-right shape)
+    let mut t = Table::new(
+        "energy sweep @ T0 = 3.5 s",
+        &["E0 [J]", "proposed b̂", "f/f̃ [GHz]", "exact b̂", "fixed-freq b̂",
+          "rand mean gap", "proposed gap"],
+    );
+    for e0 in [0.50, 1.00, 1.50, 2.00, 2.50, 3.00, 4.00] {
+        let prob = Problem::new(platform, LAMBDA, 3.5, e0);
+        let proposed = sca::solve(&prob, sca::ScaOptions::default());
+        let (b_str, f_str) = fmt_design(proposed.as_ref().map(|r| r.design));
+        let exact = bisection::solve(&prob);
+        let ff = fixed_freq::solve(&prob);
+        let rand_gap = feasible_random::mean_objective(&prob, 400, 42)
+            .map(|g| format!("{g:.2e}"))
+            .unwrap_or_else(|| "--".into());
+        t.row(&[
+            format!("{e0:.2}"),
+            b_str,
+            f_str,
+            exact.map(|e| e.design.b_hat.to_string()).unwrap_or("--".into()),
+            ff.map(|d| d.b_hat.to_string()).unwrap_or("--".into()),
+            rand_gap,
+            proposed
+                .map(|r| format!("{:.2e}", r.objective))
+                .unwrap_or_else(|| "--".into()),
+        ]);
+    }
+    t.print();
+
+    // sensitivity to model statistics (Remark 4.1: λ drives the bound)
+    let mut t = Table::new(
+        "λ sensitivity @ (T0=3.5, E0=2.0): same design, different distortion",
+        &["λ", "b̂*", "D^U(b̂-1)", "D^L(b̂-1)", "gap"],
+    );
+    for lambda in [2.0, 5.0, 15.0, 50.0, 150.0] {
+        let prob = Problem::new(platform, lambda, 3.5, 2.0);
+        if let Some(r) = bisection::solve(&prob) {
+            let rate = r.design.b_hat as f64 - 1.0;
+            t.row(&[
+                format!("{lambda:.0}"),
+                r.design.b_hat.to_string(),
+                format!("{:.3e}", qaci::theory::rate_distortion::d_upper(rate, lambda)),
+                format!("{:.3e}", qaci::theory::rate_distortion::d_lower(rate, lambda)),
+                format!("{:.3e}", r.objective),
+            ]);
+        }
+    }
+    t.print();
+}

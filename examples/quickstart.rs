@@ -1,0 +1,57 @@
+//! Quickstart: load the artifacts, run one quantization-aware co-inference
+//! round trip, and print what the joint design decided.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use qaci::coordinator::scheduler::{Algorithm, Scheduler};
+use qaci::data::eval::EvalSet;
+use qaci::data::vocab::Vocab;
+use qaci::quant::Scheme;
+use qaci::runtime::executor::CoModel;
+use qaci::runtime::Registry;
+use qaci::system::Platform;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the AOT bundle (HLO text + trained weights + eval data)
+    let reg = Registry::open(&qaci::artifacts_dir())?;
+    let mut model = CoModel::load(&reg, "blip2ish")?;
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco")?;
+    let vocab = Vocab::from_manifest(&reg.manifest)?;
+    println!(
+        "loaded {}: agent {} params (λ={:.1}), server {} params",
+        model.name,
+        model.agent_weights.n_params(),
+        model.agent_weights.lambda,
+        model.server_weights.n_params()
+    );
+
+    // 2. joint quantization/computation design for a QoS budget
+    let platform = Platform::paper_blip2()
+        .with_workload(model.agent_flops, model.server_flops);
+    let mut scheduler = Scheduler::new(
+        platform,
+        model.agent_weights.lambda,
+        Algorithm::Proposed,
+        Scheme::Uniform,
+        0,
+    );
+    let (t0, e0) = (0.05, 0.01); // budgets scaled to this tiny testbed
+    let plan = scheduler
+        .plan(t0, e0)
+        .expect("budget should be feasible");
+    println!(
+        "joint design @ (T0={t0}s, E0={e0}J): b̂={} bits, f={:.2} GHz, f̃={:.2} GHz",
+        plan.design.b_hat,
+        plan.design.f / 1e9,
+        plan.design.f_tilde / 1e9
+    );
+
+    // 3. run the co-inference pipeline at the planned bit-width and at
+    //    full precision, and compare
+    for (label, bits) in [("planned", plan.design.b_hat), ("full-precision", 32)] {
+        let tokens = model.infer(eval.sample(0), 1, bits, Scheme::Uniform)?;
+        println!("{label:>16} ({bits:>2} bits): \"{}\"", vocab.detokenize(&tokens[0]));
+    }
+    println!("reference: \"{}\"", eval.refs[0][0]);
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Testbed-profile demo (the Table-I scenario): coarse low/medium/high
+//! DVFS profiles instead of continuous frequency control, contrasting the
+//! delay-limited regime (higher profile wins) with the energy-limited
+//! regime (lower profile wins) — on real co-inference runs.
+//!
+//!   cargo run --release --example testbed_profiles
+
+use qaci::bench_harness::Table;
+use qaci::coordinator::engine::{Engine, EngineConfig};
+use qaci::coordinator::router::{QosPolicy, Router};
+use qaci::coordinator::scheduler::{Algorithm, Scheduler};
+use qaci::data::eval::EvalSet;
+use qaci::data::vocab::Vocab;
+use qaci::data::workload::{generate, Arrival};
+use qaci::opt::Problem;
+use qaci::quant::Scheme;
+use qaci::runtime::executor::CoModel;
+use qaci::runtime::Registry;
+use qaci::system::channel::Channel;
+use qaci::system::dvfs::Governor;
+use qaci::system::Platform;
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::open(&qaci::artifacts_dir())?;
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco")?;
+    let vocab = Vocab::from_manifest(&reg.manifest)?;
+    let mut model = CoModel::load(&reg, "blip2ish")?;
+    let lambda = model.agent_weights.lambda;
+    // Jetson-Orin-like testbed silicon, this repo's measured workloads
+    let platform = Platform::testbed(model.agent_flops, model.server_flops);
+
+    // budget anchors: knife-edge around the HIGH profile's full-precision
+    // threshold (delay) and a low-profile mid-bit energy point — the same
+    // calibration as the table1_testbed bench
+    let t_ref = {
+        let mut p = platform;
+        p.device.f_max = Governor::jetson_profiles().profile("high").unwrap();
+        p.min_delay(p.b_max as f64)
+    };
+    let e_ref = qaci::system::energy::total_energy(
+        &platform,
+        8.0,
+        Governor::jetson_profiles().profile("low").unwrap(),
+        platform.server.f_max / 2.0,
+    );
+
+    println!("testbed: Jetson-AGX-Orin-like device with coarse DVFS profiles");
+    let mut table = Table::new(
+        "CIDEr(x100) under coarse frequency profiles (Table-I shape)",
+        &["profile", "delay-limited", "energy-limited"],
+    );
+
+    for profile in ["low", "medium", "high"] {
+        let dev_gov = Governor::jetson_profiles();
+        let f_dev = dev_gov.profile(profile).unwrap();
+        let mut row = vec![profile.to_string()];
+        for (t0, e0, label) in [
+            (1.0 * t_ref, 1e6 * e_ref, "delay-limited"),
+            (1e6 * t_ref, 1.0 * e_ref, "energy-limited"),
+        ] {
+            let _ = label;
+            // pin the device to this profile by capping f_max; the design
+            // then optimizes the bit-width + server frequency around it
+            let mut p = platform;
+            p.device.f_max = f_dev;
+            let problem = Problem::new(p, lambda, t0, e0);
+            // pinned-frequency planning: use the planner but force f=f_dev
+            // by making it the only choice
+            let mut scheduler =
+                Scheduler::new(p, lambda, Algorithm::Exact, Scheme::Uniform, 3)
+                    .with_governors(
+                        Governor::Profiles { points: vec![f_dev] },
+                        Governor::server_profiles(),
+                    );
+            match scheduler.plan(t0, e0) {
+                None => row.push("infeasible".into()),
+                Some(_) => {
+                    let router =
+                        Router::new(QosPolicy::uniform(t0, e0), scheduler);
+                    let mut engine = Engine::new(
+                        &mut model,
+                        router,
+                        &vocab,
+                        &eval,
+                        Channel::wlan_5ghz(7),
+                        EngineConfig::default(),
+                    );
+                    let t = engine.run(generate(24, eval.len(), Arrival::Batch, 9))?;
+                    let bits = t.records.iter().map(|r| r.b_hat as f64).sum::<f64>()
+                        / t.len().max(1) as f64;
+                    row.push(format!(
+                        "{:.1} (b̂≈{:.0})",
+                        t.cider_x100(&eval.refs),
+                        bits
+                    ));
+                }
+            }
+            let _ = problem;
+        }
+        table.row(&row);
+    }
+    table.print();
+    println!(
+        "\nexpected shape (paper Table I): the high profile wins when delay-\n\
+         limited (more frequency => more bits fit the deadline); the low\n\
+         profile wins when energy-limited (f² energy forces fewer bits at\n\
+         high frequency)."
+    );
+    Ok(())
+}

@@ -1,0 +1,3 @@
+# Build-time compile path: JAX models + Pallas kernels + AOT lowering.
+# Nothing in this package is imported at runtime; the Rust coordinator
+# consumes only the files under artifacts/.

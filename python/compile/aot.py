@@ -1,0 +1,334 @@
+"""AOT pipeline: train -> lower -> serialize artifacts for the Rust runtime.
+
+Interchange format is **HLO text** (never ``lowered.compile().serialize()``):
+the xla crate's bundled xla_extension 0.5.1 rejects jax>=0.5 serialized
+HloModuleProtos (64-bit instruction ids); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs (all under --out, default ../artifacts):
+  *.hlo.txt            lowered modules (agent/server per model, fcdnn, quant)
+  *_weights.bin        trained parameters, f32 LE, concatenated in spec order
+  coco_eval.bin etc.   deterministic eval inputs
+  golden.json          end-to-end golden vectors for Rust integration tests
+  manifest.json        ties everything together (written LAST = build stamp)
+
+Run: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, model, train
+from .kernels import quantize
+from .model import BLIP2ISH, GITISH, ModelConfig
+
+QUANT_ROWS = 2048  # quant artifacts operate on fixed (2048, 128) chunks
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_with_params(fn, spec, params, *example_inputs):
+    """Lower fn(*inputs, *weights-in-spec-order) to HLO text."""
+    names = [n for n, _ in spec]
+
+    def flat_fn(*args):
+        inputs = args[: len(example_inputs)]
+        ws = dict(zip(names, args[len(example_inputs):]))
+        return (fn(inputs, ws),)
+
+    weight_args = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32)
+                   for n in names]
+    lowered = jax.jit(flat_fn).lower(*example_inputs, *weight_args)
+    return to_hlo_text(lowered)
+
+
+def write_weights(path, spec, params):
+    """Concatenate parameters (spec order) into one f32 LE blob."""
+    blob = np.concatenate(
+        [np.asarray(params[n], np.float32).reshape(-1) for n, _ in spec])
+    blob.astype("<f4").tofile(path)
+    return blob.size
+
+
+def fit_lambda(params, spec):
+    """MLE of the exponential magnitude model (paper eq. 3): 1/mean(|w|).
+
+    LayerNorm gains/biases are excluded — they are not quantized (they sit
+    at ~1/~0 by construction and are a negligible parameter fraction).
+    """
+    mags = np.concatenate([
+        np.abs(np.asarray(params[n], np.float32)).reshape(-1)
+        for n, _ in spec if not (n.endswith(".g") or n.endswith(".b"))
+    ])
+    return float(1.0 / max(mags.mean(), 1e-12)), int(mags.size)
+
+
+# ---------------------------------------------------------------------------
+# per-model artifact emission
+# ---------------------------------------------------------------------------
+
+def emit_captioner(cfg: ModelConfig, params, out, manifest, batches=(1, 4)):
+    enc_spec = model.encoder_param_spec(cfg)
+    dec_spec = model.decoder_param_spec(cfg)
+    H = cfg.frames * cfg.image_hw
+
+    def agent_fn(inputs, ws):
+        (img,) = inputs
+        enc1 = lambda im: model.encode(ws, im, cfg, use_pallas=True)
+        return jax.vmap(enc1)(img)
+
+    def server_fn(inputs, ws):
+        (emb,) = inputs
+        dec1 = lambda e: model.greedy_decode(ws, e, cfg, use_pallas=True)
+        return jax.vmap(dec1)(emb)
+
+    entry = {"agent": {}, "server": {}}
+    for b in batches:
+        img = jax.ShapeDtypeStruct((b, H, cfg.image_hw, 3), jnp.float32)
+        name = f"{cfg.name}_agent_b{b}.hlo.txt"
+        with open(os.path.join(out, name), "w") as f:
+            f.write(lower_with_params(agent_fn, enc_spec, params, img))
+        entry["agent"].setdefault("hlo", {})[str(b)] = name
+
+        emb = jax.ShapeDtypeStruct((b, cfg.emb_tokens, cfg.d_model),
+                                   jnp.float32)
+        name = f"{cfg.name}_server_b{b}.hlo.txt"
+        with open(os.path.join(out, name), "w") as f:
+            f.write(lower_with_params(server_fn, dec_spec, params, emb))
+        entry["server"].setdefault("hlo", {})[str(b)] = name
+
+    for side, spec in (("agent", enc_spec), ("server", dec_spec)):
+        wname = f"{cfg.name}_{side}_weights.bin"
+        n = write_weights(os.path.join(out, wname), spec, params)
+        lam, nq = fit_lambda(params, spec)
+        entry[side].update({
+            "weights": wname,
+            "total_f32": n,
+            "params": [{"name": nm, "shape": list(sh)} for nm, sh in spec],
+            "lambda": lam,
+            "quantizable_f32": nq,
+        })
+    entry["agent"]["flops"] = model.encoder_flops(cfg)
+    entry["server"]["flops"] = model.decoder_flops(cfg)
+    entry["config"] = {
+        "image_hw": cfg.image_hw, "patch": cfg.patch, "frames": cfg.frames,
+        "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+        "n_enc_layers": cfg.n_enc_layers, "n_dec_layers": cfg.n_dec_layers,
+        "n_query": cfg.n_query, "use_bridge": cfg.use_bridge,
+        "vocab": cfg.vocab, "max_len": cfg.max_len,
+        "emb_tokens": cfg.emb_tokens, "input_shape": [H, cfg.image_hw, 3],
+        "batches": list(batches),
+    }
+    manifest["models"][cfg.name] = entry
+
+
+def emit_fcdnn(params, out, manifest, batch=8):
+    spec = model.fcdnn_param_spec()
+
+    def fn(inputs, ws):
+        (x,) = inputs
+        return model.fcdnn_forward(ws, x, use_pallas=True)
+
+    x = jax.ShapeDtypeStruct((batch, 784), jnp.float32)
+    hlo = f"fcdnn16_b{batch}.hlo.txt"
+    with open(os.path.join(out, hlo), "w") as f:
+        f.write(lower_with_params(fn, spec, params, x))
+    wname = "fcdnn16_weights.bin"
+    n = write_weights(os.path.join(out, wname), spec, params)
+    lam, nq = fit_lambda(params, spec)
+    manifest["models"]["fcdnn16"] = {
+        "hlo": {str(batch): hlo}, "weights": wname, "total_f32": n,
+        "params": [{"name": nm, "shape": list(sh)} for nm, sh in spec],
+        "lambda": lam, "quantizable_f32": nq, "batch": batch,
+        "dims": model.FCDNN_DIMS, "flops": model.fcdnn_flops(),
+    }
+
+
+def emit_quant(out, manifest):
+    """Pallas fake-quant kernels as standalone artifacts: the Rust quantizer
+    cross-checks its native implementation against these (same HLO the
+    models could embed on a real deployment)."""
+    wbuf = jax.ShapeDtypeStruct((QUANT_ROWS, 128), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    lowered = jax.jit(
+        lambda w, s: (quantize.fake_quant_uniform(w, s),)
+    ).lower(wbuf, scalar)
+    with open(os.path.join(out, "quant_uniform.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(
+        lambda w, lo, hi: (quantize.fake_quant_pot(w, lo, hi),)
+    ).lower(wbuf, scalar, scalar)
+    with open(os.path.join(out, "quant_pot.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    manifest["quant"] = {
+        "rows": QUANT_ROWS, "lanes": 128,
+        "uniform": "quant_uniform.hlo.txt", "pot": "quant_pot.hlo.txt",
+    }
+
+
+def emit_eval_sets(out, manifest, n_coco=64, n_vatex=32, seed=7):
+    coco_x, coco_refs = datagen.dataset("image", n_coco, seed=seed)
+    vatex_x, vatex_refs = datagen.dataset("video", n_vatex, seed=seed + 1)
+    coco_x.astype("<f4").tofile(os.path.join(out, "coco_eval.bin"))
+    vatex_x.astype("<f4").tofile(os.path.join(out, "vatex_eval.bin"))
+    manifest["eval"] = {
+        "coco": {"inputs": "coco_eval.bin",
+                 "shape": [n_coco, 32, 32, 3], "refs": coco_refs},
+        "vatex": {"inputs": "vatex_eval.bin",
+                  "shape": [n_vatex, 4, 32, 32, 3], "refs": vatex_refs},
+    }
+
+
+def load_param_cache(out, name):
+    """Load cached trained parameters ({out}/{name}_params.npz) if present."""
+    path = os.path.join(out, f"{name}_params.npz")
+    if not os.path.exists(path):
+        return None
+    data = np.load(path)
+    return {k: jnp.asarray(data[k]) for k in data.files}
+
+
+def save_param_cache(out, name, params):
+    np.savez(os.path.join(out, f"{name}_params.npz"),
+             **{k: np.asarray(v) for k, v in params.items()})
+
+
+def emit_golden(out, manifest, all_params):
+    """End-to-end golden vectors (pallas path, batch 1) for Rust tests.
+
+    Inputs that Rust cannot regenerate (numpy RNG streams) are shipped as
+    .bin files next to golden.json.
+    """
+    golden = {}
+    rng = np.random.default_rng(42)
+
+    for cfg in (BLIP2ISH, GITISH):
+        params = all_params[cfg.name]
+        kind = "image" if cfg.frames == 1 else "video"
+        xs, _ = datagen.dataset(kind, 1, seed=7 if kind == "image" else 8)
+        img = jnp.asarray(xs[0].reshape(cfg.frames * cfg.image_hw,
+                                        cfg.image_hw, 3))
+        emb = model.encode(params, img, cfg, use_pallas=True)
+        toks = model.greedy_decode(params, emb, cfg, use_pallas=True)
+        golden[cfg.name] = {
+            "emb_l1": float(jnp.abs(emb).sum()),
+            "emb_first8": [float(v) for v in np.asarray(emb).reshape(-1)[:8]],
+            "tokens": [int(t) for t in np.asarray(toks)],
+            "caption": datagen.detokenize(datagen.make_vocab(),
+                                          [int(t) for t in np.asarray(toks)]),
+        }
+
+    params = all_params["fcdnn16"]
+    x_np = rng.normal(0, 0.5, (8, 784)).astype(np.float32)
+    x_np.astype("<f4").tofile(os.path.join(out, "golden_fcdnn_input.bin"))
+    x = jnp.asarray(x_np)
+    y = model.fcdnn_forward(params, x, use_pallas=True)
+    golden["fcdnn16"] = {
+        "input": "golden_fcdnn_input.bin",
+        "out_l1": float(jnp.abs(y).sum()),
+        "out_first8": [float(v) for v in np.asarray(y).reshape(-1)[:8]],
+    }
+
+    w_np = rng.normal(0, 0.1, (QUANT_ROWS, 128)).astype(np.float32)
+    w_np.astype("<f4").tofile(os.path.join(out, "golden_quant_input.bin"))
+    w = jnp.asarray(w_np)
+    qu = quantize.fake_quant_uniform(w, 0.05)
+    qp = quantize.fake_quant_pot(w, -6.0, 0.0)
+    golden["quant"] = {
+        "input": "golden_quant_input.bin",
+        "buf_l1": float(jnp.abs(w).sum()),
+        "uniform_step": 0.05,
+        "uniform_l1": float(jnp.abs(qu).sum()),
+        "pot_emin": -6.0, "pot_emax": 0.0,
+        "pot_l1": float(jnp.abs(qp).sum()),
+    }
+    with open(os.path.join(out, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    manifest["golden"] = "golden.json"
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--blip2-steps", type=int, default=2600)
+    ap.add_argument("--git-steps", type=int, default=2000)
+    ap.add_argument("--fcdnn-steps", type=int, default=800)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--retrain", action="store_true",
+                    help="ignore cached trained weights")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    manifest = {"version": 1, "models": {}, "vocab": datagen.make_vocab(),
+                "special_tokens": {"pad": 0, "bos": 1, "eos": 2, "unk": 3}}
+
+    def fit(name, trainer):
+        if not args.retrain:
+            cached = load_param_cache(out, name)
+            if cached is not None:
+                print(f"== {name}: using cached weights ==", flush=True)
+                return cached, None  # loss unknown: weights reused
+        print(f"== training {name} ==", flush=True)
+        params, loss = trainer()
+        save_param_cache(out, name, params)
+        return params, loss
+
+    blip_params, blip_loss = fit(
+        "blip2ish",
+        lambda: train.train_captioner(BLIP2ISH, steps=args.blip2_steps,
+                                      seed=args.seed))
+    git_params, git_loss = fit(
+        "gitish",
+        lambda: train.train_captioner(GITISH, steps=args.git_steps, batch=24,
+                                      seed=args.seed))
+    fc_params, fc_loss = fit(
+        "fcdnn16",
+        lambda: train.train_fcdnn(steps=args.fcdnn_steps, seed=args.seed))
+    manifest["train"] = {"blip2ish_loss": blip_loss, "gitish_loss": git_loss,
+                         "fcdnn16_mse": fc_loss, "seed": args.seed}
+
+    print("== lowering HLO ==", flush=True)
+    emit_captioner(BLIP2ISH, blip_params, out, manifest)
+    emit_captioner(GITISH, git_params, out, manifest)
+    emit_fcdnn(fc_params, out, manifest)
+    emit_quant(out, manifest)
+    emit_eval_sets(out, manifest)
+    print("== golden vectors ==", flush=True)
+    emit_golden(out, manifest, {
+        "blip2ish": blip_params, "gitish": git_params, "fcdnn16": fc_params})
+
+    manifest["build_seconds"] = round(time.time() - t0, 1)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts written to {out} in {manifest['build_seconds']}s")
+
+
+if __name__ == "__main__":
+    main()

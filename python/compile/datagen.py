@@ -1,0 +1,231 @@
+"""Synthetic captioning corpora (MS-COCO / VaTeX stand-ins).
+
+The paper evaluates on MS-COCO (image captioning, 5 refs/image) and VaTeX
+(video captioning, 4 uniformly sampled frames).  Neither is available in
+this offline environment, so we build a seeded scene-grammar generator that
+preserves what the experiments actually exercise (DESIGN.md §5):
+
+* images contain compositional content (colored object glyphs in spatial
+  relations) a small ViT can genuinely learn to describe;
+* each sample carries multiple human-like paraphrase references, so the
+  CIDEr consensus metric behaves as on COCO;
+* videos are 4-frame clips whose caption requires temporal reasoning (the
+  motion direction is only visible across frames).
+
+Everything is deterministic in the seed; the Rust side re-creates the same
+eval split from artifacts/ rather than regenerating.
+"""
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# grammar
+# ---------------------------------------------------------------------------
+
+COLORS = ["red", "blue", "green", "yellow", "purple", "orange"]
+OBJECTS = ["ball", "box", "robot", "cup", "tree", "car", "dog", "chair"]
+RELATIONS = ["left of", "right of", "above", "below", "near"]
+DIRECTIONS = ["left", "right", "up", "down"]
+
+IMG_TEMPLATES = [
+    "a {c1} {o1} is {rel} a {c2} {o2}",
+    "the {c1} {o1} sits {rel} the {c2} {o2}",
+    "there is a {c1} {o1} {rel} a {c2} {o2}",
+    "a {c1} {o1} stands {rel} a {c2} {o2}",
+    "one {c1} {o1} rests {rel} a {c2} {o2}",
+]
+
+VID_TEMPLATES = [
+    "a {c1} {o1} moving {d} near a {c2} {o2}",
+    "the {c1} {o1} moves {d} past the {c2} {o2}",
+    "a {c1} {o1} is going {d} near a {c2} {o2}",
+    "one {c1} {o1} drifts {d} past a {c2} {o2}",
+    "the {c1} {o1} travels {d} near a {c2} {o2}",
+]
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<unk>"]
+
+
+def make_vocab():
+    """Deterministic word list covering the full grammar."""
+    words = set()
+    for t in IMG_TEMPLATES + VID_TEMPLATES:
+        for w in t.split():
+            if not w.startswith("{"):
+                words.add(w)
+    words.update(COLORS)
+    words.update(OBJECTS)
+    words.update(DIRECTIONS)
+    for r in RELATIONS:
+        words.update(r.split())
+    return SPECIALS + sorted(words)
+
+
+def tokenize(vocab, sentence, max_len):
+    idx = {w: i for i, w in enumerate(vocab)}
+    ids = [BOS] + [idx.get(w, UNK) for w in sentence.split()] + [EOS]
+    assert len(ids) <= max_len, f"caption too long: {sentence!r}"
+    return ids + [PAD] * (max_len - len(ids))
+
+
+def detokenize(vocab, ids):
+    out = []
+    for t in ids:
+        if t == EOS:
+            break
+        if t in (PAD, BOS):
+            continue
+        out.append(vocab[t] if 0 <= t < len(vocab) else "<unk>")
+    return " ".join(out)
+
+
+# ---------------------------------------------------------------------------
+# rendering
+# ---------------------------------------------------------------------------
+
+COLOR_RGB = {
+    "red": (0.9, 0.15, 0.1), "blue": (0.1, 0.2, 0.9),
+    "green": (0.1, 0.8, 0.2), "yellow": (0.9, 0.85, 0.1),
+    "purple": (0.6, 0.15, 0.8), "orange": (0.95, 0.55, 0.1),
+}
+
+
+def _glyph(obj):
+    """8x8 binary silhouette per object class — shape is the only cue that
+    distinguishes objects, so the encoder must learn it."""
+    g = np.zeros((8, 8), np.float32)
+    if obj == "ball":
+        yy, xx = np.mgrid[0:8, 0:8]
+        g[(yy - 3.5) ** 2 + (xx - 3.5) ** 2 <= 10] = 1
+    elif obj == "box":
+        g[1:7, 1:7] = 1
+    elif obj == "robot":
+        g[3:8, 1:7] = 1
+        g[0:3, 3:5] = 1            # antenna head
+    elif obj == "cup":
+        g[2:7, 1:3] = 1
+        g[2:7, 5:7] = 1
+        g[5:7, 1:7] = 1            # U shape
+    elif obj == "tree":
+        for r in range(5):
+            g[r, 3 - r // 2: 5 + r // 2] = 1
+        g[5:8, 3:5] = 1            # trunk
+    elif obj == "car":
+        g[3:6, 0:8] = 1
+        g[6:8, 1:3] = 1
+        g[6:8, 5:7] = 1            # wheels
+    elif obj == "dog":
+        g[3:7, 1:7] = 1
+        g[1:3, 1:2] = 1            # ear
+        g[4:6, 7:8] = 1            # tail
+    elif obj == "chair":
+        g[0:7, 1:2] = 1
+        g[4:5, 1:7] = 1
+        g[4:8, 6:7] = 1            # L profile
+    else:
+        raise ValueError(obj)
+    return g
+
+
+GLYPHS = {o: _glyph(o) for o in OBJECTS}
+
+
+def _paint(img, obj, color, cy, cx):
+    g = GLYPHS[obj]
+    rgb = COLOR_RGB[color]
+    y0, x0 = int(cy) - 4, int(cx) - 4
+    for dy in range(8):
+        for dx in range(8):
+            if g[dy, dx] > 0:
+                y, x = y0 + dy, x0 + dx
+                if 0 <= y < img.shape[0] and 0 <= x < img.shape[1]:
+                    img[y, x] = rgb
+
+
+def _relation_positions(rel, rng):
+    """Centers (cy1,cx1),(cy2,cx2) consistent with `rel(obj1, obj2)`."""
+    j = lambda: rng.uniform(-2, 2)
+    if rel == "left of":
+        return (16 + j(), 8 + j()), (16 + j(), 24 + j())
+    if rel == "right of":
+        return (16 + j(), 24 + j()), (16 + j(), 8 + j())
+    if rel == "above":
+        return (8 + j(), 16 + j()), (24 + j(), 16 + j())
+    if rel == "below":
+        return (24 + j(), 16 + j()), (8 + j(), 16 + j())
+    # near: diagonal adjacency
+    return (12 + j(), 12 + j()), (20 + j(), 20 + j())
+
+
+def render_scene(scene, rng, noise=0.02):
+    """scene: dict(c1,o1,rel,c2,o2) -> (32, 32, 3) f32 image."""
+    img = np.zeros((32, 32, 3), np.float32) + 0.05
+    (p1, p2) = _relation_positions(scene["rel"], rng)
+    _paint(img, scene["o2"], scene["c2"], *p2)
+    _paint(img, scene["o1"], scene["c1"], *p1)
+    img += rng.normal(0, noise, img.shape).astype(np.float32)
+    return np.clip(img, 0, 1)
+
+
+def render_clip(scene, rng, frames=4, noise=0.02):
+    """Video: obj1 translates along scene['dir']; obj2 static."""
+    d = scene["dir"]
+    vel = {"left": (0, -4), "right": (0, 4), "up": (-4, 0), "down": (4, 0)}[d]
+    start = {"left": (16, 26), "right": (16, 6),
+             "up": (26, 16), "down": (6, 16)}[d]
+    stat = {"left": (6, 10), "right": (26, 22),
+            "up": (6, 6), "down": (26, 26)}[d]
+    clip = np.zeros((frames, 32, 32, 3), np.float32)
+    for t in range(frames):
+        img = np.zeros((32, 32, 3), np.float32) + 0.05
+        _paint(img, scene["o2"], scene["c2"], *stat)
+        cy = start[0] + vel[0] * t + rng.uniform(-1, 1)
+        cx = start[1] + vel[1] * t + rng.uniform(-1, 1)
+        _paint(img, scene["o1"], scene["c1"], cy, cx)
+        img += rng.normal(0, noise, img.shape).astype(np.float32)
+        clip[t] = np.clip(img, 0, 1)
+    return clip
+
+
+# ---------------------------------------------------------------------------
+# samples + datasets
+# ---------------------------------------------------------------------------
+
+def _image_scene(rng):
+    c1, c2 = rng.choice(COLORS, 2, replace=False)
+    o1, o2 = rng.choice(OBJECTS, 2, replace=False)
+    rel = RELATIONS[rng.integers(len(RELATIONS))]
+    return {"c1": c1, "o1": o1, "rel": rel, "c2": c2, "o2": o2}
+
+
+def _video_scene(rng):
+    s = _image_scene(rng)
+    s["dir"] = s["d"] = DIRECTIONS[rng.integers(len(DIRECTIONS))]
+    return s
+
+
+def image_sample(rng):
+    """-> (image (32,32,3), refs: list of 5 caption strings)."""
+    s = _image_scene(rng)
+    refs = [t.format(**s) for t in IMG_TEMPLATES]
+    return render_scene(s, rng), refs
+
+
+def video_sample(rng):
+    """-> (clip (4,32,32,3), refs: list of 5 caption strings)."""
+    s = _video_scene(rng)
+    refs = [t.format(**s) for t in VID_TEMPLATES]
+    return render_clip(s, rng), refs
+
+
+def dataset(kind, n, seed):
+    """Deterministic dataset: (inputs f32 array, list of ref-lists)."""
+    rng = np.random.default_rng(seed)
+    gen = image_sample if kind == "image" else video_sample
+    xs, refs = [], []
+    for _ in range(n):
+        x, r = gen(rng)
+        xs.append(x)
+        refs.append(r)
+    return np.stack(xs), refs

@@ -1,0 +1,6 @@
+# L1 — Pallas kernels for the paper's compute hot-spots.
+#
+# All kernels are authored TPU-shaped (VMEM BlockSpecs, MXU-aligned tiles)
+# but lowered with interpret=True so the emitted HLO runs on any PJRT
+# backend, including the Rust CPU client (see DESIGN.md §4).
+from . import quantize, matmul, attention, layernorm, ref  # noqa: F401

@@ -1,0 +1,55 @@
+"""Fused scaled-dot-product attention as a Pallas kernel.
+
+One grid cell per head; each cell holds the full (lq, dh) / (lk, dh) tiles
+in VMEM (sequence lengths in this system are <= 128, so a head's working
+set is ~lq*lk + 2*lk*dh + lq*dh floats — well under the VMEM budget) and
+fuses QK^T, the numerically stable softmax, and PV into a single pass, the
+TPU analogue of a fused flash-style CUDA attention kernel for short
+sequences.  Causality is compiled in (static) because the mask shape is
+known at trace time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, scale):
+    q = q_ref[0]  # (lq, dh)
+    k = k_ref[0]  # (lk, dh)
+    v = v_ref[0]  # (lk, dh)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        lq, lk = logits.shape
+        # row i may attend to keys 0..i+(lk-lq); expressed with 2-D iotas
+        # (1-D iota is not TPU-legal).
+        rows = jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 1)
+        logits = jnp.where(cols <= rows + (lk - lq), logits, -1e30)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q, k, v, causal=False):
+    """q: (h, lq, dh), k/v: (h, lk, dh) -> (h, lq, dh)."""
+    h, lq, dh = q.shape
+    _, lk, _ = k.shape
+    scale = 1.0 / float(dh) ** 0.5
+    kernel = functools.partial(_attn_kernel, causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, lq, dh), jnp.float32),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, lq, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lk, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lk, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, lq, dh), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,66 @@
+"""Blocked Pallas matmul — the MXU-shaped GEMM used in every model layer.
+
+CUDA->TPU adaptation (DESIGN.md §4): the paper's testbed runs GEMMs on
+tensor cores with shared-memory tiling; here the same schedule is expressed
+as a 3-D grid over (M/bm, N/bn, K/bk) with VMEM BlockSpecs.  The K axis is
+the innermost ("arbitrary" semantics) axis and accumulates into the output
+block, which the index map pins to (i, j) for every k step — the canonical
+Pallas accumulation pattern.  Tiles are capped at 128x128 to match the MXU
+systolic array; f32 accumulation via preferred_element_type.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MXU = 128
+
+
+def _pick_block(dim, cap=MXU):
+    """Largest power-of-two tile <= cap that divides dim (dims here are
+    powers of two or small multiples of 16, so this always terminates)."""
+    b = min(dim, cap)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm=None, bn=None, bk=None):
+    """x: (M, K) f32, y: (K, N) f32 -> (M, N) f32 via blocked Pallas GEMM."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k, cap=512)  # deeper K tiles amortize the loop
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_matmul_kernel, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(bm=MXU, bn=MXU, bk=512, dtype_bytes=4):
+    """VMEM footprint of one grid cell — used by the L1 perf estimate."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,86 @@
+"""Pallas fake-quantization kernels (uniform + power-of-two log).
+
+This is the paper's §II-C quantizer as a TPU kernel: the sign bit of every
+parameter is preserved and only the magnitude is quantized, either on a
+uniform grid [31] or on power-of-two logarithmic levels [32].
+
+TPU shaping: the weight buffer is viewed as (rows, 128) so each block is a
+(ROWS_PER_BLOCK, 128) VMEM tile aligned to the 8x128 VPU lanes; the scalar
+quantizer parameters ride along as (1, 1) operands broadcast to every grid
+cell.  The bit-width is a *runtime* input (encoded as step / emin / emax),
+so one compiled artifact serves every bit-width the Rust scheduler picks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VMEM tile: 8 sublanes x 128 lanes, the native f32 VPU tile.
+LANES = 128
+ROWS_PER_BLOCK = 8
+
+
+def _uniform_kernel(w_ref, step_ref, o_ref):
+    step = step_ref[0, 0]
+    w = w_ref[...]
+    mag = jnp.abs(w)
+    q = jnp.round(mag / jnp.where(step > 0, step, 1.0)) * step
+    q = jnp.where(step > 0, q, mag)
+    o_ref[...] = jnp.sign(w) * q
+
+
+def _pot_kernel(w_ref, emin_ref, emax_ref, o_ref):
+    emin = emin_ref[0, 0]
+    emax = emax_ref[0, 0]
+    w = w_ref[...]
+    mag = jnp.abs(w)
+    safe = jnp.where(mag > 0, mag, 1.0)
+    lg = jnp.log2(safe)
+    e = jnp.clip(jnp.round(lg), emin, emax)
+    q = jnp.exp2(e)
+    q = jnp.where(lg < emin - 0.5, 0.0, q)
+    q = jnp.where(mag > 0, q, 0.0)
+    o_ref[...] = jnp.sign(w) * q
+
+
+def _grid_call(kernel, w, scalars):
+    """Launch `kernel` over a (rows/RPB,) grid of (RPB, LANES) tiles."""
+    rows, lanes = w.shape
+    assert lanes == LANES, f"weight buffer must be (_, {LANES}), got {w.shape}"
+    assert rows % ROWS_PER_BLOCK == 0, f"rows {rows} % {ROWS_PER_BLOCK} != 0"
+    grid = (rows // ROWS_PER_BLOCK,)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_PER_BLOCK, LANES), lambda i: (i, 0))]
+        + [scalar_spec] * len(scalars),
+        out_specs=pl.BlockSpec((ROWS_PER_BLOCK, LANES), lambda i: (i, 0)),
+        interpret=True,
+    )(w, *scalars)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fake_quant_uniform(w, step):
+    """w: (rows, 128) f32; step: scalar f32 -> quantized (rows, 128)."""
+    step2d = jnp.reshape(jnp.asarray(step, jnp.float32), (1, 1))
+    return _grid_call(_uniform_kernel, w, [step2d])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fake_quant_pot(w, emin, emax):
+    """w: (rows, 128) f32; emin/emax: scalar f32 -> quantized (rows, 128)."""
+    emin2d = jnp.reshape(jnp.asarray(emin, jnp.float32), (1, 1))
+    emax2d = jnp.reshape(jnp.asarray(emax, jnp.float32), (1, 1))
+    return _grid_call(_pot_kernel, w, [emin2d, emax2d])
+
+
+def pad_to_buffer(flat, multiple=ROWS_PER_BLOCK * LANES):
+    """Pad a flat f32 vector to a (rows, 128) kernel buffer; returns (buf, n)."""
+    n = flat.shape[0]
+    padded = ((n + multiple - 1) // multiple) * multiple
+    buf = jnp.zeros((padded,), jnp.float32).at[:n].set(flat)
+    return buf.reshape(-1, LANES), n

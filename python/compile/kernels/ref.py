@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest (python/tests) asserts the
+Pallas kernels match these references over hypothesis-driven shape/value
+sweeps, and train.py uses them (they are mathematically identical but much
+faster than interpret-mode Pallas) to fit the model weights that aot.py
+ships to the Rust runtime.
+"""
+
+import jax.numpy as jnp
+
+
+def fake_quant_uniform(w, step):
+    """Sign-preserving uniform fake-quantization (paper §II-C, [31]).
+
+    Magnitudes are snapped to the uniform grid {0, step, 2*step, ...}
+    (round-to-nearest); the sign bit is kept exactly.  ``step`` encodes the
+    bit-width: for magnitude range [0, theta_max] and b quantization bits
+    with one sign bit, step = theta_max / (2**(b-1) - 1).
+
+    step <= 0 is treated as "no quantization" (identity), which is the
+    natural limit step -> 0 and lets a single artifact serve the
+    full-precision case.
+    """
+    step = jnp.asarray(step, w.dtype)
+    mag = jnp.abs(w)
+    q = jnp.round(mag / jnp.where(step > 0, step, 1.0)) * step
+    q = jnp.where(step > 0, q, mag)
+    return jnp.sign(w) * q
+
+
+def fake_quant_pot(w, emin, emax):
+    """Sign-preserving power-of-two logarithmic fake-quantization [32].
+
+    Magnitude levels are {0} U {2^k : emin <= k <= emax}; a magnitude is
+    mapped to the nearest level in the log2 domain and flushed to zero when
+    it falls more than half a (log-domain) step below 2^emin.  emin/emax
+    encode the bit-width: b bits = 1 sign bit + (b-1) magnitude bits giving
+    2^(b-1) - 1 nonzero levels, emax - emin = 2^(b-1) - 2.
+    """
+    emin = jnp.asarray(emin, w.dtype)
+    emax = jnp.asarray(emax, w.dtype)
+    mag = jnp.abs(w)
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.round(jnp.log2(safe))
+    e = jnp.clip(e, emin, emax)
+    q = jnp.exp2(e)
+    # flush-to-zero region: log2|w| < emin - 0.5  (nearest level is 0)
+    q = jnp.where(jnp.log2(safe) < emin - 0.5, 0.0, q)
+    q = jnp.where(mag > 0, q, 0.0)
+    return jnp.sign(w) * q
+
+
+def matmul(x, y):
+    """f32 GEMM oracle for the blocked Pallas matmul."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def attention(q, k, v, causal=False):
+    """Scaled-dot-product attention oracle.
+
+    q: (h, lq, dh), k/v: (h, lk, dh) -> (h, lq, dh).
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        lq, lk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        logits = jnp.where(mask[None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def layernorm(x, gamma, beta, eps=1e-6):
+    """Row LayerNorm oracle. x: (n, d), gamma/beta: (d,)."""
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,332 @@
+"""L2 — JAX model definitions for the co-inference stack.
+
+Three model families, matching the paper's evaluation (§VI):
+
+* ``blip2ish`` — a BLIP-2-shaped image captioner: a ViT patch encoder plus a
+  learned-query bridge runs **on the agent**; a causal transformer decoder
+  with cross-attention runs **on the server**.  The split point is the
+  (n_query, d) embedding, exactly the paper's intermediate feature ``o``.
+* ``gitish``  — a GIT-shaped video captioner: per-frame patch encoding over
+  4 uniformly sampled frames (paper §VI-C), concatenated frame tokens, same
+  decoder structure.
+* ``fcdnn16`` — the 16-layer fully connected autoencoder of §VI-A (encoder
+  dims [64,128,256,512,256,128,64,32], symmetric decoder, ReLU, MSE), used
+  to verify the Prop. 3.1 distortion propagation bound.
+
+Every function takes the parameters as an explicit dict so the lowered HLO
+exposes them as runtime inputs: the Rust side quantizes the weight literals
+per-request (paper §II-A) and feeds them to a single compiled executable —
+no per-bitwidth artifacts.
+
+``use_pallas=True`` routes matmul/attention/layernorm through the L1 Pallas
+kernels (the AOT path); ``use_pallas=False`` uses the mathematically
+identical jnp oracles (the training path — interpret-mode Pallas is far too
+slow to train under).  python/tests asserts the two paths agree.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attention_k
+from .kernels import layernorm as layernorm_k
+from .kernels import matmul as matmul_k
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of a captioner. Defaults: the blip2ish preset."""
+
+    name: str = "blip2ish"
+    image_hw: int = 32          # square input images
+    patch: int = 4              # patch side -> (image_hw/patch)^2 tokens
+    frames: int = 1             # 1 = image model, 4 = video model
+    d_model: int = 128
+    n_heads: int = 4
+    d_mlp: int = 256
+    n_enc_layers: int = 4
+    n_dec_layers: int = 4
+    n_query: int = 16           # learned bridge queries (agent output tokens)
+    use_bridge: bool = True     # blip2ish: Q-Former-ish bridge; gitish: no
+    vocab: int = 128
+    max_len: int = 12           # decoded caption length (incl. BOS)
+
+    @property
+    def tokens_per_frame(self) -> int:
+        return (self.image_hw // self.patch) ** 2
+
+    @property
+    def n_tokens(self) -> int:
+        return self.tokens_per_frame * self.frames
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def emb_tokens(self) -> int:
+        """Number of tokens in the transmitted embedding ``o``."""
+        return self.n_query if self.use_bridge else self.n_tokens
+
+
+BLIP2ISH = ModelConfig()
+# patch=8 keeps the video model at 4x16 = 64 visual tokens (one token per
+# glyph-sized region), matching GIT's "concatenate frame tokens" design at a
+# build-time-trainable size.
+GITISH = ModelConfig(
+    name="gitish", frames=4, patch=8, use_bridge=False,
+    n_enc_layers=3, n_dec_layers=3,
+)
+
+FCDNN_DIMS = [784, 64, 128, 256, 512, 256, 128, 64, 32,
+              64, 128, 256, 512, 256, 128, 64, 784]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs + init
+# ---------------------------------------------------------------------------
+
+def _attn_spec(prefix, d):
+    return [(f"{prefix}.{n}", (d, d)) for n in ("wq", "wk", "wv", "wo")]
+
+
+def _ln_spec(prefix, d):
+    return [(f"{prefix}.g", (d,)), (f"{prefix}.b", (d,))]
+
+
+def _mlp_spec(prefix, d, dm):
+    return [
+        (f"{prefix}.w1", (d, dm)), (f"{prefix}.b1", (dm,)),
+        (f"{prefix}.w2", (dm, d)), (f"{prefix}.b2", (d,)),
+    ]
+
+
+def encoder_param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list for the agent-side parameters."""
+    spec = [
+        ("patch_proj", (cfg.patch_dim, cfg.d_model)),
+        ("pos_emb", (cfg.tokens_per_frame, cfg.d_model)),
+    ]
+    if cfg.frames > 1:
+        spec.append(("frame_emb", (cfg.frames, cfg.d_model)))
+    for i in range(cfg.n_enc_layers):
+        p = f"enc{i}"
+        spec += _ln_spec(f"{p}.ln1", cfg.d_model)
+        spec += _attn_spec(f"{p}.attn", cfg.d_model)
+        spec += _ln_spec(f"{p}.ln2", cfg.d_model)
+        spec += _mlp_spec(f"{p}.mlp", cfg.d_model, cfg.d_mlp)
+    if cfg.use_bridge:
+        spec += [("bridge.queries", (cfg.n_query, cfg.d_model))]
+        spec += _ln_spec("bridge.lnq", cfg.d_model)
+        spec += _attn_spec("bridge.attn", cfg.d_model)
+    spec += _ln_spec("enc_out_ln", cfg.d_model)
+    return spec
+
+
+def decoder_param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list for the server-side parameters."""
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("dec_pos_emb", (cfg.max_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_dec_layers):
+        p = f"dec{i}"
+        spec += _ln_spec(f"{p}.ln1", cfg.d_model)
+        spec += _attn_spec(f"{p}.self", cfg.d_model)
+        spec += _ln_spec(f"{p}.ln2", cfg.d_model)
+        spec += _attn_spec(f"{p}.cross", cfg.d_model)
+        spec += _ln_spec(f"{p}.ln3", cfg.d_model)
+        spec += _mlp_spec(f"{p}.mlp", cfg.d_model, cfg.d_mlp)
+    spec += _ln_spec("dec_out_ln", cfg.d_model)
+    spec += [("out_proj", (cfg.d_model, cfg.vocab))]
+    return spec
+
+
+def fcdnn_param_spec():
+    spec = []
+    for i in range(len(FCDNN_DIMS) - 1):
+        spec += [(f"fc{i}.w", (FCDNN_DIMS[i], FCDNN_DIMS[i + 1])),
+                 (f"fc{i}.b", (FCDNN_DIMS[i + 1],))]
+    return spec
+
+
+def init_params(spec, key, scale=0.02):
+    """He-ish init: normals for matrices, LayerNorm gains at 1, biases 0."""
+    params = {}
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".b", ".b1", ".b2")) and len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = scale if len(shape) == 1 else (2.0 / fan_in) ** 0.5 * 0.7
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# transformer building blocks (kernel-switchable)
+# ---------------------------------------------------------------------------
+
+def _ops(use_pallas):
+    if use_pallas:
+        return matmul_k.matmul, attention_k.attention, layernorm_k.layernorm
+    return ref.matmul, (lambda q, k, v, causal=False: ref.attention(
+        q, k, v, causal=causal)), ref.layernorm
+
+
+def _mha(p, prefix, xq, xkv, cfg, ops, causal=False):
+    """Multi-head attention: xq (lq, d), xkv (lk, d) -> (lq, d)."""
+    mm, attn, _ = ops
+    h, dh = cfg.n_heads, cfg.d_head
+    q = mm(xq, p[f"{prefix}.wq"])
+    k = mm(xkv, p[f"{prefix}.wk"])
+    v = mm(xkv, p[f"{prefix}.wv"])
+    # (l, d) -> (h, l, dh)
+    to_heads = lambda t: t.reshape(t.shape[0], h, dh).transpose(1, 0, 2)
+    o = attn(to_heads(q), to_heads(k), to_heads(v), causal=causal)
+    o = o.transpose(1, 0, 2).reshape(xq.shape[0], cfg.d_model)
+    return mm(o, p[f"{prefix}.wo"])
+
+
+def _mlp(p, prefix, x, ops):
+    mm = ops[0]
+    hdn = jax.nn.gelu(mm(x, p[f"{prefix}.w1"]) + p[f"{prefix}.b1"])
+    return mm(hdn, p[f"{prefix}.w2"]) + p[f"{prefix}.b2"]
+
+
+def _ln(p, prefix, x, ops):
+    return ops[2](x, p[f"{prefix}.g"], p[f"{prefix}.b"])
+
+
+# ---------------------------------------------------------------------------
+# agent-side: encoder  f(x, w_hat) -> o        (paper eq. 1)
+# ---------------------------------------------------------------------------
+
+def patchify(cfg: ModelConfig, image):
+    """(F*)H x W x 3 image -> (n_tokens, patch_dim)."""
+    hw, ps = cfg.image_hw, cfg.patch
+    img = image.reshape(cfg.frames, hw, hw, 3)
+    n = hw // ps
+    x = img.reshape(cfg.frames, n, ps, n, ps, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(cfg.frames * n * n, cfg.patch_dim)
+    return x
+
+
+def encode(params, image, cfg: ModelConfig, use_pallas=True):
+    """Agent-side forward: image (frames*hw, hw, 3) -> embedding o."""
+    ops = _ops(use_pallas)
+    mm = ops[0]
+    x = patchify(cfg, image)
+    x = mm(x, params["patch_proj"])
+    pos = jnp.tile(params["pos_emb"], (cfg.frames, 1))
+    if cfg.frames > 1:
+        pos = pos + jnp.repeat(params["frame_emb"], cfg.tokens_per_frame, 0)
+    x = x + pos
+    for i in range(cfg.n_enc_layers):
+        p = f"enc{i}"
+        x = x + _mha(params, f"{p}.attn", _ln(params, f"{p}.ln1", x, ops),
+                     _ln(params, f"{p}.ln1", x, ops), cfg, ops)
+        x = x + _mlp(params, f"{p}.mlp", _ln(params, f"{p}.ln2", x, ops), ops)
+    if cfg.use_bridge:
+        q = _ln(params, "bridge.lnq", params["bridge.queries"], ops)
+        x = _mha(params, "bridge.attn", q, x, cfg, ops)
+    return _ln(params, "enc_out_ln", x, ops)
+
+
+# ---------------------------------------------------------------------------
+# server-side: decoder  f~(o, v) -> tokens     (paper eq. 2)
+# ---------------------------------------------------------------------------
+
+def decode_logits(params, emb, tokens, cfg: ModelConfig, use_pallas=True):
+    """Teacher-forced decoder forward: logits (max_len, vocab)."""
+    ops = _ops(use_pallas)
+    mm = ops[0]
+    x = jnp.take(params["tok_emb"], tokens, axis=0) + params["dec_pos_emb"]
+    for i in range(cfg.n_dec_layers):
+        p = f"dec{i}"
+        y = _ln(params, f"{p}.ln1", x, ops)
+        x = x + _mha(params, f"{p}.self", y, y, cfg, ops, causal=True)
+        x = x + _mha(params, f"{p}.cross", _ln(params, f"{p}.ln2", x, ops),
+                     emb, cfg, ops)
+        x = x + _mlp(params, f"{p}.mlp", _ln(params, f"{p}.ln3", x, ops), ops)
+    x = _ln(params, "dec_out_ln", x, ops)
+    return mm(x, params["out_proj"])
+
+
+def greedy_decode(params, emb, cfg: ModelConfig, use_pallas=True):
+    """Greedy autoregressive decode: embedding -> token ids (max_len,).
+
+    Each scan step re-runs the full causal forward over the token buffer
+    (max_len is tiny, so this is cheaper than maintaining a KV cache in the
+    lowered HLO) and commits the argmax at the current position.
+    """
+    T = cfg.max_len
+
+    def step(tokens, t):
+        logits = decode_logits(params, emb, tokens, cfg, use_pallas)
+        nxt = jnp.argmax(jax.lax.dynamic_slice(
+            logits, (t, 0), (1, cfg.vocab))[0]).astype(jnp.int32)
+        tokens = jax.lax.dynamic_update_slice(tokens, nxt[None], (t + 1,))
+        return tokens, nxt
+
+    init = jnp.zeros((T,), jnp.int32).at[0].set(BOS)
+    tokens, _ = jax.lax.scan(step, init, jnp.arange(T - 1))
+    return tokens
+
+
+# ---------------------------------------------------------------------------
+# FCDNN-16 (Fig. 3 verification model)
+# ---------------------------------------------------------------------------
+
+def fcdnn_forward(params, x, use_pallas=True):
+    """x: (batch, 784) -> reconstruction (batch, 784). ReLU autoencoder."""
+    mm = _ops(use_pallas)[0]
+    n_layers = len(FCDNN_DIMS) - 1
+    for i in range(n_layers):
+        x = mm(x, params[f"fc{i}.w"]) + params[f"fc{i}.b"]
+        if i < n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOP counts (feeds the paper's delay/energy model, eq. 4-9)
+# ---------------------------------------------------------------------------
+
+def encoder_flops(cfg: ModelConfig) -> int:
+    n, d, dm = cfg.n_tokens, cfg.d_model, cfg.d_mlp
+    per_block = 2 * n * d * d * 4 + 2 * 2 * n * n * d + 2 * n * d * dm * 2
+    total = 2 * n * cfg.patch_dim * d + cfg.n_enc_layers * per_block
+    if cfg.use_bridge:
+        nq = cfg.n_query
+        total += 2 * (nq + 2 * n) * d * d + 2 * 2 * nq * n * d + 2 * nq * d * d
+    return total
+
+
+def decoder_flops(cfg: ModelConfig) -> int:
+    T, d, dm, ne = cfg.max_len, cfg.d_model, cfg.d_mlp, cfg.emb_tokens
+    per_block = (2 * T * d * d * 4 + 2 * 2 * T * T * d       # self
+                 + 2 * (T + 2 * ne) * d * d + 2 * 2 * T * ne * d  # cross
+                 + 2 * T * d * dm * 2)                        # mlp
+    per_fwd = cfg.n_dec_layers * per_block + 2 * T * d * cfg.vocab
+    return per_fwd * (T - 1)  # greedy decode re-runs the forward per step
+
+
+def fcdnn_flops() -> int:
+    return sum(2 * FCDNN_DIMS[i] * FCDNN_DIMS[i + 1]
+               for i in range(len(FCDNN_DIMS) - 1))

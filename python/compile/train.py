@@ -1,0 +1,154 @@
+"""Build-time training of the captioners and the FCDNN-16 autoencoder.
+
+Runs once inside ``make artifacts`` (python is never on the request path).
+Training uses the pure-jnp reference kernels (``use_pallas=False``) — they
+are mathematically identical to the Pallas kernels (asserted by
+python/tests) but orders of magnitude faster than interpret mode, which is
+the right trade-off for the compile path.
+
+Optimizer: hand-rolled Adam (no optax in the offline environment).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen, model
+from .model import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=3e-4, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    tf = t.astype(jnp.float32)
+    mhat = {k: m[k] / (1 - b1 ** tf) for k in params}
+    vhat = {k: v[k] / (1 - b2 ** tf) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps)
+           for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# captioner training
+# ---------------------------------------------------------------------------
+
+
+def _caption_loss(params, image, tokens, cfg: ModelConfig):
+    """Teacher-forced cross-entropy; logits[t] predicts tokens[t+1]."""
+    emb = model.encode(params, image, cfg, use_pallas=False)
+    logits = model.decode_logits(params, emb, tokens, cfg, use_pallas=False)
+    targets = tokens[1:]
+    lp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[:, None], axis=-1)[:, 0]
+    mask = (targets != model.PAD).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_captioner(cfg: ModelConfig, steps=1500, batch=32, n_train=4096,
+                    seed=0, lr=3e-4, log_every=200, log=print):
+    """Fit encoder+decoder jointly on the synthetic corpus.
+
+    Returns (params, final_loss). Deterministic in `seed`.
+    """
+    kind = "image" if cfg.frames == 1 else "video"
+    xs, refs = datagen.dataset(kind, n_train, seed=seed + 1000)
+    vocab = datagen.make_vocab()
+    assert len(vocab) <= cfg.vocab, f"vocab {len(vocab)} > {cfg.vocab}"
+    # all paraphrase references tokenized: (n_train, n_refs, max_len)
+    toks = np.asarray(
+        [[datagen.tokenize(vocab, r, cfg.max_len) for r in rs] for rs in refs],
+        np.int32,
+    )
+    xs = jnp.asarray(xs.reshape(n_train, cfg.frames * cfg.image_hw,
+                                cfg.image_hw, 3))
+    toks = jnp.asarray(toks)
+
+    spec = model.encoder_param_spec(cfg) + model.decoder_param_spec(cfg)
+    params = model.init_params(spec, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    batched_loss = jax.vmap(_caption_loss, in_axes=(None, 0, 0, None))
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step_fn(params, opt, key):
+        ki, kr = jax.random.split(key)
+        idx = jax.random.randint(ki, (batch,), 0, n_train)
+        ref_idx = jax.random.randint(kr, (batch,), 0, toks.shape[1])
+        imgs = xs[idx]
+        tgts = toks[idx, ref_idx]
+        loss, grads = jax.value_and_grad(
+            lambda p: batched_loss(p, imgs, tgts, cfg).mean())(params)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    key = jax.random.PRNGKey(seed + 1)
+    loss = jnp.inf
+    for s in range(steps):
+        key, sub = jax.random.split(key)
+        params, opt, loss = step_fn(params, opt, sub)
+        if log and (s % log_every == 0 or s == steps - 1):
+            log(f"[train {cfg.name}] step {s:5d} loss {float(loss):.4f}")
+    return params, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# FCDNN-16 training (synthetic MNIST-like glyph reconstruction)
+# ---------------------------------------------------------------------------
+
+
+def _glyph_digits(n, rng):
+    """28x28 grayscale glyph images, flattened to 784 — MNIST stand-in."""
+    out = np.zeros((n, 28, 28), np.float32)
+    objs = list(datagen.GLYPHS)
+    for i in range(n):
+        g = datagen.GLYPHS[objs[rng.integers(len(objs))]]
+        scale = rng.integers(2, 4)
+        big = np.kron(g, np.ones((scale, scale), np.float32))
+        y = rng.integers(0, 29 - big.shape[0])
+        x = rng.integers(0, 29 - big.shape[1])
+        out[i, y:y + big.shape[0], x:x + big.shape[1]] = big
+        out[i] += rng.normal(0, 0.05, (28, 28)).astype(np.float32)
+    return np.clip(out, 0, 1).reshape(n, 784)
+
+
+def train_fcdnn(steps=800, batch=64, n_train=2048, seed=0, lr=1e-3,
+                log_every=200, log=print):
+    """Fit the Fig.-3 autoencoder with MSE; returns (params, final_loss)."""
+    rng = np.random.default_rng(seed)
+    data = jnp.asarray(_glyph_digits(n_train, rng))
+    params = model.init_params(model.fcdnn_param_spec(),
+                               jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step_fn(params, opt, key):
+        idx = jax.random.randint(key, (batch,), 0, n_train)
+        x = data[idx]
+        loss, grads = jax.value_and_grad(
+            lambda p: jnp.mean(
+                (model.fcdnn_forward(p, x, use_pallas=False) - x) ** 2)
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    key = jax.random.PRNGKey(seed + 1)
+    loss = jnp.inf
+    for s in range(steps):
+        key, sub = jax.random.split(key)
+        params, opt, loss = step_fn(params, opt, sub)
+        if log and (s % log_every == 0 or s == steps - 1):
+            log(f"[train fcdnn16] step {s:5d} mse {float(loss):.5f}")
+    return params, float(loss)

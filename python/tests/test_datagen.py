@@ -1,0 +1,70 @@
+"""Synthetic corpus invariants: determinism, tokenizer round-trip, grammar."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen
+from compile.model import BLIP2ISH
+
+
+def test_vocab_is_deterministic_and_covers_grammar():
+    v1, v2 = datagen.make_vocab(), datagen.make_vocab()
+    assert v1 == v2
+    assert v1[:4] == ["<pad>", "<bos>", "<eos>", "<unk>"]
+    for w in datagen.COLORS + datagen.OBJECTS + datagen.DIRECTIONS:
+        assert w in v1
+    assert len(v1) <= BLIP2ISH.vocab
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_captions_fit_max_len_and_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    vocab = datagen.make_vocab()
+    _, refs = datagen.image_sample(rng)
+    for r in refs:
+        ids = datagen.tokenize(vocab, r, BLIP2ISH.max_len)
+        assert len(ids) == BLIP2ISH.max_len
+        assert datagen.detokenize(vocab, ids) == r
+
+
+def test_dataset_determinism():
+    x1, r1 = datagen.dataset("image", 4, seed=5)
+    x2, r2 = datagen.dataset("image", 4, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    assert r1 == r2
+    x3, _ = datagen.dataset("image", 4, seed=6)
+    assert np.abs(x1 - x3).max() > 0
+
+
+def test_image_sample_shapes_and_range():
+    rng = np.random.default_rng(0)
+    img, refs = datagen.image_sample(rng)
+    assert img.shape == (32, 32, 3)
+    assert len(refs) == 5
+    assert 0 <= img.min() and img.max() <= 1
+
+
+def test_video_sample_has_motion():
+    rng = np.random.default_rng(0)
+    clip, refs = datagen.video_sample(rng)
+    assert clip.shape == (4, 32, 32, 3)
+    assert len(refs) == 5
+    # frames must differ (the moving object) -> temporal signal exists
+    assert np.abs(clip[0] - clip[3]).max() > 0.3
+
+
+def test_glyphs_are_pairwise_distinct():
+    gs = list(datagen.GLYPHS.values())
+    for i in range(len(gs)):
+        for j in range(i + 1, len(gs)):
+            assert np.abs(gs[i] - gs[j]).sum() > 0
+
+
+def test_detokenize_stops_at_eos():
+    vocab = datagen.make_vocab()
+    ids = datagen.tokenize(vocab, "a red ball", 12)
+    # inject garbage after EOS; detokenize must ignore it
+    eos_pos = ids.index(datagen.EOS)
+    ids = ids[:eos_pos + 1] + [5] * (12 - eos_pos - 1)
+    assert datagen.detokenize(vocab, ids) == "a red ball"

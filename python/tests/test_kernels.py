@@ -1,0 +1,168 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis drives the shape/value sweeps — this is the core correctness
+signal for the kernels that get lowered into the shipped artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, matmul, quantize, ref
+
+F32 = np.float32
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, shape).astype(F32))
+
+
+# ---------------------------------------------------------------------------
+# fake-quant kernels
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.sampled_from([8, 16, 64]),
+       step=st.floats(1e-4, 0.5),
+       seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_uniform_matches_ref(rows, step, seed):
+    rng = np.random.default_rng(seed)
+    w = arr(rng, rows, 128, scale=0.2)
+    got = np.asarray(quantize.fake_quant_uniform(w, step))
+    want = np.asarray(ref.fake_quant_uniform(w, step))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.sampled_from([8, 32]),
+       emin=st.integers(-12, -2),
+       width=st.integers(0, 10),
+       seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_pot_matches_ref(rows, emin, width, seed):
+    rng = np.random.default_rng(seed)
+    w = arr(rng, rows, 128, scale=0.2)
+    got = np.asarray(quantize.fake_quant_pot(w, float(emin),
+                                             float(emin + width)))
+    want = np.asarray(ref.fake_quant_pot(w, float(emin), float(emin + width)))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_fake_quant_uniform_zero_step_is_identity():
+    rng = np.random.default_rng(0)
+    w = arr(rng, 8, 128)
+    got = np.asarray(quantize.fake_quant_uniform(w, 0.0))
+    np.testing.assert_allclose(got, np.asarray(w))
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.floats(1e-3, 0.3), seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_uniform_idempotent(step, seed):
+    rng = np.random.default_rng(seed)
+    w = arr(rng, 8, 128, scale=0.2)
+    q1 = quantize.fake_quant_uniform(w, step)
+    q2 = quantize.fake_quant_uniform(q1, step)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=0, atol=1e-6)
+
+
+def test_fake_quant_preserves_sign():
+    rng = np.random.default_rng(3)
+    w = arr(rng, 8, 128)
+    for q in (quantize.fake_quant_uniform(w, 0.07),
+              quantize.fake_quant_pot(w, -6.0, 0.0)):
+        q = np.asarray(q)
+        wn = np.asarray(w)
+        assert ((np.sign(q) == np.sign(wn)) | (q == 0)).all()
+
+
+def test_pad_to_buffer_roundtrip():
+    flat = jnp.arange(1000, dtype=jnp.float32)
+    buf, n = quantize.pad_to_buffer(flat)
+    assert n == 1000 and buf.shape[1] == 128
+    assert buf.shape[0] % quantize.ROWS_PER_BLOCK == 0
+    np.testing.assert_allclose(np.asarray(buf).reshape(-1)[:n],
+                               np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# matmul kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.sampled_from([1, 4, 16, 64]),
+       k=st.sampled_from([32, 48, 128, 784]),
+       n=st.sampled_from([32, 128, 512]),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = arr(rng, m, k), arr(rng, k, n)
+    got = np.asarray(matmul.matmul(x, y))
+    want = np.asarray(ref.matmul(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_block_picker():
+    assert matmul._pick_block(784, 128) == 16
+    assert matmul._pick_block(128) == 128
+    assert matmul._pick_block(1) == 1
+    assert matmul._pick_block(48) == 48
+
+
+def test_matmul_vmem_budget():
+    # default tiles must fit the ~16 MiB per-core VMEM budget with margin
+    assert matmul.vmem_bytes() < 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# attention kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(h=st.sampled_from([1, 4]),
+       lq=st.sampled_from([12, 16, 64]),
+       lk=st.sampled_from([16, 64]),
+       causal=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_attention_matches_ref(h, lq, lk, causal, seed):
+    if causal and lq > lk:
+        lq = lk
+    rng = np.random.default_rng(seed)
+    q, k, v = arr(rng, h, lq, 32), arr(rng, h, lk, 32), arr(rng, h, lk, 32)
+    got = np.asarray(attention.attention(q, k, v, causal=causal))
+    want = np.asarray(ref.attention(q, k, v, causal=causal))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    # each output row lies in the convex hull of V rows => max |out| <= max |v|
+    rng = np.random.default_rng(1)
+    q, k, v = arr(rng, 2, 16, 32), arr(rng, 2, 64, 32), arr(rng, 2, 64, 32)
+    out = np.asarray(attention.attention(q, k, v))
+    assert np.abs(out).max() <= np.abs(np.asarray(v)).max() + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# layernorm kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([1, 8, 24, 64]),
+       d=st.sampled_from([32, 128]),
+       seed=st.integers(0, 2**31 - 1))
+def test_layernorm_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, n, d, scale=3.0)
+    g = arr(rng, d, scale=0.5) + 1.0
+    b = arr(rng, d, scale=0.5)
+    got = np.asarray(layernorm.layernorm(x, g, b))
+    want = np.asarray(ref.layernorm(x, g, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_standardized():
+    rng = np.random.default_rng(2)
+    x = arr(rng, 16, 128, scale=5.0)
+    out = np.asarray(layernorm.layernorm(x, jnp.ones(128), jnp.zeros(128)))
+    np.testing.assert_allclose(out.mean(-1), 0, atol=1e-4)
+    np.testing.assert_allclose(out.std(-1), 1, atol=1e-2)

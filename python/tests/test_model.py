@@ -1,0 +1,110 @@
+"""L2 model invariants: pallas/ref agreement, shapes, causality, patchify."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import BLIP2ISH, GITISH
+
+
+def _params(cfg, seed=0):
+    spec = model.encoder_param_spec(cfg) + model.decoder_param_spec(cfg)
+    return model.init_params(spec, jax.random.PRNGKey(seed))
+
+
+def _image(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(
+        size=(cfg.frames * cfg.image_hw, cfg.image_hw, 3)).astype(np.float32))
+
+
+@pytest.mark.parametrize("cfg", [BLIP2ISH, GITISH], ids=lambda c: c.name)
+def test_encode_shape_and_pallas_agreement(cfg):
+    p = _params(cfg)
+    x = _image(cfg)
+    e_ref = model.encode(p, x, cfg, use_pallas=False)
+    e_pal = model.encode(p, x, cfg, use_pallas=True)
+    assert e_ref.shape == (cfg.emb_tokens, cfg.d_model)
+    np.testing.assert_allclose(np.asarray(e_pal), np.asarray(e_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", [BLIP2ISH, GITISH], ids=lambda c: c.name)
+def test_greedy_decode_pallas_agreement(cfg):
+    p = _params(cfg)
+    emb = model.encode(p, _image(cfg), cfg, use_pallas=False)
+    t_ref = np.asarray(model.greedy_decode(p, emb, cfg, use_pallas=False))
+    t_pal = np.asarray(model.greedy_decode(p, emb, cfg, use_pallas=True))
+    assert t_ref.shape == (cfg.max_len,)
+    assert t_ref[0] == model.BOS
+    assert (t_ref == t_pal).all()
+
+
+def test_decoder_is_causal():
+    """Changing token t must not change logits at positions < t."""
+    cfg = BLIP2ISH
+    p = _params(cfg)
+    emb = model.encode(p, _image(cfg), cfg, use_pallas=False)
+    toks = jnp.asarray(np.arange(cfg.max_len) % 7 + 1, jnp.int32)
+    base = np.asarray(model.decode_logits(p, emb, toks, cfg,
+                                          use_pallas=False))
+    toks2 = toks.at[6].set(42)
+    pert = np.asarray(model.decode_logits(p, emb, toks2, cfg,
+                                          use_pallas=False))
+    np.testing.assert_allclose(pert[:6], base[:6], rtol=1e-5, atol=1e-6)
+    assert np.abs(pert[6:] - base[6:]).max() > 1e-4
+
+
+def test_greedy_decode_matches_argmax_rollout():
+    """scan-based decode == a hand-rolled python greedy rollout."""
+    cfg = BLIP2ISH
+    p = _params(cfg)
+    emb = model.encode(p, _image(cfg), cfg, use_pallas=False)
+    got = np.asarray(model.greedy_decode(p, emb, cfg, use_pallas=False))
+    toks = np.zeros(cfg.max_len, np.int32)
+    toks[0] = model.BOS
+    for t in range(cfg.max_len - 1):
+        logits = np.asarray(model.decode_logits(
+            p, emb, jnp.asarray(toks), cfg, use_pallas=False))
+        toks[t + 1] = int(logits[t].argmax())
+    assert (got == toks).all()
+
+
+def test_patchify_partitions_image():
+    """patchify is a bijective rearrangement: pixel multiset is preserved."""
+    cfg = BLIP2ISH
+    x = _image(cfg, seed=3)
+    patches = model.patchify(cfg, x)
+    assert patches.shape == (cfg.n_tokens, cfg.patch_dim)
+    np.testing.assert_allclose(np.sort(np.asarray(patches).reshape(-1)),
+                               np.sort(np.asarray(x).reshape(-1)), rtol=1e-6)
+
+
+def test_fcdnn_forward_shapes_and_agreement():
+    p = model.init_params(model.fcdnn_param_spec(), jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(8, 784)).astype(np.float32))
+    y_ref = model.fcdnn_forward(p, x, use_pallas=False)
+    y_pal = model.fcdnn_forward(p, x, use_pallas=True)
+    assert y_ref.shape == (8, 784)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flop_counts_positive_and_ordered():
+    # the video model sees 4x the frames but fewer layers; both positive
+    assert model.encoder_flops(BLIP2ISH) > 0
+    assert model.decoder_flops(BLIP2ISH) > 0
+    assert model.fcdnn_flops() == sum(
+        2 * model.FCDNN_DIMS[i] * model.FCDNN_DIMS[i + 1]
+        for i in range(len(model.FCDNN_DIMS) - 1))
+
+
+def test_param_specs_are_disjoint_and_deterministic():
+    enc = model.encoder_param_spec(BLIP2ISH)
+    dec = model.decoder_param_spec(BLIP2ISH)
+    names = [n for n, _ in enc + dec]
+    assert len(names) == len(set(names))
+    assert enc == model.encoder_param_spec(BLIP2ISH)

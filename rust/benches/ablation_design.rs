@@ -1,0 +1,141 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!  A1  SCA (Algorithm 1) vs exact bisection vs grid resolution — solution
+//!      quality and planning cost;
+//!  A2  dynamic batching: engine wall-clock throughput vs max_batch;
+//!  A3  fixed-frequency pin calibration (the DESIGN.md §5 substitution):
+//!      feasibility/bit-width across server pin fractions;
+//!  A4  quantized-weight literal cache: cold vs warm request cost.
+
+use qaci::bench_harness::{scaled, Table};
+use qaci::coordinator::batcher::BatcherConfig;
+use qaci::coordinator::engine::{Engine, EngineConfig};
+use qaci::coordinator::router::{QosPolicy, Router};
+use qaci::coordinator::scheduler::{Algorithm, Scheduler};
+use qaci::data::eval::EvalSet;
+use qaci::data::vocab::Vocab;
+use qaci::data::workload::{generate, Arrival};
+use qaci::opt::{bisection, fixed_freq, grid, sca, Problem};
+use qaci::quant::Scheme;
+use qaci::runtime::executor::CoModel;
+use qaci::runtime::Registry;
+use qaci::system::channel::Channel;
+use qaci::system::Platform;
+use qaci::util::timer::Stopwatch;
+
+fn a1_solver_ablation() {
+    let mut t = Table::new(
+        "A1 — solver ablation @ paper BLIP-2 platform",
+        &["(T0,E0)", "exact b̂", "SCA b̂", "grid32 b̂", "grid96 b̂",
+          "exact µs", "SCA µs", "grid96 µs"],
+    );
+    for (t0, e0) in [(2.5, 2.0), (3.0, 1.0), (3.5, 2.0), (4.0, 0.8)] {
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
+        let sw = Stopwatch::start();
+        let e = bisection::solve(&prob);
+        let t_exact = sw.elapsed_us();
+        let sw = Stopwatch::start();
+        let s = sca::solve(&prob, sca::ScaOptions::default());
+        let t_sca = sw.elapsed_us();
+        let g32 = grid::solve(&prob, 32);
+        let sw = Stopwatch::start();
+        let g96 = grid::solve(&prob, 96);
+        let t_grid = sw.elapsed_us();
+        let b = |d: Option<u32>| d.map(|x| x.to_string()).unwrap_or("--".into());
+        t.row(&[
+            format!("({t0},{e0})"),
+            b(e.map(|r| r.design.b_hat)),
+            b(s.map(|r| r.design.b_hat)),
+            b(g32.map(|d| d.b_hat)),
+            b(g96.map(|d| d.b_hat)),
+            format!("{t_exact:.0}"),
+            format!("{t_sca:.0}"),
+            format!("{t_grid:.0}"),
+        ]);
+    }
+    t.print();
+}
+
+fn a2_batching(reg: &Registry) -> anyhow::Result<()> {
+    let mut model = CoModel::load(reg, "blip2ish")?;
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco")?;
+    let vocab = Vocab::from_manifest(&reg.manifest)?;
+    let platform = Platform::paper_blip2()
+        .with_workload(model.agent_flops, model.server_flops);
+    let lambda = model.agent_weights.lambda;
+    let n = scaled(32);
+
+    let mut t = Table::new(
+        "A2 — dynamic batching ablation (wall-clock, same workload)",
+        &["max_batch", "req/s", "mean wall/req [ms]"],
+    );
+    for max_batch in [1usize, 2, 4] {
+        let scheduler =
+            Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
+        let router = Router::new(QosPolicy::uniform(3.5, 2.0), scheduler);
+        let mut engine = Engine::new(
+            &mut model,
+            router,
+            &vocab,
+            &eval,
+            Channel::ideal(),
+            EngineConfig { batcher: BatcherConfig { max_batch, max_wait_s: 1e9 } },
+        );
+        let sw = Stopwatch::start();
+        let telemetry = engine.run(generate(n, eval.len(), Arrival::Batch, 3))?;
+        let wall = sw.elapsed_s();
+        t.row(&[
+            max_batch.to_string(),
+            format!("{:.1}", telemetry.len() as f64 / wall),
+            format!("{:.2}", wall / telemetry.len() as f64 * 1e3),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn a3_fixed_pin() {
+    let mut t = Table::new(
+        "A3 — fixed-frequency server pin calibration (T0=3.5, E0=2.0)",
+        &["server pin (frac of f̃max)", "b̂", "feasible"],
+    );
+    let prob = Problem::new(Platform::paper_blip2(), 15.0, 3.5, 2.0);
+    for frac in [1.0, 0.6, 0.35, fixed_freq::SERVER_FRACTION, 0.12, 0.08] {
+        let d = fixed_freq::solve_at_fractions(&prob, 1.0, frac);
+        t.row(&[
+            format!("{frac:.2}"),
+            d.map(|x| x.b_hat.to_string()).unwrap_or("--".into()),
+            if d.is_some() { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t.print();
+    println!("(the DESIGN.md §5 calibration: max/max pin is energy-degenerate)");
+}
+
+fn a4_weight_cache(reg: &Registry) -> anyhow::Result<()> {
+    let mut model = CoModel::load(reg, "blip2ish")?;
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco")?;
+    let mut t = Table::new(
+        "A4 — quantized-weight literal cache",
+        &["request", "encode wall [ms]"],
+    );
+    let one = eval.sample(0).to_vec();
+    // cold: first request at a fresh bit-width pays quantize+literals
+    let sw = Stopwatch::start();
+    model.encode(&one, 1, 9, Scheme::Pot)?;
+    t.row(&["cold (9-bit PoT, first)".into(), format!("{:.2}", sw.elapsed_us() / 1e3)]);
+    let sw = Stopwatch::start();
+    model.encode(&one, 1, 9, Scheme::Pot)?;
+    t.row(&["warm (9-bit PoT, repeat)".into(), format!("{:.2}", sw.elapsed_us() / 1e3)]);
+    t.print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    a1_solver_ablation();
+    a3_fixed_pin();
+    if let Ok(reg) = Registry::open(&qaci::artifacts_dir()) {
+        a2_batching(&reg)?;
+        a4_weight_cache(&reg)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Fig. 2 — distribution of parameter magnitudes of pre-trained models.
+//!
+//! The paper fits an exponential PDF (eq. 3) to the weight magnitudes of
+//! ResNet-152 / VideoMAE / BERT / BLIP-2 / GIT / GPT-3. We fit the same
+//! model to (a) every weight blob this repo ships (trained captioners +
+//! FCDNN) and (b) synthetic LAIM-like blobs, and report λ, differential
+//! entropy, the KS statistic, and empirical-vs-fitted density rows.
+//!
+//! Paper shape to reproduce: a sharp peak at zero, exponential fit close
+//! to the empirical histogram.
+
+use qaci::bench_harness::Table;
+use qaci::metrics::stats;
+use qaci::runtime::executor::CoModel;
+use qaci::runtime::Registry;
+use qaci::theory::expdist::ExponentialModel;
+use qaci::util::rng::Rng;
+
+fn report(table: &mut Table, name: &str, mags: &[f64]) {
+    let model = ExponentialModel::fit(mags.iter().copied());
+    let ks = model.ks_statistic(mags);
+    table.row(&[
+        name.to_string(),
+        format!("{}", mags.len()),
+        format!("{:.2}", model.lambda),
+        format!("{:.3}", model.mean()),
+        format!("{:.2}", model.differential_entropy_bits()),
+        format!("{ks:.4}"),
+    ]);
+}
+
+fn density_rows(name: &str, mags: &[f64]) {
+    let model = ExponentialModel::fit(mags.iter().copied());
+    let max = 4.0 / model.lambda; // ~98% of the mass
+    let (centers, density) = stats::histogram(mags, max, 12);
+    let mut t = Table::new(
+        &format!("{name}: empirical vs fitted exponential density"),
+        &["θ", "empirical", "λe^-λθ"],
+    );
+    for (c, d) in centers.iter().zip(&density) {
+        t.row(&[format!("{c:.4}"), format!("{d:.2}"), format!("{:.2}", model.pdf(*c))]);
+    }
+    t.print();
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut summary = Table::new(
+        "Fig. 2 — exponential fit of parameter magnitudes",
+        &["weights", "n", "λ (MLE)", "E[θ]", "h(Θ) bits", "KS"],
+    );
+
+    // (a) the shipped trained models
+    if let Ok(reg) = Registry::open(&qaci::artifacts_dir()) {
+        for name in ["blip2ish", "gitish"] {
+            let model = CoModel::load(&reg, name)?;
+            for (side, store) in
+                [("agent", &model.agent_weights), ("server", &model.server_weights)]
+            {
+                let mags: Vec<f64> =
+                    store.blob.iter().map(|w| w.abs() as f64).collect();
+                report(&mut summary, &format!("{name}/{side}"), &mags);
+            }
+        }
+        let fcdnn = qaci::runtime::executor::Fcdnn::load(&reg)?;
+        let mags: Vec<f64> =
+            fcdnn.weights.blob.iter().map(|w| w.abs() as f64).collect();
+        report(&mut summary, "fcdnn16", &mags);
+
+        // density comparison for the headline model (the Fig. 2 panels)
+        let model = CoModel::load(&reg, "blip2ish")?;
+        let mags: Vec<f64> =
+            model.agent_weights.blob.iter().map(|w| w.abs() as f64).collect();
+        summary.print();
+        density_rows("blip2ish/agent", &mags);
+    } else {
+        eprintln!("artifacts not built; synthetic blobs only");
+        summary.print();
+    }
+
+    // (b) synthetic LAIM-scale stand-ins for the paper's big checkpoints
+    // (gaussian-mixture weights, the shape trained transformers exhibit)
+    let mut synth = Table::new(
+        "synthetic LAIM blobs (ResNet/BERT/GPT-3 stand-ins)",
+        &["weights", "n", "λ (MLE)", "E[θ]", "h(Θ) bits", "KS"],
+    );
+    let mut rng = Rng::new(2);
+    for (name, scales) in [
+        ("resnet152-like", vec![0.02, 0.05]),
+        ("bert-like", vec![0.03, 0.08, 0.15]),
+        ("gpt3-like", vec![0.01, 0.02, 0.05, 0.12]),
+    ] {
+        let n = 400_000;
+        let mags: Vec<f64> = (0..n)
+            .map(|i| (scales[i % scales.len()] * rng.normal()).abs())
+            .collect();
+        report(&mut synth, name, &mags);
+    }
+    synth.print();
+    println!(
+        "\npaper check: KS well below 0.5 everywhere = the sharp-peak-at-zero\n\
+         exponential shape holds for trained weights (Fig. 2's claim)."
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Fig. 4 — upper and lower bounds of the distortion–rate function vs a
+//! numerically estimated D(R) (Blahut–Arimoto on the discretized
+//! exponential source).
+//!
+//! Paper shape to reproduce: D(R) decays ~exponentially; D^U is loose at
+//! very low rate (test-channel construction) but tightens past ~2 bits;
+//! D^L captures the scaling law; both bounds sandwich the BA curve.
+
+use qaci::bench_harness::Table;
+use qaci::runtime::executor::CoModel;
+use qaci::runtime::Registry;
+use qaci::theory::blahut_arimoto::BlahutArimoto;
+use qaci::theory::rate_distortion as rd;
+
+fn figure_for_lambda(lambda: f64, label: &str) {
+    let ba = BlahutArimoto::exponential(lambda, 400, 12.0);
+    let pts = ba.sweep(&BlahutArimoto::default_slopes(lambda), 400, 1e-9);
+
+    let mut t = Table::new(
+        &format!("Fig. 4 — distortion-rate bounds, {label} (λ={lambda:.2})"),
+        &["R [bits]", "D^L(R)", "D_BA(R) (numeric)", "D^U(R)", "U/L ratio"],
+    );
+    for r in [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0, 5.0, 6.0, 7.0] {
+        let lo = rd::d_lower(r, lambda);
+        let hi = rd::d_upper(r, lambda);
+        let num = BlahutArimoto::distortion_at_rate(&pts, r);
+        t.row(&[
+            format!("{r:.1}"),
+            format!("{lo:.4e}"),
+            num.map(|d| format!("{d:.4e}")).unwrap_or("--".into()),
+            format!("{hi:.4e}"),
+            format!("{:.2}", hi / lo),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    // the paper's generic illustration (unit-ish λ) ...
+    figure_for_lambda(10.0, "illustrative source");
+    // ... and the λ actually fitted to the shipped agent model weights
+    if let Ok(reg) = Registry::open(&qaci::artifacts_dir()) {
+        if let Ok(model) = CoModel::load(&reg, "blip2ish") {
+            figure_for_lambda(model.agent_weights.lambda, "blip2ish agent weights");
+        }
+    }
+    println!(
+        "\npaper check: D_BA within [D^L, D^U] (sandwich); U/L ratio falls\n\
+         toward ~2 as R grows (loose only in the low-rate regime); both\n\
+         bounds decay ~2^-R (the scaling law of Prop. 4.1)."
+    );
+}

@@ -1,0 +1,34 @@
+//! Fig. 5 — BLIP-2 on MS-COCO (stand-ins): CIDEr vs delay and energy
+//! budgets under **uniform** quantization, proposed vs PPO vs
+//! fixed-frequency vs feasible-random.
+//!
+//! Axes follow the paper: T0 sweep at E0 = 2.00 J (left) and E0 sweep at
+//! T0 = 3.50 s (right), on the paper's platform constants; quality is
+//! measured by running this repo's trained BLIP-2-like captioner at each
+//! planned bit-width (DESIGN.md §5 substitution).
+//!
+//! Paper shape to reproduce: proposed highest everywhere; CIDEr rises as
+//! either budget loosens; fixed-freq/random clearly below.
+
+use qaci::bench_harness::scaled;
+use qaci::figures::{FigureRunner, Sweep};
+use qaci::quant::Scheme;
+
+//
+// Budget bands: shifted from the paper's absolute values (2.5-4.0 s /
+// 0.5-4.0 J) to the band where OUR platform's max-feasible bit-width
+// walks the quality-sensitive 2..13-bit region — the same role the
+// paper's band plays on its testbed (see DESIGN.md §5).
+
+fn main() -> anyhow::Result<()> {
+    let mut runner = FigureRunner::open("blip2ish", scaled(32))?;
+    runner.run_figure(
+        "Fig. 5 BLIP-2/COCO, uniform",
+        &[
+            Sweep::Delay { e0: 2.0, t0s: vec![1.90, 2.00, 2.10, 2.25, 2.40, 2.55, 2.75] },
+            Sweep::Energy { t0: 3.5, e0s: vec![0.45, 0.55, 0.65, 0.80, 1.00, 1.25, 1.50] },
+        ],
+        Scheme::Uniform,
+        5,
+    )
+}

@@ -1,0 +1,24 @@
+//! Fig. 8 — GIT on VaTeX (stand-ins): CIDEr vs delay and energy budgets
+//! under **nonuniform (PoT-log)** quantization.
+
+use qaci::bench_harness::scaled;
+use qaci::figures::{FigureRunner, Sweep};
+use qaci::quant::Scheme;
+
+//
+// Budget bands: shifted from the paper's absolute values to the band
+// where the GIT platform's max-feasible bit-width walks the quality-
+// sensitive 2..13-bit region (see DESIGN.md §5).
+
+fn main() -> anyhow::Result<()> {
+    let mut runner = FigureRunner::open("gitish", scaled(32))?;
+    runner.run_figure(
+        "Fig. 8 GIT/VaTeX, nonuniform (PoT)",
+        &[
+            Sweep::Delay { e0: 2.0, t0s: vec![0.45, 0.50, 0.55, 0.60, 0.70, 0.80, 0.90] },
+            Sweep::Energy { t0: 2.0, e0s: vec![0.10, 0.12, 0.14, 0.16, 0.20, 0.25, 0.30] },
+        ],
+        Scheme::Pot,
+        8,
+    )
+}

@@ -1,0 +1,134 @@
+//! Benchmark harness (criterion stand-in) + paper-table printer.
+//!
+//! Two roles:
+//! * `time(...)` — warmup + timed iterations with percentile reporting, for
+//!   hot-path micro/macro benchmarks (`perf_hotpath` bench, §Perf).
+//! * [`Table`] — aligned row printer used by every `fig*`/`table1` bench to
+//!   emit the same rows/series the paper reports, so `cargo bench` output
+//!   can be diffed against EXPERIMENTS.md.
+
+use crate::util::timer::{Samples, Stopwatch};
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn time(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed_us());
+    }
+    println!("bench {name:<44} {}", samples.summary("us"));
+    samples
+}
+
+/// Run with fewer iterations when QACI_BENCH_FAST=1 (used by the smoke
+/// integration test so `cargo test` stays quick).
+pub fn fast_mode() -> bool {
+    std::env::var("QACI_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn scaled(n: usize) -> usize {
+    if fast_mode() {
+        (n / 8).max(1)
+    } else {
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// table printer
+// ---------------------------------------------------------------------------
+
+/// Aligned console table: `Table::new(...).row(...).print()`.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn rowf(&mut self, label: &str, vals: &[f64], prec: usize) -> &mut Table {
+        let mut cells = vec![label.to_string()];
+        cells.extend(vals.iter().map(|v| format!("{v:.prec$}")));
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("\n=== {} ===\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["scheme", "x", "y"]);
+        t.rowf("proposed", &[1.23456, 2.0], 3);
+        t.rowf("baseline-with-long-name", &[0.1, 20.5], 3);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("proposed"));
+        assert!(s.contains("1.235"));
+        // all data lines equal width
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains("  ")).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        Table::new("t", &["a", "b"]).row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn time_returns_all_samples() {
+        let s = time("noop", 1, 5, || {});
+        assert_eq!(s.len(), 5);
+    }
+}

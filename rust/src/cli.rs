@@ -1,0 +1,310 @@
+//! CLI command implementations (see `main.rs` for the synopsis).
+
+use qaci::coordinator::batcher::BatcherConfig;
+use qaci::coordinator::engine::{Engine, EngineConfig};
+use qaci::coordinator::router::{QosPolicy, Router};
+use qaci::coordinator::scheduler::{Algorithm, Scheduler};
+use qaci::coordinator::server::PipelinedServer;
+use qaci::data::eval::EvalSet;
+use qaci::data::vocab::Vocab;
+use qaci::data::workload::{generate, Arrival};
+use qaci::opt::{bisection, sca, Problem};
+use qaci::quant::Scheme;
+use qaci::rl::env::BudgetRanges;
+use qaci::rl::PpoConfig;
+use qaci::runtime::executor::CoModel;
+use qaci::runtime::Registry;
+use qaci::system::Platform;
+use qaci::theory::expdist::ExponentialModel;
+use qaci::util::cli::Args;
+use qaci::util::json::Json;
+
+pub fn main() {
+    let args = Args::parse_env()
+        .describe("t0", "delay budget [s]", Some("3.5"))
+        .describe("e0", "energy budget [J]", Some("2.0"))
+        .describe("model", "blip2ish | gitish", Some("blip2ish"))
+        .describe("algorithm", "proposed|exact|ppo|fixed-freq|random", Some("proposed"))
+        .describe("scheme", "uniform | pot", Some("uniform"))
+        .describe("requests", "number of requests", Some("32"))
+        .describe("rps", "Poisson arrival rate", Some("20"))
+        .describe("seed", "rng seed", Some("0"))
+        .describe("paper-platform", "use paper FLOPs instead of measured", None);
+    let unknown = args.unknown_keys();
+    if !unknown.is_empty() {
+        eprintln!("unknown flags: {unknown:?}");
+        std::process::exit(2);
+    }
+    let code = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("plan") => cmd_plan(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("fit") => cmd_fit(&args),
+        _ => {
+            print!(
+                "{}",
+                args.usage(
+                    "qaci",
+                    "quantization-aware collaborative inference \
+                     (subcommands: info, plan, eval, serve, fit)"
+                )
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn open_registry() -> Option<Registry> {
+    match Registry::open(&qaci::artifacts_dir()) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            None
+        }
+    }
+}
+
+fn platform_for(args: &Args, model: &CoModel) -> Platform {
+    let base = if model.name == "gitish" {
+        Platform::paper_git()
+    } else {
+        Platform::paper_blip2()
+    };
+    if args.has("paper-platform") {
+        base
+    } else {
+        base.with_workload(model.agent_flops, model.server_flops)
+    }
+}
+
+fn scheduler_for(args: &Args, platform: Platform, lambda: f64) -> Scheduler {
+    let algorithm = Algorithm::parse(&args.str("algorithm", "proposed"))
+        .unwrap_or(Algorithm::Proposed);
+    let scheme =
+        Scheme::parse(&args.str("scheme", "uniform")).unwrap_or(Scheme::Uniform);
+    let mut s = Scheduler::new(platform, lambda, algorithm, scheme,
+                               args.usize("seed", 0) as u64);
+    if algorithm == Algorithm::Ppo {
+        eprintln!("training PPO policy (one-time)...");
+        s.train_ppo(BudgetRanges::default(), PpoConfig::default());
+    }
+    s
+}
+
+fn cmd_info() -> i32 {
+    let Some(reg) = open_registry() else { return 1 };
+    println!("artifacts: {}", reg.dir.display());
+    for name in reg.model_names() {
+        let m = reg.model(name).unwrap();
+        if let Some(agent) = m.get("agent") {
+            let lam = agent.get("lambda").and_then(Json::as_f64).unwrap_or(0.0);
+            let fl = agent.get("flops").and_then(Json::as_f64).unwrap_or(0.0);
+            let sfl = m.at(&["server", "flops"]).and_then(Json::as_f64).unwrap_or(0.0);
+            println!(
+                "  {name:10} agent λ={lam:7.2}  agent {:>8.1} MFLOPs  server {:>8.1} MFLOPs",
+                fl / 1e6,
+                sfl / 1e6
+            );
+        } else {
+            let lam = m.get("lambda").and_then(Json::as_f64).unwrap_or(0.0);
+            println!("  {name:10} λ={lam:7.2}");
+        }
+    }
+    for set in ["coco", "vatex"] {
+        if let Ok(ev) = EvalSet::load(&reg.dir, &reg.manifest, set) {
+            println!("  eval/{set}: {} samples x {:?}", ev.len(), ev.sample_shape);
+        }
+    }
+    0
+}
+
+fn cmd_plan(args: &Args) -> i32 {
+    let Some(reg) = open_registry() else { return 1 };
+    let model = match CoModel::load(&reg, &args.str("model", "blip2ish")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let platform = platform_for(args, &model);
+    let problem = Problem::new(
+        platform,
+        model.agent_weights.lambda,
+        args.f64("t0", 3.5),
+        args.f64("e0", 2.0),
+    );
+    println!(
+        "platform: N={:.3e} Ñ={:.3e} f^max={:.2}GHz f̃^max={:.2}GHz λ={:.2}",
+        platform.n_flop_agent,
+        platform.n_flop_server,
+        platform.device.f_max / 1e9,
+        platform.server.f_max / 1e9,
+        problem.lambda
+    );
+    match sca::solve(&problem, sca::ScaOptions::default()) {
+        Some(r) => {
+            println!(
+                "proposed (SCA, {} iters): b̂={}  f={:.3} GHz  f̃={:.3} GHz",
+                r.trace.len(),
+                r.design.b_hat,
+                r.design.f / 1e9,
+                r.design.f_tilde / 1e9
+            );
+            println!(
+                "  T={:.4}s (T0={})  E={:.4}J (E0={})  gap objective={:.3e}",
+                problem.total_delay(&r.design),
+                problem.t0,
+                problem.total_energy(&r.design),
+                problem.e0,
+                r.objective
+            );
+            if let Some(exact) = bisection::solve(&problem) {
+                println!(
+                    "exact reference: b̂={} (b̃*={:.3})",
+                    exact.design.b_hat, exact.b_tilde_star
+                );
+            }
+            0
+        }
+        None => {
+            println!("INFEASIBLE under (T0={}, E0={})", problem.t0, problem.e0);
+            1
+        }
+    }
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let Some(reg) = open_registry() else { return 1 };
+    let model_name = args.str("model", "blip2ish");
+    let mut model = match CoModel::load(&reg, &model_name) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let eval_name = if model_name == "gitish" { "vatex" } else { "coco" };
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, eval_name).unwrap();
+    let vocab = Vocab::from_manifest(&reg.manifest).unwrap();
+    let platform = platform_for(args, &model);
+    let scheduler = scheduler_for(args, platform, model.agent_weights.lambda);
+    let router = Router::new(
+        QosPolicy::uniform(args.f64("t0", 3.5), args.f64("e0", 2.0)),
+        scheduler,
+    );
+    let requests = generate(
+        args.usize("requests", 32),
+        eval.len(),
+        Arrival::Batch,
+        args.usize("seed", 0) as u64,
+    );
+    let mut engine = Engine::new(
+        &mut model,
+        router,
+        &vocab,
+        &eval,
+        qaci::system::channel::Channel::wlan_5ghz(1),
+        EngineConfig::default(),
+    );
+    match engine.run(requests) {
+        Ok(t) => {
+            println!(
+                "served {} requests  rejected {}  CIDEr(x100) {:.1}",
+                t.len(),
+                t.rejected,
+                t.cider_x100(&eval.refs)
+            );
+            for (class, s) in t.by_class() {
+                println!(
+                    "  {class:12} n={:3}  b̂≈{:.1}  sim T {}  sim E {}",
+                    s.count,
+                    s.mean_bits,
+                    s.sim_delay.summary("s"),
+                    s.sim_energy.summary("J")
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(reg) = open_registry() else { return 1 };
+    let model_name = args.str("model", "blip2ish");
+    let model = match CoModel::load(&reg, &model_name) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let eval_name = if model_name == "gitish" { "vatex" } else { "coco" };
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, eval_name).unwrap();
+    let platform = platform_for(args, &model);
+    let lambda = model.agent_weights.lambda;
+    drop(model);
+    let scheduler = scheduler_for(args, platform, lambda);
+    let mut server = PipelinedServer {
+        artifacts: reg.dir.clone(),
+        model_name,
+        router: Router::new(QosPolicy::paper_default(), scheduler),
+        batcher_cfg: BatcherConfig::default(),
+        queue_depth: 8,
+    };
+    let n = args.usize("requests", 32);
+    let requests = generate(
+        n,
+        eval.len(),
+        Arrival::Poisson { lambda_rps: args.f64("rps", 20.0) },
+        args.usize("seed", 0) as u64,
+    );
+    let sw = qaci::util::timer::Stopwatch::start();
+    match server.run(requests, &eval) {
+        Ok(t) => {
+            let wall = sw.elapsed_s();
+            println!(
+                "pipelined: {} requests in {:.2}s wall = {:.1} req/s, CIDEr(x100) {:.1}",
+                t.len(),
+                wall,
+                t.len() as f64 / wall,
+                t.cider_x100(&eval.refs)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_fit(args: &Args) -> i32 {
+    let Some(reg) = open_registry() else { return 1 };
+    let model = match CoModel::load(&reg, &args.str("model", "blip2ish")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    for (side, store) in [("agent", &model.agent_weights), ("server", &model.server_weights)] {
+        let fit = ExponentialModel::fit_weights(&store.blob);
+        let mags: Vec<f64> = store.blob.iter().map(|w| w.abs() as f64).collect();
+        println!(
+            "{side:6} n={:8}  λ(manifest)={:8.2}  λ(rust fit)={:8.2}  h(Θ)={:6.2} bits  KS={:.4}",
+            store.n_params(),
+            store.lambda,
+            fit.lambda,
+            fit.differential_entropy_bits(),
+            fit.ks_statistic(&mags)
+        );
+    }
+    0
+}

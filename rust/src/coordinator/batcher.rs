@@ -1,0 +1,193 @@
+//! Dynamic batcher: groups routed requests that share an operating point
+//! (same bit-width ⇒ same quantized weights ⇒ one PJRT call) under a size
+//! cap and a waiting deadline.
+
+use super::router::RoutedRequest;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub b_hat: u32,
+    pub requests: Vec<RoutedRequest>,
+    /// arrival time of the oldest member
+    pub oldest_arrival_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// flush when a group reaches this size
+    pub max_batch: usize,
+    /// flush a group once its oldest member waited this long
+    pub max_wait_s: f64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 4, max_wait_s: 0.05 }
+    }
+}
+
+/// Size/deadline batcher keyed by bit-width.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    groups: HashMap<u32, Batch>,
+    pub accepted: u64,
+    pub flushed: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg, groups: HashMap::new(), accepted: 0, flushed: 0 }
+    }
+
+    /// Add a request; returns a batch if the group filled up.
+    pub fn push(&mut self, req: RoutedRequest) -> Option<Batch> {
+        self.accepted += 1;
+        let key = req.plan.design.b_hat;
+        let group = self.groups.entry(key).or_insert_with(|| Batch {
+            b_hat: key,
+            requests: Vec::new(),
+            oldest_arrival_s: req.request.arrival_s,
+        });
+        group.oldest_arrival_s = group.oldest_arrival_s.min(req.request.arrival_s);
+        group.requests.push(req);
+        if group.requests.len() >= self.cfg.max_batch {
+            self.flushed += 1;
+            return self.groups.remove(&key);
+        }
+        None
+    }
+
+    /// Flush groups whose oldest member exceeded the wait deadline at
+    /// (virtual or wall) time `now_s`.
+    pub fn poll_deadlines(&mut self, now_s: f64) -> Vec<Batch> {
+        let due: Vec<u32> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| now_s - g.oldest_arrival_s >= self.cfg.max_wait_s)
+            .map(|(k, _)| *k)
+            .collect();
+        due.iter()
+            .map(|k| {
+                self.flushed += 1;
+                self.groups.remove(k).expect("key present")
+            })
+            .collect()
+    }
+
+    /// Flush everything (end of stream).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let keys: Vec<u32> = self.groups.keys().copied().collect();
+        keys.iter()
+            .map(|k| {
+                self.flushed += 1;
+                self.groups.remove(k).expect("key present")
+            })
+            .collect()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.groups.values().map(|g| g.requests.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{Algorithm, Scheduler};
+    use crate::coordinator::router::{QosPolicy, Router};
+    use crate::data::workload::{generate, Arrival};
+    use crate::quant::Scheme;
+    use crate::system::Platform;
+    use crate::util::prop::forall;
+
+    fn routed(n: usize, seed: u64) -> Vec<RoutedRequest> {
+        let mut router = Router::new(
+            QosPolicy::paper_default(),
+            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact,
+                           Scheme::Uniform, 1),
+        );
+        generate(n, 16, Arrival::Poisson { lambda_rps: 100.0 }, seed)
+            .into_iter()
+            .filter_map(|r| router.route(r).ok())
+            .collect()
+    }
+
+    #[test]
+    fn conservation_no_request_lost_or_duplicated() {
+        forall(
+            "batcher conserves requests",
+            20,
+            |r| (10 + r.below(100), r.next_u64()),
+            |&(n, seed)| {
+                let reqs = routed(n, seed);
+                let total = reqs.len();
+                let mut b = Batcher::new(BatcherConfig { max_batch: 4, max_wait_s: 0.01 });
+                let mut seen = Vec::new();
+                for rr in reqs {
+                    let now = rr.request.arrival_s;
+                    if let Some(batch) = b.push(rr) {
+                        seen.extend(batch.requests.iter().map(|r| r.request.id));
+                    }
+                    for batch in b.poll_deadlines(now) {
+                        seen.extend(batch.requests.iter().map(|r| r.request.id));
+                    }
+                }
+                for batch in b.drain() {
+                    seen.extend(batch.requests.iter().map(|r| r.request.id));
+                }
+                seen.sort();
+                let mut dedup = seen.clone();
+                dedup.dedup();
+                if seen.len() == total && dedup.len() == total {
+                    Ok(())
+                } else {
+                    Err(format!("{} in, {} out ({} unique)", total, seen.len(), dedup.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn batches_are_bitwidth_homogeneous() {
+        let reqs = routed(120, 5);
+        let mut b = Batcher::new(BatcherConfig::default());
+        let mut batches = Vec::new();
+        for rr in reqs {
+            if let Some(batch) = b.push(rr) {
+                batches.push(batch);
+            }
+        }
+        batches.extend(b.drain());
+        for batch in &batches {
+            assert!(batch
+                .requests
+                .iter()
+                .all(|r| r.plan.design.b_hat == batch.b_hat));
+        }
+    }
+
+    #[test]
+    fn size_cap_is_respected() {
+        let reqs = routed(64, 9);
+        let mut b = Batcher::new(BatcherConfig { max_batch: 4, max_wait_s: 1e9 });
+        for rr in reqs {
+            if let Some(batch) = b.push(rr) {
+                assert!(batch.requests.len() <= 4);
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        let reqs = routed(2, 11);
+        let mut b = Batcher::new(BatcherConfig { max_batch: 64, max_wait_s: 0.1 });
+        for rr in reqs {
+            assert!(b.push(rr).is_none());
+        }
+        assert_eq!(b.pending(), 2);
+        let flushed = b.poll_deadlines(1e9);
+        assert!(!flushed.is_empty());
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Deterministic single-thread co-inference engine.
+//!
+//! Drives the full request path — route → batch → quantized agent encode →
+//! simulated WLAN uplink → server decode → detokenize — over a workload,
+//! producing [`Telemetry`]. This is the engine every figure/table bench
+//! uses; the threaded [`super::server`] wraps the same pieces for
+//! throughput experiments.
+
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::router::Router;
+use super::telemetry::{RequestRecord, Telemetry};
+use crate::data::eval::EvalSet;
+use crate::data::vocab::Vocab;
+use crate::data::workload::Request;
+use crate::runtime::executor::CoModel;
+use crate::system::channel::Channel;
+use crate::system::{delay, energy};
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+
+pub struct EngineConfig {
+    pub batcher: BatcherConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { batcher: BatcherConfig::default() }
+    }
+}
+
+pub struct Engine<'a> {
+    pub model: &'a mut CoModel,
+    pub router: Router,
+    pub vocab: &'a Vocab,
+    pub eval: &'a EvalSet,
+    pub channel: Channel,
+    cfg: EngineConfig,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        model: &'a mut CoModel,
+        router: Router,
+        vocab: &'a Vocab,
+        eval: &'a EvalSet,
+        channel: Channel,
+        cfg: EngineConfig,
+    ) -> Engine<'a> {
+        Engine { model, router, vocab, eval, channel, cfg }
+    }
+
+    /// Run a closed-loop workload to completion.
+    pub fn run(&mut self, requests: Vec<Request>) -> Result<Telemetry> {
+        let mut telemetry = Telemetry::default();
+        let mut batcher = Batcher::new(self.cfg.batcher);
+        for req in requests {
+            let now = req.request_time();
+            match self.router.route(req) {
+                Ok(routed) => {
+                    if let Some(batch) = batcher.push(routed) {
+                        self.execute_batch(batch, &mut telemetry)?;
+                    }
+                    for batch in batcher.poll_deadlines(now) {
+                        self.execute_batch(batch, &mut telemetry)?;
+                    }
+                }
+                Err(_) => telemetry.rejected += 1,
+            }
+        }
+        for batch in batcher.drain() {
+            self.execute_batch(batch, &mut telemetry)?;
+        }
+        Ok(telemetry)
+    }
+
+    fn execute_batch(&mut self, batch: Batch, telemetry: &mut Telemetry) -> Result<()> {
+        let n = batch.requests.len();
+        let in_len = self.model.dims.input_len();
+        let mut inputs = Vec::with_capacity(n * in_len);
+        for rr in &batch.requests {
+            inputs.extend_from_slice(self.eval.sample(rr.request.sample));
+        }
+        let plan = batch.requests[0].plan;
+        let scheme = plan.scheme;
+        let sw = Stopwatch::start();
+        // agent stage with quantized encoder weights
+        let embs = self.model.encode(&inputs, n, batch.b_hat, scheme)?;
+        // uplink: one transfer per request's embedding
+        let emb_bytes =
+            Channel::embedding_bytes(self.model.dims.emb_tokens, self.model.dims.d_model);
+        let link_times: Vec<f64> =
+            (0..n).map(|_| self.channel.transmit_s(emb_bytes)).collect();
+        // edge stage
+        let tokens = self.model.decode(&embs, n)?;
+        let wall = sw.elapsed_s() / n as f64;
+
+        let platform = &self.router.scheduler.platform;
+        for (i, rr) in batch.requests.into_iter().enumerate() {
+            let b = rr.plan.design.b_hat as f64;
+            let (f, ft) = (rr.plan.f_realized, rr.plan.f_tilde_realized);
+            telemetry.push(RequestRecord {
+                id: rr.request.id,
+                class: rr.request.class,
+                sample: rr.request.sample,
+                b_hat: rr.plan.design.b_hat,
+                t_agent_sim_s: delay::agent_delay(platform, b, f),
+                t_server_sim_s: delay::server_delay(platform, ft),
+                t_link_s: link_times[i],
+                energy_sim_j: energy::total_energy(platform, b, f, ft),
+                t_wall_s: wall,
+                caption: self.vocab.detokenize(&tokens[i]),
+                t0: rr.t0,
+                e0: rr.e0,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Small extension used by the engine loop.
+trait ArrivalTime {
+    fn request_time(&self) -> f64;
+}
+
+impl ArrivalTime for Request {
+    fn request_time(&self) -> f64 {
+        self.arrival_s
+    }
+}

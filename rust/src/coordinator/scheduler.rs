@@ -1,0 +1,272 @@
+//! Per-class operating-point planning: applies the paper's joint design
+//! (or a baseline) to each QoS class's (T0, E0) budget and caches the
+//! result until budgets or platform change.
+
+use crate::opt::{bisection, feasible_random, fixed_freq, sca, Design, Problem};
+use crate::quant::Scheme;
+use crate::rl::{env::BudgetRanges, DesignEnv, Ppo, PpoConfig};
+use crate::system::dvfs::Governor;
+use crate::system::Platform;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Which design algorithm drives the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// paper's proposed joint design (SCA Algorithm 1)
+    Proposed,
+    /// exact reference (monotone bisection) — identical results, faster
+    Exact,
+    /// DRL baseline [12]
+    Ppo,
+    /// benchmark scheme 2
+    FixedFreq,
+    /// benchmark scheme 3
+    FeasibleRandom,
+}
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Proposed => "proposed",
+            Algorithm::Exact => "exact",
+            Algorithm::Ppo => "ppo",
+            Algorithm::FixedFreq => "fixed-freq",
+            Algorithm::FeasibleRandom => "feasible-random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "proposed" | "sca" => Some(Algorithm::Proposed),
+            "exact" | "bisection" => Some(Algorithm::Exact),
+            "ppo" | "drl" => Some(Algorithm::Ppo),
+            "fixed-freq" | "fixed" => Some(Algorithm::FixedFreq),
+            "feasible-random" | "random" => Some(Algorithm::FeasibleRandom),
+            _ => None,
+        }
+    }
+}
+
+/// A planned operating point for one QoS class.
+#[derive(Debug, Clone, Copy)]
+pub struct Plan {
+    pub design: Design,
+    /// frequencies after DVFS realization (== design on continuous govs)
+    pub f_realized: f64,
+    pub f_tilde_realized: f64,
+    pub scheme: Scheme,
+    pub feasible: bool,
+}
+
+pub struct Scheduler {
+    pub platform: Platform,
+    pub lambda: f64,
+    pub algorithm: Algorithm,
+    pub scheme: Scheme,
+    pub device_gov: Governor,
+    pub server_gov: Governor,
+    ppo: Option<Ppo>,
+    rng: Rng,
+    cache: HashMap<(u64, u64), Plan>,
+}
+
+fn budget_key(t0: f64, e0: f64) -> (u64, u64) {
+    (t0.to_bits(), e0.to_bits())
+}
+
+/// Fully discrete testbed planning: device pinned at `f_dev`, server
+/// restricted to its governor's operating points. Largest feasible b̂,
+/// cheapest (slowest) server point within it.
+fn plan_discrete(problem: &Problem, f_dev: f64, server_points: &[f64]) -> Option<Design> {
+    let p = &problem.platform;
+    let c2 = p.server_cycles();
+    for b_hat in (1..=p.b_max).rev() {
+        let c1 = p.agent_cycles(b_hat as f64);
+        let t1 = c1 / f_dev;
+        let e1 = p.device.pue * p.device.psi * c1 * f_dev * f_dev;
+        if t1 > problem.t0 || e1 > problem.e0 {
+            continue;
+        }
+        // ascending server points: the first that meets the delay budget
+        // is the energy-cheapest realizable choice
+        for &f_tilde in server_points {
+            let t2 = c2 / f_tilde;
+            let e2 = p.server.pue * p.server.psi * c2 * f_tilde * f_tilde;
+            if t1 + t2 <= problem.t0 && e1 + e2 <= problem.e0 {
+                return Some(Design { b_hat, f: f_dev, f_tilde });
+            }
+            if e1 + e2 > problem.e0 {
+                break; // faster points only cost more energy
+            }
+        }
+    }
+    None
+}
+
+impl Scheduler {
+    pub fn new(
+        platform: Platform,
+        lambda: f64,
+        algorithm: Algorithm,
+        scheme: Scheme,
+        seed: u64,
+    ) -> Scheduler {
+        Scheduler {
+            device_gov: Governor::Continuous { f_max: platform.device.f_max },
+            server_gov: Governor::Continuous { f_max: platform.server.f_max },
+            platform,
+            lambda,
+            algorithm,
+            scheme,
+            ppo: None,
+            rng: Rng::new(seed),
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Switch to coarse testbed governors (Table I mode).
+    pub fn with_governors(mut self, device: Governor, server: Governor) -> Scheduler {
+        self.device_gov = device;
+        self.server_gov = server;
+        self.cache.clear();
+        self
+    }
+
+    /// Train the PPO policy (required before using Algorithm::Ppo).
+    pub fn train_ppo(&mut self, ranges: BudgetRanges, cfg: PpoConfig) {
+        let env = DesignEnv::new(self.platform, self.lambda, ranges);
+        let mut rng = self.rng.fork(0x99);
+        let mut ppo = Ppo::new(env, cfg, &mut rng);
+        ppo.train(&mut rng);
+        self.ppo = Some(ppo);
+    }
+
+    /// Plan (and cache) the operating point for a (T0, E0) budget.
+    pub fn plan(&mut self, t0: f64, e0: f64) -> Option<Plan> {
+        let key = budget_key(t0, e0);
+        if let Some(p) = self.cache.get(&key) {
+            return Some(*p);
+        }
+        let problem = Problem::new(self.platform, self.lambda, t0, e0);
+        // testbed mode: a single-point device governor pins the device
+        // frequency — the continuous planners would pick unrealizable
+        // (lower) frequencies, so plan against the actual operating points
+        if let Governor::Profiles { points } = &self.device_gov {
+            if points.len() == 1 {
+                let f_dev = points[0];
+                let design = match &self.server_gov {
+                    Governor::Profiles { points: srv } => {
+                        plan_discrete(&problem, f_dev, srv)
+                    }
+                    Governor::Continuous { .. } => problem.plan_pinned_device(f_dev),
+                }?;
+                let plan = Plan {
+                    design,
+                    f_realized: f_dev,
+                    f_tilde_realized: design.f_tilde,
+                    scheme: self.scheme,
+                    feasible: problem.is_feasible(&design),
+                };
+                self.cache.insert(key, plan);
+                return Some(plan);
+            }
+        }
+        let design = match self.algorithm {
+            Algorithm::Proposed => {
+                sca::solve(&problem, sca::ScaOptions::default()).map(|r| r.design)
+            }
+            Algorithm::Exact => bisection::solve(&problem).map(|r| r.design),
+            Algorithm::FixedFreq => fixed_freq::solve(&problem),
+            Algorithm::FeasibleRandom => {
+                feasible_random::solve(&problem, self.rng.next_u64())
+            }
+            Algorithm::Ppo => {
+                let ppo = self.ppo.as_ref().expect("call train_ppo first");
+                ppo.solve_projected(&problem)
+            }
+        }?;
+        // realize frequencies on the actual governors (testbed: snap up to
+        // the next profile, which preserves the delay budget)
+        let plan = Plan {
+            design,
+            f_realized: self.device_gov.realize(design.f),
+            f_tilde_realized: self.server_gov.realize(design.f_tilde),
+            scheme: self.scheme,
+            feasible: problem.is_feasible(&design),
+        };
+        self.cache.insert(key, plan);
+        Some(plan)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn invalidate(&mut self) {
+        self.cache.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(alg: Algorithm) -> Scheduler {
+        Scheduler::new(Platform::paper_blip2(), 15.0, alg, Scheme::Uniform, 7)
+    }
+
+    #[test]
+    fn proposed_plans_are_feasible_and_cached() {
+        let mut s = sched(Algorithm::Proposed);
+        let p1 = s.plan(3.5, 2.0).unwrap();
+        assert!(p1.feasible);
+        assert_eq!(s.cache_len(), 1);
+        let p2 = s.plan(3.5, 2.0).unwrap();
+        assert_eq!(p1.design.b_hat, p2.design.b_hat);
+        assert_eq!(s.cache_len(), 1);
+    }
+
+    #[test]
+    fn exact_matches_proposed_bitwidth_closely() {
+        let mut a = sched(Algorithm::Proposed);
+        let mut b = sched(Algorithm::Exact);
+        for (t0, e0) in [(3.5, 2.0), (2.5, 1.0), (4.0, 3.0)] {
+            let pa = a.plan(t0, e0).unwrap().design.b_hat as i64;
+            let pb = b.plan(t0, e0).unwrap().design.b_hat as i64;
+            assert!((pa - pb).abs() <= 1, "({t0},{e0}): sca {pa} exact {pb}");
+        }
+    }
+
+    #[test]
+    fn governor_realization_snaps_up() {
+        let mut s = sched(Algorithm::Exact).with_governors(
+            Governor::jetson_profiles(),
+            Governor::server_profiles(),
+        );
+        // clamp the platform to the governor's reality first
+        s.platform.device.f_max = s.device_gov.f_max();
+        s.platform.server.f_max = s.server_gov.f_max();
+        s.invalidate();
+        let p = s.plan(3.0, 4.0).unwrap();
+        assert!(p.f_realized >= p.design.f.min(s.device_gov.f_max()));
+        assert!(Governor::jetson_profiles()
+            .profile_names()
+            .iter()
+            .any(|_| true));
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let mut s = sched(Algorithm::Exact);
+        assert!(s.plan(1e-9, 1e-12).is_none());
+    }
+
+    #[test]
+    fn different_budgets_get_different_cache_slots() {
+        let mut s = sched(Algorithm::Exact);
+        s.plan(3.5, 2.0);
+        s.plan(2.0, 2.0);
+        assert_eq!(s.cache_len(), 2);
+    }
+}

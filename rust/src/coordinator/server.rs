@@ -1,0 +1,201 @@
+//! Threaded pipelined server: agent stage and edge stage run on their own
+//! threads connected by bounded channels (backpressure included), so the
+//! encoder of batch k+1 overlaps the decoder of batch k — the serving
+//! analogue of the paper's two-stage split.
+//!
+//! XLA/PJRT handles are not `Send`, so each stage thread opens its own
+//! [`Registry`]/[`CoModel`]; only plain tensors cross threads.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::router::Router;
+use super::telemetry::{RequestRecord, Telemetry};
+use crate::data::eval::EvalSet;
+use crate::data::vocab::Vocab;
+use crate::data::workload::Request;
+use crate::quant::Scheme;
+use crate::runtime::artifact::Registry;
+use crate::runtime::executor::CoModel;
+use crate::system::channel::Channel;
+use crate::system::{delay, energy, Platform};
+use crate::util::pool::{bounded, Receiver, Sender};
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Work crossing the router -> agent boundary.
+struct AgentJob {
+    records: Vec<RequestRecord>,
+    inputs: Vec<f32>,
+    b_hat: u32,
+    scheme: Scheme,
+}
+
+/// Work crossing the agent -> edge boundary.
+struct EdgeJob {
+    records: Vec<RequestRecord>,
+    embs: Vec<f32>,
+}
+
+pub struct PipelinedServer {
+    pub artifacts: PathBuf,
+    pub model_name: String,
+    pub router: Router,
+    pub batcher_cfg: BatcherConfig,
+    pub queue_depth: usize,
+}
+
+impl PipelinedServer {
+    /// Run the workload through the 2-stage pipeline; blocks until done.
+    pub fn run(&mut self, requests: Vec<Request>, eval: &EvalSet) -> Result<Telemetry> {
+        let (tx_agent, rx_agent) = bounded::<AgentJob>(self.queue_depth);
+        let (tx_edge, rx_edge) = bounded::<EdgeJob>(self.queue_depth);
+        let (tx_done, rx_done) = bounded::<Vec<RequestRecord>>(self.queue_depth * 2);
+
+        let platform = self.router.scheduler.platform;
+        let agent = spawn_agent_stage(
+            self.artifacts.clone(),
+            self.model_name.clone(),
+            rx_agent,
+            tx_edge,
+            platform,
+        );
+        let edge = spawn_edge_stage(
+            self.artifacts.clone(),
+            self.model_name.clone(),
+            rx_edge,
+            tx_done,
+        );
+
+        let mut telemetry = Telemetry::default();
+        let mut batcher = Batcher::new(self.batcher_cfg);
+        let submit = |batch: super::batcher::Batch,
+                          tx: &Sender<AgentJob>|
+         -> Result<()> {
+            let scheme = batch.requests[0].plan.scheme;
+            let mut inputs = Vec::new();
+            let mut records = Vec::with_capacity(batch.requests.len());
+            for rr in &batch.requests {
+                inputs.extend_from_slice(eval.sample(rr.request.sample));
+                // simulated metrics are plan-determined and per-request:
+                // classes share a batch (same b̂ ⇒ same weights) but keep
+                // their own planned frequencies
+                let b = rr.plan.design.b_hat as f64;
+                records.push(RequestRecord {
+                    id: rr.request.id,
+                    class: rr.request.class,
+                    sample: rr.request.sample,
+                    b_hat: rr.plan.design.b_hat,
+                    t_agent_sim_s: delay::agent_delay(&platform, b, rr.plan.f_realized),
+                    t_server_sim_s: delay::server_delay(
+                        &platform, rr.plan.f_tilde_realized),
+                    t_link_s: 0.0,
+                    energy_sim_j: energy::total_energy(
+                        &platform, b, rr.plan.f_realized, rr.plan.f_tilde_realized),
+                    t_wall_s: 0.0,
+                    caption: String::new(),
+                    t0: rr.t0,
+                    e0: rr.e0,
+                });
+            }
+            tx.send(AgentJob {
+                records,
+                inputs,
+                b_hat: batch.b_hat,
+                scheme,
+            })
+            .map_err(|_| anyhow::anyhow!("agent stage died"))?;
+            Ok(())
+        };
+
+        for req in requests {
+            let now = req.arrival_s;
+            match self.router.route(req) {
+                Ok(routed) => {
+                    if let Some(b) = batcher.push(routed) {
+                        submit(b, &tx_agent)?;
+                    }
+                    for b in batcher.poll_deadlines(now) {
+                        submit(b, &tx_agent)?;
+                    }
+                }
+                Err(_) => telemetry.rejected += 1,
+            }
+        }
+        for b in batcher.drain() {
+            submit(b, &tx_agent)?;
+        }
+        drop(tx_agent); // close the pipeline head
+
+        while let Some(records) = rx_done.recv() {
+            for r in records {
+                telemetry.push(r);
+            }
+        }
+        agent.join().expect("agent stage")?;
+        edge.join().expect("edge stage")?;
+        Ok(telemetry)
+    }
+}
+
+fn spawn_agent_stage(
+    artifacts: PathBuf,
+    model_name: String,
+    rx: Receiver<AgentJob>,
+    tx: Sender<EdgeJob>,
+    _platform: Platform,
+) -> std::thread::JoinHandle<Result<()>> {
+    std::thread::Builder::new()
+        .name("qaci-agent-stage".into())
+        .spawn(move || -> Result<()> {
+            let reg = Registry::open(&artifacts)?;
+            let mut model = CoModel::load(&reg, &model_name)?;
+            let mut channel = Channel::wlan_5ghz(0xA9E17);
+            let emb_bytes =
+                Channel::embedding_bytes(model.dims.emb_tokens, model.dims.d_model);
+            while let Some(mut job) = rx.recv() {
+                let n = job.records.len();
+                let sw = Stopwatch::start();
+                let embs = model.encode(&job.inputs, n, job.b_hat, job.scheme)?;
+                let wall = sw.elapsed_s() / n as f64;
+                for r in &mut job.records {
+                    r.t_wall_s += wall;
+                    r.t_link_s = channel.transmit_s(emb_bytes);
+                }
+                if tx.send(EdgeJob { records: job.records, embs }).is_err() {
+                    break; // edge stage gone
+                }
+            }
+            Ok(())
+        })
+        .expect("spawn agent stage")
+}
+
+fn spawn_edge_stage(
+    artifacts: PathBuf,
+    model_name: String,
+    rx: Receiver<EdgeJob>,
+    tx: Sender<Vec<RequestRecord>>,
+) -> std::thread::JoinHandle<Result<()>> {
+    std::thread::Builder::new()
+        .name("qaci-edge-stage".into())
+        .spawn(move || -> Result<()> {
+            let reg = Registry::open(&artifacts)?;
+            let mut model = CoModel::load(&reg, &model_name)?;
+            let vocab = Vocab::from_manifest(&reg.manifest)?;
+            while let Some(mut job) = rx.recv() {
+                let n = job.records.len();
+                let sw = Stopwatch::start();
+                let tokens = model.decode(&job.embs, n)?;
+                let wall = sw.elapsed_s() / n as f64;
+                for (r, t) in job.records.iter_mut().zip(&tokens) {
+                    r.t_wall_s += wall;
+                    r.caption = vocab.detokenize(t);
+                }
+                if tx.send(job.records).is_err() {
+                    break;
+                }
+            }
+            Ok(())
+        })
+        .expect("spawn edge stage")
+}

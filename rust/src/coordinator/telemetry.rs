@@ -1,0 +1,176 @@
+//! Per-request records and aggregate rollups: the coordinator's metrics
+//! pipeline (latency/energy/quality per QoS class).
+
+use crate::metrics::cider::CiderScorer;
+use crate::util::timer::Samples;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub class: &'static str,
+    pub sample: usize,
+    pub b_hat: u32,
+    /// simulated delays from the paper's model (eq. 4/5) at the realized
+    /// frequencies
+    pub t_agent_sim_s: f64,
+    pub t_server_sim_s: f64,
+    /// simulated WLAN transfer time (excluded from the QoS constraint,
+    /// reported separately)
+    pub t_link_s: f64,
+    /// simulated energy (eq. 9)
+    pub energy_sim_j: f64,
+    /// wall-clock time the PJRT stages actually took (batched, amortized)
+    pub t_wall_s: f64,
+    /// the caption this request produced
+    pub caption: String,
+    /// QoS budgets the plan was made against
+    pub t0: f64,
+    pub e0: f64,
+}
+
+impl RequestRecord {
+    pub fn t_sim_total(&self) -> f64 {
+        self.t_agent_sim_s + self.t_server_sim_s
+    }
+
+    pub fn meets_qos(&self) -> bool {
+        self.t_sim_total() <= self.t0 * (1.0 + 1e-6)
+            && self.energy_sim_j <= self.e0 * (1.0 + 1e-6)
+    }
+}
+
+/// Aggregated view over a run.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    pub records: Vec<RequestRecord>,
+    pub rejected: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClassSummary {
+    pub class: String,
+    pub count: usize,
+    pub mean_bits: f64,
+    pub sim_delay: Samples,
+    pub sim_energy: Samples,
+    pub wall: Samples,
+    pub qos_violations: usize,
+}
+
+impl Telemetry {
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Corpus CIDEr over all records (candidates ordered by eval sample).
+    /// `refs[i]` are the references of eval sample i.
+    pub fn cider_x100(&self, refs: &[Vec<String>]) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let scorer = CiderScorer::new(refs);
+        let total: f64 = self
+            .records
+            .iter()
+            .map(|r| scorer.score_one(r.sample, &r.caption))
+            .sum();
+        total / self.records.len() as f64 * 10.0
+    }
+
+    pub fn by_class(&self) -> BTreeMap<String, ClassSummary> {
+        let mut out: BTreeMap<String, ClassSummary> = BTreeMap::new();
+        for r in &self.records {
+            let s = out.entry(r.class.to_string()).or_insert_with(|| ClassSummary {
+                class: r.class.to_string(),
+                count: 0,
+                mean_bits: 0.0,
+                sim_delay: Samples::new(),
+                sim_energy: Samples::new(),
+                wall: Samples::new(),
+                qos_violations: 0,
+            });
+            s.count += 1;
+            s.mean_bits += r.b_hat as f64;
+            s.sim_delay.push(r.t_sim_total());
+            s.sim_energy.push(r.energy_sim_j);
+            s.wall.push(r.t_wall_s);
+            if !r.meets_qos() {
+                s.qos_violations += 1;
+            }
+        }
+        for s in out.values_mut() {
+            s.mean_bits /= s.count.max(1) as f64;
+        }
+        out
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.records.iter().map(|r| r.energy_sim_j).sum()
+    }
+
+    pub fn qos_violations(&self) -> usize {
+        self.records.iter().filter(|r| !r.meets_qos()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, class: &'static str, bits: u32, t: f64, e: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            class,
+            sample: 0,
+            b_hat: bits,
+            t_agent_sim_s: t * 0.6,
+            t_server_sim_s: t * 0.4,
+            t_link_s: 0.001,
+            energy_sim_j: e,
+            t_wall_s: 0.01,
+            caption: "a red ball is left of a blue box".into(),
+            t0: 3.5,
+            e0: 2.0,
+        }
+    }
+
+    #[test]
+    fn qos_check() {
+        assert!(rec(0, "standard", 8, 3.0, 1.5).meets_qos());
+        assert!(!rec(0, "standard", 8, 4.0, 1.5).meets_qos());
+        assert!(!rec(0, "standard", 8, 3.0, 2.5).meets_qos());
+    }
+
+    #[test]
+    fn class_rollups() {
+        let mut t = Telemetry::default();
+        t.push(rec(0, "interactive", 4, 2.0, 1.0));
+        t.push(rec(1, "interactive", 6, 2.5, 1.2));
+        t.push(rec(2, "standard", 8, 3.0, 1.5));
+        let by = t.by_class();
+        assert_eq!(by.len(), 2);
+        assert_eq!(by["interactive"].count, 2);
+        assert!((by["interactive"].mean_bits - 5.0).abs() < 1e-12);
+        assert_eq!(t.qos_violations(), 0);
+    }
+
+    #[test]
+    fn cider_of_exact_captions_is_high() {
+        let mut t = Telemetry::default();
+        t.push(rec(0, "standard", 8, 1.0, 1.0));
+        let refs = vec![vec![
+            "a red ball is left of a blue box".to_string(),
+            "the red ball sits left of the blue box".to_string(),
+        ]];
+        assert!(t.cider_x100(&refs) > 50.0);
+    }
+}

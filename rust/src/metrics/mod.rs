@@ -1,0 +1,6 @@
+//! Inference-quality metrics. CIDEr (the paper's §VI-C quality measure,
+//! eq. 37) plus the generic stats helpers shared by benches and telemetry.
+
+pub mod cider;
+pub mod ngram;
+pub mod stats;

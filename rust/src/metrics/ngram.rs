@@ -1,0 +1,69 @@
+//! N-gram extraction and counting for the CIDEr scorer.
+
+use std::collections::HashMap;
+
+/// A token sequence's n-gram multiset, keyed by the joined token string.
+pub type Counts = HashMap<String, f64>;
+
+/// Tokenize a caption: lowercase + whitespace split (matches the build-time
+/// python tokenizer, which is also whitespace-based).
+pub fn tokenize(caption: &str) -> Vec<String> {
+    caption
+        .split_whitespace()
+        .map(|w| w.to_lowercase())
+        .filter(|w| !w.is_empty())
+        .collect()
+}
+
+/// Extract n-gram counts of order `n` from tokens.
+pub fn counts(tokens: &[String], n: usize) -> Counts {
+    let mut out = Counts::new();
+    if n == 0 || tokens.len() < n {
+        return out;
+    }
+    for win in tokens.windows(n) {
+        *out.entry(win.join(" ")).or_insert(0.0) += 1.0;
+    }
+    out
+}
+
+/// All n-gram count maps for orders 1..=max_n.
+pub fn all_orders(caption: &str, max_n: usize) -> Vec<Counts> {
+    let toks = tokenize(caption);
+    (1..=max_n).map(|n| counts(&toks, n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenize_lowercases_and_splits() {
+        assert_eq!(tokenize("A Red  Ball"), vec!["a", "red", "ball"]);
+        assert!(tokenize("   ").is_empty());
+    }
+
+    #[test]
+    fn bigram_counts() {
+        let toks = tokenize("a red ball a red box");
+        let c = counts(&toks, 2);
+        assert_eq!(c["a red"], 2.0);
+        assert_eq!(c["red ball"], 1.0);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn order_longer_than_sentence_is_empty() {
+        let toks = tokenize("hi");
+        assert!(counts(&toks, 2).is_empty());
+    }
+
+    #[test]
+    fn all_orders_shapes() {
+        let v = all_orders("a b c", 4);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0].len(), 3); // unigrams
+        assert_eq!(v[2].len(), 1); // single trigram
+        assert!(v[3].is_empty()); // no 4-gram
+    }
+}

@@ -1,0 +1,98 @@
+//! Shared statistics helpers: empirical distributions, histograms, the
+//! Kolmogorov–Smirnov fit test used for Fig. 2, and L1 norms.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// L1 norm Σ|x| — the paper's parameter distortion building block (eq. 15).
+pub fn l1(xs: &[f32]) -> f64 {
+    xs.iter().map(|x| x.abs() as f64).sum()
+}
+
+/// L1 distance Σ|x-y|.
+pub fn l1_dist(xs: &[f32], ys: &[f32]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    xs.iter()
+        .zip(ys)
+        .map(|(x, y)| (*x as f64 - *y as f64).abs())
+        .sum()
+}
+
+/// Normalized histogram over [0, max] with `bins` buckets.
+/// Returns (bin_centers, density) with Σ density * bin_width = 1.
+pub fn histogram(xs: &[f64], max: f64, bins: usize) -> (Vec<f64>, Vec<f64>) {
+    let width = max / bins as f64;
+    let mut counts = vec![0.0; bins];
+    let mut total = 0.0;
+    for &x in xs {
+        if x >= 0.0 && x < max {
+            counts[(x / width) as usize] += 1.0;
+            total += 1.0;
+        }
+    }
+    let centers = (0..bins).map(|i| (i as f64 + 0.5) * width).collect();
+    let density = counts
+        .into_iter()
+        .map(|c| if total > 0.0 { c / (total * width) } else { 0.0 })
+        .collect();
+    (centers, density)
+}
+
+/// One-sample Kolmogorov–Smirnov statistic against a CDF closure.
+pub fn ks_statistic(xs: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = cdf(x);
+        let emp_hi = (i + 1) as f64 / n;
+        let emp_lo = i as f64 / n;
+        d = d.max((emp_hi - f).abs()).max((f - emp_lo).abs());
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn l1_basics() {
+        assert_eq!(l1(&[1.0, -2.0, 3.0]), 6.0);
+        assert_eq!(l1_dist(&[1.0, 2.0], &[0.0, 4.0]), 3.0);
+    }
+
+    #[test]
+    fn histogram_integrates_to_one() {
+        let mut r = Rng::new(0);
+        let xs: Vec<f64> = (0..10_000).map(|_| r.exponential(5.0)).collect();
+        let (centers, density) = histogram(&xs, 2.0, 50);
+        let width = centers[1] - centers[0];
+        let integral: f64 = density.iter().map(|d| d * width).sum();
+        assert!(integral > 0.95 && integral <= 1.0 + 1e-9, "{integral}");
+    }
+
+    #[test]
+    fn ks_accepts_matching_distribution() {
+        let mut r = Rng::new(1);
+        let lam = 3.0;
+        let xs: Vec<f64> = (0..20_000).map(|_| r.exponential(lam)).collect();
+        let d = ks_statistic(&xs, |x| 1.0 - (-lam * x).exp());
+        assert!(d < 0.02, "KS {d} too large for a true exponential");
+    }
+
+    #[test]
+    fn ks_rejects_wrong_distribution() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.f64()).collect(); // uniform
+        let d = ks_statistic(&xs, |x| 1.0 - (-3.0 * x).exp());
+        assert!(d > 0.2, "KS {d} should reject exponential fit of uniform");
+    }
+}

@@ -1,0 +1,82 @@
+//! Adam over a flat parameter vector.
+
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, lr: f64) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0,
+        }
+    }
+
+    /// In-place parameter update from grads; optional global-norm clip.
+    pub fn step(&mut self, params: &mut [f64], grads: &[f64], clip: Option<f64>) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+
+        let scale = match clip {
+            Some(c) => {
+                let norm: f64 = grads.iter().map(|g| g * g).sum::<f64>().sqrt();
+                if norm > c {
+                    c / norm
+                } else {
+                    1.0
+                }
+            }
+            None => 1.0,
+        };
+
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i] * scale;
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = (x-3)^2 + (y+1)^2
+        let mut p = vec![0.0, 0.0];
+        let mut opt = Adam::new(2, 0.1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (p[0] - 3.0), 2.0 * (p[1] + 1.0)];
+            opt.step(&mut p, &g, None);
+        }
+        assert!((p[0] - 3.0).abs() < 1e-2, "{p:?}");
+        assert!((p[1] + 1.0).abs() < 1e-2, "{p:?}");
+    }
+
+    #[test]
+    fn clipping_bounds_update_magnitude() {
+        let mut p = vec![0.0];
+        let mut opt = Adam::new(1, 0.1);
+        opt.step(&mut p, &[1e9], Some(1.0));
+        assert!(p[0].abs() <= 0.11, "{p:?}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Row-major f64 matrix with the handful of ops the MLPs need.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Xavier/He-style init: N(0, sqrt(2/fan_in)).
+    pub fn he(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        let std = (2.0 / rows as f64).sqrt();
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| std * rng.normal()).collect(),
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// y = x @ self, x: (cols_in = rows) vector.
+    pub fn vec_mul(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "vec_mul dim");
+        let mut y = vec![0.0; self.cols];
+        for (r, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            for (c, w) in row.iter().enumerate() {
+                y[c] += xv * w;
+            }
+        }
+        y
+    }
+
+    /// grad wrt self of (x @ self) given upstream dy: outer(x, dy),
+    /// accumulated into `acc`.
+    pub fn accumulate_outer(acc: &mut Matrix, x: &[f64], dy: &[f64]) {
+        assert_eq!(x.len(), acc.rows);
+        assert_eq!(dy.len(), acc.cols);
+        for (r, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &mut acc.data[r * acc.cols..(r + 1) * acc.cols];
+            for (c, d) in dy.iter().enumerate() {
+                row[c] += xv * d;
+            }
+        }
+    }
+
+    /// dx of (x @ self) given dy: self @ dy (row-space product).
+    pub fn grad_input(&self, dy: &[f64]) -> Vec<f64> {
+        assert_eq!(dy.len(), self.cols, "grad_input dim");
+        let mut dx = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            dx[r] = row.iter().zip(dy).map(|(w, d)| w * d).sum();
+        }
+        dx
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn fill(&mut self, v: f64) {
+        self.data.fill(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_mul_known_values() {
+        // [1,2] @ [[1,2,3],[4,5,6]] = [9,12,15]
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.vec_mul(&[1.0, 2.0]), vec![9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn grad_input_is_transpose_mul() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        // dx = M @ dy
+        assert_eq!(m.grad_input(&[1.0, 0.0, 1.0]), vec![4.0, 10.0]);
+    }
+
+    #[test]
+    fn outer_accumulation() {
+        let mut acc = Matrix::zeros(2, 2);
+        Matrix::accumulate_outer(&mut acc, &[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(acc.data, vec![3.0, 4.0, 6.0, 8.0]);
+        Matrix::accumulate_outer(&mut acc, &[1.0, 0.0], &[1.0, 1.0]);
+        assert_eq!(acc.data, vec![4.0, 5.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn he_init_statistics() {
+        let mut rng = Rng::new(0);
+        let m = Matrix::he(256, 256, &mut rng);
+        let mean = m.data.iter().sum::<f64>() / m.data.len() as f64;
+        let var =
+            m.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m.data.len() as f64;
+        assert!(mean.abs() < 0.01);
+        assert!((var - 2.0 / 256.0).abs() < 0.002);
+    }
+}

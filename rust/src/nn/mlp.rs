@@ -1,0 +1,252 @@
+//! MLP with manual backprop: Linear → activation stacks, per-sample
+//! forward caches, gradient accumulation across a minibatch.
+
+use super::matrix::Matrix;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Tanh,
+    Relu,
+    /// identity (output layer)
+    Linear,
+}
+
+impl Activation {
+    fn apply(self, x: f64) -> f64 {
+        match self {
+            Activation::Tanh => x.tanh(),
+            Activation::Relu => x.max(0.0),
+            Activation::Linear => x,
+        }
+    }
+
+    /// derivative expressed via the *activated* output a = act(z)
+    fn dapply(self, a: f64) -> f64 {
+        match self {
+            Activation::Tanh => 1.0 - a * a,
+            Activation::Relu => {
+                if a > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Linear => 1.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub w: Matrix, // (in, out)
+    pub b: Vec<f64>,
+    pub act: Activation,
+}
+
+/// Forward cache for one sample: the activated output of every layer
+/// (index 0 = the input itself).
+pub type Cache = Vec<Vec<f64>>;
+
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Layer>,
+}
+
+/// Gradient buffers matching an Mlp's parameters.
+#[derive(Debug, Clone)]
+pub struct Grads {
+    pub w: Vec<Matrix>,
+    pub b: Vec<Vec<f64>>,
+}
+
+impl Mlp {
+    /// `dims = [in, h1, ..., out]`; hidden layers use `hidden_act`,
+    /// output layer is linear.
+    pub fn new(dims: &[usize], hidden_act: Activation, rng: &mut Rng) -> Mlp {
+        assert!(dims.len() >= 2);
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w2)| Layer {
+                w: Matrix::he(w2[0], w2[1], rng),
+                b: vec![0.0; w2[1]],
+                act: if i + 2 == dims.len() { Activation::Linear } else { hidden_act },
+            })
+            .collect();
+        Mlp { layers }
+    }
+
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let mut h = x.to_vec();
+        for layer in &self.layers {
+            let mut z = layer.w.vec_mul(&h);
+            for (zi, bi) in z.iter_mut().zip(&layer.b) {
+                *zi = layer.act.apply(*zi + bi);
+            }
+            h = z;
+        }
+        h
+    }
+
+    /// Forward keeping every intermediate activation for backprop.
+    pub fn forward_cached(&self, x: &[f64]) -> (Vec<f64>, Cache) {
+        let mut cache: Cache = vec![x.to_vec()];
+        let mut h = x.to_vec();
+        for layer in &self.layers {
+            let mut z = layer.w.vec_mul(&h);
+            for (zi, bi) in z.iter_mut().zip(&layer.b) {
+                *zi = layer.act.apply(*zi + bi);
+            }
+            cache.push(z.clone());
+            h = z;
+        }
+        (h, cache)
+    }
+
+    /// Backprop `dout` (d loss / d output) through the cached forward,
+    /// accumulating parameter grads into `grads`; returns d loss / d input.
+    pub fn backward(&self, cache: &Cache, dout: &[f64], grads: &mut Grads) -> Vec<f64> {
+        let mut delta = dout.to_vec();
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let a_out = &cache[li + 1];
+            // through the activation
+            for (d, a) in delta.iter_mut().zip(a_out) {
+                *d *= layer.act.dapply(*a);
+            }
+            // bias grad
+            for (g, d) in grads.b[li].iter_mut().zip(&delta) {
+                *g += d;
+            }
+            // weight grad + input grad
+            Matrix::accumulate_outer(&mut grads.w[li], &cache[li], &delta);
+            delta = layer.w.grad_input(&delta);
+        }
+        delta
+    }
+
+    pub fn zero_grads(&self) -> Grads {
+        Grads {
+            w: self.layers.iter().map(|l| Matrix::zeros(l.w.rows, l.w.cols)).collect(),
+            b: self.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+        }
+    }
+
+    /// Flatten parameters (for the Adam optimizer).
+    pub fn flat_params(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            out.extend_from_slice(&l.w.data);
+            out.extend_from_slice(&l.b);
+        }
+        out
+    }
+
+    pub fn set_flat_params(&mut self, flat: &[f64]) {
+        let mut i = 0;
+        for l in &mut self.layers {
+            let nw = l.w.data.len();
+            l.w.data.copy_from_slice(&flat[i..i + nw]);
+            i += nw;
+            let nb = l.b.len();
+            l.b.copy_from_slice(&flat[i..i + nb]);
+            i += nb;
+        }
+        assert_eq!(i, flat.len());
+    }
+
+    pub fn flat_grads(grads: &Grads) -> Vec<f64> {
+        let mut out = Vec::new();
+        for (w, b) in grads.w.iter().zip(&grads.b) {
+            out.extend_from_slice(&w.data);
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.data.len() + l.b.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Numerical-gradient check: the backbone guarantee for PPO.
+    #[test]
+    fn backprop_matches_finite_differences() {
+        let mut rng = Rng::new(3);
+        let mut mlp = Mlp::new(&[3, 8, 2], Activation::Tanh, &mut rng);
+        let x = [0.3, -0.7, 1.2];
+        // loss = sum of squares of outputs
+        let loss = |m: &Mlp| -> f64 { m.forward(&x).iter().map(|o| o * o).sum() };
+
+        let (out, cache) = mlp.forward_cached(&x);
+        let mut grads = mlp.zero_grads();
+        let dout: Vec<f64> = out.iter().map(|o| 2.0 * o).collect();
+        mlp.backward(&cache, &dout, &mut grads);
+        let analytic = Mlp::flat_grads(&grads);
+
+        let eps = 1e-6;
+        let flat = mlp.flat_params();
+        for idx in (0..flat.len()).step_by(7) {
+            let mut plus = flat.clone();
+            plus[idx] += eps;
+            mlp.set_flat_params(&plus);
+            let lp = loss(&mlp);
+            let mut minus = flat.clone();
+            minus[idx] -= eps;
+            mlp.set_flat_params(&minus);
+            let lm = loss(&mlp);
+            mlp.set_flat_params(&flat);
+            let numeric = (lp - lm) / (2.0 * eps);
+            assert!(
+                (numeric - analytic[idx]).abs() < 1e-5 * (1.0 + numeric.abs()),
+                "param {idx}: numeric {numeric} vs analytic {}",
+                analytic[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn relu_backprop_matches_finite_differences() {
+        let mut rng = Rng::new(4);
+        let mut mlp = Mlp::new(&[2, 6, 1], Activation::Relu, &mut rng);
+        let x = [0.9, -0.4];
+        let loss = |m: &Mlp| m.forward(&x)[0];
+        let (_, cache) = mlp.forward_cached(&x);
+        let mut grads = mlp.zero_grads();
+        mlp.backward(&cache, &[1.0], &mut grads);
+        let analytic = Mlp::flat_grads(&grads);
+        let eps = 1e-6;
+        let flat = mlp.flat_params();
+        for idx in (0..flat.len()).step_by(3) {
+            let mut plus = flat.clone();
+            plus[idx] += eps;
+            mlp.set_flat_params(&plus);
+            let lp = loss(&mlp);
+            let mut minus = flat.clone();
+            minus[idx] -= eps;
+            mlp.set_flat_params(&minus);
+            let lm = loss(&mlp);
+            mlp.set_flat_params(&flat);
+            let numeric = (lp - lm) / (2.0 * eps);
+            assert!(
+                (numeric - analytic[idx]).abs() < 1e-5 * (1.0 + numeric.abs()),
+                "param {idx}"
+            );
+        }
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let mut rng = Rng::new(5);
+        let mut mlp = Mlp::new(&[4, 5, 3], Activation::Tanh, &mut rng);
+        let flat = mlp.flat_params();
+        assert_eq!(flat.len(), mlp.n_params());
+        let out_before = mlp.forward(&[1.0, 2.0, 3.0, 4.0]);
+        mlp.set_flat_params(&flat);
+        assert_eq!(mlp.forward(&[1.0, 2.0, 3.0, 4.0]), out_before);
+    }
+}

@@ -1,0 +1,14 @@
+//! Minimal dense-network substrate (torch stand-in) powering the PPO
+//! baseline (§VI-C benchmark 1) and the FC-DNN used to verify Prop. 3.1.
+//!
+//! Design: plain `Vec<f64>` matrices, explicit forward caches, manual
+//! backprop, Adam. No autograd graph — the networks here are 2-3 layer
+//! MLPs where hand-written gradients are simpler and faster.
+
+pub mod adam;
+pub mod matrix;
+pub mod mlp;
+
+pub use adam::Adam;
+pub use matrix::Matrix;
+pub use mlp::{Activation, Mlp};

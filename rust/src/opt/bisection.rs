@@ -1,0 +1,124 @@
+//! Exact reference solver for (P1).
+//!
+//! Both D^U(b̂-1) and the gap D^U - D^L are strictly decreasing in b̂
+//! (verified by theory tests), and the feasible set shrinks monotonically
+//! as b̂ grows (more agent cycles). Hence the optimum of (P1) is simply
+//! **the largest feasible bit-width**, where per-b̂ feasibility is the
+//! analytic 2-D convex frequency problem solved by
+//! [`Problem::plan_frequencies`]. Bisection over the continuous relaxation
+//! gives the fractional optimum b̃*; the returned integer design rounds
+//! down to the largest feasible b̂ ∈ B.
+//!
+//! This solver exists to *validate* the paper's SCA Algorithm 1 (which
+//! generalizes to objectives without this monotone structure): the
+//! integration tests assert SCA matches it.
+
+use super::problem::{Design, Problem};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BisectionResult {
+    pub design: Design,
+    /// fractional optimum of the relaxation (P2)
+    pub b_tilde_star: f64,
+    pub objective: f64,
+}
+
+/// Solve (P1) exactly. Returns None when even b̂ = 1 is infeasible.
+pub fn solve(problem: &Problem) -> Option<BisectionResult> {
+    let b_max = problem.platform.b_max as f64;
+    if problem.plan_frequencies(1.0).is_none() {
+        return None;
+    }
+    let b_tilde_star = if problem.plan_frequencies(b_max).is_some() {
+        b_max
+    } else {
+        // invariant: lo feasible, hi infeasible
+        let (mut lo, mut hi) = (1.0, b_max);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if problem.plan_frequencies(mid).is_some() {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    };
+    // round down to the largest feasible integer (rounding up would
+    // violate a budget by construction)
+    let mut b_hat = b_tilde_star.floor() as u32;
+    while b_hat >= 1 {
+        if let Some(d) = problem.plan_design(b_hat) {
+            return Some(BisectionResult {
+                design: d,
+                b_tilde_star,
+                objective: problem.objective(b_hat as f64),
+            });
+        }
+        b_hat -= 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::Platform;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn matches_exhaustive_integer_search() {
+        forall(
+            "bisection == max feasible integer",
+            120,
+            |r| (r.range(0.3, 6.0), r.range(0.1, 8.0)),
+            |&(t0, e0)| {
+                let prob = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
+                let exhaustive = (1..=prob.platform.b_max)
+                    .rev()
+                    .find(|&b| prob.plan_design(b).is_some());
+                match (solve(&prob), exhaustive) {
+                    (None, None) => Ok(()),
+                    (Some(r), Some(b)) if r.design.b_hat == b => Ok(()),
+                    (got, want) => Err(format!("{got:?} vs want b̂={want:?}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn solution_is_feasible_and_budget_tight_or_capped() {
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 3.5, 2.0);
+        let r = solve(&prob).expect("feasible");
+        assert!(prob.is_feasible(&r.design));
+        // either we hit B_max or one of the budgets is nearly binding at b̂+1
+        if r.design.b_hat < prob.platform.b_max {
+            assert!(prob.plan_design(r.design.b_hat + 1).is_none());
+        }
+    }
+
+    #[test]
+    fn looser_budgets_never_reduce_bitwidth() {
+        forall(
+            "b̂*(T0,E0) monotone in budgets",
+            80,
+            |r| (r.range(0.3, 4.0), r.range(0.1, 4.0)),
+            |&(t0, e0)| {
+                let tight = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
+                let loose =
+                    Problem::new(Platform::paper_blip2(), 15.0, t0 * 1.5, e0 * 1.5);
+                match (solve(&tight), solve(&loose)) {
+                    (Some(a), Some(b)) if b.design.b_hat >= a.design.b_hat => Ok(()),
+                    (None, _) => Ok(()),
+                    (a, b) => Err(format!("tight {a:?} loose {b:?}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn infeasible_instance_returns_none() {
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 1e-9, 1e-12);
+        assert!(solve(&prob).is_none());
+    }
+}

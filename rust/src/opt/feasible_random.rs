@@ -1,0 +1,83 @@
+//! Benchmark scheme 3 (paper §VI-C): feasible random design. Bit-widths
+//! are sampled uniformly; each sample is kept only if the remaining
+//! frequency variables can be optimized to feasibility. The paper runs 400
+//! trials and reports over the feasible ones.
+
+use super::problem::{Design, Problem};
+use crate::util::rng::Rng;
+
+pub const PAPER_TRIALS: usize = 400;
+
+/// All feasible designs among `trials` uniformly sampled bit-widths
+/// (frequencies chosen by the energy-min oracle, as "optimizing the
+/// remaining computation frequency variables").
+pub fn sample_feasible(problem: &Problem, trials: usize, seed: u64) -> Vec<Design> {
+    let mut rng = Rng::new(seed);
+    (0..trials)
+        .filter_map(|_| {
+            let b_hat = 1 + rng.below(problem.platform.b_max as usize) as u32;
+            problem.plan_design(b_hat)
+        })
+        .collect()
+}
+
+/// One representative random-feasible design (first of a fresh sample).
+pub fn solve(problem: &Problem, seed: u64) -> Option<Design> {
+    sample_feasible(problem, PAPER_TRIALS, seed).first().copied()
+}
+
+/// Mean objective over the feasible trials — the quantity the paper's
+/// figures report for this baseline.
+pub fn mean_objective(problem: &Problem, trials: usize, seed: u64) -> Option<f64> {
+    let designs = sample_feasible(problem, trials, seed);
+    if designs.is_empty() {
+        return None;
+    }
+    Some(
+        designs
+            .iter()
+            .map(|d| problem.objective(d.b_hat as f64))
+            .sum::<f64>()
+            / designs.len() as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::bisection;
+    use crate::system::Platform;
+
+    fn problem() -> Problem {
+        Problem::new(Platform::paper_blip2(), 15.0, 3.5, 2.0)
+    }
+
+    #[test]
+    fn all_samples_are_feasible() {
+        let prob = problem();
+        for d in sample_feasible(&prob, 200, 1) {
+            assert!(prob.is_feasible(&d), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn mean_objective_never_beats_optimum() {
+        let prob = problem();
+        let opt = bisection::solve(&prob).unwrap().objective;
+        let mean = mean_objective(&prob, PAPER_TRIALS, 2).unwrap();
+        assert!(mean >= opt - 1e-12, "mean {mean} < opt {opt}");
+    }
+
+    #[test]
+    fn infeasible_problem_yields_no_samples() {
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 1e-9, 1e-12);
+        assert!(sample_feasible(&prob, 100, 3).is_empty());
+        assert!(mean_objective(&prob, 100, 3).is_none());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let prob = problem();
+        assert_eq!(sample_feasible(&prob, 50, 7), sample_feasible(&prob, 50, 7));
+    }
+}

@@ -1,0 +1,110 @@
+//! Benchmark scheme 2 (paper §VI-C): fixed-frequency design. Device and
+//! server run at predetermined fixed frequencies; only the bit-width is
+//! optimized to satisfy the QoS constraints.
+//!
+//! Note on the "predetermined" values: pinning *both* processors to their
+//! maximum frequencies is degenerate under the paper's own energy
+//! constants — the server at f̃^max alone costs η̃ψ̃C̃f̃² ≈ 58 J, ~29x the
+//! largest E0 the paper sweeps — which would erase this baseline from
+//! every figure. We therefore pin the device at its maximum (affordable:
+//! ≈0.2 J) and the server at a power-calibrated operating point
+//! (`SERVER_FRACTION` of max, chosen so the pinned server roughly fits
+//! the paper's central 2 J budget), and document the substitution
+//! (DESIGN.md §5). The literal max/max pin stays available for ablations.
+
+use super::problem::{Design, Problem};
+
+/// Server pin: 18% of f̃^max ⇒ pinned server energy ≈ 1.9 J on the paper
+/// BLIP-2 platform (just inside the central E0 band).
+pub const SERVER_FRACTION: f64 = 0.18;
+
+/// Largest feasible bit-width with frequencies pinned at the given
+/// fractions of max; None if none is.
+pub fn solve_at_fractions(problem: &Problem, dev_frac: f64, srv_frac: f64) -> Option<Design> {
+    let f = problem.platform.device.f_max * dev_frac;
+    let f_tilde = problem.platform.server.f_max * srv_frac;
+    (1..=problem.platform.b_max)
+        .rev()
+        .map(|b_hat| Design { b_hat, f, f_tilde })
+        .find(|d| problem.is_feasible(d))
+}
+
+/// The baseline as run in the benches (device max, server calibrated).
+pub fn solve(problem: &Problem) -> Option<Design> {
+    solve_at_fractions(problem, 1.0, SERVER_FRACTION)
+}
+
+/// The literal max/max-pinned variant (ablation).
+pub fn solve_at_max(problem: &Problem) -> Option<Design> {
+    solve_at_fractions(problem, 1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::bisection;
+    use crate::system::Platform;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn never_beats_joint_design() {
+        // running flat-out wastes energy: the joint design's bit-width is
+        // always >= the fixed-frequency one
+        forall(
+            "fixed-freq b̂ <= joint b̂",
+            100,
+            |r| (r.range(0.5, 6.0), r.range(0.2, 6.0)),
+            |&(t0, e0)| {
+                let prob = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
+                match (solve(&prob), bisection::solve(&prob)) {
+                    (Some(ff), Some(joint)) if ff.b_hat <= joint.design.b_hat => Ok(()),
+                    (None, _) => Ok(()),
+                    (Some(_), None) => Err("fixed feasible but joint not?!".into()),
+                    (a, b) => Err(format!("{a:?} vs {b:?}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn energy_tight_regime_hurts_fixed_freq() {
+        // a budget where max-frequency energy is prohibitive but the joint
+        // design thrives at lower frequency
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 5.0, 0.6);
+        let ff = solve(&prob);
+        let joint = bisection::solve(&prob).unwrap();
+        match ff {
+            None => {} // fixed freq completely infeasible: starkest case
+            Some(d) => assert!(d.b_hat < joint.design.b_hat),
+        }
+    }
+
+    #[test]
+    fn design_runs_at_pinned_frequencies() {
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 4.0, 80.0);
+        let d = solve_at_max(&prob).unwrap();
+        assert_eq!(d.f, prob.platform.device.f_max);
+        assert_eq!(d.f_tilde, prob.platform.server.f_max);
+        let d = solve(&prob).unwrap();
+        assert_eq!(d.f, prob.platform.device.f_max);
+        assert_eq!(d.f_tilde, prob.platform.server.f_max * SERVER_FRACTION);
+    }
+
+    #[test]
+    fn present_in_the_paper_budget_band() {
+        // the whole point of the calibrated pin: the baseline must exist
+        // at the paper's central (T0=3.5, E0=2.0) point
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 3.5, 2.0);
+        let d = solve(&prob).expect("fixed-freq feasible at central budgets");
+        assert!(d.b_hat >= 2);
+    }
+
+    #[test]
+    fn max_pinned_is_energy_degenerate_under_paper_constants() {
+        // the documented reason for the 60% default: f̃^max alone busts
+        // every paper-band energy budget
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 4.0, 4.0);
+        assert!(solve_at_max(&prob).is_none());
+        assert!(solve(&prob).is_some());
+    }
+}

@@ -1,0 +1,23 @@
+//! Joint quantization bit-width + computation frequency design (paper §V).
+//!
+//! * [`problem`] — Problem (P1) and the analytic per-bitwidth feasibility
+//!   oracle (minimum-energy frequency split under a delay budget).
+//! * [`sca`] — the paper's Algorithm 1: continuous relaxation + successive
+//!   convex approximation over subproblems (P4.k), then rounding.
+//! * [`convex`] — log-barrier solver for the (P4.k) subproblems (the CVX
+//!   stand-in).
+//! * [`bisection`] — exact reference solver: the objective is monotone
+//!   decreasing in b̂, so the optimum is the largest feasible bit-width;
+//!   feasibility per b̂ is an analytic 2-D convex problem.
+//! * [`fixed_freq`], [`feasible_random`] — the paper's benchmark schemes 2
+//!   and 3; [`grid`] — exhaustive oracle for tests.
+
+pub mod bisection;
+pub mod convex;
+pub mod feasible_random;
+pub mod fixed_freq;
+pub mod grid;
+pub mod problem;
+pub mod sca;
+
+pub use problem::{Design, Problem};

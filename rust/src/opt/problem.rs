@@ -1,0 +1,252 @@
+//! Problem (P1): minimize the rate–distortion bound gap
+//! D^U(b̂-1) - D^L(b̂-1) subject to delay, energy, bit-width and frequency
+//! constraints (paper §V-A).
+
+use crate::system::{delay, energy, Platform};
+use crate::theory::rate_distortion as rd;
+
+/// A complete operating point: the decision variables of (P1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Design {
+    pub b_hat: u32,
+    /// device frequency [Hz]
+    pub f: f64,
+    /// server frequency [Hz]
+    pub f_tilde: f64,
+}
+
+/// Instance of (P1).
+#[derive(Debug, Clone, Copy)]
+pub struct Problem {
+    pub platform: Platform,
+    /// fitted exponential parameter of the agent model's magnitudes
+    pub lambda: f64,
+    /// delay budget T0 [s]  (constraint 30a)
+    pub t0: f64,
+    /// energy budget E0 [J]  (constraint 30b)
+    pub e0: f64,
+}
+
+/// Result of the per-bitwidth feasibility oracle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FreqPlan {
+    pub f: f64,
+    pub f_tilde: f64,
+    pub delay: f64,
+    pub energy: f64,
+}
+
+impl Problem {
+    pub fn new(platform: Platform, lambda: f64, t0: f64, e0: f64) -> Problem {
+        assert!(lambda > 0.0 && t0 > 0.0 && e0 > 0.0);
+        Problem { platform, lambda, t0, e0 }
+    }
+
+    /// The (P1) objective at bit-width b̂.
+    pub fn objective(&self, b_hat: f64) -> f64 {
+        rd::bound_gap(b_hat, self.lambda)
+    }
+
+    pub fn total_delay(&self, d: &Design) -> f64 {
+        delay::total_delay(&self.platform, d.b_hat as f64, d.f, d.f_tilde)
+    }
+
+    pub fn total_energy(&self, d: &Design) -> f64 {
+        energy::total_energy(&self.platform, d.b_hat as f64, d.f, d.f_tilde)
+    }
+
+    /// All (P1) constraints, with a small relative tolerance for designs
+    /// produced by numerical solvers.
+    pub fn is_feasible(&self, d: &Design) -> bool {
+        const TOL: f64 = 1.0 + 1e-6;
+        d.b_hat >= 1
+            && d.b_hat <= self.platform.b_max
+            && d.f > 0.0
+            && d.f <= self.platform.device.f_max * TOL
+            && d.f_tilde > 0.0
+            && d.f_tilde <= self.platform.server.f_max * TOL
+            && self.total_delay(d) <= self.t0 * TOL
+            && self.total_energy(d) <= self.e0 * TOL
+    }
+
+    /// Analytic feasibility oracle for a (possibly fractional) bit-width:
+    /// find the **minimum-energy** frequency pair meeting the delay budget.
+    ///
+    /// With stage delays t1 + t2 = T0 and e_i = k_i / t_i², the
+    /// unconstrained optimum splits t1/t2 = (k1/k2)^(1/3); the split is
+    /// then clamped to the box [C_i/f_i^max, ·]. Returns `None` when even
+    /// max frequencies miss T0 or the min energy exceeds E0.
+    pub fn plan_frequencies(&self, b_tilde: f64) -> Option<FreqPlan> {
+        let p = &self.platform;
+        let c1 = p.agent_cycles(b_tilde);
+        let c2 = p.server_cycles();
+        let t1_min = c1 / p.device.f_max;
+        let t2_min = c2 / p.server.f_max;
+        if t1_min + t2_min > self.t0 {
+            return None; // delay-infeasible even at max frequencies
+        }
+        let k1 = p.device.pue * p.device.psi * c1 * c1 * c1;
+        let k2 = p.server.pue * p.server.psi * c2 * c2 * c2;
+        // unconstrained energy-optimal split of the delay budget
+        let ratio = (k1 / k2).powf(1.0 / 3.0); // = t1/t2 at optimum
+        let mut t1 = self.t0 * ratio / (1.0 + ratio);
+        // clamp to the feasible interval [t1_min, T0 - t2_min]; the bounds
+        // can cross by an ulp when the budget is exactly tight
+        let t1_hi = (self.t0 - t2_min).max(t1_min);
+        t1 = t1.max(t1_min).min(t1_hi);
+        let t2 = self.t0 - t1;
+        let f = c1 / t1;
+        let f_tilde = c2 / t2;
+        let e = energy::total_energy(p, b_tilde, f, f_tilde);
+        if e > self.e0 * (1.0 + 1e-9) {
+            return None; // energy-infeasible at the energy-min point
+        }
+        Some(FreqPlan { f, f_tilde, delay: t1 + t2, energy: e })
+    }
+
+    /// Testbed-mode planner: the device frequency is **pinned** to a DVFS
+    /// profile (it cannot be lowered below the profile point, unlike the
+    /// continuous case), so device delay/energy are fixed per b̂ and only
+    /// the server frequency is optimized. Returns the largest feasible
+    /// bit-width's design. This is what makes the Table-I phenomenon
+    /// appear: at a pinned high profile the device energy ηψC1f² grows
+    /// with b̂ and bites the energy budget.
+    pub fn plan_pinned_device(&self, f_dev: f64) -> Option<Design> {
+        let p = &self.platform;
+        let c2 = p.server_cycles();
+        let t2_min = c2 / p.server.f_max;
+        let k2 = p.server.pue * p.server.psi * c2 * c2 * c2;
+        for b_hat in (1..=p.b_max).rev() {
+            let c1 = p.agent_cycles(b_hat as f64);
+            let t1 = c1 / f_dev;
+            let e1 = p.device.pue * p.device.psi * c1 * f_dev * f_dev;
+            if t1 > self.t0 || e1 > self.e0 {
+                continue;
+            }
+            let t2_max = self.t0 - t1;
+            if t2_min > t2_max {
+                continue;
+            }
+            // server runs as slow as the remaining delay budget allows
+            // (minimum energy); cap the resulting stretch at a sane floor
+            let e2 = k2 / (t2_max * t2_max);
+            if e1 + e2 > self.e0 {
+                continue;
+            }
+            return Some(Design { b_hat, f: f_dev, f_tilde: c2 / t2_max });
+        }
+        None
+    }
+
+    /// Integer-bitwidth convenience wrapper producing a full Design.
+    pub fn plan_design(&self, b_hat: u32) -> Option<Design> {
+        if b_hat < 1 || b_hat > self.platform.b_max {
+            return None;
+        }
+        self.plan_frequencies(b_hat as f64).map(|plan| Design {
+            b_hat,
+            f: plan.f,
+            f_tilde: plan.f_tilde,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn problem() -> Problem {
+        Problem::new(Platform::paper_blip2(), 15.0, 3.5, 2.0)
+    }
+
+    #[test]
+    fn objective_decreases_in_bits() {
+        let p = problem();
+        for b in 2..=15 {
+            assert!(p.objective(b as f64 + 1.0) < p.objective(b as f64));
+        }
+    }
+
+    #[test]
+    fn planned_designs_are_feasible() {
+        forall(
+            "plan_frequencies output satisfies (P1)",
+            200,
+            |r| (r.range(1.0, 16.0), r.range(0.5, 6.0), r.range(0.2, 8.0)),
+            |&(b, t0, e0)| {
+                let prob = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
+                match prob.plan_design(b as u32) {
+                    None => Ok(()), // infeasible is a valid answer
+                    Some(d) => {
+                        if prob.is_feasible(&d) {
+                            Ok(())
+                        } else {
+                            Err(format!(
+                                "plan violated: T={} (T0={t0}) E={} (E0={e0}) d={d:?}",
+                                prob.total_delay(&d),
+                                prob.total_energy(&d)
+                            ))
+                        }
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn feasibility_is_monotone_in_bits() {
+        // higher b̂ can only shrink the feasible set (Remark 4.1 coupling)
+        forall(
+            "feasible(b̂+1) => feasible(b̂)",
+            150,
+            |r| (1 + r.below(15) as u32, r.range(0.5, 5.0), r.range(0.2, 6.0)),
+            |&(b, t0, e0)| {
+                let prob = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
+                if prob.plan_frequencies((b + 1) as f64).is_some()
+                    && prob.plan_frequencies(b as f64).is_none()
+                {
+                    Err("monotonicity violated".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn plan_is_energy_minimal_among_delay_feasible() {
+        // sample random feasible frequency pairs at the same b̂; none may
+        // beat the oracle's energy while meeting the delay budget
+        let prob = problem();
+        let b = 6u32;
+        let plan = prob.plan_frequencies(b as f64).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            let f = rng.range(1e8, prob.platform.device.f_max);
+            let ft = rng.range(1e8, prob.platform.server.f_max);
+            let d = Design { b_hat: b, f, f_tilde: ft };
+            if prob.total_delay(&d) <= prob.t0 {
+                assert!(
+                    prob.total_energy(&d) >= plan.energy * (1.0 - 1e-9),
+                    "found cheaper feasible point: {d:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loose_budgets_make_everything_feasible() {
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 100.0, 100.0);
+        for b in 1..=16 {
+            assert!(prob.plan_design(b).is_some(), "b̂={b}");
+        }
+    }
+
+    #[test]
+    fn impossible_budgets_are_infeasible() {
+        let prob = Problem::new(Platform::paper_blip2(), 15.0, 1e-6, 1e-9);
+        assert!(prob.plan_design(1).is_none());
+    }
+}

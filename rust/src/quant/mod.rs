@@ -1,0 +1,180 @@
+//! Sign-preserving magnitude quantizers (paper §II-A/§II-C).
+//!
+//! A total bit-width b̂ spends 1 bit on the sign and m = b̂ - 1 bits on the
+//! magnitude; the magnitude grid is either uniform [31] or power-of-two
+//! logarithmic [32]. These are the native Rust twins of the Pallas
+//! `fake_quant_*` kernels — the runtime hot path quantizes weight blobs
+//! here (no python), and integration tests cross-check the two
+//! implementations through PJRT on golden buffers.
+
+pub mod error;
+pub mod pot;
+pub mod uniform;
+
+pub use error::{mean_abs_distortion, total_l1_distortion};
+pub use pot::{pot_params, quantize_pot, quantize_pot_into};
+pub use uniform::{quantize_uniform, quantize_uniform_into, uniform_step};
+
+/// Quantization scheme selector, used across the optimizer and benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Uniform,
+    Pot,
+}
+
+impl Scheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Uniform => "uniform",
+            Scheme::Pot => "pot",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "uniform" => Some(Scheme::Uniform),
+            "pot" | "nonuniform" | "pot-log" => Some(Scheme::Pot),
+            _ => None,
+        }
+    }
+}
+
+/// Quantize a weight blob at total bit-width `bits` with the given scheme.
+/// `bits == 0` is rejected; `bits == 1` keeps only signs (all magnitudes
+/// collapse); `bits >= 23`-ish is effectively lossless for f32.
+pub fn quantize_magnitudes(weights: &[f32], bits: u32, scheme: Scheme) -> Vec<f32> {
+    assert!(bits >= 1, "need at least the sign bit");
+    let theta_max = weights.iter().fold(0.0f32, |m, w| m.max(w.abs()));
+    match scheme {
+        Scheme::Uniform => {
+            let step = uniform_step(theta_max, bits);
+            quantize_uniform(weights, step)
+        }
+        Scheme::Pot => {
+            let (emin, emax) = pot_params(theta_max, bits);
+            quantize_pot(weights, emin, emax)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn blob(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0.1 * rng.normal()) as f32).collect()
+    }
+
+    #[test]
+    fn idempotent_for_both_schemes() {
+        forall(
+            "quantize twice == once",
+            40,
+            |r| (r.next_u64(), 2 + r.below(7) as u32,
+                 if r.f64() < 0.5 { Scheme::Uniform } else { Scheme::Pot }),
+            |&(seed, bits, scheme)| {
+                let w = blob(seed, 512);
+                let q1 = quantize_magnitudes(&w, bits, scheme);
+                // re-quantize with the SAME grid (theta_max of q1 <= of w,
+                // so derive grid from the original): apply raw quantizers
+                let theta_max = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let q2 = match scheme {
+                    Scheme::Uniform => {
+                        quantize_uniform(&q1, uniform_step(theta_max, bits))
+                    }
+                    Scheme::Pot => {
+                        let (lo, hi) = pot_params(theta_max, bits);
+                        quantize_pot(&q1, lo, hi)
+                    }
+                };
+                if q1 == q2 {
+                    Ok(())
+                } else {
+                    Err("not idempotent".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn distortion_monotone_in_bits() {
+        let w = blob(3, 4096);
+        for scheme in [Scheme::Uniform, Scheme::Pot] {
+            let dists: Vec<f64> = (1..=10)
+                .map(|b| {
+                    let q = quantize_magnitudes(&w, b, scheme);
+                    total_l1_distortion(&w, &q)
+                })
+                .collect();
+            for win in dists.windows(2) {
+                assert!(
+                    win[1] <= win[0] * 1.0001 + 1e-9,
+                    "{scheme:?}: {dists:?}"
+                );
+            }
+            // uniform refines the grid with every bit; PoT only extends the
+            // exponent range downward, so it saturates at the log-rounding
+            // floor (|w - 2^round(log2 w)| stays, up to ~17% relative)
+            let floor = match scheme {
+                Scheme::Uniform => 0.05,
+                Scheme::Pot => 0.25,
+            };
+            assert!(dists[9] < dists[0] * floor, "{scheme:?}: {dists:?}");
+        }
+    }
+
+    #[test]
+    fn signs_always_preserved() {
+        forall(
+            "sign preservation",
+            30,
+            |r| (r.next_u64(), 1 + r.below(8) as u32,
+                 if r.f64() < 0.5 { Scheme::Uniform } else { Scheme::Pot }),
+            |&(seed, bits, scheme)| {
+                let w = blob(seed, 256);
+                let q = quantize_magnitudes(&w, bits, scheme);
+                for (a, b) in w.iter().zip(&q) {
+                    if *b != 0.0 && a.signum() != b.signum() {
+                        return Err(format!("sign flip {a} -> {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn high_bits_uniform_is_near_lossless_pot_hits_log_floor() {
+        let w = blob(7, 2048);
+        let scale = w.iter().map(|v| v.abs() as f64).sum::<f64>() / w.len() as f64;
+        // uniform: grid refines -> error vanishes
+        let qu = quantize_magnitudes(&w, 16, Scheme::Uniform);
+        assert!(mean_abs_distortion(&w, &qu) < scale * 0.01);
+        // PoT: levels stay powers of two -> saturates at the log-rounding
+        // floor (E|w - 2^round(log2|w|)| ≈ 0.11 |w| for smooth inputs)
+        let qp = quantize_magnitudes(&w, 16, Scheme::Pot);
+        let err_p = mean_abs_distortion(&w, &qp);
+        assert!(err_p > scale * 0.05 && err_p < scale * 0.25, "{err_p} vs {scale}");
+        // and 20 bits doesn't improve PoT further (saturation)
+        let qp20 = quantize_magnitudes(&w, 20, Scheme::Pot);
+        assert!((mean_abs_distortion(&w, &qp20) - err_p).abs() < scale * 1e-3);
+    }
+
+    #[test]
+    fn one_bit_uniform_zeroes_magnitudes() {
+        let w = blob(9, 128);
+        let q = quantize_magnitudes(&w, 1, Scheme::Uniform);
+        assert!(q.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(Scheme::parse("uniform"), Some(Scheme::Uniform));
+        assert_eq!(Scheme::parse("pot"), Some(Scheme::Pot));
+        assert_eq!(Scheme::parse("nonuniform"), Some(Scheme::Pot));
+        assert_eq!(Scheme::parse("x"), None);
+    }
+}

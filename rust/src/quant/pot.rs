@@ -1,0 +1,113 @@
+//! Power-of-two logarithmic quantization [32] ("PoT-log", the paper's
+//! nonuniform scheme): magnitude levels {0} ∪ {2^k : emin <= k <= emax}.
+//!
+//! Semantics match the Pallas `fake_quant_pot` kernel: nearest level in
+//! the log2 domain, flush-to-zero when log2|w| < emin - 0.5.
+
+/// Exponent range for total bit-width `bits`: emax anchors at the largest
+/// power of two <= θ_max, and m = bits-1 magnitude bits give 2^m - 1
+/// nonzero levels => emin = emax - (2^m - 2).
+pub fn pot_params(theta_max: f32, bits: u32) -> (f32, f32) {
+    assert!(bits >= 1);
+    let m = bits - 1;
+    if m == 0 || theta_max <= 0.0 {
+        // no nonzero levels: encode as an empty range below any magnitude
+        return (-126.0, -126.0 - 1.0); // emin > emax => all flushed
+    }
+    let emax = theta_max.log2().floor();
+    let levels = (1u64 << m) - 1;
+    let emin = emax - (levels as f32 - 1.0);
+    (emin, emax)
+}
+
+/// Apply PoT fake-quantization with precomputed exponent bounds.
+pub fn quantize_pot(weights: &[f32], emin: f32, emax: f32) -> Vec<f32> {
+    weights.iter().map(|&w| quantize_one(w, emin, emax)).collect()
+}
+
+pub fn quantize_pot_into(weights: &[f32], emin: f32, emax: f32, out: &mut [f32]) {
+    assert_eq!(weights.len(), out.len());
+    for (o, &w) in out.iter_mut().zip(weights) {
+        *o = quantize_one(w, emin, emax);
+    }
+}
+
+#[inline]
+pub fn quantize_one(w: f32, emin: f32, emax: f32) -> f32 {
+    let mag = w.abs();
+    if mag == 0.0 {
+        return 0.0;
+    }
+    if emin > emax {
+        return 0.0; // empty level set (bits == 1)
+    }
+    let lg = mag.log2();
+    if lg < emin - 0.5 {
+        return 0.0; // flush-to-zero region
+    }
+    let e = super::uniform::round_half_even(lg).clamp(emin, emax);
+    w.signum() * e.exp2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_levels() {
+        // bits=3 -> 3 nonzero levels; theta_max=1.0 -> emax=0, emin=-2
+        let (emin, emax) = pot_params(1.0, 3);
+        assert_eq!((emin, emax), (-2.0, 0.0));
+        // levels: 0.25, 0.5, 1.0 (+0); the flush boundary is
+        // 2^(emin-0.5) = 2^-2.5 ≈ 0.177, so 0.15 flushes to zero
+        let q = quantize_pot(&[1.0, 0.6, 0.3, 0.15, 0.05, -0.8], emin, emax);
+        assert_eq!(q, vec![1.0, 0.5, 0.25, 0.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn log_domain_rounding_boundary() {
+        let (emin, emax) = (-4.0f32, 0.0f32);
+        // 2^-0.5 ≈ 0.7071: log2 = -0.5 exactly -> half-even rounds to 0
+        let q = quantize_one(0.70710678f32, emin, emax);
+        assert_eq!(q, 1.0);
+        // just below the midpoint rounds down
+        let q = quantize_one(0.70f32, emin, emax);
+        assert_eq!(q, 0.5);
+    }
+
+    #[test]
+    fn flush_to_zero_region() {
+        let (emin, emax) = (-3.0f32, 0.0f32);
+        // 2^(-3.5) ≈ 0.0884 is the boundary; below -> 0
+        assert_eq!(quantize_one(0.08, emin, emax), 0.0);
+        assert_eq!(quantize_one(0.09, emin, emax), 0.125);
+    }
+
+    #[test]
+    fn one_bit_flushes_everything() {
+        let (emin, emax) = pot_params(2.0, 1);
+        let q = quantize_pot(&[1.0, -0.5, 2.0], emin, emax);
+        assert!(q.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn powers_of_two_are_fixed_points() {
+        let (emin, emax) = pot_params(4.0, 6);
+        for e in [-8i32, -4, -1, 0, 1, 2] {
+            let v = (e as f32).exp2();
+            if e as f32 >= emin && e as f32 <= emax {
+                assert_eq!(quantize_one(v, emin, emax), v);
+            }
+        }
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let w: Vec<f32> = (1..64).map(|i| i as f32 * 0.017 - 0.5).collect();
+        let (emin, emax) = pot_params(0.6, 4);
+        let a = quantize_pot(&w, emin, emax);
+        let mut b = vec![0.0; w.len()];
+        quantize_pot_into(&w, emin, emax, &mut b);
+        assert_eq!(a, b);
+    }
+}

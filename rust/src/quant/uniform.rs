@@ -1,0 +1,120 @@
+//! Uniform magnitude quantization [31]: fixed-step grid over [0, θ_max].
+//!
+//! Semantics are bit-identical to the Pallas `fake_quant_uniform` kernel
+//! (same f32 ops in the same order): q = sign(w) * round(|w|/step) * step,
+//! with step <= 0 meaning "identity" (the full-precision limit).
+
+/// Step size for total bit-width `bits` (1 sign bit + m = bits-1 magnitude
+/// bits => 2^m - 1 nonzero levels). m = 0 collapses all magnitudes to 0,
+/// encoded as step = +inf -> handled by the grid formula below via a
+/// sentinel 0-level count.
+pub fn uniform_step(theta_max: f32, bits: u32) -> f32 {
+    assert!(bits >= 1);
+    let m = bits - 1;
+    if m == 0 {
+        // only the zero level exists; any step larger than 2*theta_max
+        // rounds every magnitude to 0
+        return f32::MAX;
+    }
+    let levels = (1u64 << m) - 1; // nonzero levels
+    if theta_max <= 0.0 {
+        0.0
+    } else {
+        theta_max / levels as f32
+    }
+}
+
+/// Apply uniform fake-quantization with a precomputed step.
+pub fn quantize_uniform(weights: &[f32], step: f32) -> Vec<f32> {
+    weights.iter().map(|&w| quantize_one(w, step)).collect()
+}
+
+/// In-place variant for the runtime hot path (no allocation).
+pub fn quantize_uniform_into(weights: &[f32], step: f32, out: &mut [f32]) {
+    assert_eq!(weights.len(), out.len());
+    for (o, &w) in out.iter_mut().zip(weights) {
+        *o = quantize_one(w, step);
+    }
+}
+
+#[inline]
+pub fn quantize_one(w: f32, step: f32) -> f32 {
+    if step <= 0.0 {
+        return w;
+    }
+    if step == f32::MAX {
+        return 0.0 * w.signum(); // keep signed zero semantics trivially
+    }
+    let mag = w.abs();
+    let q = round_half_even(mag / step) * step;
+    w.signum() * q
+}
+
+/// jnp.round rounds half-to-even; f32::round rounds half-away. Match the
+/// Pallas kernel exactly so Rust- and XLA-quantized blobs agree bitwise.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // exactly halfway: pick the even neighbor
+        let down = x.trunc();
+        if (down as i64) % 2 == 0 {
+            down
+        } else {
+            down + x.signum()
+        }
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_grid() {
+        // bits=3 -> m=2 -> 3 nonzero levels; theta_max = 3 -> step 1
+        let step = uniform_step(3.0, 3);
+        assert_eq!(step, 1.0);
+        let q = quantize_uniform(&[0.4, -0.6, 1.4, -2.9, 3.0], step);
+        assert_eq!(q, vec![0.0, -1.0, 1.0, -3.0, 3.0]);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy_semantics() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(0.49), 0.0);
+        assert_eq!(round_half_even(0.51), 1.0);
+    }
+
+    #[test]
+    fn theta_max_is_representable() {
+        for bits in 2..=8 {
+            let step = uniform_step(1.7, bits);
+            let q = quantize_one(1.7, step);
+            assert!((q - 1.7).abs() < 1e-6, "bits={bits} q={q}");
+        }
+    }
+
+    #[test]
+    fn sign_bit_only_zeroes() {
+        let step = uniform_step(5.0, 1);
+        let q = quantize_uniform(&[1.0, -2.0, 5.0], step);
+        assert!(q.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn into_variant_matches_alloc_variant() {
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.03).collect();
+        let step = uniform_step(1.0, 4);
+        let a = quantize_uniform(&w, step);
+        let mut b = vec![0.0; w.len()];
+        quantize_uniform_into(&w, step, &mut b);
+        assert_eq!(a, b);
+    }
+}

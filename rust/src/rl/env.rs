@@ -1,0 +1,145 @@
+//! The joint-design decision environment.
+
+use crate::opt::problem::{Design, Problem};
+use crate::system::Platform;
+use crate::util::rng::Rng;
+
+/// Ranges the QoS budgets are drawn from during training — the same bands
+//  the paper sweeps in Figs. 5-8.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetRanges {
+    pub t0: (f64, f64),
+    pub e0: (f64, f64),
+}
+
+impl Default for BudgetRanges {
+    fn default() -> Self {
+        BudgetRanges { t0: (1.0, 5.0), e0: (0.5, 4.0) }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DesignEnv {
+    pub platform: Platform,
+    pub lambda: f64,
+    pub ranges: BudgetRanges,
+    /// constraint-violation penalty weight (the paper's "penalty-driven
+    /// constraint handling")
+    pub penalty: f64,
+}
+
+pub const STATE_DIM: usize = 5;
+pub const ACTION_DIM: usize = 3;
+
+impl DesignEnv {
+    pub fn new(platform: Platform, lambda: f64, ranges: BudgetRanges) -> DesignEnv {
+        DesignEnv { platform, lambda, ranges, penalty: 4.0 }
+    }
+
+    /// Sample a QoS context (one episode's state).
+    pub fn sample_context(&self, rng: &mut Rng) -> Problem {
+        Problem::new(
+            self.platform,
+            self.lambda,
+            rng.range(self.ranges.t0.0, self.ranges.t0.1),
+            rng.range(self.ranges.e0.0, self.ranges.e0.1),
+        )
+    }
+
+    /// Normalized state features for a context.
+    pub fn state(&self, p: &Problem) -> Vec<f64> {
+        vec![
+            p.t0 / self.ranges.t0.1,
+            p.e0 / self.ranges.e0.1,
+            // how hard is the delay budget? (min-delay at 1 bit vs T0)
+            (self.platform.min_delay(1.0) / p.t0).min(4.0),
+            (self.platform.min_delay(self.platform.b_max as f64) / p.t0).min(4.0),
+            (self.lambda.ln() / 10.0).clamp(-1.0, 1.0),
+        ]
+    }
+
+    /// Map a raw action in R³ (squashed here) to a concrete design.
+    pub fn action_to_design(&self, a: &[f64]) -> Design {
+        let sq = |x: f64| 0.5 * (x.tanh() + 1.0); // -> (0,1)
+        let b_hat = (1.0 + sq(a[0]) * (self.platform.b_max as f64 - 1.0)).round() as u32;
+        Design {
+            b_hat: b_hat.clamp(1, self.platform.b_max),
+            f: (0.02 + 0.98 * sq(a[1])) * self.platform.device.f_max,
+            f_tilde: (0.02 + 0.98 * sq(a[2])) * self.platform.server.f_max,
+        }
+    }
+
+    /// Reward: the (monotone) log of the bound gap for feasible designs —
+    /// the gap decays ~2^-b̂, so -log2 gives a learning signal that is
+    /// roughly linear in the bit-width instead of vanishing at high b̂;
+    /// constraint violations are penalized proportionally (the paper's
+    /// penalty-driven handling).
+    pub fn reward(&self, p: &Problem, d: &Design) -> f64 {
+        let gap = p.objective(d.b_hat as f64) * self.lambda;
+        let t = p.total_delay(d);
+        let e = p.total_energy(d);
+        let viol = ((t - p.t0) / p.t0).max(0.0) + ((e - p.e0) / p.e0).max(0.0);
+        0.15 * (-(gap + 1e-12).log2()) - self.penalty * viol.min(10.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::bisection;
+
+    fn env() -> DesignEnv {
+        DesignEnv::new(Platform::paper_blip2(), 15.0, BudgetRanges::default())
+    }
+
+    #[test]
+    fn actions_map_into_valid_designs() {
+        let e = env();
+        for a in [[-5.0, -5.0, -5.0], [0.0, 0.0, 0.0], [5.0, 5.0, 5.0]] {
+            let d = e.action_to_design(&a);
+            assert!(d.b_hat >= 1 && d.b_hat <= e.platform.b_max);
+            assert!(d.f > 0.0 && d.f <= e.platform.device.f_max);
+            assert!(d.f_tilde > 0.0 && d.f_tilde <= e.platform.server.f_max);
+        }
+    }
+
+    #[test]
+    fn optimal_design_maximizes_reward_among_feasible() {
+        let e = env();
+        let mut rng = Rng::new(0);
+        let p = e.sample_context(&mut rng);
+        let opt = bisection::solve(&p).unwrap().design;
+        let r_opt = e.reward(&p, &opt);
+        // any feasible design with fewer bits scores worse
+        for b in 1..opt.b_hat {
+            if let Some(d) = p.plan_design(b) {
+                assert!(e.reward(&p, &d) <= r_opt + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn violations_are_penalized() {
+        let e = env();
+        let p = Problem::new(e.platform, e.lambda, 2.5, 1.5);
+        let feasible = bisection::solve(&p).unwrap().design;
+        let violating = Design {
+            b_hat: e.platform.b_max,
+            f: e.platform.device.f_max,
+            f_tilde: e.platform.server.f_max,
+        };
+        assert!(e.reward(&p, &violating) < e.reward(&p, &feasible));
+    }
+
+    #[test]
+    fn state_features_are_bounded() {
+        let e = env();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let p = e.sample_context(&mut rng);
+            let s = e.state(&p);
+            assert_eq!(s.len(), STATE_DIM);
+            assert!(s.iter().all(|v| v.is_finite() && v.abs() <= 4.0), "{s:?}");
+        }
+    }
+}

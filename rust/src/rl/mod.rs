@@ -1,0 +1,16 @@
+//! PPO-based design baseline (paper §VI-C, benchmark scheme 1, after [12]).
+//!
+//! The joint quantization/frequency decision is modeled as a one-step MDP
+//! (contextual bandit): the state encodes the QoS budgets and platform
+//! statistics, the continuous action maps to (b̂, f, f̃), and the reward is
+//! the negative bound gap with penalty-driven constraint handling — the
+//! exact structure whose initialization/exploration sensitivity the paper
+//! credits for the proposed design's advantage.
+
+pub mod env;
+pub mod policy;
+pub mod ppo;
+
+pub use env::DesignEnv;
+pub use policy::GaussianPolicy;
+pub use ppo::{Ppo, PpoConfig};

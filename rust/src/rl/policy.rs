@@ -1,0 +1,108 @@
+//! Diagonal-Gaussian policy and value networks for PPO.
+
+use crate::nn::{Activation, Mlp};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct GaussianPolicy {
+    /// state -> action mean
+    pub net: Mlp,
+    /// state-independent log standard deviations
+    pub log_std: Vec<f64>,
+}
+
+impl GaussianPolicy {
+    pub fn new(state_dim: usize, action_dim: usize, hidden: usize, rng: &mut Rng) -> Self {
+        GaussianPolicy {
+            net: Mlp::new(&[state_dim, hidden, hidden, action_dim], Activation::Tanh, rng),
+            log_std: vec![-0.3; action_dim],
+        }
+    }
+
+    pub fn mean(&self, state: &[f64]) -> Vec<f64> {
+        self.net.forward(state)
+    }
+
+    pub fn sample(&self, state: &[f64], rng: &mut Rng) -> Vec<f64> {
+        self.mean(state)
+            .into_iter()
+            .zip(&self.log_std)
+            .map(|(m, ls)| m + ls.exp() * rng.normal())
+            .collect()
+    }
+
+    /// log π(a|s) for a diagonal Gaussian.
+    pub fn log_prob(&self, state: &[f64], action: &[f64]) -> f64 {
+        let mean = self.mean(state);
+        Self::log_prob_given_mean(&mean, &self.log_std, action)
+    }
+
+    pub fn log_prob_given_mean(mean: &[f64], log_std: &[f64], action: &[f64]) -> f64 {
+        const HALF_LN_2PI: f64 = 0.918_938_533_204_672_7;
+        mean.iter()
+            .zip(log_std)
+            .zip(action)
+            .map(|((m, ls), a)| {
+                let z = (a - m) / ls.exp();
+                -0.5 * z * z - ls - HALF_LN_2PI
+            })
+            .sum()
+    }
+
+    /// Gaussian entropy (bits of exploration left).
+    pub fn entropy(&self) -> f64 {
+        const HALF_LN_2PIE: f64 = 1.418_938_533_204_672_7;
+        self.log_std.iter().map(|ls| ls + HALF_LN_2PIE).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_prob_peaks_at_mean() {
+        let mut rng = Rng::new(0);
+        let pi = GaussianPolicy::new(3, 2, 16, &mut rng);
+        let s = [0.1, 0.2, 0.3];
+        let mean = pi.mean(&s);
+        let at_mean = pi.log_prob(&s, &mean);
+        let off: Vec<f64> = mean.iter().map(|m| m + 0.5).collect();
+        assert!(at_mean > pi.log_prob(&s, &off));
+    }
+
+    #[test]
+    fn log_prob_matches_univariate_formula() {
+        let mean = [1.0];
+        let log_std = [0.2f64];
+        let a = [1.7];
+        let sigma = log_std[0].exp();
+        let expected = -0.5 * ((a[0] - mean[0]) / sigma).powi(2)
+            - sigma.ln()
+            - 0.5 * (2.0 * std::f64::consts::PI).ln();
+        let got = GaussianPolicy::log_prob_given_mean(&mean, &log_std, &a);
+        assert!((got - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_concentrate_as_std_shrinks() {
+        let mut rng = Rng::new(1);
+        let mut pi = GaussianPolicy::new(2, 1, 8, &mut rng);
+        let s = [0.5, -0.5];
+        pi.log_std[0] = -4.0;
+        let m = pi.mean(&s)[0];
+        for _ in 0..50 {
+            let a = pi.sample(&s, &mut rng)[0];
+            assert!((a - m).abs() < 0.2);
+        }
+    }
+
+    #[test]
+    fn entropy_increases_with_std() {
+        let mut rng = Rng::new(2);
+        let mut pi = GaussianPolicy::new(2, 2, 8, &mut rng);
+        let e1 = pi.entropy();
+        pi.log_std = vec![1.0, 1.0];
+        assert!(pi.entropy() > e1);
+    }
+}

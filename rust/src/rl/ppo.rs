@@ -1,0 +1,238 @@
+//! Clipped-surrogate PPO on the one-step design environment.
+//!
+//! Episodes are single decisions, so the advantage reduces to
+//! A = r - V(s) (no bootstrapping/GAE horizon). Policy and value networks
+//! are the hand-backprop MLPs from [`crate::nn`]; gradients of the clipped
+//! surrogate flow through the Gaussian mean analytically:
+//! ∂logπ/∂μ_i = (a_i - μ_i)/σ_i², ∂logπ/∂logσ_i = z_i² - 1.
+
+use super::env::{DesignEnv, ACTION_DIM, STATE_DIM};
+use super::policy::GaussianPolicy;
+use crate::nn::{Activation, Adam, Mlp};
+use crate::opt::problem::{Design, Problem};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PpoConfig {
+    pub iterations: usize,
+    pub batch: usize,
+    pub epochs: usize,
+    pub clip: f64,
+    pub lr_policy: f64,
+    pub lr_value: f64,
+    pub entropy_coef: f64,
+    pub hidden: usize,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig {
+            iterations: 80,
+            batch: 256,
+            epochs: 4,
+            clip: 0.2,
+            lr_policy: 3e-3,
+            lr_value: 1e-2,
+            entropy_coef: 1e-3,
+            hidden: 32,
+        }
+    }
+}
+
+pub struct Ppo {
+    pub env: DesignEnv,
+    pub policy: GaussianPolicy,
+    pub value: Mlp,
+    cfg: PpoConfig,
+    opt_policy: Adam,
+    opt_value: Adam,
+    /// mean reward per training iteration (learning curve)
+    pub reward_trace: Vec<f64>,
+}
+
+struct Transition {
+    state: Vec<f64>,
+    action: Vec<f64>,
+    reward: f64,
+    log_prob_old: f64,
+}
+
+impl Ppo {
+    pub fn new(env: DesignEnv, cfg: PpoConfig, rng: &mut Rng) -> Ppo {
+        let policy = GaussianPolicy::new(STATE_DIM, ACTION_DIM, cfg.hidden, rng);
+        let value = Mlp::new(&[STATE_DIM, cfg.hidden, 1], Activation::Tanh, rng);
+        let n_pol = policy.net.n_params() + ACTION_DIM;
+        let n_val = value.n_params();
+        Ppo {
+            env,
+            opt_policy: Adam::new(n_pol, cfg.lr_policy),
+            opt_value: Adam::new(n_val, cfg.lr_value),
+            policy,
+            value,
+            cfg,
+            reward_trace: Vec::new(),
+        }
+    }
+
+    fn collect(&self, rng: &mut Rng) -> Vec<Transition> {
+        (0..self.cfg.batch)
+            .map(|_| {
+                let problem = self.env.sample_context(rng);
+                let state = self.env.state(&problem);
+                let action = self.policy.sample(&state, rng);
+                let design = self.env.action_to_design(&action);
+                let reward = self.env.reward(&problem, &design);
+                let log_prob_old = self.policy.log_prob(&state, &action);
+                Transition { state, action, reward, log_prob_old }
+            })
+            .collect()
+    }
+
+    /// One PPO iteration: collect a batch, update policy (clipped
+    /// surrogate) and value (MSE) for `epochs` passes.
+    pub fn train_iteration(&mut self, rng: &mut Rng) -> f64 {
+        let batch = self.collect(rng);
+        let mean_reward =
+            batch.iter().map(|t| t.reward).sum::<f64>() / batch.len() as f64;
+
+        // advantages, normalized
+        let mut adv: Vec<f64> = batch
+            .iter()
+            .map(|t| t.reward - self.value.forward(&t.state)[0])
+            .collect();
+        let m = adv.iter().sum::<f64>() / adv.len() as f64;
+        let sd = (adv.iter().map(|a| (a - m) * (a - m)).sum::<f64>()
+            / adv.len() as f64)
+            .sqrt()
+            .max(1e-6);
+        for a in &mut adv {
+            *a = (*a - m) / sd;
+        }
+
+        for _ in 0..self.cfg.epochs {
+            // ---- policy update ----
+            let mut grads = self.policy.net.zero_grads();
+            let mut grad_log_std = vec![0.0; ACTION_DIM];
+            for (t, &a_hat) in batch.iter().zip(&adv) {
+                let (mean, cache) = self.policy.net.forward_cached(&t.state);
+                let log_prob =
+                    GaussianPolicy::log_prob_given_mean(&mean, &self.policy.log_std, &t.action);
+                let ratio = (log_prob - t.log_prob_old).exp();
+                // clipped surrogate: dL/dratio (we *minimize* -L)
+                let clipped = ratio
+                    .clamp(1.0 - self.cfg.clip, 1.0 + self.cfg.clip);
+                let use_unclipped = (ratio * a_hat) <= (clipped * a_hat);
+                // gradient flows only through the unclipped branch
+                if use_unclipped {
+                    let coef = -a_hat * ratio / batch.len() as f64;
+                    // d log_prob / d mean_i = (a_i - mu_i) / sigma_i^2
+                    let mut dmean = vec![0.0; ACTION_DIM];
+                    for i in 0..ACTION_DIM {
+                        let sigma2 = (2.0 * self.policy.log_std[i]).exp();
+                        dmean[i] = coef * (t.action[i] - mean[i]) / sigma2;
+                        // d log_prob / d log_std_i = z^2 - 1
+                        let z = (t.action[i] - mean[i])
+                            / self.policy.log_std[i].exp();
+                        grad_log_std[i] += coef * (z * z - 1.0);
+                    }
+                    self.policy.net.backward(&cache, &dmean, &mut grads);
+                }
+            }
+            // entropy bonus: d(-c·H)/d log_std = -c
+            for g in grad_log_std.iter_mut() {
+                *g -= self.cfg.entropy_coef;
+            }
+            let mut flat = self.policy.net.flat_params();
+            flat.extend_from_slice(&self.policy.log_std);
+            let mut gflat = Mlp::flat_grads(&grads);
+            gflat.extend_from_slice(&grad_log_std);
+            self.opt_policy.step(&mut flat, &gflat, Some(5.0));
+            let (net_flat, ls_flat) = flat.split_at(flat.len() - ACTION_DIM);
+            self.policy.net.set_flat_params(net_flat);
+            self.policy.log_std.copy_from_slice(ls_flat);
+            for ls in &mut self.policy.log_std {
+                *ls = ls.clamp(-3.5, 1.0);
+            }
+
+            // ---- value update ----
+            let mut vgrads = self.value.zero_grads();
+            for t in &batch {
+                let (v, cache) = self.value.forward_cached(&t.state);
+                let dout = [2.0 * (v[0] - t.reward) / batch.len() as f64];
+                self.value.backward(&cache, &dout, &mut vgrads);
+            }
+            let mut vflat = self.value.flat_params();
+            let vg = Mlp::flat_grads(&vgrads);
+            self.opt_value.step(&mut vflat, &vg, Some(5.0));
+            self.value.set_flat_params(&vflat);
+        }
+        self.reward_trace.push(mean_reward);
+        mean_reward
+    }
+
+    pub fn train(&mut self, rng: &mut Rng) {
+        for _ in 0..self.cfg.iterations {
+            self.train_iteration(rng);
+        }
+    }
+
+    /// Deterministic (mean-action) design for a QoS context.
+    pub fn solve(&self, problem: &Problem) -> Design {
+        let state = self.env.state(problem);
+        self.env.action_to_design(&self.policy.mean(&state))
+    }
+
+    /// Deployment-guarded variant: if the raw PPO design violates the
+    /// budgets, degrade the bit-width (re-planning frequencies) until
+    /// feasible — an infeasible design cannot be deployed. Returns None if
+    /// no bit-width is feasible.
+    pub fn solve_projected(&self, problem: &Problem) -> Option<Design> {
+        let raw = self.solve(problem);
+        if problem.is_feasible(&raw) {
+            return Some(raw);
+        }
+        (1..=raw.b_hat)
+            .rev()
+            .find_map(|b| problem.plan_design(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::env::BudgetRanges;
+    use crate::system::Platform;
+
+    fn small_cfg() -> PpoConfig {
+        PpoConfig { iterations: 30, batch: 128, ..PpoConfig::default() }
+    }
+
+    #[test]
+    fn learns_to_improve_reward() {
+        let env = DesignEnv::new(Platform::paper_blip2(), 15.0, BudgetRanges::default());
+        let mut rng = Rng::new(0);
+        let mut ppo = Ppo::new(env, small_cfg(), &mut rng);
+        ppo.train(&mut rng);
+        let early: f64 = ppo.reward_trace[..5].iter().sum::<f64>() / 5.0;
+        let n = ppo.reward_trace.len();
+        let late: f64 = ppo.reward_trace[n - 5..].iter().sum::<f64>() / 5.0;
+        assert!(
+            late > early + 0.05,
+            "no learning: early {early:.3} late {late:.3}"
+        );
+    }
+
+    #[test]
+    fn projected_solution_is_feasible() {
+        let env = DesignEnv::new(Platform::paper_blip2(), 15.0, BudgetRanges::default());
+        let mut rng = Rng::new(1);
+        let mut ppo = Ppo::new(env, PpoConfig { iterations: 10, ..small_cfg() }, &mut rng);
+        ppo.train(&mut rng);
+        for (t0, e0) in [(3.5, 2.0), (1.5, 1.0), (2.5, 0.8)] {
+            let p = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
+            if let Some(d) = ppo.solve_projected(&p) {
+                assert!(p.is_feasible(&d), "{d:?} at ({t0},{e0})");
+            }
+        }
+    }
+}

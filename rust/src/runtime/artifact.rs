@@ -1,0 +1,70 @@
+//! Artifact registry: the manifest-driven view of everything `make
+//! artifacts` produced, with compile-once executable caching.
+
+use crate::runtime::client::{Executable, Runtime};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+pub struct Registry {
+    pub dir: PathBuf,
+    pub manifest: Json,
+    pub runtime: Runtime,
+    exe_cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Registry {
+    /// Open the artifacts directory (validates the manifest exists).
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest = json::parse_file(&dir.join("manifest.json"))
+            .context("artifacts not built? run `make artifacts`")?;
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            manifest,
+            runtime: Runtime::cpu()?,
+            exe_cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Open the default location (`QACI_ARTIFACTS` or ./artifacts).
+    pub fn open_default() -> Result<Registry> {
+        Registry::open(&crate::artifacts_dir())
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact file name.
+    pub fn executable(&self, file: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.exe_cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let exe = Rc::new(self.runtime.compile_file(&self.dir.join(file))?);
+        self.exe_cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Manifest entry for a model.
+    pub fn model(&self, name: &str) -> Result<&Json> {
+        self.manifest
+            .at(&["models", name])
+            .with_context(|| format!("model {name} not in manifest"))
+    }
+
+    /// Names of all shipped models.
+    pub fn model_names(&self) -> Vec<&str> {
+        self.manifest
+            .get("models")
+            .map(|m| m.keys())
+            .unwrap_or_default()
+    }
+
+    /// Golden vectors (written by aot.py for integration tests).
+    pub fn golden(&self) -> Result<Json> {
+        json::parse_file(&self.dir.join("golden.json"))
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exe_cache.borrow().len()
+    }
+}

@@ -1,0 +1,87 @@
+//! Thin PJRT wrapper: compile HLO text modules once, execute many times.
+//!
+//! Interchange is HLO *text* (see /opt/xla-example/README.md): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO text file into an executable.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled module. All our AOT modules are lowered with
+/// `return_tuple=True`, so outputs arrive as a 1-tuple.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with borrowed input literals; returns the untupled result.
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<xla::Literal> {
+        let out = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple1()
+            .with_context(|| format!("untupling result of {}", self.name))
+    }
+
+    /// Execute and read back an f32 tensor.
+    pub fn run_f32(&self, args: &[&xla::Literal]) -> Result<Vec<f32>> {
+        Ok(self.run(args)?.to_vec::<f32>()?)
+    }
+
+    /// Execute and read back an i32 tensor (token ids).
+    pub fn run_i32(&self, args: &[&xla::Literal]) -> Result<Vec<i32>> {
+        Ok(self.run(args)?.to_vec::<i32>()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} != data len {}", data.len());
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> Result<xla::Literal> {
+    literal_f32(&[v], &[])
+}

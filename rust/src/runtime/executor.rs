@@ -1,0 +1,292 @@
+//! Model-level execution API over the compiled artifacts.
+//!
+//! [`CoModel`] is one co-inference model pair: the agent-side encoder
+//! (runs with *quantized* weights, paper eq. 1) and the server-side
+//! decoder (full precision, eq. 2). [`Fcdnn`] is the Fig.-3 verification
+//! model and [`QuantKernel`] exposes the standalone Pallas fake-quant
+//! modules for Rust-vs-XLA cross-checks.
+
+use crate::quant::Scheme;
+use crate::runtime::artifact::Registry;
+use crate::runtime::client::{literal_f32, literal_scalar, Executable};
+use crate::runtime::weights::WeightStore;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Geometry read from the manifest config.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub input: Vec<usize>,
+    pub emb_tokens: usize,
+    pub d_model: usize,
+    pub max_len: usize,
+    pub vocab: usize,
+    pub batches: Vec<usize>,
+}
+
+impl ModelDims {
+    pub fn input_len(&self) -> usize {
+        self.input.iter().product()
+    }
+
+    pub fn emb_len(&self) -> usize {
+        self.emb_tokens * self.d_model
+    }
+
+    fn from_manifest(cfg: &Json) -> Result<ModelDims> {
+        let usize_field = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("config.{k} missing"))
+        };
+        Ok(ModelDims {
+            input: cfg
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .context("input_shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            emb_tokens: usize_field("emb_tokens")?,
+            d_model: usize_field("d_model")?,
+            max_len: usize_field("max_len")?,
+            vocab: usize_field("vocab")?,
+            batches: cfg
+                .get("batches")
+                .and_then(Json::as_arr)
+                .context("batches")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+        })
+    }
+}
+
+/// One co-inference model (agent encoder + server decoder).
+pub struct CoModel {
+    pub name: String,
+    pub dims: ModelDims,
+    agent_exes: HashMap<usize, Rc<Executable>>,
+    server_exes: HashMap<usize, Rc<Executable>>,
+    pub agent_weights: WeightStore,
+    pub server_weights: WeightStore,
+    pub agent_flops: f64,
+    pub server_flops: f64,
+}
+
+impl CoModel {
+    pub fn load(reg: &Registry, name: &str) -> Result<CoModel> {
+        let entry = reg.model(name)?.clone();
+        let dims = ModelDims::from_manifest(
+            entry.get("config").context("config missing")?,
+        )?;
+        let mut agent_exes = HashMap::new();
+        let mut server_exes = HashMap::new();
+        for (side, exes) in
+            [("agent", &mut agent_exes), ("server", &mut server_exes)]
+        {
+            let hlo = entry
+                .at(&[side, "hlo"])
+                .and_then(|h| match h {
+                    Json::Obj(kv) => Some(kv),
+                    _ => None,
+                })
+                .with_context(|| format!("{side}.hlo missing"))?;
+            for (b, file) in hlo {
+                let batch: usize = b.parse().context("batch key")?;
+                let file = file.as_str().context("hlo file name")?;
+                exes.insert(batch, reg.executable(file)?);
+            }
+        }
+        let flops = |side: &str| {
+            entry.at(&[side, "flops"]).and_then(Json::as_f64).unwrap_or(0.0)
+        };
+        Ok(CoModel {
+            name: name.to_string(),
+            agent_weights: WeightStore::load(&reg.dir, entry.get("agent").unwrap())?,
+            server_weights: WeightStore::load(&reg.dir, entry.get("server").unwrap())?,
+            agent_flops: flops("agent"),
+            server_flops: flops("server"),
+            dims,
+            agent_exes,
+            server_exes,
+        })
+    }
+
+    /// Largest compiled batch size <= n (falling back to 1).
+    pub fn pick_batch(&self, available: &HashMap<usize, Rc<Executable>>, n: usize) -> usize {
+        available
+            .keys()
+            .copied()
+            .filter(|b| *b <= n.max(1))
+            .max()
+            .unwrap_or(1)
+    }
+
+    pub fn agent_batches(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.agent_exes.keys().copied().collect();
+        b.sort();
+        b
+    }
+
+    /// Agent stage: images -> embeddings, with the encoder weights
+    /// quantized at (bits, scheme). `inputs` holds `n` samples flattened;
+    /// requests are chunked over the compiled batch sizes.
+    pub fn encode(
+        &mut self,
+        inputs: &[f32],
+        n: usize,
+        bits: u32,
+        scheme: Scheme,
+    ) -> Result<Vec<f32>> {
+        let in_len = self.dims.input_len();
+        anyhow::ensure!(inputs.len() == n * in_len, "input length mismatch");
+        let weights = self.agent_weights.quantized(bits, scheme)?;
+        let mut out = Vec::with_capacity(n * self.dims.emb_len());
+        let mut i = 0;
+        while i < n {
+            let batch = self.pick_batch(&self.agent_exes, n - i);
+            let exe = self.agent_exes.get(&batch).context("no batch exe")?.clone();
+            let mut shape = vec![batch];
+            shape.extend(&self.dims.input);
+            let input =
+                literal_f32(&inputs[i * in_len..(i + batch) * in_len], &shape)?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.literals.len());
+            args.push(&input);
+            for w in &weights.literals {
+                args.push(w);
+            }
+            out.extend(exe.run_f32(&args)?);
+            i += batch;
+        }
+        Ok(out)
+    }
+
+    /// Server stage: embeddings -> greedy-decoded token ids per sample.
+    pub fn decode(&mut self, embs: &[f32], n: usize) -> Result<Vec<Vec<i32>>> {
+        let emb_len = self.dims.emb_len();
+        anyhow::ensure!(embs.len() == n * emb_len, "embedding length mismatch");
+        let weights = self.server_weights.full_precision()?;
+        let mut out = Vec::with_capacity(n);
+        let mut i = 0;
+        while i < n {
+            let batch = self.pick_batch(&self.server_exes, n - i);
+            let exe = self.server_exes.get(&batch).context("no batch exe")?.clone();
+            let shape = vec![batch, self.dims.emb_tokens, self.dims.d_model];
+            let input =
+                literal_f32(&embs[i * emb_len..(i + batch) * emb_len], &shape)?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.literals.len());
+            args.push(&input);
+            for w in &weights.literals {
+                args.push(w);
+            }
+            let toks = exe.run_i32(&args)?;
+            for b in 0..batch {
+                out.push(toks[b * self.dims.max_len..(b + 1) * self.dims.max_len].to_vec());
+            }
+            i += batch;
+        }
+        Ok(out)
+    }
+
+    /// Full co-inference for a batch of samples.
+    pub fn infer(
+        &mut self,
+        inputs: &[f32],
+        n: usize,
+        bits: u32,
+        scheme: Scheme,
+    ) -> Result<Vec<Vec<i32>>> {
+        let embs = self.encode(inputs, n, bits, scheme)?;
+        self.decode(&embs, n)
+    }
+}
+
+/// The FCDNN-16 autoencoder (Fig. 3).
+pub struct Fcdnn {
+    exe: Rc<Executable>,
+    pub weights: WeightStore,
+    pub batch: usize,
+    pub flops: f64,
+}
+
+impl Fcdnn {
+    pub fn load(reg: &Registry) -> Result<Fcdnn> {
+        let entry = reg.model("fcdnn16")?.clone();
+        let batch = entry.get("batch").and_then(Json::as_usize).context("batch")?;
+        let hlo = entry
+            .at(&["hlo", &batch.to_string()])
+            .and_then(Json::as_str)
+            .context("fcdnn hlo")?;
+        Ok(Fcdnn {
+            exe: reg.executable(hlo)?,
+            weights: WeightStore::load(&reg.dir, &entry)?,
+            batch,
+            flops: entry.get("flops").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    /// Forward a full batch with externally supplied weight blob (e.g.
+    /// quantized variants for the distortion study).
+    pub fn forward_with_blob(&self, xs: &[f32], blob: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(xs.len() == self.batch * 784);
+        anyhow::ensure!(blob.len() == self.weights.n_params());
+        let input = literal_f32(xs, &[self.batch, 784])?;
+        let lits: Vec<xla::Literal> = self
+            .weights
+            .specs
+            .iter()
+            .map(|s| literal_f32(&blob[s.offset..s.offset + s.len], &s.shape))
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + lits.len());
+        args.push(&input);
+        for l in &lits {
+            args.push(l);
+        }
+        self.exe.run_f32(&args)
+    }
+
+    pub fn forward(&mut self, xs: &[f32]) -> Result<Vec<f32>> {
+        let blob = self.weights.blob.clone();
+        self.forward_with_blob(xs, &blob)
+    }
+}
+
+/// The standalone Pallas fake-quant modules (Rust-vs-XLA cross-check).
+pub struct QuantKernel {
+    uniform: Rc<Executable>,
+    pot: Rc<Executable>,
+    pub rows: usize,
+}
+
+impl QuantKernel {
+    pub fn load(reg: &Registry) -> Result<QuantKernel> {
+        let q = reg.manifest.get("quant").context("quant entry")?;
+        Ok(QuantKernel {
+            uniform: reg.executable(q.get("uniform").and_then(Json::as_str).context("uniform")?)?,
+            pot: reg.executable(q.get("pot").and_then(Json::as_str).context("pot")?)?,
+            rows: q.get("rows").and_then(Json::as_usize).context("rows")?,
+        })
+    }
+
+    pub fn buf_len(&self) -> usize {
+        self.rows * 128
+    }
+
+    pub fn uniform(&self, buf: &[f32], step: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(buf.len() == self.buf_len());
+        let w = literal_f32(buf, &[self.rows, 128])?;
+        let s = literal_scalar(step)?;
+        self.uniform.run_f32(&[&w, &s])
+    }
+
+    pub fn pot(&self, buf: &[f32], emin: f32, emax: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(buf.len() == self.buf_len());
+        let w = literal_f32(buf, &[self.rows, 128])?;
+        let lo = literal_scalar(emin)?;
+        let hi = literal_scalar(emax)?;
+        self.pot.run_f32(&[&w, &lo, &hi])
+    }
+}

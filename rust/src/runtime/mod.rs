@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts `make artifacts` produced and
+//! executes them on the request path — Python never runs here.
+//!
+//! * [`client`] — thin wrapper over the `xla` crate: HLO text →
+//!   `XlaComputation` → compiled executable, with tuple unwrapping.
+//! * [`weights`] — weight blobs + per-bitwidth quantized literal caches.
+//! * [`artifact`] — manifest-driven registry of every shipped module.
+//! * [`executor`] — model-level API: encode (agent stage) / decode (server
+//!   stage) / fcdnn forward, over cached executables and weight literals.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+pub mod weights;
+
+pub use artifact::Registry;
+pub use client::{Executable, Runtime};
+pub use executor::CoModel;

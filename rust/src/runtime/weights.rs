@@ -1,0 +1,244 @@
+//! Weight store: trained parameter blobs + quantized-literal caches.
+//!
+//! The AOT modules take every parameter as a runtime input, so quantizing
+//! at a new bit-width is a pure host-side transform: quantize the blob
+//! (sign-preserving, §II-C), slice it per tensor, and build PJRT literals.
+//! Results are cached per (bits, scheme) — the serving hot path reuses the
+//! literals for every request at that operating point.
+
+use crate::quant::{self, Scheme};
+use crate::runtime::client::literal_f32;
+use crate::theory::expdist::ExponentialModel;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// One tensor's metadata within the blob.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Cached quantized view of the blob.
+pub struct QuantizedWeights {
+    pub literals: Vec<Rc<xla::Literal>>,
+    /// total L1 parameter distortion vs full precision (eq. 15)
+    pub l1_distortion: f64,
+    /// per-parameter mean |w - ŵ| (the D of §IV)
+    pub mean_abs_distortion: f64,
+}
+
+pub struct WeightStore {
+    pub specs: Vec<TensorSpec>,
+    pub blob: Vec<f32>,
+    /// MLE-fitted exponential parameter (manifest value, python-fitted)
+    pub lambda: f64,
+    cache: HashMap<(u32, Scheme), Rc<QuantizedWeights>>,
+    /// cache of the full-precision literals (bits = 0 sentinel)
+    full: Option<Rc<QuantizedWeights>>,
+}
+
+impl WeightStore {
+    /// Load from a manifest model-side entry ({"weights", "params",
+    /// "lambda", ...}).
+    pub fn load(artifacts: &Path, entry: &Json) -> Result<WeightStore> {
+        let file = entry
+            .get("weights")
+            .and_then(Json::as_str)
+            .context("weights file missing in manifest")?;
+        let bytes = std::fs::read(artifacts.join(file))
+            .with_context(|| format!("reading {file}"))?;
+        let blob: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let params = entry
+            .get("params")
+            .and_then(Json::as_arr)
+            .context("params missing")?;
+        let mut specs = Vec::with_capacity(params.len());
+        let mut offset = 0usize;
+        for p in params {
+            let name = p.get("name").and_then(Json::as_str).context("param name")?;
+            let shape: Vec<usize> = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("param shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let len: usize = shape.iter().product();
+            specs.push(TensorSpec { name: name.to_string(), shape, offset, len });
+            offset += len;
+        }
+        anyhow::ensure!(
+            offset == blob.len(),
+            "weight blob {} has {} f32s, specs expect {}",
+            file,
+            blob.len(),
+            offset
+        );
+        let lambda = entry
+            .get("lambda")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| ExponentialModel::fit_weights(&blob).lambda);
+        Ok(WeightStore { specs, blob, lambda, cache: HashMap::new(), full: None })
+    }
+
+    /// Build from raw parts (tests).
+    pub fn from_parts(specs: Vec<(String, Vec<usize>)>, blob: Vec<f32>) -> WeightStore {
+        let mut out = Vec::new();
+        let mut offset = 0;
+        for (name, shape) in specs {
+            let len: usize = shape.iter().product();
+            out.push(TensorSpec { name, shape, offset, len });
+            offset += len;
+        }
+        assert_eq!(offset, blob.len());
+        let lambda = ExponentialModel::fit_weights(&blob).lambda;
+        WeightStore { specs: out, blob, lambda, cache: HashMap::new(), full: None }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.blob.len()
+    }
+
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        let s = &self.specs[i];
+        &self.blob[s.offset..s.offset + s.len]
+    }
+
+    fn build_literals(&self, data: &[f32]) -> Result<Vec<Rc<xla::Literal>>> {
+        self.specs
+            .iter()
+            .map(|s| {
+                literal_f32(&data[s.offset..s.offset + s.len], &s.shape).map(Rc::new)
+            })
+            .collect()
+    }
+
+    /// Full-precision literals (cached).
+    pub fn full_precision(&mut self) -> Result<Rc<QuantizedWeights>> {
+        if let Some(f) = &self.full {
+            return Ok(f.clone());
+        }
+        let literals = self.build_literals(&self.blob)?;
+        let qw = Rc::new(QuantizedWeights {
+            literals,
+            l1_distortion: 0.0,
+            mean_abs_distortion: 0.0,
+        });
+        self.full = Some(qw.clone());
+        Ok(qw)
+    }
+
+    /// Quantized literals at (bits, scheme), cached. `bits >= full_bits`
+    /// short-circuits to full precision.
+    pub fn quantized(&mut self, bits: u32, scheme: Scheme) -> Result<Rc<QuantizedWeights>> {
+        if bits >= 32 {
+            return self.full_precision();
+        }
+        if let Some(q) = self.cache.get(&(bits, scheme)) {
+            return Ok(q.clone());
+        }
+        let qblob = quant::quantize_magnitudes(&self.blob, bits, scheme);
+        let literals = self.build_literals(&qblob)?;
+        let l1 = quant::total_l1_distortion(&self.blob, &qblob);
+        let qw = Rc::new(QuantizedWeights {
+            literals,
+            l1_distortion: l1,
+            mean_abs_distortion: l1 / self.blob.len() as f64,
+        });
+        self.cache.insert((bits, scheme), qw.clone());
+        Ok(qw)
+    }
+
+    /// Quantize without literal construction (distortion studies).
+    pub fn quantized_blob(&self, bits: u32, scheme: Scheme) -> Vec<f32> {
+        quant::quantize_magnitudes(&self.blob, bits, scheme)
+    }
+
+    pub fn cached_points(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+    use crate::util::rng::Rng;
+
+    fn store() -> WeightStore {
+        let mut rng = Rng::new(0);
+        let blob: Vec<f32> = (0..256 + 16).map(|_| 0.1 * rng.normal() as f32).collect();
+        WeightStore::from_parts(
+            vec![("w".into(), vec![16, 16]), ("b".into(), vec![16])],
+            blob,
+        )
+    }
+
+    #[test]
+    fn tensor_slicing_respects_offsets() {
+        let s = store();
+        assert_eq!(s.tensor(0).len(), 256);
+        assert_eq!(s.tensor(1).len(), 16);
+        assert_eq!(s.n_params(), 272);
+        assert_eq!(s.tensor(1)[0], s.blob[256]);
+    }
+
+    #[test]
+    fn quantized_blob_distortion_shrinks_with_bits() {
+        let s = store();
+        let d4 = crate::quant::total_l1_distortion(&s.blob, &s.quantized_blob(4, Scheme::Uniform));
+        let d8 = crate::quant::total_l1_distortion(&s.blob, &s.quantized_blob(8, Scheme::Uniform));
+        assert!(d8 < d4);
+    }
+
+    #[test]
+    fn cache_returns_same_rc() {
+        let mut s = store();
+        let a = s.quantized(5, Scheme::Uniform).unwrap();
+        let b = s.quantized(5, Scheme::Uniform).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(s.cached_points(), 1);
+        // different scheme = different cache slot
+        s.quantized(5, Scheme::Pot).unwrap();
+        assert_eq!(s.cached_points(), 2);
+        // >= 32 bits short-circuits to full precision (no distortion)
+        let f = s.quantized(32, Scheme::Uniform).unwrap();
+        assert_eq!(f.l1_distortion, 0.0);
+        assert_eq!(s.cached_points(), 2);
+    }
+
+    #[test]
+    fn manifest_size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("qaci-ws-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // blob with 8 f32s but spec demanding 16
+        std::fs::write(dir.join("w.bin"), [0u8; 32]).unwrap();
+        let entry = parse(
+            r#"{"weights":"w.bin","params":[{"name":"w","shape":[4,4]}],"lambda":10.0}"#,
+        )
+        .unwrap();
+        assert!(WeightStore::load(&dir, &entry).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_weight_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("qaci-ws2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let entry = parse(
+            r#"{"weights":"nope.bin","params":[{"name":"w","shape":[2]}]}"#,
+        )
+        .unwrap();
+        assert!(WeightStore::load(&dir, &entry).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

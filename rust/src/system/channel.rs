@@ -1,0 +1,94 @@
+//! Wireless link substrate: the 5 GHz WLAN between agent and server that
+//! carries embeddings up and results down (paper Fig. 1 / testbed §VI).
+//!
+//! The paper's optimization treats computation delay/energy only (LAIM
+//! inference is computation-dominated); the link here adds end-to-end
+//! realism to the coordinator and is *excluded* from the T/E constraint
+//! math, matching the paper. Deterministic jitter keeps runs reproducible.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Channel {
+    /// nominal goodput [bits/s]
+    pub rate_bps: f64,
+    /// fixed per-message latency [s] (MAC + propagation + serialization)
+    pub base_latency_s: f64,
+    /// multiplicative jitter half-width (0.1 => ±10% rate variation)
+    pub jitter: f64,
+    rng: Rng,
+}
+
+impl Channel {
+    /// Stable 5 GHz WLAN, per the testbed description: ~400 Mbps goodput,
+    /// ~2 ms base latency, mild jitter.
+    pub fn wlan_5ghz(seed: u64) -> Channel {
+        Channel {
+            rate_bps: 400e6,
+            base_latency_s: 2e-3,
+            jitter: 0.10,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Ideal infinite-rate link (isolates computation in benches).
+    pub fn ideal() -> Channel {
+        Channel {
+            rate_bps: f64::INFINITY,
+            base_latency_s: 0.0,
+            jitter: 0.0,
+            rng: Rng::new(0),
+        }
+    }
+
+    /// Simulated transmission time for a payload of `bytes`.
+    pub fn transmit_s(&mut self, bytes: usize) -> f64 {
+        if self.rate_bps.is_infinite() {
+            return self.base_latency_s;
+        }
+        let wobble = 1.0 + self.jitter * (2.0 * self.rng.f64() - 1.0);
+        self.base_latency_s + (bytes as f64 * 8.0) / (self.rate_bps * wobble)
+    }
+
+    /// Embedding payload size: tokens × d_model × 4 bytes (f32 features).
+    pub fn embedding_bytes(tokens: usize, d_model: usize) -> usize {
+        tokens * d_model * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transmit_time_scales_with_size() {
+        let mut ch = Channel::wlan_5ghz(1);
+        let t1 = ch.transmit_s(10_000);
+        let t2 = ch.transmit_s(10_000_000);
+        assert!(t2 > t1);
+        // 10 MB over ~400 Mbps ≈ 0.2 s
+        assert!(t2 > 0.1 && t2 < 0.4, "{t2}");
+    }
+
+    #[test]
+    fn ideal_link_is_free() {
+        let mut ch = Channel::ideal();
+        assert_eq!(ch.transmit_s(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let mut ch = Channel::wlan_5ghz(2);
+        let nominal = 8.0 * 1e6 / ch.rate_bps + ch.base_latency_s;
+        for _ in 0..200 {
+            let t = ch.transmit_s(1_000_000);
+            assert!(t > nominal * 0.85 && t < nominal * 1.25, "{t} vs {nominal}");
+        }
+    }
+
+    #[test]
+    fn embedding_payload_matches_blip2ish() {
+        // 16 query tokens × 128 dims × 4 B = 8 KiB
+        assert_eq!(Channel::embedding_bytes(16, 128), 8192);
+    }
+}

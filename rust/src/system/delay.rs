@@ -1,0 +1,68 @@
+//! Computation delay model (paper eq. 4, 5, 8).
+
+use super::platform::Platform;
+
+/// On-agent inference delay t(b̂, f) = b̂ N / (b f c)  (eq. 4).
+pub fn agent_delay(p: &Platform, b_hat: f64, f: f64) -> f64 {
+    assert!(f > 0.0, "device frequency must be positive");
+    p.agent_cycles(b_hat) / f
+}
+
+/// On-server inference delay t̃(f̃) = Ñ / (f̃ c̃)  (eq. 5).
+pub fn server_delay(p: &Platform, f_tilde: f64) -> f64 {
+    assert!(f_tilde > 0.0, "server frequency must be positive");
+    p.server_cycles() / f_tilde
+}
+
+/// Total computation delay T(b̂, f, f̃)  (eq. 8).
+pub fn total_delay(p: &Platform, b_hat: f64, f: f64, f_tilde: f64) -> f64 {
+    agent_delay(p, b_hat, f) + server_delay(p, f_tilde)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn closed_form_example() {
+        let p = Platform::paper_blip2();
+        // b̂=8: workload = 8/32 * 160.098 GFLOP = 40.0245 GFLOP
+        // at f=2GHz, c=32 -> 64 GFLOP/s -> 0.6254 s
+        let t = agent_delay(&p, 8.0, 2.0e9);
+        assert!((t - 8.0 * 0.30 * 533.66e9 / (32.0 * 2.0e9 * 32.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delay_monotonicity() {
+        let p = Platform::paper_blip2();
+        forall(
+            "delay falls with f, grows with b̂",
+            200,
+            |r| (r.range(1.0, 16.0), r.range(1e8, 2e9), r.range(1e8, 1e10)),
+            |&(b, f, ft)| {
+                let t = total_delay(&p, b, f, ft);
+                if total_delay(&p, b + 1.0, f, ft) <= t {
+                    return Err("not increasing in b̂".into());
+                }
+                if total_delay(&p, b, f * 1.1, ft) >= t {
+                    return Err("not decreasing in f".into());
+                }
+                if total_delay(&p, b, f, ft * 1.1) >= t {
+                    return Err("not decreasing in f̃".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn additivity() {
+        let p = Platform::paper_git();
+        let (b, f, ft) = (6.0, 1.5e9, 8e9);
+        assert_eq!(
+            total_delay(&p, b, f, ft),
+            agent_delay(&p, b, f) + server_delay(&p, ft)
+        );
+    }
+}

@@ -1,0 +1,115 @@
+//! DVFS governors: continuous frequency control (the simulation setting of
+//! §VI-C) and coarse profile-quantized control (the testbed setting of
+//! Table I, where the Jetson only exposes low/medium/high operating
+//! points).
+
+/// Frequency governor for one processor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Governor {
+    /// Any f in (0, f_max] is settable.
+    Continuous { f_max: f64 },
+    /// Only the listed operating points are settable (ascending order).
+    Profiles { points: Vec<f64> },
+}
+
+impl Governor {
+    /// The Table I testbed device profiles: Jetson AGX Orin coarse
+    /// frequency configurations (low / medium / high), in Hz.
+    pub fn jetson_profiles() -> Governor {
+        Governor::Profiles { points: vec![0.73e9, 1.34e9, 2.2e9] }
+    }
+
+    /// Server-side coarse profiles for the testbed runs.
+    pub fn server_profiles() -> Governor {
+        Governor::Profiles { points: vec![1.8e9, 3.0e9, 4.1e9] }
+    }
+
+    pub fn f_max(&self) -> f64 {
+        match self {
+            Governor::Continuous { f_max } => *f_max,
+            Governor::Profiles { points } => *points.last().expect("non-empty"),
+        }
+    }
+
+    /// Clamp a requested frequency to what the hardware can actually set:
+    /// continuous governors clamp to (0, f_max]; profile governors snap
+    /// **up** to the next operating point (never slower than requested, so
+    /// delay constraints stay satisfied) or the top profile.
+    pub fn realize(&self, requested: f64) -> f64 {
+        match self {
+            Governor::Continuous { f_max } => requested.clamp(f64::MIN_POSITIVE, *f_max),
+            Governor::Profiles { points } => {
+                for &p in points {
+                    if p >= requested {
+                        return p;
+                    }
+                }
+                *points.last().expect("non-empty")
+            }
+        }
+    }
+
+    /// Named profile lookup for the testbed bench ("low"/"medium"/"high").
+    pub fn profile(&self, name: &str) -> Option<f64> {
+        if let Governor::Profiles { points } = self {
+            let idx = match name {
+                "low" => 0,
+                "medium" => points.len() / 2,
+                "high" => points.len() - 1,
+                _ => return None,
+            };
+            points.get(idx).copied()
+        } else {
+            None
+        }
+    }
+
+    pub fn profile_names(&self) -> Vec<&'static str> {
+        match self {
+            Governor::Continuous { .. } => vec![],
+            Governor::Profiles { .. } => vec!["low", "medium", "high"],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn continuous_clamps() {
+        let g = Governor::Continuous { f_max: 2e9 };
+        assert_eq!(g.realize(1e9), 1e9);
+        assert_eq!(g.realize(5e9), 2e9);
+        assert!(g.realize(-1.0) > 0.0);
+    }
+
+    #[test]
+    fn profiles_snap_up() {
+        let g = Governor::jetson_profiles();
+        assert_eq!(g.realize(0.5e9), 0.73e9);
+        assert_eq!(g.realize(1.0e9), 1.34e9);
+        assert_eq!(g.realize(1.34e9), 1.34e9);
+        assert_eq!(g.realize(2.0e9), 2.2e9);
+        assert_eq!(g.realize(9.9e9), 2.2e9); // top profile caps
+    }
+
+    #[test]
+    fn named_profiles() {
+        let g = Governor::jetson_profiles();
+        assert_eq!(g.profile("low"), Some(0.73e9));
+        assert_eq!(g.profile("medium"), Some(1.34e9));
+        assert_eq!(g.profile("high"), Some(2.2e9));
+        assert_eq!(g.profile("turbo"), None);
+        assert!(Governor::Continuous { f_max: 1.0 }.profile("low").is_none());
+    }
+
+    #[test]
+    fn snap_up_never_increases_delay() {
+        // realize() >= requested within range => stage delay can only drop
+        let g = Governor::jetson_profiles();
+        for req in [0.3e9, 0.9e9, 1.5e9, 2.2e9] {
+            assert!(g.realize(req) >= req.min(g.f_max()));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's system model (§II): platform profiles, computation delay
+//! (eq. 4–5, 8), energy (eq. 6–7, 9), DVFS governors, and the (substrate)
+//! wireless link carrying embeddings between agent and server.
+
+pub mod channel;
+pub mod delay;
+pub mod dvfs;
+pub mod energy;
+pub mod platform;
+
+pub use platform::{DeviceSpec, Platform, ServerSpec};

@@ -1,0 +1,164 @@
+//! Hardware profiles: the paper's simulation setup (§VI-C) and the
+//! Jetson-AGX-Orin / Xeon+RTX3090 testbed (§VI, Table I), plus
+//! measured-FLOPs presets for the models this repo actually ships.
+
+/// Agent-side processor (paper notation: f, c, η, ψ, b).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpec {
+    /// max clock frequency f^max [Hz]
+    pub f_max: f64,
+    /// FLOPs per cycle c
+    pub flops_per_cycle: f64,
+    /// power usage effectiveness η
+    pub pue: f64,
+    /// chip power coefficient ψ [W/(cycle/s)^3]
+    pub psi: f64,
+}
+
+/// Server-side processor (paper notation: f̃, c̃, η̃, ψ̃).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerSpec {
+    pub f_max: f64,
+    pub flops_per_cycle: f64,
+    pub pue: f64,
+    pub psi: f64,
+}
+
+/// A full co-inference platform: device + server + workload constants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Platform {
+    pub device: DeviceSpec,
+    pub server: ServerSpec,
+    /// full-precision on-agent workload N_FLOP
+    pub n_flop_agent: f64,
+    /// on-server workload Ñ_FLOP
+    pub n_flop_server: f64,
+    /// original parameter bit-width b (quantization scales work by b̂/b)
+    pub full_bits: f64,
+    /// achievable bit-width set B = {1..B_max}
+    pub b_max: u32,
+}
+
+impl Platform {
+    /// The paper's §VI-C simulation setup: f^max = 2 GHz, f̃^max = 10 GHz,
+    /// c = 32, c̃ = 128, η = 1, η̃ = 2, ψ = 2e-29, ψ̃ = 1e-28, with the
+    /// BLIP-2-2.7b first-token workload (533.66 GFLOPs) split 30/70 across
+    /// the agent encoder and server decoder.
+    pub fn paper_blip2() -> Platform {
+        Platform {
+            device: DeviceSpec {
+                f_max: 2.0e9,
+                flops_per_cycle: 32.0,
+                pue: 1.0,
+                psi: 2.0e-29,
+            },
+            server: ServerSpec {
+                f_max: 10.0e9,
+                flops_per_cycle: 128.0,
+                pue: 2.0,
+                psi: 1.0e-28,
+            },
+            n_flop_agent: 0.30 * 533.66e9,
+            n_flop_server: 0.70 * 533.66e9,
+            full_bits: 32.0,
+            b_max: 16,
+        }
+    }
+
+    /// GIT-base on VaTeX: 212.27 GFLOPs first-token workload, same silicon.
+    pub fn paper_git() -> Platform {
+        Platform {
+            n_flop_agent: 0.30 * 212.27e9,
+            n_flop_server: 0.70 * 212.27e9,
+            ..Platform::paper_blip2()
+        }
+    }
+
+    /// Testbed preset (Table I): Jetson AGX Orin 64GB device (coarse DVFS
+    /// profiles live in [`crate::system::dvfs`]) + dual Xeon 6246R/RTX3090
+    /// server. Workloads are per the shipped models unless overridden.
+    pub fn testbed(n_flop_agent: f64, n_flop_server: f64) -> Platform {
+        Platform {
+            device: DeviceSpec {
+                f_max: 2.2e9,
+                flops_per_cycle: 16.0,
+                pue: 1.05,
+                psi: 6.0e-29,
+            },
+            server: ServerSpec {
+                f_max: 4.1e9,
+                flops_per_cycle: 256.0,
+                pue: 1.8,
+                psi: 8.0e-29,
+            },
+            n_flop_agent,
+            n_flop_server,
+            full_bits: 32.0,
+            b_max: 16,
+        }
+    }
+
+    /// Scale the workloads (e.g. to the repo's measured model FLOPs) while
+    /// keeping the silicon profile.
+    pub fn with_workload(mut self, n_agent: f64, n_server: f64) -> Platform {
+        self.n_flop_agent = n_agent;
+        self.n_flop_server = n_server;
+        self
+    }
+
+    /// Agent cycles at bit-width b̂: C1(b̂) = b̂ N / (b c) — the workload
+    /// scaling assumption of §II-D.
+    pub fn agent_cycles(&self, b_hat: f64) -> f64 {
+        b_hat * self.n_flop_agent / (self.full_bits * self.device.flops_per_cycle)
+    }
+
+    /// Server cycles (bit-width independent; the server runs full
+    /// precision): C2 = Ñ / c̃.
+    pub fn server_cycles(&self) -> f64 {
+        self.n_flop_server / self.server.flops_per_cycle
+    }
+
+    /// Hard floor on end-to-end delay at bit-width b̂ (both stages at
+    /// their max frequency).
+    pub fn min_delay(&self, b_hat: f64) -> f64 {
+        self.agent_cycles(b_hat) / self.device.f_max
+            + self.server_cycles() / self.server.f_max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_values() {
+        let p = Platform::paper_blip2();
+        assert_eq!(p.device.f_max, 2.0e9);
+        assert_eq!(p.server.flops_per_cycle, 128.0);
+        assert!((p.n_flop_agent + p.n_flop_server - 533.66e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn cycles_scale_linearly_with_bits() {
+        let p = Platform::paper_blip2();
+        let c8 = p.agent_cycles(8.0);
+        let c16 = p.agent_cycles(16.0);
+        assert!((c16 / c8 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_delay_in_plausible_range() {
+        // paper evaluates T0 in the ~2.5-4s band (Fig. 5): full precision
+        // must be near/above it, low bits well below
+        let p = Platform::paper_blip2();
+        assert!(p.min_delay(32.0) > 2.0, "{}", p.min_delay(32.0));
+        assert!(p.min_delay(2.0) < 1.0, "{}", p.min_delay(2.0));
+    }
+
+    #[test]
+    fn with_workload_overrides() {
+        let p = Platform::paper_blip2().with_workload(1e9, 2e9);
+        assert_eq!(p.n_flop_agent, 1e9);
+        assert_eq!(p.n_flop_server, 2e9);
+    }
+}

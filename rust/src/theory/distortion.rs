@@ -1,0 +1,290 @@
+//! Output-distortion propagation (paper §III).
+//!
+//! Prop. 3.1: for an L-layer FC DNN with 1-Lipschitz activations,
+//! normalized input (‖x‖₁ <= 1) and per-layer quantization error
+//! ‖W_l - Ŵ_l‖ <= τ_l,
+//!
+//!   ‖f(x, W) - f(x, Ŵ)‖₁ <= Σ_l A_l ‖W_l - Ŵ_l‖
+//!   A_l = Π_{j<l} ‖W_j‖ · Π_{k>l} (‖W_k‖ + τ_k)
+//!
+//! with ‖·‖ the operator norm induced by ‖·‖₁ (max absolute column sum) —
+//! the norm under which ‖Wx‖₁ <= ‖W‖‖x‖₁, which the proof's recursion
+//! needs. The paper's surrogate metric (eq. 15) then *drops* the A_l and
+//! uses the raw entrywise-L1 parameter distortion; `surrogate_l1` is that
+//! metric, and Remark 3.2's first-order constant H is estimated
+//! empirically in the Fig. 3 bench.
+
+use crate::metrics::stats;
+
+/// A dense layer weight matrix, row-major, mapping x (cols) -> y (rows):
+/// y = W x.
+#[derive(Debug, Clone)]
+pub struct LayerMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl LayerMatrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> LayerMatrix {
+        assert_eq!(data.len(), rows * cols);
+        LayerMatrix { rows, cols, data }
+    }
+
+    /// Operator norm induced by L1: max over columns of Σ_rows |w_rc|.
+    pub fn induced_l1(&self) -> f64 {
+        (0..self.cols)
+            .map(|c| {
+                (0..self.rows)
+                    .map(|r| self.data[r * self.cols + c].abs() as f64)
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Entrywise L1 (the paper's eq. 15 building block).
+    pub fn entrywise_l1(&self) -> f64 {
+        stats::l1(&self.data)
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|r| {
+                self.data[r * self.cols..(r + 1) * self.cols]
+                    .iter()
+                    .zip(x)
+                    .map(|(w, xv)| *w as f64 * xv)
+                    .sum()
+            })
+            .collect()
+    }
+
+    pub fn sub_l1_induced(&self, other: &LayerMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        (0..self.cols)
+            .map(|c| {
+                (0..self.rows)
+                    .map(|r| {
+                        let i = r * self.cols + c;
+                        (self.data[i] - other.data[i]).abs() as f64
+                    })
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max)
+    }
+
+    pub fn sub_l1_entrywise(&self, other: &LayerMatrix) -> f64 {
+        stats::l1_dist(&self.data, &other.data)
+    }
+}
+
+/// ReLU FC net forward (the Prop. 3.1 model class, eq. 10: activation on
+/// all but the last layer).
+pub fn fc_forward(layers: &[LayerMatrix], x: &[f64]) -> Vec<f64> {
+    let mut h = x.to_vec();
+    for (i, w) in layers.iter().enumerate() {
+        h = w.matvec(&h);
+        if i + 1 < layers.len() {
+            for v in &mut h {
+                *v = v.max(0.0);
+            }
+        }
+    }
+    h
+}
+
+/// The Prop. 3.1 coefficients A_l (eq. 14), in induced-L1 norm.
+pub fn coefficients(orig: &[LayerMatrix], quant: &[LayerMatrix]) -> Vec<f64> {
+    assert_eq!(orig.len(), quant.len());
+    let l = orig.len();
+    let norms: Vec<f64> = orig.iter().map(LayerMatrix::induced_l1).collect();
+    let taus: Vec<f64> = orig
+        .iter()
+        .zip(quant)
+        .map(|(w, wq)| w.sub_l1_induced(wq))
+        .collect();
+    (0..l)
+        .map(|i| {
+            let prefix: f64 = norms[..i].iter().product();
+            let suffix: f64 = (i + 1..l).map(|k| norms[k] + taus[k]).product();
+            prefix * suffix
+        })
+        .collect()
+}
+
+/// Prop. 3.1 upper bound on ‖f(x,W) - f(x,Ŵ)‖₁ for any ‖x‖₁ <= 1.
+pub fn output_distortion_bound(orig: &[LayerMatrix], quant: &[LayerMatrix]) -> f64 {
+    let a = coefficients(orig, quant);
+    orig.iter()
+        .zip(quant)
+        .zip(a)
+        .map(|((w, wq), ai)| ai * w.sub_l1_induced(wq))
+        .sum()
+}
+
+/// The paper's surrogate metric (eq. 15): total entrywise-L1 parameter
+/// distortion, the quantity the rate–distortion analysis of §IV bounds.
+pub fn surrogate_l1(orig: &[LayerMatrix], quant: &[LayerMatrix]) -> f64 {
+    orig.iter()
+        .zip(quant)
+        .map(|(w, wq)| w.sub_l1_entrywise(wq))
+        .sum()
+}
+
+/// Surrogate for flat weight blobs (transformer LAIMs, Remark 3.2): the
+/// runtime path — per-parameter mean absolute perturbation.
+pub fn surrogate_l1_flat(orig: &[f32], quant: &[f32]) -> f64 {
+    stats::l1_dist(orig, quant)
+}
+
+/// Empirical first-order constant H of Remark 3.2: given measured
+/// (param_distortion, output_distortion) pairs, the smallest H with
+/// output <= H * param over all pairs.
+pub fn empirical_h(pairs: &[(f64, f64)]) -> f64 {
+    pairs
+        .iter()
+        .filter(|(p, _)| *p > 0.0)
+        .map(|(p, o)| o / p)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_magnitudes, Scheme};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn random_net(rng: &mut Rng, dims: &[usize], scale: f64) -> Vec<LayerMatrix> {
+        dims.windows(2)
+            .map(|w| {
+                let (ci, co) = (w[0], w[1]);
+                LayerMatrix::new(
+                    co,
+                    ci,
+                    (0..ci * co).map(|_| (scale * rng.normal()) as f32).collect(),
+                )
+            })
+            .collect()
+    }
+
+    fn quantize_net(net: &[LayerMatrix], bits: u32, scheme: Scheme) -> Vec<LayerMatrix> {
+        net.iter()
+            .map(|w| LayerMatrix::new(
+                w.rows,
+                w.cols,
+                quantize_magnitudes(&w.data, bits, scheme),
+            ))
+            .collect()
+    }
+
+    #[test]
+    fn induced_norm_known_matrix() {
+        // columns sums: |1|+|3| = 4, |-2|+|4| = 6
+        let m = LayerMatrix::new(2, 2, vec![1.0, -2.0, 3.0, 4.0]);
+        assert_eq!(m.induced_l1(), 6.0);
+        assert_eq!(m.entrywise_l1(), 10.0);
+    }
+
+    #[test]
+    fn induced_norm_is_matvec_gain_bound() {
+        forall(
+            "‖Wx‖1 <= ‖W‖ ‖x‖1",
+            100,
+            |r| {
+                let rows = 2 + r.below(6);
+                let cols = 2 + r.below(6);
+                let data: Vec<f32> = (0..rows * cols).map(|_| r.normal() as f32).collect();
+                let x: Vec<f64> = (0..cols).map(|_| r.normal()).collect();
+                (rows, cols, data, x)
+            },
+            |(rows, cols, data, x)| {
+                let m = LayerMatrix::new(*rows, *cols, data.clone());
+                let y = m.matvec(x);
+                let y1: f64 = y.iter().map(|v| v.abs()).sum();
+                let x1: f64 = x.iter().map(|v| v.abs()).sum();
+                if y1 <= m.induced_l1() * x1 + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("{y1} > {} * {x1}", m.induced_l1()))
+                }
+            },
+        );
+    }
+
+    /// The core Prop. 3.1 property: bound dominates the true output
+    /// distortion for random FC ReLU nets under real quantizers.
+    #[test]
+    fn prop31_bound_dominates_true_distortion() {
+        forall(
+            "Prop 3.1 dominance",
+            60,
+            |r| {
+                let depth = 2 + r.below(3);
+                let mut dims = vec![4 + r.below(5)];
+                for _ in 0..depth {
+                    dims.push(3 + r.below(6));
+                }
+                let bits = 2 + r.below(6) as u32;
+                let scheme = if r.f64() < 0.5 { Scheme::Uniform } else { Scheme::Pot };
+                let seed = r.next_u64();
+                (dims, bits, scheme, seed)
+            },
+            |(dims, bits, scheme, seed)| {
+                let mut rng = Rng::new(*seed);
+                let net = random_net(&mut rng, dims, 0.4);
+                let qnet = quantize_net(&net, *bits, *scheme);
+                // normalized input: ‖x‖1 = 1
+                let mut x: Vec<f64> = (0..dims[0]).map(|_| rng.normal()).collect();
+                let n1: f64 = x.iter().map(|v| v.abs()).sum();
+                for v in &mut x {
+                    *v /= n1;
+                }
+                let y = fc_forward(&net, &x);
+                let yq = fc_forward(&qnet, &x);
+                let true_dist: f64 =
+                    y.iter().zip(&yq).map(|(a, b)| (a - b).abs()).sum();
+                let bound = output_distortion_bound(&net, &qnet);
+                if true_dist <= bound + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("true {true_dist} > bound {bound}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bound_shrinks_with_more_bits() {
+        let mut rng = Rng::new(5);
+        let net = random_net(&mut rng, &[8, 16, 16, 4], 0.3);
+        let bounds: Vec<f64> = (2..=8)
+            .map(|b| {
+                let q = quantize_net(&net, b, Scheme::Uniform);
+                output_distortion_bound(&net, &q)
+            })
+            .collect();
+        // monotone up to fp noise
+        for w in bounds.windows(2) {
+            assert!(w[1] <= w[0] * 1.001, "{bounds:?}");
+        }
+        assert!(bounds.last().unwrap() < &(bounds[0] * 0.1));
+    }
+
+    #[test]
+    fn identical_nets_have_zero_distortion_and_bound() {
+        let mut rng = Rng::new(6);
+        let net = random_net(&mut rng, &[5, 7, 3], 0.5);
+        assert_eq!(output_distortion_bound(&net, &net.clone()), 0.0);
+        assert_eq!(surrogate_l1(&net, &net.clone()), 0.0);
+    }
+
+    #[test]
+    fn empirical_h_bounds_all_pairs() {
+        let pairs = vec![(1.0, 2.0), (2.0, 3.0), (4.0, 10.0)];
+        let h = empirical_h(&pairs);
+        assert!((h - 2.5).abs() < 1e-12);
+        assert!(pairs.iter().all(|(p, o)| *o <= h * p + 1e-12));
+    }
+}

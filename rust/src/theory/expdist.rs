@@ -1,0 +1,148 @@
+//! Exponential model of LAIM parameter magnitudes (paper §II-C, eq. 3):
+//!
+//!   P_Θ(θ) = λ e^{-λθ},  θ >= 0
+//!
+//! with MLE fitting from weight blobs, the differential entropy
+//! h(Θ) = log2(e/λ) (eq. 21), and a KS goodness-of-fit check backing the
+//! Fig. 2 claim that pre-trained weights are well-modeled by (3).
+
+use crate::metrics::stats;
+
+pub const LN2: f64 = std::f64::consts::LN_2;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExponentialModel {
+    pub lambda: f64,
+}
+
+impl ExponentialModel {
+    pub fn new(lambda: f64) -> ExponentialModel {
+        assert!(lambda > 0.0, "lambda must be positive");
+        ExponentialModel { lambda }
+    }
+
+    /// MLE fit from parameter magnitudes: λ* = 1 / mean(|θ|).
+    /// Exact zeros are kept (they carry mass near 0 consistently with the
+    /// sharp peak the paper observes).
+    pub fn fit(magnitudes: impl IntoIterator<Item = f64>) -> ExponentialModel {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for m in magnitudes {
+            debug_assert!(m >= 0.0);
+            sum += m;
+            n += 1;
+        }
+        assert!(n > 0, "cannot fit on empty data");
+        ExponentialModel::new((n as f64 / sum).min(1e12))
+    }
+
+    /// Fit from an f32 weight blob (signs stripped).
+    pub fn fit_weights(weights: &[f32]) -> ExponentialModel {
+        Self::fit(weights.iter().map(|w| w.abs() as f64))
+    }
+
+    pub fn pdf(&self, theta: f64) -> f64 {
+        if theta < 0.0 {
+            0.0
+        } else {
+            self.lambda * (-self.lambda * theta).exp()
+        }
+    }
+
+    pub fn cdf(&self, theta: f64) -> f64 {
+        if theta < 0.0 {
+            0.0
+        } else {
+            1.0 - (-self.lambda * theta).exp()
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        1.0 / self.lambda
+    }
+
+    /// Differential entropy in bits (eq. 21): h(Θ) = log2(e/λ).
+    pub fn differential_entropy_bits(&self) -> f64 {
+        (std::f64::consts::E / self.lambda).log2()
+    }
+
+    /// KS statistic of data against this model (Fig. 2 support).
+    pub fn ks_statistic(&self, magnitudes: &[f64]) -> f64 {
+        stats::ks_statistic(magnitudes, |x| self.cdf(x))
+    }
+
+    /// Inverse-CDF sampling hook for simulation.
+    pub fn sample(&self, rng: &mut crate::util::rng::Rng) -> f64 {
+        rng.exponential(self.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fit_recovers_lambda() {
+        let mut rng = Rng::new(0);
+        let truth = 37.5;
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.exponential(truth)).collect();
+        let model = ExponentialModel::fit(xs.iter().copied());
+        assert!((model.lambda - truth).abs() / truth < 0.02, "{}", model.lambda);
+    }
+
+    #[test]
+    fn entropy_closed_form_matches_numeric_integration() {
+        let m = ExponentialModel::new(5.0);
+        // -∫ p log2 p over a fine grid
+        let mut h = 0.0;
+        let dx = 1e-4;
+        let mut x = dx / 2.0;
+        while x < 10.0 {
+            let p = m.pdf(x);
+            if p > 0.0 {
+                h -= p * p.log2() * dx;
+            }
+            x += dx;
+        }
+        assert!((h - m.differential_entropy_bits()).abs() < 1e-3, "{h}");
+    }
+
+    #[test]
+    fn cdf_properties() {
+        forall(
+            "exp cdf in [0,1] and monotone",
+            200,
+            |r| (r.range(0.1, 100.0), r.range(0.0, 5.0), r.range(0.0, 5.0)),
+            |&(lam, a, b)| {
+                let m = ExponentialModel::new(lam);
+                let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+                let (ca, cb) = (m.cdf(lo), m.cdf(hi));
+                if !(0.0..=1.0).contains(&ca) || !(0.0..=1.0).contains(&cb) {
+                    return Err(format!("cdf out of range: {ca} {cb}"));
+                }
+                if cb < ca {
+                    return Err("cdf not monotone".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn larger_lambda_means_lower_entropy() {
+        // sharper peak at zero => easier to quantize (Remark 4.1)
+        let h1 = ExponentialModel::new(1.0).differential_entropy_bits();
+        let h2 = ExponentialModel::new(100.0).differential_entropy_bits();
+        assert!(h2 < h1);
+    }
+
+    #[test]
+    fn ks_accepts_own_samples() {
+        let mut rng = Rng::new(9);
+        let m = ExponentialModel::new(12.0);
+        let xs: Vec<f64> = (0..20_000).map(|_| m.sample(&mut rng)).collect();
+        assert!(m.ks_statistic(&xs) < 0.02);
+    }
+}

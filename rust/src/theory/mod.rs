@@ -1,0 +1,9 @@
+//! The paper's analytical core (§III–IV): exponential parameter-magnitude
+//! modeling, the quantization rate–distortion bounds, the Blahut–Arimoto
+//! numerical reference, and the Prop. 3.1 output-distortion propagation
+//! bound.
+
+pub mod blahut_arimoto;
+pub mod distortion;
+pub mod expdist;
+pub mod rate_distortion;

@@ -1,0 +1,217 @@
+//! Rate–distortion bounds for sign-preserving magnitude quantization
+//! (paper §IV, Props. 4.1 & 4.2) under the exponential source (eq. 3) and
+//! absolute-error distortion d(θ, θ̂) = |θ - θ̂|.
+//!
+//! Lower bound (Shannon-type, Prop. 4.1):
+//!   R(D) >= -log2(2 λ D)            D(R) >= 1 / (λ 2^{R+1})
+//! Upper bound (Laplacian test channel, Prop. 4.2):
+//!   R(D) <= log2( 1/(λD) + λD/(λD+1) )
+//!   D(R) <= (1/2λ) ( sqrt(1 + 4/(2^R - 1)) - 1 )
+//!
+//! Conventions: rates in bits/parameter; a total bit-width b̂ spends one
+//! bit on the sign, so the magnitude rate is R = b̂ - 1 — which is exactly
+//! why the paper's objective (P1) evaluates the bounds at b̂ - 1.
+
+/// Prop. 4.1: D^L(R) — optimistic distortion floor.
+pub fn d_lower(rate_bits: f64, lambda: f64) -> f64 {
+    assert!(lambda > 0.0);
+    1.0 / (lambda * 2f64.powf(rate_bits + 1.0))
+}
+
+/// Prop. 4.1: R^L(D).
+pub fn r_lower(d: f64, lambda: f64) -> f64 {
+    assert!(d > 0.0 && lambda > 0.0);
+    -(2.0 * lambda * d).log2()
+}
+
+/// Prop. 4.2: D^U(R) — conservative distortion estimate. Only defined for
+/// R > 0 (a zero-rate magnitude code carries no information); returns the
+/// source's E[Θ] = 1/λ at R <= 0, the distortion of reconstructing with 0.
+pub fn d_upper(rate_bits: f64, lambda: f64) -> f64 {
+    assert!(lambda > 0.0);
+    if rate_bits <= 0.0 {
+        return 1.0 / lambda;
+    }
+    let t = 4.0 / (2f64.powf(rate_bits) - 1.0);
+    ((1.0 + t).sqrt() - 1.0) / (2.0 * lambda)
+}
+
+/// Prop. 4.2: R^U(D).
+pub fn r_upper(d: f64, lambda: f64) -> f64 {
+    assert!(d > 0.0 && lambda > 0.0);
+    let ld = lambda * d;
+    (1.0 / ld + ld / (ld + 1.0)).log2()
+}
+
+/// Eq. (29): E[|Θ + Z|] for Θ ~ Exp(λ), Z ~ Laplace(E|Z| = d) independent.
+/// Used to cross-check Prop. 4.2's derivation numerically.
+pub fn e_abs_theta_plus_z(lambda: f64, d: f64) -> f64 {
+    1.0 / lambda + d * (lambda * d) / (lambda * d + 1.0)
+}
+
+/// The paper's (P1) objective: the bound gap at total bit-width b̂,
+/// D^U(b̂-1) - D^L(b̂-1). Minimizing it both pushes the conservative
+/// estimate down and certifies tightness.
+pub fn bound_gap(b_hat: f64, lambda: f64) -> f64 {
+    d_upper(b_hat - 1.0, lambda) - d_lower(b_hat - 1.0, lambda)
+}
+
+/// SCA surrogate pieces (§V-B, eq. 33/34): the linear lower bound of
+/// D^L(b̃-1) = 1/(λ 2^{b̃}) around b_k, and the resulting convex
+/// majorant ζ̄ of the objective.
+pub fn zeta_lower_linear(b_tilde: f64, b_k: f64, lambda: f64) -> f64 {
+    let base = 1.0 / (lambda * 2f64.powf(b_k));
+    base - (std::f64::consts::LN_2 * base) * (b_tilde - b_k)
+}
+
+pub fn zeta_bar(b_tilde: f64, b_k: f64, lambda: f64) -> f64 {
+    d_upper(b_tilde - 1.0, lambda) - zeta_lower_linear(b_tilde, b_k, lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lower_below_upper_everywhere() {
+        forall(
+            "D^L <= D^U",
+            500,
+            |r| (r.range(0.25, 16.0), r.range(0.05, 500.0)),
+            |&(rate, lam)| {
+                let (lo, hi) = (d_lower(rate, lam), d_upper(rate, lam));
+                if lo <= hi {
+                    Ok(())
+                } else {
+                    Err(format!("D^L {lo} > D^U {hi}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bounds_decrease_in_rate() {
+        forall(
+            "D(R) bounds monotone decreasing",
+            300,
+            |r| (r.range(0.1, 12.0), r.range(0.05, 3.0), r.range(0.1, 200.0)),
+            |&(rate, dr, lam)| {
+                if d_lower(rate + dr, lam) < d_lower(rate, lam)
+                    && d_upper(rate + dr, lam) <= d_upper(rate, lam)
+                {
+                    Ok(())
+                } else {
+                    Err("not monotone".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bounds_scale_inversely_with_lambda() {
+        // Remark 4.1: sharper weight concentration (larger λ) => less
+        // distortion at the same rate
+        forall(
+            "D ~ 1/lambda",
+            200,
+            |r| (r.range(0.5, 10.0), r.range(0.1, 100.0)),
+            |&(rate, lam)| {
+                let ratio_l = d_lower(rate, lam) / d_lower(rate, 2.0 * lam);
+                let ratio_u = d_upper(rate, lam) / d_upper(rate, 2.0 * lam);
+                if (ratio_l - 2.0).abs() < 1e-9 && (ratio_u - 2.0).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("ratios {ratio_l} {ratio_u}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn rate_and_distortion_forms_are_inverses() {
+        forall(
+            "R^L and D^L invert",
+            200,
+            |r| (r.range(0.5, 10.0), r.range(0.1, 100.0)),
+            |&(rate, lam)| {
+                let d = d_lower(rate, lam);
+                let back = r_lower(d, lam);
+                if (back - rate).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("{rate} -> {d} -> {back}"))
+                }
+            },
+        );
+        // R^U(D^U(R)) = R as well (the upper pair is derived by inversion)
+        forall(
+            "R^U and D^U invert",
+            200,
+            |r| (r.range(0.5, 10.0), r.range(0.1, 100.0)),
+            |&(rate, lam)| {
+                let d = d_upper(rate, lam);
+                let back = r_upper(d, lam);
+                if (back - rate).abs() < 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("{rate} -> {d} -> {back}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn e_abs_matches_monte_carlo() {
+        // eq. (29) against simulation
+        let mut rng = Rng::new(11);
+        let (lam, d) = (8.0, 0.05);
+        let n = 400_000;
+        let mc: f64 = (0..n)
+            .map(|_| (rng.exponential(lam) + rng.laplace(d)).abs())
+            .sum::<f64>()
+            / n as f64;
+        let closed = e_abs_theta_plus_z(lam, d);
+        assert!((mc - closed).abs() / closed < 0.01, "mc {mc} closed {closed}");
+    }
+
+    #[test]
+    fn shannon_lower_bound_equals_entropy_difference() {
+        // R^L(D) = h(Θ) - log2(2eD)  (Lemma 4.1 + 4.2)
+        let lam = 4.0;
+        let d = 0.03;
+        let h = crate::theory::expdist::ExponentialModel::new(lam)
+            .differential_entropy_bits();
+        let via_lemma = h - (2.0 * std::f64::consts::E * d).log2();
+        assert!((r_lower(d, lam) - via_lemma).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bound_gap_shrinks_with_bits() {
+        let lam = 20.0;
+        let gaps: Vec<f64> = (2..=8).map(|b| bound_gap(b as f64, lam)).collect();
+        assert!(gaps.windows(2).all(|w| w[1] < w[0]), "{gaps:?}");
+    }
+
+    #[test]
+    fn zeta_bar_majorizes_objective_and_is_tight_at_expansion_point() {
+        let lam = 15.0;
+        let b_k = 5.0;
+        // tight at b_k
+        let at_k = zeta_bar(b_k, b_k, lam);
+        assert!((at_k - bound_gap(b_k, lam)).abs() < 1e-12);
+        // majorizes elsewhere (eq. 34)
+        for b in [2.0, 3.0, 4.5, 6.0, 7.5, 10.0] {
+            assert!(
+                zeta_bar(b, b_k, lam) >= bound_gap(b, lam) - 1e-12,
+                "b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rate_upper_bound_is_source_mean() {
+        assert_eq!(d_upper(0.0, 4.0), 0.25);
+    }
+}

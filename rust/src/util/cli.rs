@@ -1,0 +1,166 @@
+//! Tiny CLI argument parser (clap stand-in): subcommands, `--key value`,
+//! `--key=value`, boolean flags, typed getters with defaults, and
+//! auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    spec: Vec<OptSpec>,
+}
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]). The first non-flag token
+    /// becomes the subcommand; later non-flag tokens are positional.
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(tokens: impl IntoIterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--flag value` unless next token is another flag
+                    match iter.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.flags.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            args.flags.insert(body.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Register an option for `usage()`; returns self for chaining.
+    pub fn describe(mut self, name: &str, help: &str, default: Option<&str>) -> Args {
+        self.spec.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(String::as_str) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+
+    /// Keys the user passed that were never described — catches typos.
+    pub fn unknown_keys(&self) -> Vec<&str> {
+        self.flags
+            .keys()
+            .filter(|k| !self.spec.iter().any(|s| &s.name == *k))
+            .map(String::as_str)
+            .collect()
+    }
+
+    pub fn usage(&self, program: &str, about: &str) -> String {
+        let mut out = format!("{program} — {about}\n\noptions:\n");
+        for s in &self.spec {
+            let def = s
+                .default
+                .as_deref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{:<24} {}{}\n", s.name, s.help, def));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = toks("serve extra1 extra2");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = toks("run --t0 3.5 --e0=2.0 --verbose");
+        assert_eq!(a.f64("t0", 0.0), 3.5);
+        assert_eq!(a.f64("e0", 0.0), 2.0);
+        assert!(a.bool("verbose", false));
+    }
+
+    #[test]
+    fn flag_before_another_flag_is_boolean() {
+        let a = toks("--fast --steps 10");
+        assert!(a.bool("fast", false));
+        assert_eq!(a.usize("steps", 0), 10);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = toks("serve");
+        assert_eq!(a.str("model", "blip2ish"), "blip2ish");
+        assert_eq!(a.usize("batch", 4), 4);
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let a = toks("--stpes 10").describe("steps", "step count", Some("100"));
+        assert_eq!(a.unknown_keys(), vec!["stpes"]);
+    }
+}

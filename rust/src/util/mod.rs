@@ -1,0 +1,9 @@
+//! Offline substrates: the pieces a networked build would pull from
+//! crates.io, implemented in-repo (DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;

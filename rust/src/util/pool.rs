@@ -1,0 +1,348 @@
+//! Thread-pool + bounded-queue pipeline runtime (tokio stand-in).
+//!
+//! Two primitives:
+//! * [`ThreadPool`] — fixed worker pool executing boxed jobs; `scope`-free,
+//!   jobs must be `'static`. Used for batch fan-out in benches and the PPO
+//!   rollout workers.
+//! * [`Pipeline`] stages connected by bounded channels with backpressure —
+//!   the coordinator's request path (router → batcher → agent → link →
+//!   edge) runs on this.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+// ---------------------------------------------------------------------------
+// bounded MPMC channel (Mutex + Condvar)
+// ---------------------------------------------------------------------------
+
+struct ChanInner<T> {
+    queue: Mutex<ChanState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct ChanState<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    senders: usize,
+}
+
+/// Sending half; cloneable. The channel closes when the last sender drops.
+pub struct Sender<T>(Arc<ChanInner<T>>);
+
+/// Receiving half; cloneable (MPMC).
+pub struct Receiver<T>(Arc<ChanInner<T>>);
+
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(ChanInner {
+        queue: Mutex::new(ChanState {
+            buf: VecDeque::new(),
+            cap: cap.max(1),
+            closed: false,
+            senders: 1,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (Sender(inner.clone()), Receiver(inner))
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.queue.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            st.closed = true;
+            drop(st);
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver(self.0.clone())
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+impl<T> Sender<T> {
+    /// Blocking send with backpressure; fails only if all receivers dropped
+    /// the channel via close().
+    pub fn send(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.0.queue.lock().unwrap();
+        while st.buf.len() >= st.cap && !st.closed {
+            st = self.0.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(Closed);
+        }
+        st.buf.push_back(item);
+        drop(st);
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` once the channel is closed **and** drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.0.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                drop(st);
+                self.0.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.0.queue.lock().unwrap();
+        let item = st.buf.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.0.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain everything currently queued without blocking.
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = self.0.queue.lock().unwrap();
+        let out: Vec<T> = st.buf.drain(..).collect();
+        if !out.is_empty() {
+            drop(st);
+            self.0.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Hard-close from the receiver side (consumers shutting down).
+    pub fn close(&self) {
+        let mut st = self.0.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.0.not_empty.notify_all();
+        self.0.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.queue.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread pool
+// ---------------------------------------------------------------------------
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        let (tx, rx) = bounded::<Job>(4 * n.max(1));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let pending = pending.clone();
+                std::thread::Builder::new()
+                    .name(format!("qaci-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                            let (lock, cv) = &*pending;
+                            let mut p = lock.lock().unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        *self.pending.0.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("pool accepting jobs");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Map a slice in parallel preserving order.
+    pub fn map<T, R>(&self, items: Vec<T>, f: impl Fn(T) -> R + Send + Sync + 'static) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+    {
+        let n = items.len();
+        let out = Arc::new(Mutex::new((0..n).map(|_| None).collect::<Vec<Option<R>>>()));
+        let f = Arc::new(f);
+        for (i, item) in items.into_iter().enumerate() {
+            let out = out.clone();
+            let f = f.clone();
+            self.execute(move || {
+                let r = f(item);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(out)
+            .ok()
+            .expect("all workers done")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("slot filled"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// How many workers to use by default.
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn channel_fifo_and_close() {
+        let (tx, rx) = bounded::<u32>(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<u32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_then_resumes() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let t = std::thread::spawn(move || tx.send(2).map(|_| 2).unwrap_or(0));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1)); // unblocks the sender
+        assert_eq!(t.join().unwrap(), 2);
+        assert_eq!(rx.recv(), Some(2));
+    }
+
+    #[test]
+    fn receiver_close_unblocks_sender() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let t = std::thread::spawn(move || tx.send(2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        rx.close();
+        assert_eq!(t.join().unwrap(), Err(Closed));
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..64).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn no_job_lost_under_contention() {
+        // conservation invariant used by the batcher tests too
+        let (tx, rx) = bounded::<u64>(3);
+        let seen = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let rx = rx.clone();
+                let seen = seen.clone();
+                std::thread::spawn(move || {
+                    while rx.recv().is_some() {
+                        seen.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for i in 0..250 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        drop(tx);
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(seen.load(Ordering::SeqCst), 1000);
+    }
+}

@@ -1,0 +1,180 @@
+//! Full-system integration: the co-inference coordinator end to end —
+//! router → batcher → quantized agent stage → WLAN → edge stage →
+//! telemetry — over real artifacts, single-threaded and pipelined.
+
+use qaci::coordinator::batcher::BatcherConfig;
+use qaci::coordinator::engine::{Engine, EngineConfig};
+use qaci::coordinator::router::{QosPolicy, Router};
+use qaci::coordinator::scheduler::{Algorithm, Scheduler};
+use qaci::coordinator::server::PipelinedServer;
+use qaci::data::eval::EvalSet;
+use qaci::data::vocab::Vocab;
+use qaci::data::workload::{generate, Arrival};
+use qaci::quant::Scheme;
+use qaci::runtime::executor::CoModel;
+use qaci::runtime::Registry;
+use qaci::system::channel::Channel;
+use qaci::system::Platform;
+
+fn registry() -> Option<Registry> {
+    let dir = qaci::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Registry::open(&dir).unwrap())
+}
+
+fn platform_for(model: &CoModel) -> Platform {
+    // paper silicon, this repo's measured workloads
+    Platform::paper_blip2().with_workload(model.agent_flops, model.server_flops)
+}
+
+#[test]
+fn engine_serves_workload_with_qos() {
+    let Some(reg) = registry() else { return };
+    let mut model = CoModel::load(&reg, "blip2ish").unwrap();
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco").unwrap();
+    let vocab = Vocab::from_manifest(&reg.manifest).unwrap();
+    let platform = platform_for(&model);
+    let lambda = model.agent_weights.lambda;
+
+    let scheduler = Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
+    let router = Router::new(QosPolicy::paper_default(), scheduler);
+    let requests = generate(24, eval.len(), Arrival::Poisson { lambda_rps: 50.0 }, 7);
+    let n_req = requests.len();
+
+    let mut engine = Engine::new(
+        &mut model,
+        router,
+        &vocab,
+        &eval,
+        Channel::wlan_5ghz(3),
+        EngineConfig { batcher: BatcherConfig { max_batch: 4, max_wait_s: 0.02 } },
+    );
+    let telemetry = engine.run(requests).unwrap();
+
+    // conservation: every routed request produced exactly one record
+    assert_eq!(telemetry.len() as u64 + telemetry.rejected, n_req as u64);
+    assert_eq!(telemetry.rejected, 0);
+    // the scheduler's plans must honor the simulated QoS for every record
+    assert_eq!(telemetry.qos_violations(), 0, "QoS violated in simulation");
+    // captions are real sentences from the model
+    assert!(telemetry.records.iter().all(|r| !r.caption.is_empty()));
+    // quality on the trained model should be well above noise
+    // mixed QoS classes => some requests run at low bit-widths, so the
+    // corpus score sits below the full-precision ceiling; random captions
+    // score < 5, so 20 is a comfortable "system works" floor
+    let cider = telemetry.cider_x100(&eval.refs);
+    assert!(cider > 20.0, "corpus CIDEr x100 too low: {cider}");
+    // all three classes present in rollups
+    assert!(!telemetry.by_class().is_empty());
+}
+
+#[test]
+fn pipelined_server_matches_engine_results() {
+    let Some(reg) = registry() else { return };
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco").unwrap();
+    let model = CoModel::load(&reg, "blip2ish").unwrap();
+    let platform = platform_for(&model);
+    let lambda = model.agent_weights.lambda;
+    drop(model);
+
+    let scheduler = Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
+    let mut server = PipelinedServer {
+        artifacts: reg.dir.clone(),
+        model_name: "blip2ish".into(),
+        router: Router::new(QosPolicy::paper_default(), scheduler),
+        batcher_cfg: BatcherConfig { max_batch: 4, max_wait_s: 0.02 },
+        queue_depth: 4,
+    };
+    let requests = generate(16, eval.len(), Arrival::Batch, 5);
+    let telemetry = server.run(requests, &eval).unwrap();
+
+    assert_eq!(telemetry.len(), 16);
+    assert_eq!(telemetry.qos_violations(), 0);
+    assert!(telemetry.records.iter().all(|r| !r.caption.is_empty()));
+    // determinism of content: the same requests through the single-thread
+    // engine produce the same captions (order may differ)
+    let Some(reg2) = registry() else { return };
+    let mut model = CoModel::load(&reg2, "blip2ish").unwrap();
+    let vocab = Vocab::from_manifest(&reg2.manifest).unwrap();
+    let scheduler = Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
+    let mut engine = Engine::new(
+        &mut model,
+        Router::new(QosPolicy::paper_default(), scheduler),
+        &vocab,
+        &eval,
+        Channel::wlan_5ghz(3),
+        EngineConfig { batcher: BatcherConfig { max_batch: 4, max_wait_s: 0.02 } },
+    );
+    let t2 = engine.run(generate(16, eval.len(), Arrival::Batch, 5)).unwrap();
+    let mut a: Vec<(u64, String)> = telemetry
+        .records
+        .iter()
+        .map(|r| (r.id, r.caption.clone()))
+        .collect();
+    let mut b: Vec<(u64, String)> =
+        t2.records.iter().map(|r| (r.id, r.caption.clone())).collect();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b, "pipelined and single-thread captions diverge");
+}
+
+#[test]
+fn lower_bit_budget_lowers_quality_but_saves_energy() {
+    // squeeze the energy budget: the scheduler must pick fewer bits; the
+    // corpus quality must drop; the simulated energy must drop too —
+    // the paper's central trade-off, end to end through real inference
+    let Some(reg) = registry() else { return };
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco").unwrap();
+    let vocab = Vocab::from_manifest(&reg.manifest).unwrap();
+
+    // budgets that actually bind on this platform: anchor on the
+    // minimum-energy plans at 6 and 16 bits under a fixed delay budget
+    let probe = CoModel::load(&reg, "blip2ish").unwrap();
+    let platform_probe = platform_for(&probe);
+    let t0 = 1.2 * platform_probe.min_delay(16.0);
+    let prob = qaci::opt::Problem::new(
+        platform_probe, probe.agent_weights.lambda, t0, 1e9);
+    let e_tight = prob.plan_frequencies(6.0).unwrap().energy * 1.05;
+    let e_loose = prob.plan_frequencies(16.0).unwrap().energy * 1.50;
+    assert!(e_loose > e_tight);
+    drop(probe);
+
+    let mut run_with_budget = |e0: f64| -> (f64, f64, f64) {
+        let mut model = CoModel::load(&reg, "blip2ish").unwrap();
+        let platform = platform_for(&model);
+        let lambda = model.agent_weights.lambda;
+        let scheduler =
+            Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
+        let router = Router::new(QosPolicy::uniform(t0, e0), scheduler);
+        let mut engine = Engine::new(
+            &mut model,
+            router,
+            &vocab,
+            &eval,
+            Channel::ideal(),
+            EngineConfig::default(),
+        );
+        let t = engine.run(generate(20, eval.len(), Arrival::Batch, 11)).unwrap();
+        assert_eq!(t.qos_violations(), 0);
+        let bits =
+            t.records.iter().map(|r| r.b_hat as f64).sum::<f64>() / t.len() as f64;
+        (t.cider_x100(&eval.refs), t.total_energy_j() / t.len() as f64, bits)
+    };
+    let (cider_tight, energy_tight, bits_tight) = run_with_budget(e_tight);
+    let (cider_loose, energy_loose, bits_loose) = run_with_budget(e_loose);
+    assert!(
+        bits_loose > bits_tight,
+        "loose budget should afford more bits: {bits_tight} vs {bits_loose}"
+    );
+    assert!(
+        cider_loose > cider_tight,
+        "quality should improve with budget: {cider_tight} vs {cider_loose}"
+    );
+    assert!(
+        energy_loose > energy_tight,
+        "energy should grow with budget: {energy_tight} vs {energy_loose}"
+    );
+}

@@ -1,0 +1,162 @@
+//! Optimizer integration: the four design algorithms compared head-to-head
+//! across platforms and budget regimes — the backbone of Figs. 5–8.
+
+use qaci::opt::{bisection, feasible_random, fixed_freq, sca, Problem};
+use qaci::rl::env::BudgetRanges;
+use qaci::rl::{DesignEnv, Ppo, PpoConfig};
+use qaci::system::Platform;
+use qaci::util::rng::Rng;
+
+const LAMBDA: f64 = 15.0;
+
+fn budgets() -> Vec<(f64, f64)> {
+    vec![(2.5, 2.0), (3.0, 2.0), (3.5, 2.0), (4.0, 2.0), (3.5, 1.0), (3.5, 3.0)]
+}
+
+/// The paper's headline ordering: proposed >= every baseline, on every
+/// budget, on both platforms (in objective terms; CIDEr follows in the
+/// benches).
+#[test]
+fn proposed_dominates_baselines_in_objective() {
+    for platform in [Platform::paper_blip2(), Platform::paper_git()] {
+        for (t0, e0) in budgets() {
+            let prob = Problem::new(platform, LAMBDA, t0, e0);
+            let Some(proposed) = sca::solve(&prob, sca::ScaOptions::default()) else {
+                continue;
+            };
+            let obj_proposed = prob.objective(proposed.design.b_hat as f64);
+
+            if let Some(ff) = fixed_freq::solve(&prob) {
+                assert!(
+                    obj_proposed <= prob.objective(ff.b_hat as f64) + 1e-12,
+                    "fixed-freq beat proposed at ({t0},{e0})"
+                );
+            }
+            if let Some(mean) = feasible_random::mean_objective(&prob, 400, 42) {
+                assert!(
+                    obj_proposed <= mean + 1e-12,
+                    "feasible-random mean beat proposed at ({t0},{e0})"
+                );
+            }
+        }
+    }
+}
+
+/// SCA tracks the exact optimum across the full budget grid.
+#[test]
+fn sca_tracks_exact_across_grid() {
+    let mut worse = 0;
+    let mut total = 0;
+    for (t0, e0) in budgets() {
+        let prob = Problem::new(Platform::paper_blip2(), LAMBDA, t0, e0);
+        let (Some(s), Some(e)) =
+            (sca::solve(&prob, sca::ScaOptions::default()), bisection::solve(&prob))
+        else {
+            continue;
+        };
+        total += 1;
+        if s.design.b_hat < e.design.b_hat {
+            worse += 1;
+            assert!(
+                e.design.b_hat - s.design.b_hat <= 1,
+                "SCA lost >1 bit at ({t0},{e0})"
+            );
+        }
+        assert!(s.design.b_hat <= e.design.b_hat, "SCA above exact?!");
+    }
+    assert!(total >= 5);
+    assert!(worse <= total / 2, "SCA suboptimal too often: {worse}/{total}");
+}
+
+/// A trained PPO policy must beat an untrained one, and land within the
+/// feasible region after projection — but (the paper's point) it does not
+/// consistently match the proposed design.
+#[test]
+fn ppo_learns_but_does_not_dominate_proposed() {
+    let platform = Platform::paper_blip2();
+    let env = DesignEnv::new(platform, LAMBDA, BudgetRanges::default());
+    let mut rng = Rng::new(3);
+    let cfg = PpoConfig { iterations: 50, batch: 192, ..PpoConfig::default() };
+    let untrained = Ppo::new(env.clone(), cfg, &mut rng);
+    let mut trained = Ppo::new(env.clone(), cfg, &mut rng);
+    trained.train(&mut rng);
+
+    let mut eval_reward = |ppo: &Ppo, seed: u64| -> f64 {
+        let mut r = Rng::new(seed);
+        let mut total = 0.0;
+        for _ in 0..200 {
+            let p = env.sample_context(&mut r);
+            let d = ppo.solve(&p);
+            total += env.reward(&p, &d);
+        }
+        total / 200.0
+    };
+    let r_untrained = eval_reward(&untrained, 9);
+    let r_trained = eval_reward(&trained, 9);
+    assert!(
+        r_trained > r_untrained + 0.05,
+        "PPO did not learn: {r_untrained} -> {r_trained}"
+    );
+
+    // and the proposed design still wins on average objective
+    let mut r = Rng::new(10);
+    let mut ppo_obj = 0.0;
+    let mut prop_obj = 0.0;
+    let mut n = 0;
+    for _ in 0..100 {
+        let p = env.sample_context(&mut r);
+        let (Some(pd), Some(sd)) =
+            (trained.solve_projected(&p), bisection::solve(&p))
+        else {
+            continue;
+        };
+        ppo_obj += p.objective(pd.b_hat as f64);
+        prop_obj += p.objective(sd.design.b_hat as f64);
+        n += 1;
+    }
+    assert!(n > 50);
+    assert!(
+        prop_obj <= ppo_obj + 1e-9,
+        "proposed {prop_obj} should be <= ppo {ppo_obj} over {n} contexts"
+    );
+}
+
+/// Budget monotonicity of the whole pipeline: loosening either budget
+/// never reduces the chosen bit-width (the Figs. 5-8 x-axis trend).
+#[test]
+fn bitwidth_monotone_in_budgets() {
+    let t0s = [2.2, 2.6, 3.0, 3.4, 3.8, 4.2];
+    let mut prev = 0u32;
+    for t0 in t0s {
+        let prob = Problem::new(Platform::paper_blip2(), LAMBDA, t0, 2.0);
+        if let Some(r) = bisection::solve(&prob) {
+            assert!(r.design.b_hat >= prev, "t0={t0}");
+            prev = r.design.b_hat;
+        }
+    }
+    let e0s = [0.6, 1.0, 1.4, 1.8, 2.2, 2.6];
+    let mut prev = 0u32;
+    for e0 in e0s {
+        let prob = Problem::new(Platform::paper_blip2(), LAMBDA, 3.5, e0);
+        if let Some(r) = bisection::solve(&prob) {
+            assert!(r.design.b_hat >= prev, "e0={e0}");
+            prev = r.design.b_hat;
+        }
+    }
+}
+
+/// The convex subproblem machinery agrees with the closed-form frequency
+/// planner on the continuous relaxation (CVX-replacement regression test).
+#[test]
+fn sca_trace_converges() {
+    let prob = Problem::new(Platform::paper_blip2(), LAMBDA, 3.5, 2.0);
+    let r = sca::solve(&prob, sca::ScaOptions { max_iters: 40, tol: 1e-9 }).unwrap();
+    // monotone non-increasing trace, final plateau
+    for w in r.trace.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9);
+    }
+    let n = r.trace.len();
+    if n >= 3 {
+        assert!((r.trace[n - 1] - r.trace[n - 2]).abs() < 1e-3);
+    }
+}

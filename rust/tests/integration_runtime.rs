@@ -1,0 +1,210 @@
+//! Runtime integration: artifacts load, compile, and reproduce the golden
+//! vectors python recorded at AOT time — proving the HLO-text interchange
+//! and the Rust quantizer/weight plumbing are numerically faithful.
+
+use qaci::data::eval::EvalSet;
+use qaci::data::vocab::Vocab;
+use qaci::metrics::stats;
+use qaci::quant::{self, Scheme};
+use qaci::runtime::executor::{CoModel, Fcdnn, QuantKernel};
+use qaci::runtime::Registry;
+use qaci::util::json::Json;
+
+fn registry() -> Option<Registry> {
+    let dir = qaci::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Registry::open(&dir).expect("open registry"))
+}
+
+fn read_bin(reg: &Registry, name: &str) -> Vec<f32> {
+    std::fs::read(reg.dir.join(name))
+        .expect("golden bin")
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[test]
+fn golden_end_to_end_blip2ish_and_gitish() {
+    let Some(reg) = registry() else { return };
+    let golden = reg.golden().expect("golden.json");
+    let vocab = Vocab::from_manifest(&reg.manifest).unwrap();
+
+    for (model_name, eval_name) in [("blip2ish", "coco"), ("gitish", "vatex")] {
+        let mut model = CoModel::load(&reg, model_name).expect("load model");
+        let eval = EvalSet::load(&reg.dir, &reg.manifest, eval_name).unwrap();
+        // golden vectors were produced on eval sample 0 at full precision
+        let emb = model
+            .encode(eval.sample(0), 1, 32, Scheme::Uniform)
+            .expect("encode");
+        let g = golden.get(model_name).expect("golden entry");
+        let want_l1 = g.get("emb_l1").and_then(Json::as_f64).unwrap();
+        let got_l1 = stats::l1(&emb);
+        assert!(
+            (got_l1 - want_l1).abs() / want_l1 < 1e-4,
+            "{model_name} emb L1: got {got_l1} want {want_l1}"
+        );
+        let first8 = g.get("emb_first8").and_then(Json::as_arr).unwrap();
+        for (i, w) in first8.iter().enumerate() {
+            let want = w.as_f64().unwrap() as f32;
+            assert!(
+                (emb[i] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "{model_name} emb[{i}]: {} vs {}",
+                emb[i],
+                want
+            );
+        }
+        // greedy decode must match token-for-token
+        let tokens = model.decode(&emb, 1).expect("decode");
+        let want_tokens: Vec<i32> = g
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(tokens[0], want_tokens, "{model_name} token mismatch");
+        let caption = vocab.detokenize(&tokens[0]);
+        let want_caption = g.get("caption").and_then(Json::as_str).unwrap();
+        assert_eq!(caption, want_caption, "{model_name} caption mismatch");
+    }
+}
+
+#[test]
+fn golden_fcdnn_forward() {
+    let Some(reg) = registry() else { return };
+    let golden = reg.golden().unwrap();
+    let g = golden.get("fcdnn16").unwrap();
+    let x = read_bin(&reg, g.get("input").and_then(Json::as_str).unwrap());
+    let mut fcdnn = Fcdnn::load(&reg).expect("load fcdnn");
+    let y = fcdnn.forward(&x).expect("forward");
+    let want_l1 = g.get("out_l1").and_then(Json::as_f64).unwrap();
+    let got_l1 = stats::l1(&y);
+    assert!(
+        (got_l1 - want_l1).abs() / want_l1 < 1e-4,
+        "fcdnn L1 {got_l1} vs {want_l1}"
+    );
+    let first8 = g.get("out_first8").and_then(Json::as_arr).unwrap();
+    for (i, w) in first8.iter().enumerate() {
+        let want = w.as_f64().unwrap() as f32;
+        assert!((y[i] - want).abs() < 1e-3 * (1.0 + want.abs()), "y[{i}]");
+    }
+}
+
+/// The Rust quantizers and the Pallas fake-quant kernels (through PJRT)
+/// must agree elementwise — one grid, two implementations.
+#[test]
+fn rust_quantizer_matches_pallas_kernel_through_pjrt() {
+    let Some(reg) = registry() else { return };
+    let golden = reg.golden().unwrap();
+    let g = golden.get("quant").unwrap();
+    let buf = read_bin(&reg, g.get("input").and_then(Json::as_str).unwrap());
+    let kernel = QuantKernel::load(&reg).expect("quant kernel");
+    assert_eq!(buf.len(), kernel.buf_len());
+
+    // uniform @ step recorded in golden
+    let step = g.get("uniform_step").and_then(Json::as_f64).unwrap() as f32;
+    let xla_q = kernel.uniform(&buf, step).expect("xla uniform");
+    let rust_q = quant::quantize_uniform(&buf, step);
+    let mismatches = xla_q.iter().zip(&rust_q).filter(|(a, b)| a != b).count();
+    // identical f32 ops; allow a vanishing number of half-way rounding
+    // disagreements
+    assert!(
+        mismatches * 100_000 < buf.len(),
+        "uniform: {mismatches}/{} mismatches",
+        buf.len()
+    );
+    let want_l1 = g.get("uniform_l1").and_then(Json::as_f64).unwrap();
+    assert!((stats::l1(&xla_q) - want_l1).abs() / want_l1 < 1e-5);
+
+    // pot @ recorded exponent range
+    let emin = g.get("pot_emin").and_then(Json::as_f64).unwrap() as f32;
+    let emax = g.get("pot_emax").and_then(Json::as_f64).unwrap() as f32;
+    let xla_p = kernel.pot(&buf, emin, emax).expect("xla pot");
+    let rust_p = quant::quantize_pot(&buf, emin, emax);
+    let mismatches = xla_p.iter().zip(&rust_p).filter(|(a, b)| a != b).count();
+    assert!(
+        mismatches * 100_000 < buf.len(),
+        "pot: {mismatches}/{} mismatches",
+        buf.len()
+    );
+    let want_l1 = g.get("pot_l1").and_then(Json::as_f64).unwrap();
+    assert!((stats::l1(&xla_p) - want_l1).abs() / want_l1 < 1e-5);
+}
+
+#[test]
+fn quantized_weights_cache_and_batching() {
+    let Some(reg) = registry() else { return };
+    let mut model = CoModel::load(&reg, "blip2ish").unwrap();
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco").unwrap();
+
+    // batched encode == per-sample encode (weights identical, batch exe)
+    let n = 5; // forces a b4 chunk + a b1 chunk
+    let mut inputs = Vec::new();
+    for i in 0..n {
+        inputs.extend_from_slice(eval.sample(i));
+    }
+    let batched = model.encode(&inputs, n, 6, Scheme::Uniform).unwrap();
+    for i in 0..n {
+        let single = model.encode(eval.sample(i), 1, 6, Scheme::Uniform).unwrap();
+        let off = i * model.dims.emb_len();
+        for (j, s) in single.iter().enumerate() {
+            let b = batched[off + j];
+            assert!(
+                (b - s).abs() < 1e-4 * (1.0 + s.abs()),
+                "sample {i} elem {j}: batched {b} vs single {s}"
+            );
+        }
+    }
+    // quantization cache holds the 6-bit entry
+    assert!(model.agent_weights.cached_points() >= 1);
+}
+
+#[test]
+fn manifest_lambda_matches_rust_fit() {
+    let Some(reg) = registry() else { return };
+    let model = CoModel::load(&reg, "blip2ish").unwrap();
+    // python fit excluded layernorm params; the rust blob fit includes
+    // them — agreement within 2x is enough (λ enters the bounds
+    // multiplicatively and both fits are reported in benches)
+    let rust_fit = qaci::theory::expdist::ExponentialModel::fit_weights(
+        &model.agent_weights.blob,
+    );
+    let ratio = rust_fit.lambda / model.agent_weights.lambda;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "rust {} vs manifest {}",
+        rust_fit.lambda,
+        model.agent_weights.lambda
+    );
+}
+
+#[test]
+fn caption_quality_degrades_monotonically_ish_with_bits() {
+    // the quality-bitwidth curve the whole paper rides on: full precision
+    // must beat 2-bit quantization on corpus CIDEr
+    let Some(reg) = registry() else { return };
+    let mut model = CoModel::load(&reg, "blip2ish").unwrap();
+    let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco").unwrap();
+    let vocab = Vocab::from_manifest(&reg.manifest).unwrap();
+    let scorer = qaci::metrics::cider::CiderScorer::new(&eval.refs);
+    let n = 16usize;
+    let mut score_at = |bits: u32| -> f64 {
+        let mut total = 0.0;
+        for i in 0..n {
+            let toks = model.infer(eval.sample(i), 1, bits, Scheme::Uniform).unwrap();
+            total += scorer.score_one(i, &vocab.detokenize(&toks[0]));
+        }
+        total / n as f64
+    };
+    let full = score_at(32);
+    let low = score_at(2);
+    assert!(
+        full > low + 0.5,
+        "expected clear quality gap: full {full} vs 2-bit {low}"
+    );
+    assert!(full > 3.0, "trained model should caption well, got {full}");
+}

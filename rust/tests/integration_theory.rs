@@ -1,0 +1,187 @@
+//! Theory-vs-reality integration: the analytical machinery of §III–IV
+//! checked against the *actual trained weights* shipped in artifacts, and
+//! against real quantizers on synthetic exponential sources.
+
+use qaci::quant::{self, Scheme};
+use qaci::theory::blahut_arimoto::BlahutArimoto;
+use qaci::theory::distortion;
+use qaci::theory::expdist::ExponentialModel;
+use qaci::theory::rate_distortion as rd;
+use qaci::util::rng::Rng;
+
+/// D^L <= D_BA <= D^U on a dense rate range (the Fig. 4 sandwich), for
+/// several λ including the fitted values of the shipped models (~15).
+#[test]
+fn ba_sandwich_across_lambdas() {
+    for lambda in [2.0, 15.0, 60.0] {
+        // finer grid => more sweep points clear the discretization guard
+        // (the guard excludes D within ~8 bins, where the discrete source's
+        // D(R) legitimately dips below the continuous Shannon bound)
+        let bins = 800;
+        let ba = BlahutArimoto::exponential(lambda, bins, 12.0);
+        let pts = ba.sweep(&BlahutArimoto::default_slopes(lambda), 300, 1e-8);
+        let bin = 12.0 / lambda / bins as f64;
+        let mut checked = 0;
+        for p in pts.iter().filter(|p| p.rate_bits > 0.4 && p.distortion > 8.0 * bin) {
+            assert!(p.distortion >= rd::d_lower(p.rate_bits, lambda) * 0.95,
+                    "λ={lambda} R={} D={}", p.rate_bits, p.distortion);
+            assert!(p.distortion <= rd::d_upper(p.rate_bits, lambda) * 1.02,
+                    "λ={lambda} R={} D={}", p.rate_bits, p.distortion);
+            checked += 1;
+        }
+        assert!(checked >= 4, "λ={lambda}: only {checked} points in range");
+    }
+}
+
+/// Real scalar quantizers on an exponential source live inside the
+/// theory's predicted band (above the Shannon floor; within a small
+/// constant of the upper bound at moderate rates).
+#[test]
+fn real_quantizers_inside_predicted_band() {
+    let mut rng = Rng::new(77);
+    let lambda = 15.0;
+    let w: Vec<f32> = (0..300_000)
+        .map(|_| {
+            let sign = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+            (sign * rng.exponential(lambda)) as f32
+        })
+        .collect();
+    for bits in 3..=9u32 {
+        let rate = (bits - 1) as f64;
+        let q = quant::quantize_magnitudes(&w, bits, Scheme::Uniform);
+        let d = quant::mean_abs_distortion(&w, &q);
+        assert!(d >= rd::d_lower(rate, lambda) * 0.9, "bits={bits} d={d}");
+        assert!(d <= rd::d_upper(rate, lambda) * 4.0, "bits={bits} d={d}");
+    }
+}
+
+/// Prop 3.1 + surrogate: for a real FC net under both quantizers, the
+/// measured output distortion obeys the layered bound and tightens with
+/// bit-width (the Fig. 3 phenomenon).
+#[test]
+fn fig3_shape_on_synthetic_fc_net() {
+    let mut rng = Rng::new(5);
+    let dims = [16usize, 32, 32, 8];
+    let net: Vec<distortion::LayerMatrix> = dims
+        .windows(2)
+        .map(|w| {
+            distortion::LayerMatrix::new(
+                w[1],
+                w[0],
+                (0..w[0] * w[1]).map(|_| 0.25 * rng.normal() as f32).collect(),
+            )
+        })
+        .collect();
+    // normalized probe inputs
+    let probes: Vec<Vec<f64>> = (0..8)
+        .map(|_| {
+            let mut x: Vec<f64> = (0..dims[0]).map(|_| rng.normal()).collect();
+            let n: f64 = x.iter().map(|v| v.abs()).sum();
+            x.iter_mut().for_each(|v| *v /= n);
+            x
+        })
+        .collect();
+    for scheme in [Scheme::Uniform, Scheme::Pot] {
+        let mut prev_gap = f64::INFINITY;
+        for bits in [2u32, 3, 4, 6, 8] {
+            let qnet: Vec<distortion::LayerMatrix> = net
+                .iter()
+                .map(|m| {
+                    distortion::LayerMatrix::new(
+                        m.rows,
+                        m.cols,
+                        quant::quantize_magnitudes(&m.data, bits, scheme),
+                    )
+                })
+                .collect();
+            let bound = distortion::output_distortion_bound(&net, &qnet);
+            let mut worst = 0.0f64;
+            for x in &probes {
+                let y = distortion::fc_forward(&net, x);
+                let yq = distortion::fc_forward(&qnet, x);
+                let d: f64 = y.iter().zip(&yq).map(|(a, b)| (a - b).abs()).sum();
+                worst = worst.max(d);
+            }
+            assert!(worst <= bound + 1e-9, "{scheme:?}@{bits}: {worst} > {bound}");
+            // the bound/measurement gap narrows as bits grow (Fig. 3)
+            if bits >= 3 && bound > 0.0 {
+                let gap = bound - worst;
+                assert!(gap <= prev_gap * 1.5, "{scheme:?}@{bits} gap widened");
+                prev_gap = gap;
+            }
+        }
+    }
+}
+
+/// λ fitting on magnitudes from a *mixture* (like real model weights)
+/// still produces a usable model: the KS statistic quantifies the misfit
+/// and stays below the level where Fig. 2's visual fit would fail.
+#[test]
+fn lambda_fit_on_mixture_weights() {
+    let mut rng = Rng::new(9);
+    // half small normals, half wide normals — a crude trained-weight blob
+    let mags: Vec<f64> = (0..100_000)
+        .map(|i| {
+            if i % 2 == 0 {
+                (0.02 * rng.normal()).abs()
+            } else {
+                (0.08 * rng.normal()).abs()
+            }
+        })
+        .collect();
+    let m = ExponentialModel::fit(mags.iter().copied());
+    assert!(m.lambda > 1.0);
+    let ks = m.ks_statistic(&mags);
+    assert!(ks < 0.25, "KS {ks} too large for a usable exponential fit");
+}
+
+/// Remark 3.2's empirical H: output distortion of the FC net is linearly
+/// bounded by the surrogate parameter distortion, and the estimated H
+/// bounds unseen bit-widths too.
+#[test]
+fn empirical_h_generalizes_across_bitwidths() {
+    let mut rng = Rng::new(11);
+    let dims = [12usize, 24, 12, 6];
+    let net: Vec<distortion::LayerMatrix> = dims
+        .windows(2)
+        .map(|w| {
+            distortion::LayerMatrix::new(
+                w[1],
+                w[0],
+                (0..w[0] * w[1]).map(|_| 0.3 * rng.normal() as f32).collect(),
+            )
+        })
+        .collect();
+    let mut x: Vec<f64> = (0..dims[0]).map(|_| rng.normal()).collect();
+    let n: f64 = x.iter().map(|v| v.abs()).sum();
+    x.iter_mut().for_each(|v| *v /= n);
+
+    let measure = |bits: u32| -> (f64, f64) {
+        let qnet: Vec<distortion::LayerMatrix> = net
+            .iter()
+            .map(|m| {
+                distortion::LayerMatrix::new(
+                    m.rows,
+                    m.cols,
+                    quant::quantize_magnitudes(&m.data, bits, Scheme::Uniform),
+                )
+            })
+            .collect();
+        let param = distortion::surrogate_l1(&net, &qnet);
+        let y = distortion::fc_forward(&net, &x);
+        let yq = distortion::fc_forward(&qnet, &x);
+        let out: f64 = y.iter().zip(&yq).map(|(a, b)| (a - b).abs()).sum();
+        (param, out)
+    };
+    // estimate H on even bit-widths, verify on odd ones
+    let train: Vec<(f64, f64)> = [2u32, 4, 6, 8].iter().map(|&b| measure(b)).collect();
+    let h = distortion::empirical_h(&train);
+    assert!(h > 0.0);
+    for bits in [3u32, 5, 7] {
+        let (param, out) = measure(bits);
+        assert!(
+            out <= h * param * 1.3 + 1e-9,
+            "H={h} fails at {bits} bits: out {out} vs param {param}"
+        );
+    }
+}
