@@ -1,0 +1,86 @@
+//! §Fleet — fleet-scale sweep: distortion / latency / energy and
+//! allocator throughput vs. fleet size N ∈ {1, 2, 4, …, 64}, for the
+//! proposed joint multi-agent design against the equal-share and
+//! feasible-random baselines. Artifact-free (analytic serving loop).
+//!
+//! Acceptance property checked inline: the proposed allocator never loses
+//! to the equal split, and strictly beats it on fleet-weighted distortion
+//! for every contended size N ≥ 4.
+
+use qaci::bench_harness::{scaled, Table};
+use qaci::coordinator::batcher::BatcherConfig;
+use qaci::data::workload::Arrival;
+use qaci::fleet::{sim, FleetSimConfig};
+use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem};
+use qaci::system::Platform;
+use qaci::util::timer::Stopwatch;
+
+fn main() {
+    let mut t = Table::new(
+        "fleet scale: N agents on one edge server + one medium (mixed QoS fleet)",
+        &["N", "algorithm", "admitted", "wgt gap", "wgt D^U", "e2e p50 [s]",
+          "e2e p95 [s]", "E/req [J]", "alloc [ms]", "plans/s"],
+    );
+    for n in [1usize, 2, 4, 8, 16, 32, 64] {
+        let fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n));
+        let mut objective = [0.0f64; 3];
+        let mut d_upper = [0.0f64; 3];
+        for (k, algorithm) in FleetAlgorithm::ALL.into_iter().enumerate() {
+            let sw = Stopwatch::start();
+            let alloc = fleet::solve(&fp, algorithm, 42);
+            let alloc_s = sw.elapsed_s().max(1e-9);
+            objective[k] = alloc.objective;
+            d_upper[k] = alloc.weighted_d_upper(&fp);
+            let report = sim::run(
+                &fp,
+                &alloc,
+                &FleetSimConfig {
+                    requests_per_agent: scaled(16),
+                    arrival: Arrival::Poisson { lambda_rps: 2.0 },
+                    seed: 1,
+                    batcher: BatcherConfig::default(),
+                },
+            );
+            let (p50, p95, epr) = if report.served > 0 {
+                (
+                    format!("{:.3}", report.e2e_s.p50()),
+                    format!("{:.3}", report.e2e_s.p95()),
+                    format!("{:.3}", report.total_energy_j / report.served as f64),
+                )
+            } else {
+                ("--".into(), "--".into(), "--".into())
+            };
+            t.row(&[
+                format!("{n}"),
+                algorithm.name().to_string(),
+                format!("{}/{}", alloc.admitted, n),
+                format!("{:.3e}", alloc.objective),
+                format!("{:.3e}", d_upper[k]),
+                p50,
+                p95,
+                epr,
+                format!("{:.2}", alloc_s * 1e3),
+                format!("{:.0}", n as f64 / alloc_s),
+            ]);
+        }
+        let (proposed, equal) = (objective[0], objective[1]);
+        assert!(
+            proposed <= equal + 1e-15,
+            "N={n}: proposed {proposed} worse than equal-share {equal}"
+        );
+        if n >= 4 {
+            assert!(
+                proposed < equal * 0.999,
+                "N={n}: proposed {proposed} does not strictly beat equal-share {equal}"
+            );
+            assert!(
+                d_upper[0] < d_upper[1],
+                "N={n}: weighted D^U {} not below equal-share {}",
+                d_upper[0],
+                d_upper[1]
+            );
+        }
+    }
+    t.print();
+    println!("\nOK: proposed <= equal-share everywhere, strictly better for N >= 4");
+}

@@ -1,5 +1,6 @@
 //! CLI command implementations (see `main.rs` for the synopsis).
 
+use qaci::bench_harness::Table;
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::coordinator::engine::{Engine, EngineConfig};
 use qaci::coordinator::router::{QosPolicy, Router};
@@ -8,6 +9,8 @@ use qaci::coordinator::server::PipelinedServer;
 use qaci::data::eval::EvalSet;
 use qaci::data::vocab::Vocab;
 use qaci::data::workload::{generate, Arrival};
+use qaci::fleet::{sim as fleet_sim, FleetSimConfig};
+use qaci::opt::fleet::{self as fleet_opt, AgentSpec, FleetAlgorithm, FleetProblem};
 use qaci::opt::{bisection, sca, Problem};
 use qaci::quant::Scheme;
 use qaci::rl::env::BudgetRanges;
@@ -18,18 +21,21 @@ use qaci::system::Platform;
 use qaci::theory::expdist::ExponentialModel;
 use qaci::util::cli::Args;
 use qaci::util::json::Json;
+use qaci::util::timer::Stopwatch;
 
 pub fn main() {
     let args = Args::parse_env()
         .describe("t0", "delay budget [s]", Some("3.5"))
         .describe("e0", "energy budget [J]", Some("2.0"))
         .describe("model", "blip2ish | gitish", Some("blip2ish"))
-        .describe("algorithm", "proposed|exact|ppo|fixed-freq|random", Some("proposed"))
+        .describe("algorithm", "proposed|exact|ppo|fixed-freq|random (fleet: proposed|equal|random)", Some("proposed"))
         .describe("scheme", "uniform | pot", Some("uniform"))
-        .describe("requests", "number of requests", Some("32"))
-        .describe("rps", "Poisson arrival rate", Some("20"))
+        .describe("requests", "number of requests (fleet: per agent, default 16)", Some("32"))
+        .describe("rps", "Poisson arrival rate (fleet default 2)", Some("20"))
         .describe("seed", "rng seed", Some("0"))
-        .describe("paper-platform", "use paper FLOPs instead of measured", None);
+        .describe("paper-platform", "use paper FLOPs instead of measured", None)
+        .describe("agents", "fleet size N (fleet subcommand)", Some("8"))
+        .describe("rate-mbps", "shared uplink goodput (fleet)", Some("400"));
     let unknown = args.unknown_keys();
     if !unknown.is_empty() {
         eprintln!("unknown flags: {unknown:?}");
@@ -40,6 +46,7 @@ pub fn main() {
         Some("plan") => cmd_plan(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("fit") => cmd_fit(&args),
         _ => {
             print!(
@@ -47,7 +54,7 @@ pub fn main() {
                 args.usage(
                     "qaci",
                     "quantization-aware collaborative inference \
-                     (subcommands: info, plan, eval, serve, fit)"
+                     (subcommands: info, plan, eval, serve, fleet, fit)"
                 )
             );
             0
@@ -282,6 +289,98 @@ fn cmd_serve(args: &Args) -> i32 {
             eprintln!("error: {e:#}");
             1
         }
+    }
+}
+
+/// Fleet-scale co-inference: joint multi-agent allocation + serving-loop
+/// simulation. Artifact-free (analytic models only), so it runs anywhere.
+fn cmd_fleet(args: &Args) -> i32 {
+    let n = args.usize("agents", 8).max(1);
+    let algorithm = FleetAlgorithm::parse(&args.str("algorithm", "proposed"))
+        .unwrap_or(FleetAlgorithm::Proposed);
+    let seed = args.usize("seed", 0) as u64;
+    let fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
+        .with_link(args.f64("rate-mbps", 400.0) * 1e6, 2e-3);
+    println!(
+        "fleet: N={n} agents, shared server f̃^max={:.1} GHz, shared uplink {:.0} Mbps, \
+         algorithm={}",
+        fp.base.server.f_max / 1e9,
+        fp.link_rate_bps / 1e6,
+        algorithm.name()
+    );
+
+    let sw = Stopwatch::start();
+    let alloc = fleet_opt::solve(&fp, algorithm, seed);
+    let solve_s = sw.elapsed_s();
+
+    let cfg = FleetSimConfig {
+        requests_per_agent: args.usize("requests", 16),
+        arrival: Arrival::Poisson { lambda_rps: args.f64("rps", 2.0) },
+        seed,
+        batcher: BatcherConfig::default(),
+    };
+    let report = fleet_sim::run(&fp, &alloc, &cfg);
+
+    let mut t = Table::new(
+        "per-agent allocation",
+        &["agent", "class", "w", "T0", "E0", "b̂", "μ", "α", "link ms",
+          "e2e p50", "e2e p95", "E mean", "served"],
+    );
+    for (a, spec) in report.per_agent.iter().zip(&fp.agents) {
+        let slot = &alloc.agents[a.agent];
+        t.row(&[
+            format!("{}", a.agent),
+            a.class.to_string(),
+            format!("{:.1}", spec.weight),
+            format!("{:.2}", spec.t0),
+            format!("{:.2}", spec.e0),
+            if a.admitted { format!("{}", a.b_hat) } else { "REJ".into() },
+            format!("{:.3}", a.server_share),
+            format!("{:.3}", a.airtime_share),
+            if slot.link_s.is_finite() {
+                format!("{:.1}", slot.link_s * 1e3)
+            } else {
+                "--".into()
+            },
+            if a.served > 0 { format!("{:.3}", a.e2e_s.p50()) } else { "--".into() },
+            if a.served > 0 { format!("{:.3}", a.e2e_s.p95()) } else { "--".into() },
+            if a.served > 0 { format!("{:.3}", a.energy_j.mean()) } else { "--".into() },
+            format!("{}/{}", a.served, a.served + a.rejected as usize),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nfleet aggregate ({}): admitted {}/{}  weighted gap {:.3e}  weighted D^U {:.3e}",
+        algorithm.name(),
+        report.admitted_agents,
+        n,
+        report.weighted_gap,
+        report.weighted_d_upper
+    );
+    if report.served > 0 {
+        println!(
+            "  e2e delay: p50 {:.3}s  p95 {:.3}s  p99 {:.3}s  (served {}, rejected {})",
+            report.e2e_s.p50(),
+            report.e2e_s.p95(),
+            report.e2e_s.p99(),
+            report.served,
+            report.rejected
+        );
+    } else {
+        println!("  no requests served (fleet inadmissible); rejected {}", report.rejected);
+    }
+    println!(
+        "  energy {:.2} J total  qos violations {}  slo misses {}  allocator {:.1} ms",
+        report.total_energy_j,
+        report.qos_violations,
+        report.slo_misses,
+        solve_s * 1e3
+    );
+    if report.admitted_agents == 0 {
+        1
+    } else {
+        0
     }
 }
 

@@ -14,6 +14,14 @@
 //! * [`server::PipelinedServer`] — threaded pipeline (agent stage thread +
 //!   edge stage thread) exercising backpressure; PJRT state is built
 //!   thread-locally because XLA handles are not `Send`.
+//!
+//! The fleet layer ([`crate::fleet`]) instantiates one router + batcher +
+//! scheduler per agent, with each scheduler made **contention-aware** by
+//! building it on the agent's slice of the shared resources (the
+//! share-scaled platform from [`crate::opt::fleet`] and a link-reduced
+//! delay budget); the scheduler's plan cache is keyed on every
+//! plan-relevant field, so mutating `algorithm`/`scheme`/`lambda`/
+//! governors between plans re-plans instead of serving stale designs.
 
 pub mod batcher;
 pub mod engine;

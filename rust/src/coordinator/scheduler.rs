@@ -9,6 +9,7 @@ use crate::system::dvfs::Governor;
 use crate::system::Platform;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 
 /// Which design algorithm drives the scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -69,6 +70,10 @@ pub struct Scheduler {
     ppo: Option<Ppo>,
     rng: Rng,
     cache: HashMap<(u64, u64), Plan>,
+    /// fingerprint of every plan-relevant field at the time the cache was
+    /// filled; a mismatch on `plan()` clears stale entries (the fields are
+    /// `pub`, so callers can mutate them between plans)
+    config_stamp: u64,
 }
 
 fn budget_key(t0: f64, e0: f64) -> (u64, u64) {
@@ -104,6 +109,26 @@ fn plan_discrete(problem: &Problem, f_dev: f64, server_points: &[f64]) -> Option
     None
 }
 
+fn hash_f64<H: Hasher>(x: f64, h: &mut H) {
+    x.to_bits().hash(h);
+}
+
+fn hash_governor<H: Hasher>(g: &Governor, h: &mut H) {
+    match g {
+        Governor::Continuous { f_max } => {
+            0u8.hash(h);
+            hash_f64(*f_max, h);
+        }
+        Governor::Profiles { points } => {
+            1u8.hash(h);
+            points.len().hash(h);
+            for p in points {
+                hash_f64(*p, h);
+            }
+        }
+    }
+}
+
 impl Scheduler {
     pub fn new(
         platform: Platform,
@@ -112,7 +137,7 @@ impl Scheduler {
         scheme: Scheme,
         seed: u64,
     ) -> Scheduler {
-        Scheduler {
+        let mut s = Scheduler {
             device_gov: Governor::Continuous { f_max: platform.device.f_max },
             server_gov: Governor::Continuous { f_max: platform.server.f_max },
             platform,
@@ -122,7 +147,38 @@ impl Scheduler {
             ppo: None,
             rng: Rng::new(seed),
             cache: HashMap::new(),
+            config_stamp: 0,
+        };
+        s.config_stamp = s.config_fingerprint();
+        s
+    }
+
+    /// Everything a cached [`Plan`] depends on besides the (T0, E0) key.
+    fn config_fingerprint(&self) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.algorithm.hash(&mut h);
+        self.scheme.hash(&mut h);
+        hash_f64(self.lambda, &mut h);
+        let p = &self.platform;
+        for x in [
+            p.device.f_max,
+            p.device.flops_per_cycle,
+            p.device.pue,
+            p.device.psi,
+            p.server.f_max,
+            p.server.flops_per_cycle,
+            p.server.pue,
+            p.server.psi,
+            p.n_flop_agent,
+            p.n_flop_server,
+            p.full_bits,
+        ] {
+            hash_f64(x, &mut h);
         }
+        p.b_max.hash(&mut h);
+        hash_governor(&self.device_gov, &mut h);
+        hash_governor(&self.server_gov, &mut h);
+        h.finish()
     }
 
     /// Switch to coarse testbed governors (Table I mode).
@@ -134,16 +190,26 @@ impl Scheduler {
     }
 
     /// Train the PPO policy (required before using Algorithm::Ppo).
+    /// Replacing the policy invalidates any plans it produced — the policy
+    /// lives outside the config fingerprint, so clear explicitly.
     pub fn train_ppo(&mut self, ranges: BudgetRanges, cfg: PpoConfig) {
         let env = DesignEnv::new(self.platform, self.lambda, ranges);
         let mut rng = self.rng.fork(0x99);
         let mut ppo = Ppo::new(env, cfg, &mut rng);
         ppo.train(&mut rng);
         self.ppo = Some(ppo);
+        self.cache.clear();
     }
 
     /// Plan (and cache) the operating point for a (T0, E0) budget.
     pub fn plan(&mut self, t0: f64, e0: f64) -> Option<Plan> {
+        // drop stale plans if any plan-relevant field changed since the
+        // cache was filled (algorithm, scheme, lambda, governors, platform)
+        let stamp = self.config_fingerprint();
+        if stamp != self.config_stamp {
+            self.cache.clear();
+            self.config_stamp = stamp;
+        }
         let key = budget_key(t0, e0);
         if let Some(p) = self.cache.get(&key) {
             return Some(*p);
@@ -268,5 +334,55 @@ mod tests {
         s.plan(3.5, 2.0);
         s.plan(2.0, 2.0);
         assert_eq!(s.cache_len(), 2);
+    }
+
+    #[test]
+    fn algorithm_change_invalidates_cached_plans() {
+        // regression: the cache used to key only on (T0, E0), so mutating
+        // `algorithm` after the first plan served stale designs
+        let mut s = sched(Algorithm::Exact);
+        let exact = s.plan(3.5, 2.0).unwrap();
+        assert_eq!(s.cache_len(), 1);
+        s.algorithm = Algorithm::FixedFreq;
+        let fixed = s.plan(3.5, 2.0).unwrap();
+        // fixed-freq pins the device at f^max; the exact design relaxes it
+        assert_eq!(fixed.design.f, s.platform.device.f_max);
+        assert_ne!(
+            (exact.design.f, exact.design.f_tilde),
+            (fixed.design.f, fixed.design.f_tilde),
+            "stale plan served after algorithm change"
+        );
+        assert_eq!(s.cache_len(), 1, "stale entries must be dropped, not kept");
+    }
+
+    #[test]
+    fn scheme_change_reaches_subsequent_plans() {
+        let mut s = sched(Algorithm::Exact);
+        assert_eq!(s.plan(3.5, 2.0).unwrap().scheme, Scheme::Uniform);
+        s.scheme = Scheme::Pot;
+        assert_eq!(s.plan(3.5, 2.0).unwrap().scheme, Scheme::Pot);
+    }
+
+    #[test]
+    fn lambda_and_governor_changes_invalidate() {
+        let mut s = sched(Algorithm::Exact);
+        s.plan(3.5, 2.0).unwrap();
+        s.plan(2.5, 2.5).unwrap();
+        assert_eq!(s.cache_len(), 2);
+        s.lambda = 40.0;
+        s.plan(3.5, 2.0).unwrap();
+        assert_eq!(s.cache_len(), 1, "lambda change must clear the cache");
+        s.server_gov = Governor::server_profiles();
+        s.plan(3.5, 2.0).unwrap();
+        assert_eq!(s.cache_len(), 1, "governor change must clear the cache");
+    }
+
+    #[test]
+    fn unchanged_config_keeps_cache_warm() {
+        let mut s = sched(Algorithm::Proposed);
+        let a = s.plan(3.5, 2.0).unwrap();
+        let b = s.plan(3.5, 2.0).unwrap();
+        assert_eq!(a.design.b_hat, b.design.b_hat);
+        assert_eq!(s.cache_len(), 1);
     }
 }

@@ -1,0 +1,25 @@
+//! Fleet-scale co-inference: serving many embodied agents against one
+//! edge server and one wireless medium.
+//!
+//! The layer sits on top of the existing single-pair stack and reuses it
+//! wholesale:
+//!
+//! * the **contention model** lives in
+//!   [`crate::system::channel::MultiAccessChannel`] (airtime shares) and
+//!   [`crate::opt::fleet::FleetProblem::agent_platform`] (server-frequency
+//!   shares) — each agent's slice of the shared resources is expressed as
+//!   an ordinary [`crate::system::Platform`];
+//! * the **joint multi-agent allocator** is [`crate::opt::fleet`]:
+//!   per-agent exact bisection inside a water-filling outer loop, with
+//!   greedy admission control and equal-share / feasible-random baselines;
+//! * the **serving loop** ([`sim`]) drives one router + batcher +
+//!   contention-aware [`crate::coordinator::Scheduler`] per agent through
+//!   the shared medium, and aggregates per-agent
+//!   [`crate::coordinator::Telemetry`] into fleet-level percentiles.
+//!
+//! Entry points: `qaci fleet` (CLI), `benches/fleet_scale.rs` (N-sweep),
+//! `examples/fleet_sweep.rs`.
+
+pub mod sim;
+
+pub use sim::{AgentReport, FleetReport, FleetSimConfig};

@@ -23,15 +23,24 @@
 //! | substrates | [`util`] (json, cli, rng, pool, prop), [`nn`], [`metrics`], [`data`] |
 //! | theory (§III–IV) | [`theory`] |
 //! | quantizers (§II-C) | [`quant`] |
-//! | system model (§II-D) | [`system`] |
-//! | joint design (§V) | [`opt`], [`rl`] |
-//! | serving | [`runtime`], [`coordinator`] |
+//! | system model (§II-D) | [`system`] (incl. multi-access contention) |
+//! | joint design (§V) | [`opt`] (incl. [`opt::fleet`]), [`rl`] |
+//! | serving | [`runtime`], [`coordinator`], [`fleet`] |
 //! | evaluation | [`bench_harness`], `rust/benches/*` |
+//!
+//! The **fleet layer** generalizes the paper's single agent–server pair to
+//! N agents contending for one edge server and one wireless medium:
+//! airtime shares live in [`system::channel::MultiAccessChannel`], the
+//! joint multi-agent allocator (per-agent bisection + water-filling +
+//! admission control) in [`opt::fleet`], and the fleet serving loop in
+//! [`fleet::sim`]. Entry points: `qaci fleet`, `benches/fleet_scale.rs`,
+//! `examples/fleet_sweep.rs`.
 
 pub mod bench_harness;
 pub mod coordinator;
 pub mod figures;
 pub mod data;
+pub mod fleet;
 pub mod metrics;
 pub mod nn;
 pub mod opt;

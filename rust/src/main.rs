@@ -5,11 +5,15 @@
 //!   plan     run the joint design for a (T0, E0) budget and print the plan
 //!   eval     serve the eval set through the engine, report CIDEr/delay/energy
 //!   serve    threaded pipelined serving demo over a Poisson workload
+//!   fleet    N agents on one edge server + one medium: joint multi-agent
+//!            allocation (proposed | equal-share | feasible-random) and the
+//!            fleet serving loop — artifact-free
 //!   fit      fit the exponential magnitude model to a weight blob
 //!
 //! Examples:
 //!   qaci plan --t0 3.5 --e0 2.0 --algorithm proposed
 //!   qaci eval --model blip2ish --algorithm proposed --requests 64
 //!   qaci serve --model gitish --rps 20 --requests 100
+//!   qaci fleet --agents 8 --algorithm proposed --requests 16
 fn main() { cli::main() }
 mod cli;

@@ -1,0 +1,702 @@
+//! Joint multi-agent resource allocation: N embodied agents contending
+//! for one edge server and one wireless medium (fleet generalization of
+//! the paper's single-pair (P1); cf. "The Larger the Merrier?" and "LLMs
+//! over Networks" in PAPERS.md).
+//!
+//! ## Model
+//!
+//! Each agent i brings its own device (the paper's agent processor) and a
+//! QoS contract (T0_i, E0_i, weight w_i, payload). Two resources are
+//! shared:
+//!
+//! * **server frequency**: the edge server's f̃^max is partitioned into
+//!   shares μ_i (Σ μ ≤ 1); agent i's decoder stage may run at
+//!   f̃ ≤ μ_i f̃^max — exactly the paper's platform with a scaled server,
+//!   so every per-agent subproblem *is* a [`Problem`] instance;
+//! * **airtime**: the uplink medium's goodput R is split into shares α_i
+//!   (Σ α ≤ 1, [`MultiAccessChannel`]); unlike the single-pair setting —
+//!   where the paper excludes the (fast, dedicated) link from the QoS
+//!   math — a congested shared medium is first-order, so the fleet
+//!   allocator budgets the nominal uplink time against T0_i: the compute
+//!   stages get T0_i − t_link(α_i).
+//!
+//! ## Objective and algorithm
+//!
+//! Minimize Σ_i w_i · ζ_i where ζ_i is the paper's (P1) objective
+//! D^U(b̂_i−1) − D^L(b̂_i−1) for served agents and a rejection penalty
+//! 2/λ_i (4× the worst feasible gap, so serving at b̂ = 1 always beats
+//! rejecting) for agents the allocator cannot fit. Since both the gap and
+//! D^U alone are strictly decreasing in b̂, the same allocation minimizes
+//! the fleet-weighted distortion upper bound
+//! ([`FleetAllocation::weighted_d_upper`]).
+//!
+//! The proposed solver alternates **per-agent exact bisection**
+//! ([`super::bisection`], the inner (P1) solve at fixed shares) with a
+//! **water-filling-style outer exchange** on each shared resource: move a
+//! share quantum from the agent whose objective suffers least to the
+//! agent whose objective gains most, while any such move improves the
+//! weighted sum. Two starting points are improved and the better result
+//! kept: the equal split (which guarantees the proposed design never
+//! loses to the equal-share baseline) and a greedy **admission** init
+//! that seats agents by weight at their minimal feasible shares — the
+//! path that serves part of the fleet when the equal split is entirely
+//! infeasible.
+
+use super::bisection;
+use super::feasible_random;
+use super::problem::{Design, Problem};
+use crate::system::channel::MultiAccessChannel;
+use crate::system::Platform;
+use crate::theory::rate_distortion as rd;
+use crate::util::rng::Rng;
+
+/// One agent's QoS contract in the fleet.
+#[derive(Debug, Clone, Copy)]
+pub struct AgentSpec {
+    /// QoS class label (matches the coordinator's class names)
+    pub class: &'static str,
+    /// fitted exponential parameter of this agent's model magnitudes
+    pub lambda: f64,
+    /// delay budget T0_i [s]
+    pub t0: f64,
+    /// energy budget E0_i [J]
+    pub e0: f64,
+    /// fleet weight w_i (relative importance in the objective)
+    pub weight: f64,
+    /// uplink payload per request [bytes]
+    pub payload_bytes: usize,
+}
+
+impl AgentSpec {
+    /// BLIP-2-2.7b-scale embedding upload: 32 query tokens × d = 2560 f32.
+    pub const PAYLOAD_BLIP2: usize = 32 * 2560 * 4;
+
+    /// Heterogeneous fleet used by benches and the CLI: cycles the
+    /// coordinator's three QoS classes (fleet SLA bands in the paper's
+    /// Fig. 5 budget range, interactive slightly tightened) with weights
+    /// expressing their relative priority.
+    pub fn mixed_fleet(n: usize) -> Vec<AgentSpec> {
+        const CLASSES: [(&str, f64, f64, f64); 3] = [
+            ("interactive", 2.40, 2.50, 2.0),
+            ("standard", 3.50, 2.00, 1.0),
+            ("background", 5.00, 1.00, 0.5),
+        ];
+        (0..n)
+            .map(|i| {
+                let (class, t0, e0, weight) = CLASSES[i % CLASSES.len()];
+                AgentSpec {
+                    class,
+                    lambda: 15.0,
+                    t0,
+                    e0,
+                    weight,
+                    payload_bytes: Self::PAYLOAD_BLIP2,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Fleet instance: shared silicon + shared medium + per-agent contracts.
+#[derive(Debug, Clone)]
+pub struct FleetProblem {
+    /// silicon profile: `base.device` is each agent's own processor,
+    /// `base.server` is the one shared edge server
+    pub base: Platform,
+    pub agents: Vec<AgentSpec>,
+    /// shared uplink goodput R [bits/s]
+    pub link_rate_bps: f64,
+    /// per-message MAC latency [s]
+    pub link_base_latency_s: f64,
+}
+
+impl FleetProblem {
+    /// Shared testbed WLAN defaults (400 Mbps, 2 ms).
+    pub fn new(base: Platform, agents: Vec<AgentSpec>) -> FleetProblem {
+        assert!(!agents.is_empty());
+        FleetProblem { base, agents, link_rate_bps: 400e6, link_base_latency_s: 2e-3 }
+    }
+
+    pub fn with_link(mut self, rate_bps: f64, base_latency_s: f64) -> FleetProblem {
+        self.link_rate_bps = rate_bps;
+        self.link_base_latency_s = base_latency_s;
+        self
+    }
+
+    /// Infinite-rate medium: isolates the shared-server dimension (and
+    /// makes the N = 1 fleet reduce *exactly* to the single-agent (P1)).
+    pub fn ideal_link(self) -> FleetProblem {
+        self.with_link(f64::INFINITY, 0.0)
+    }
+
+    pub fn n(&self) -> usize {
+        self.agents.len()
+    }
+
+    /// The platform agent i sees under server-frequency share μ.
+    pub fn agent_platform(&self, mu: f64) -> Platform {
+        let mut p = self.base;
+        p.server.f_max *= mu.clamp(0.0, 1.0);
+        p
+    }
+
+    /// Nominal (jitter-free) uplink time at airtime share α — what the
+    /// allocator budgets against.
+    pub fn link_time(&self, i: usize, alpha: f64) -> f64 {
+        MultiAccessChannel::nominal_transmit_s(
+            self.link_rate_bps,
+            self.link_base_latency_s,
+            alpha.clamp(0.0, 1.0),
+            self.agents[i].payload_bytes,
+        )
+    }
+
+    /// Agent i's effective single-agent (P1) instance under shares
+    /// (μ, α): the paper's problem on the share-scaled platform with the
+    /// uplink time carved out of the delay budget. `None` when the shares
+    /// leave no compute budget at all.
+    pub fn agent_problem(&self, i: usize, mu: f64, alpha: f64) -> Option<Problem> {
+        if mu <= 0.0 {
+            return None;
+        }
+        let spec = &self.agents[i];
+        let t0 = spec.t0 - self.link_time(i, alpha);
+        if !(t0 > 0.0) {
+            return None; // also catches the +inf link time of α = 0
+        }
+        Some(Problem::new(self.agent_platform(mu), spec.lambda, t0, spec.e0))
+    }
+
+    /// Best per-agent design (exact bisection) under shares, or `None`
+    /// when the agent is unservable there.
+    pub fn agent_design(&self, i: usize, mu: f64, alpha: f64) -> Option<Design> {
+        let problem = self.agent_problem(i, mu, alpha)?;
+        bisection::solve(&problem).map(|r| r.design)
+    }
+
+    /// Rejection penalty: 4× the worst feasible bound gap, so serving an
+    /// agent (at any bit-width) always improves the objective.
+    pub fn rejection_cost(&self, i: usize) -> f64 {
+        self.agents[i].weight * 2.0 / self.agents[i].lambda
+    }
+
+    /// The single source of truth for the fleet objective: an agent's
+    /// weighted contribution given whatever design it was (not) assigned.
+    pub fn design_cost(&self, i: usize, design: &Option<Design>) -> f64 {
+        match design {
+            Some(d) => {
+                self.agents[i].weight
+                    * rd::bound_gap(d.b_hat as f64, self.agents[i].lambda)
+            }
+            None => self.rejection_cost(i),
+        }
+    }
+
+    /// Weighted per-agent objective contribution at shares (μ, α).
+    pub fn agent_cost(&self, i: usize, mu: f64, alpha: f64) -> f64 {
+        self.design_cost(i, &self.agent_design(i, mu, alpha))
+    }
+}
+
+/// One agent's slice of a fleet allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct AgentAllocation {
+    /// `None` = rejected by admission control
+    pub design: Option<Design>,
+    /// server-frequency share μ_i
+    pub server_share: f64,
+    /// airtime share α_i
+    pub airtime_share: f64,
+    /// nominal uplink time at α_i [s]
+    pub link_s: f64,
+    /// w_i-weighted objective contribution (penalty when rejected)
+    pub cost: f64,
+}
+
+/// A complete fleet operating point.
+#[derive(Debug, Clone)]
+pub struct FleetAllocation {
+    pub agents: Vec<AgentAllocation>,
+    /// Σ_i cost_i — the fleet-weighted (P1) objective
+    pub objective: f64,
+    pub admitted: usize,
+}
+
+impl FleetAllocation {
+    /// Fleet-weighted distortion upper bound Σ w_i D^U(b̂_i−1); rejected
+    /// agents contribute the zero-rate distortion D^U(0) = 1/λ.
+    pub fn weighted_d_upper(&self, fp: &FleetProblem) -> f64 {
+        self.agents
+            .iter()
+            .zip(&fp.agents)
+            .map(|(a, spec)| {
+                let rate = match &a.design {
+                    Some(d) => d.b_hat as f64 - 1.0,
+                    None => 0.0,
+                };
+                spec.weight * rd::d_upper(rate, spec.lambda)
+            })
+            .sum()
+    }
+
+    pub fn server_shares(&self) -> Vec<f64> {
+        self.agents.iter().map(|a| a.server_share).collect()
+    }
+
+    pub fn airtime_shares(&self) -> Vec<f64> {
+        self.agents.iter().map(|a| a.airtime_share).collect()
+    }
+}
+
+/// Assemble an allocation from per-agent designs produced by `design_of`
+/// — shared by the bisection-based [`evaluate`] and the random baseline,
+/// so every algorithm scores against the same objective.
+fn assemble(
+    fp: &FleetProblem,
+    mu: &[f64],
+    alpha: &[f64],
+    mut design_of: impl FnMut(usize) -> Option<Design>,
+) -> FleetAllocation {
+    assert_eq!(mu.len(), fp.n());
+    assert_eq!(alpha.len(), fp.n());
+    let agents: Vec<AgentAllocation> = (0..fp.n())
+        .map(|i| {
+            let design = design_of(i);
+            AgentAllocation {
+                cost: fp.design_cost(i, &design),
+                design,
+                server_share: mu[i],
+                airtime_share: alpha[i],
+                link_s: fp.link_time(i, alpha[i]),
+            }
+        })
+        .collect();
+    FleetAllocation {
+        objective: agents.iter().map(|a| a.cost).sum(),
+        admitted: agents.iter().filter(|a| a.design.is_some()).count(),
+        agents,
+    }
+}
+
+/// Evaluate a share assignment: per-agent exact bisection + costs.
+pub fn evaluate(fp: &FleetProblem, mu: &[f64], alpha: &[f64]) -> FleetAllocation {
+    assemble(fp, mu, alpha, |i| fp.agent_design(i, mu[i], alpha[i]))
+}
+
+/// Which fleet allocator drives a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FleetAlgorithm {
+    /// alternating per-agent bisection + water-filling share exchange
+    Proposed,
+    /// μ_i = α_i = 1/N, per-agent bisection (the natural baseline)
+    EqualShare,
+    /// random shares + random feasible per-agent bit-widths
+    FeasibleRandom,
+}
+
+impl FleetAlgorithm {
+    pub const ALL: [FleetAlgorithm; 3] = [
+        FleetAlgorithm::Proposed,
+        FleetAlgorithm::EqualShare,
+        FleetAlgorithm::FeasibleRandom,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FleetAlgorithm::Proposed => "proposed",
+            FleetAlgorithm::EqualShare => "equal-share",
+            FleetAlgorithm::FeasibleRandom => "feasible-random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FleetAlgorithm> {
+        match s {
+            "proposed" | "waterfill" => Some(FleetAlgorithm::Proposed),
+            "equal" | "equal-share" => Some(FleetAlgorithm::EqualShare),
+            "random" | "feasible-random" => Some(FleetAlgorithm::FeasibleRandom),
+            _ => None,
+        }
+    }
+}
+
+/// Outer-loop knobs for [`solve_proposed_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct ProposedOptions {
+    /// alternating (server, airtime) improvement rounds
+    pub rounds: usize,
+    /// share quantum = 1 / (divisor · N), coarse-to-fine
+    pub step_divisors: [f64; 2],
+    /// exchange moves allowed per agent per quantum level
+    pub moves_per_agent: usize,
+}
+
+impl Default for ProposedOptions {
+    fn default() -> Self {
+        ProposedOptions { rounds: 3, step_divisors: [2.0, 8.0], moves_per_agent: 3 }
+    }
+}
+
+/// Dispatch on algorithm. `seed` only matters for the random baseline.
+pub fn solve(fp: &FleetProblem, algorithm: FleetAlgorithm, seed: u64) -> FleetAllocation {
+    match algorithm {
+        FleetAlgorithm::Proposed => solve_proposed(fp),
+        FleetAlgorithm::EqualShare => solve_equal_share(fp),
+        FleetAlgorithm::FeasibleRandom => solve_feasible_random(fp, seed),
+    }
+}
+
+/// The equal-share baseline.
+pub fn solve_equal_share(fp: &FleetProblem) -> FleetAllocation {
+    let shares = MultiAccessChannel::equal_shares(fp.n());
+    evaluate(fp, &shares, &shares)
+}
+
+/// The proposed joint multi-agent design (default options).
+pub fn solve_proposed(fp: &FleetProblem) -> FleetAllocation {
+    solve_proposed_with(fp, ProposedOptions::default())
+}
+
+pub fn solve_proposed_with(fp: &FleetProblem, opts: ProposedOptions) -> FleetAllocation {
+    let equal = MultiAccessChannel::equal_shares(fp.n());
+    let mut inits = vec![(equal.clone(), equal)];
+    if fp.n() > 1 {
+        if let Some((mu0, alpha0)) = admission_init(fp) {
+            inits.push((mu0, alpha0));
+        }
+    }
+    let mut best: Option<FleetAllocation> = None;
+    for (mut mu, mut alpha) in inits {
+        improve(fp, &mut mu, &mut alpha, opts);
+        let alloc = evaluate(fp, &mu, &alpha);
+        if best.as_ref().map_or(true, |b| alloc.objective < b.objective) {
+            best = Some(alloc);
+        }
+    }
+    best.expect("at least the equal init was evaluated")
+}
+
+/// The feasible-random baseline: Dirichlet(1) shares on both resources
+/// and a random feasible bit-width per agent (frequencies by the
+/// energy-min oracle, as in [`feasible_random`]).
+pub fn solve_feasible_random(fp: &FleetProblem, seed: u64) -> FleetAllocation {
+    let mut rng = Rng::new(seed);
+    let mut draw_shares = |n: usize| -> Vec<f64> {
+        let gammas: Vec<f64> = (0..n).map(|_| rng.exponential(1.0)).collect();
+        let total: f64 = gammas.iter().sum();
+        gammas.iter().map(|g| g / total.max(1e-300)).collect()
+    };
+    let mu = draw_shares(fp.n());
+    let alpha = draw_shares(fp.n());
+    assemble(fp, &mu, &alpha, |i| {
+        fp.agent_problem(i, mu[i], alpha[i])
+            .and_then(|p| feasible_random::solve(&p, rng.next_u64()))
+    })
+}
+
+/// Mean objective of the random baseline over `trials` draws (the
+/// figure-style aggregate).
+pub fn feasible_random_mean(fp: &FleetProblem, trials: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    (0..trials.max(1))
+        .map(|_| solve_feasible_random(fp, rng.next_u64()).objective)
+        .sum::<f64>()
+        / trials.max(1) as f64
+}
+
+// ---------------------------------------------------------------------------
+// proposed-solver internals
+// ---------------------------------------------------------------------------
+
+/// Smallest share s ∈ (0, 1] making `feasible(s)` true (monotone), by
+/// bisection; `None` if even s = 1 fails.
+fn min_share(feasible: impl Fn(f64) -> bool) -> Option<f64> {
+    if !feasible(1.0) {
+        return None;
+    }
+    let (mut lo, mut hi) = (0.0, 1.0);
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// Greedy admission: seat agents in weight order at their minimal
+/// feasible shares (server share probed with the full medium, airtime
+/// probed with the full server — each resource's true floor), then hand
+/// the leftovers out weight-proportionally. Returns `None` when nobody
+/// can be seated (the equal init is then the only candidate).
+fn admission_init(fp: &FleetProblem) -> Option<(Vec<f64>, Vec<f64>)> {
+    let n = fp.n();
+    let servable = |i: usize, mu: f64, alpha: f64| -> bool {
+        fp.agent_problem(i, mu, alpha)
+            .map_or(false, |p| p.plan_frequencies(1.0).is_some())
+    };
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        fp.agents[b]
+            .weight
+            .partial_cmp(&fp.agents[a].weight)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mu = vec![0.0; n];
+    let mut alpha = vec![0.0; n];
+    let (mut mu_used, mut alpha_used) = (0.0f64, 0.0f64);
+    let mut admitted: Vec<usize> = Vec::new();
+    for i in order {
+        let need_mu = min_share(|m| servable(i, m, 1.0));
+        let need_alpha = min_share(|a| servable(i, 1.0, a));
+        if let (Some(m), Some(a)) = (need_mu, need_alpha) {
+            if mu_used + m <= 1.0 && alpha_used + a <= 1.0 {
+                mu[i] = m;
+                alpha[i] = a;
+                mu_used += m;
+                alpha_used += a;
+                admitted.push(i);
+            }
+        }
+    }
+    if admitted.is_empty() {
+        return None;
+    }
+    let weight_sum: f64 = admitted.iter().map(|&i| fp.agents[i].weight).sum();
+    for &i in &admitted {
+        let frac = fp.agents[i].weight / weight_sum;
+        mu[i] += (1.0 - mu_used) * frac;
+        alpha[i] += (1.0 - alpha_used) * frac;
+    }
+    Some((mu, alpha))
+}
+
+/// Alternating water-filling: improve the server-share vector at fixed
+/// airtime, then the airtime vector at fixed server shares, until a full
+/// round yields nothing.
+fn improve(fp: &FleetProblem, mu: &mut [f64], alpha: &mut [f64], opts: ProposedOptions) {
+    let n = fp.n();
+    if n < 2 {
+        return;
+    }
+    let max_moves = opts.moves_per_agent * n;
+    for _ in 0..opts.rounds {
+        let mut gained = 0.0;
+        for divisor in opts.step_divisors {
+            let step = 1.0 / (divisor * n as f64);
+            gained += exchange(mu, step, max_moves, |i, s| fp.agent_cost(i, s, alpha[i]));
+            gained += exchange(alpha, step, max_moves, |i, s| fp.agent_cost(i, mu[i], s));
+        }
+        if gained <= 1e-15 {
+            break;
+        }
+    }
+}
+
+/// One resource's greedy pairwise exchange: repeatedly move `step` from
+/// the agent whose cost rises least to the agent whose cost falls most,
+/// while the net change improves the weighted sum. Cost depends only on
+/// the owner's share, so this is exact coordinate descent on a separable
+/// objective; per-agent costs are monotone non-increasing in share, which
+/// keeps every accepted move a strict improvement.
+fn exchange(
+    shares: &mut [f64],
+    step: f64,
+    max_moves: usize,
+    cost_at: impl Fn(usize, f64) -> f64,
+) -> f64 {
+    let n = shares.len();
+    if n < 2 {
+        return 0.0;
+    }
+    // cached (current, donate-loss, receive-gain) per agent
+    let triple = |i: usize, s: f64| -> (f64, f64, f64) {
+        let cur = cost_at(i, s);
+        let loss = if s + 1e-12 >= step {
+            cost_at(i, (s - step).max(0.0)) - cur
+        } else {
+            f64::INFINITY // too little left to donate a full quantum
+        };
+        let gain = cur - cost_at(i, s + step);
+        (cur, loss, gain)
+    };
+    let mut cached: Vec<(f64, f64, f64)> =
+        (0..n).map(|i| triple(i, shares[i])).collect();
+    let mut total_gain = 0.0;
+    for _ in 0..max_moves {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for d in 0..n {
+            let loss = cached[d].1;
+            if !loss.is_finite() {
+                continue;
+            }
+            for r in 0..n {
+                if r == d {
+                    continue;
+                }
+                let net = cached[r].2 - loss;
+                if net > best.map_or(1e-15, |(_, _, b)| b) {
+                    best = Some((d, r, net));
+                }
+            }
+        }
+        let Some((d, r, net)) = best else { break };
+        shares[d] = (shares[d] - step).max(0.0);
+        shares[r] += step;
+        cached[d] = triple(d, shares[d]);
+        cached[r] = triple(r, shares[r]);
+        total_gain += net;
+    }
+    total_gain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> FleetProblem {
+        FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
+    }
+
+    #[test]
+    fn n1_fleet_reduces_to_single_agent_bisection() {
+        // ideal link + sole agent owning both resources == the paper (P1)
+        let fp = fleet(1).ideal_link();
+        let spec = fp.agents[0];
+        let single = bisection::solve(&Problem::new(
+            Platform::fleet_edge(),
+            spec.lambda,
+            spec.t0,
+            spec.e0,
+        ))
+        .expect("single-agent feasible");
+        for algorithm in [FleetAlgorithm::Proposed, FleetAlgorithm::EqualShare] {
+            let alloc = solve(&fp, algorithm, 0);
+            let d = alloc.agents[0].design.expect("fleet of one admitted");
+            assert_eq!(d.b_hat, single.design.b_hat, "{algorithm:?}");
+            assert!((d.f - single.design.f).abs() / single.design.f < 1e-9);
+            assert!(
+                (d.f_tilde - single.design.f_tilde).abs() / single.design.f_tilde
+                    < 1e-9
+            );
+            assert_eq!(alloc.admitted, 1);
+        }
+    }
+
+    #[test]
+    fn proposed_never_worse_than_equal_share() {
+        // structural guarantee (improvement starts at the equal split), so
+        // it must hold on any base platform, contended or not
+        for n in [2usize, 3, 4, 8] {
+            for fp in [
+                fleet(n),
+                fleet(n).ideal_link(),
+                FleetProblem::new(Platform::paper_blip2(), AgentSpec::mixed_fleet(n)),
+            ] {
+                let equal = solve_equal_share(&fp);
+                let proposed = solve_proposed(&fp);
+                assert!(
+                    proposed.objective <= equal.objective + 1e-12,
+                    "n={n}: proposed {} > equal {}",
+                    proposed.objective,
+                    equal.objective
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn proposed_strictly_beats_equal_share_on_contended_fleet() {
+        // at N >= 4 the shared 10 GHz server binds: interactive agents are
+        // starved under the equal split while background agents sit on
+        // slack — the exchange must exploit it
+        for n in [4usize, 8] {
+            let fp = fleet(n);
+            let equal = solve_equal_share(&fp);
+            let proposed = solve_proposed(&fp);
+            assert!(
+                proposed.objective < equal.objective * 0.99,
+                "n={n}: proposed {} not clearly below equal {}",
+                proposed.objective,
+                equal.objective
+            );
+            let wu_p = proposed.weighted_d_upper(&fp);
+            let wu_e = equal.weighted_d_upper(&fp);
+            assert!(
+                wu_p <= wu_e + 1e-12,
+                "n={n}: weighted D^U {wu_p} > equal {wu_e}"
+            );
+        }
+    }
+
+    #[test]
+    fn admission_control_serves_part_of_an_infeasible_fleet() {
+        // 32 agents on one paper server: the equal split gives everyone
+        // f̃ = 0.3125 GHz, far below any budget — the proposed allocator
+        // must concentrate shares and admit a subset instead
+        let n = 32;
+        let fp = fleet(n);
+        let equal = solve_equal_share(&fp);
+        assert_eq!(equal.admitted, 0, "equal split should be fully infeasible");
+        let proposed = solve_proposed(&fp);
+        assert!(proposed.admitted >= 1, "admission control seated nobody");
+        assert!(proposed.objective < equal.objective - 1e-9);
+    }
+
+    #[test]
+    fn allocations_keep_shares_valid() {
+        for n in [1usize, 4, 9] {
+            let fp = fleet(n);
+            for algorithm in FleetAlgorithm::ALL {
+                let alloc = solve(&fp, algorithm, 7);
+                for res in [alloc.server_shares(), alloc.airtime_shares()] {
+                    assert!(res.iter().all(|&s| (0.0..=1.0 + 1e-9).contains(&s)));
+                    let total: f64 = res.iter().sum();
+                    assert!(total <= 1.0 + 1e-9, "{algorithm:?} n={n}: {total}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn admitted_designs_are_feasible_for_their_subproblem() {
+        let fp = fleet(6);
+        let alloc = solve_proposed(&fp);
+        for (i, a) in alloc.agents.iter().enumerate() {
+            if let Some(d) = &a.design {
+                let p = fp
+                    .agent_problem(i, a.server_share, a.airtime_share)
+                    .expect("admitted agent has a subproblem");
+                assert!(p.is_feasible(d), "agent {i}: {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_baseline_never_beats_proposed() {
+        let fp = fleet(6);
+        let proposed = solve_proposed(&fp).objective;
+        let mean = feasible_random_mean(&fp, 20, 11);
+        assert!(mean >= proposed - 1e-12, "random mean {mean} < proposed {proposed}");
+    }
+
+    #[test]
+    fn deterministic_given_inputs() {
+        let fp = fleet(5);
+        let a = solve_proposed(&fp);
+        let b = solve_proposed(&fp);
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.objective, b.objective);
+        for (x, y) in a.agents.iter().zip(&b.agents) {
+            assert_eq!(
+                x.design.map(|d| d.b_hat),
+                y.design.map(|d| d.b_hat)
+            );
+        }
+        let r1 = solve_feasible_random(&fp, 3).objective;
+        let r2 = solve_feasible_random(&fp, 3).objective;
+        assert_eq!(r1, r2);
+    }
+}

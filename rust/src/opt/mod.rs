@@ -11,13 +11,19 @@
 //!   feasibility per b̂ is an analytic 2-D convex problem.
 //! * [`fixed_freq`], [`feasible_random`] — the paper's benchmark schemes 2
 //!   and 3; [`grid`] — exhaustive oracle for tests.
+//! * [`fleet`] — the multi-agent generalization: N agents contending for
+//!   one edge server (server-frequency shares) and one wireless medium
+//!   (airtime shares), solved by alternating per-agent bisection with a
+//!   water-filling outer loop plus admission control.
 
 pub mod bisection;
 pub mod convex;
 pub mod feasible_random;
 pub mod fixed_freq;
+pub mod fleet;
 pub mod grid;
 pub mod problem;
 pub mod sca;
 
+pub use fleet::{FleetAllocation, FleetAlgorithm, FleetProblem};
 pub use problem::{Design, Problem};

@@ -5,6 +5,12 @@
 //! inference is computation-dominated); the link here adds end-to-end
 //! realism to the coordinator and is *excluded* from the T/E constraint
 //! math, matching the paper. Deterministic jitter keeps runs reproducible.
+//!
+//! The fleet extension ([`MultiAccessChannel`]) divides one medium across
+//! N agents with TDMA/OFDMA-style airtime shares; there the uplink time
+//! *does* enter the fleet allocator's per-agent delay budget (see
+//! [`crate::opt::fleet`]), because a congested shared medium is no longer
+//! negligible against the computation delay.
 
 use crate::util::rng::Rng;
 
@@ -41,6 +47,12 @@ impl Channel {
         }
     }
 
+    /// Arbitrary link parameters (fleet subchannels, tests).
+    pub fn custom(rate_bps: f64, base_latency_s: f64, jitter: f64, seed: u64) -> Channel {
+        assert!(rate_bps >= 0.0 && base_latency_s >= 0.0 && (0.0..1.0).contains(&jitter));
+        Channel { rate_bps, base_latency_s, jitter, rng: Rng::new(seed) }
+    }
+
     /// Simulated transmission time for a payload of `bytes`.
     pub fn transmit_s(&mut self, bytes: usize) -> f64 {
         if self.rate_bps.is_infinite() {
@@ -53,6 +65,132 @@ impl Channel {
     /// Embedding payload size: tokens × d_model × 4 bytes (f32 features).
     pub fn embedding_bytes(tokens: usize, d_model: usize) -> usize {
         tokens * d_model * 4
+    }
+}
+
+/// One wireless medium shared by a fleet of N agents.
+///
+/// Multi-access is modeled as airtime shares α_i ∈ [0, 1] with
+/// Σ α_i ≤ 1 (TDMA slot fractions / OFDMA subcarrier fractions): agent i
+/// sees an effective goodput α_i · R, so its transmission delay is
+/// strictly decreasing in its share and an agent with α_i = 0 cannot
+/// transmit at all. Base MAC latency is per-message and share-independent.
+#[derive(Debug, Clone)]
+pub struct MultiAccessChannel {
+    /// total medium goodput R [bits/s]
+    pub total_rate_bps: f64,
+    /// fixed per-message latency [s]
+    pub base_latency_s: f64,
+    /// multiplicative jitter half-width (applied per transmission)
+    pub jitter: f64,
+    shares: Vec<f64>,
+    rng: Rng,
+}
+
+impl MultiAccessChannel {
+    /// Validates the share vector: every α_i ≥ 0 and Σ α_i ≤ 1 (+ulp).
+    pub fn new(
+        total_rate_bps: f64,
+        base_latency_s: f64,
+        jitter: f64,
+        shares: Vec<f64>,
+        seed: u64,
+    ) -> MultiAccessChannel {
+        assert!(!shares.is_empty(), "at least one agent");
+        assert!(
+            shares.iter().all(|&a| (0.0..=1.0).contains(&a)),
+            "airtime shares must lie in [0, 1]: {shares:?}"
+        );
+        let total: f64 = shares.iter().sum();
+        assert!(
+            total <= 1.0 + 1e-9,
+            "airtime shares must sum to <= 1, got {total} ({shares:?})"
+        );
+        MultiAccessChannel {
+            total_rate_bps,
+            base_latency_s,
+            jitter,
+            shares,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The testbed WLAN (400 Mbps, 2 ms, ±10%) split across the fleet.
+    pub fn wlan_5ghz(shares: Vec<f64>, seed: u64) -> MultiAccessChannel {
+        MultiAccessChannel::new(400e6, 2e-3, 0.10, shares, seed)
+    }
+
+    /// Infinite-rate medium for n agents (isolates computation).
+    pub fn ideal(n: usize) -> MultiAccessChannel {
+        MultiAccessChannel::new(f64::INFINITY, 0.0, 0.0, Self::equal_shares(n), 0)
+    }
+
+    /// The canonical uniform split: α_i = 1/n.
+    pub fn equal_shares(n: usize) -> Vec<f64> {
+        assert!(n > 0);
+        vec![1.0 / n as f64; n]
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.shares.len()
+    }
+
+    pub fn share(&self, agent: usize) -> f64 {
+        self.shares[agent]
+    }
+
+    pub fn shares(&self) -> &[f64] {
+        &self.shares
+    }
+
+    /// Replace the share vector (fleet re-allocation); same validation as
+    /// construction.
+    pub fn set_shares(&mut self, shares: Vec<f64>) {
+        assert_eq!(shares.len(), self.shares.len(), "fleet size is fixed");
+        assert!(shares.iter().all(|&a| (0.0..=1.0).contains(&a)));
+        assert!(shares.iter().sum::<f64>() <= 1.0 + 1e-9);
+        self.shares = shares;
+    }
+
+    /// Deterministic transmission time at a given share — the quantity the
+    /// fleet allocator budgets against (no jitter).
+    pub fn nominal_transmit_s(
+        total_rate_bps: f64,
+        base_latency_s: f64,
+        share: f64,
+        bytes: usize,
+    ) -> f64 {
+        if total_rate_bps.is_infinite() {
+            return base_latency_s;
+        }
+        if share <= 0.0 {
+            return f64::INFINITY; // the agent cannot transmit at all
+        }
+        base_latency_s + (bytes as f64 * 8.0) / (total_rate_bps * share)
+    }
+
+    /// Simulated (jittered) transmission time for `agent`.
+    pub fn transmit_s(&mut self, agent: usize, bytes: usize) -> f64 {
+        let share = self.shares[agent];
+        if self.total_rate_bps.is_infinite() {
+            return self.base_latency_s;
+        }
+        if share <= 0.0 {
+            return f64::INFINITY;
+        }
+        let wobble = 1.0 + self.jitter * (2.0 * self.rng.f64() - 1.0);
+        self.base_latency_s + (bytes as f64 * 8.0) / (self.total_rate_bps * share * wobble)
+    }
+
+    /// Per-agent single-link view (rate α_i · R): lets fleet components
+    /// reuse everything written against [`Channel`].
+    pub fn subchannel(&self, agent: usize, seed: u64) -> Channel {
+        Channel::custom(
+            self.total_rate_bps * self.shares[agent],
+            self.base_latency_s,
+            self.jitter,
+            seed,
+        )
     }
 }
 
@@ -90,5 +228,86 @@ mod tests {
     fn embedding_payload_matches_blip2ish() {
         // 16 query tokens × 128 dims × 4 B = 8 KiB
         assert_eq!(Channel::embedding_bytes(16, 128), 8192);
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to <= 1")]
+    fn oversubscribed_shares_rejected() {
+        MultiAccessChannel::wlan_5ghz(vec![0.6, 0.6], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "lie in [0, 1]")]
+    fn negative_share_rejected() {
+        MultiAccessChannel::wlan_5ghz(vec![0.5, -0.1], 1);
+    }
+
+    #[test]
+    fn equal_shares_sum_to_one() {
+        for n in [1usize, 3, 7, 64] {
+            let s = MultiAccessChannel::equal_shares(n);
+            assert_eq!(s.len(), n);
+            assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn delay_is_monotone_decreasing_in_share() {
+        let bytes = 1 << 20;
+        let mut prev = f64::INFINITY;
+        for share in [0.05, 0.1, 0.25, 0.5, 1.0] {
+            let t = MultiAccessChannel::nominal_transmit_s(400e6, 2e-3, share, bytes);
+            assert!(t < prev, "share {share}: {t} !< {prev}");
+            prev = t;
+        }
+        // full share reproduces the single-agent link exactly
+        let full = MultiAccessChannel::nominal_transmit_s(400e6, 2e-3, 1.0, bytes);
+        assert!((full - (2e-3 + (bytes as f64 * 8.0) / 400e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_share_cannot_transmit() {
+        let mut ch = MultiAccessChannel::wlan_5ghz(vec![0.0, 1.0], 3);
+        assert!(ch.transmit_s(0, 1000).is_infinite());
+        assert!(ch.transmit_s(1, 1000).is_finite());
+        assert!(MultiAccessChannel::nominal_transmit_s(400e6, 0.0, 0.0, 1000)
+            .is_infinite());
+    }
+
+    #[test]
+    fn jittered_transmit_brackets_nominal() {
+        let mut ch = MultiAccessChannel::wlan_5ghz(MultiAccessChannel::equal_shares(4), 9);
+        let nominal = MultiAccessChannel::nominal_transmit_s(400e6, 2e-3, 0.25, 1 << 20);
+        for _ in 0..200 {
+            let t = ch.transmit_s(2, 1 << 20);
+            assert!(t > nominal * 0.85 && t < nominal * 1.25, "{t} vs {nominal}");
+        }
+    }
+
+    #[test]
+    fn ideal_medium_is_free_for_everyone() {
+        let mut ch = MultiAccessChannel::ideal(8);
+        for agent in 0..8 {
+            assert_eq!(ch.transmit_s(agent, 1 << 30), 0.0);
+        }
+    }
+
+    #[test]
+    fn subchannel_sees_scaled_rate() {
+        let ch = MultiAccessChannel::wlan_5ghz(vec![0.25, 0.75], 5);
+        let sub = ch.subchannel(0, 11);
+        assert!((sub.rate_bps - 100e6).abs() < 1.0);
+        assert_eq!(sub.base_latency_s, 2e-3);
+    }
+
+    #[test]
+    fn set_shares_revalidates() {
+        let mut ch = MultiAccessChannel::wlan_5ghz(vec![0.5, 0.5], 1);
+        ch.set_shares(vec![0.9, 0.1]);
+        assert_eq!(ch.share(0), 0.9);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ch.set_shares(vec![0.9, 0.9]);
+        }));
+        assert!(res.is_err(), "oversubscription must be rejected");
     }
 }

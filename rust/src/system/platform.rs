@@ -65,6 +65,20 @@ impl Platform {
         }
     }
 
+    /// Multi-tenant fleet edge server (the [`crate::opt::fleet`]
+    /// scenario): the §VI-C agent silicon unchanged, but the shared edge
+    /// box is a serving-class machine an order of magnitude more
+    /// power-efficient (ψ̃ = 1e-29) than the paper's single-pair server.
+    /// That moves the binding server resource from energy to the
+    /// frequency budget f̃^max — the quantity the fleet allocator
+    /// partitions across agents — which is the regime where N agents
+    /// contending for one box is interesting at all.
+    pub fn fleet_edge() -> Platform {
+        let mut p = Platform::paper_blip2();
+        p.server.psi = 1.0e-29;
+        p
+    }
+
     /// GIT-base on VaTeX: 212.27 GFLOPs first-token workload, same silicon.
     pub fn paper_git() -> Platform {
         Platform {

@@ -43,6 +43,11 @@ impl Samples {
         self.xs.is_empty()
     }
 
+    /// Raw samples (fleet rollups merge per-agent collections).
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             return f64::NAN;

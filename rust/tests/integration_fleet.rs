@@ -1,0 +1,156 @@
+//! Fleet integration: the whole multi-agent path — contention model,
+//! joint allocator, admission control, serving loop — exercised through
+//! the public API, artifact-free.
+
+use qaci::coordinator::batcher::BatcherConfig;
+use qaci::data::workload::Arrival;
+use qaci::fleet::{sim, FleetSimConfig};
+use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem};
+use qaci::opt::{bisection, Problem};
+use qaci::system::Platform;
+
+fn mixed(n: usize) -> FleetProblem {
+    FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
+}
+
+/// The headline reduction: a fleet of one with the medium to itself is
+/// exactly the paper's single-pair joint design.
+#[test]
+fn fleet_of_one_is_the_single_agent_design() {
+    let fp = mixed(1).ideal_link();
+    let spec = fp.agents[0];
+    let single = bisection::solve(&Problem::new(
+        Platform::fleet_edge(),
+        spec.lambda,
+        spec.t0,
+        spec.e0,
+    ))
+    .expect("single-agent problem feasible");
+    let alloc = fleet::solve_proposed(&fp);
+    let d = alloc.agents[0].design.expect("admitted");
+    assert_eq!(d.b_hat, single.design.b_hat);
+    assert!((d.f - single.design.f).abs() / single.design.f < 1e-9);
+    assert!((d.f_tilde - single.design.f_tilde).abs() / single.design.f_tilde < 1e-9);
+    assert!((alloc.agents[0].server_share - 1.0).abs() < 1e-12);
+    assert!((alloc.agents[0].airtime_share - 1.0).abs() < 1e-12);
+}
+
+/// Proposed vs. baselines across fleet sizes: never worse than the equal
+/// split, strictly better once the shared server is contended (N >= 4),
+/// and at least as good as the random baseline's average.
+#[test]
+fn proposed_dominates_baselines_across_fleet_sizes() {
+    for n in [1usize, 2, 4, 8, 16] {
+        let fp = mixed(n);
+        let proposed = fleet::solve_proposed(&fp);
+        let equal = fleet::solve_equal_share(&fp);
+        assert!(
+            proposed.objective <= equal.objective + 1e-15,
+            "N={n}: {} vs {}",
+            proposed.objective,
+            equal.objective
+        );
+        if n >= 4 {
+            assert!(
+                proposed.objective < equal.objective * 0.999,
+                "N={n}: no strict improvement ({} vs {})",
+                proposed.objective,
+                equal.objective
+            );
+            assert!(proposed.weighted_d_upper(&fp) < equal.weighted_d_upper(&fp));
+        }
+        let random_mean = fleet::feasible_random_mean(&fp, 10, 9);
+        assert!(
+            random_mean >= proposed.objective - 1e-15,
+            "N={n}: random mean {random_mean} beat proposed {}",
+            proposed.objective
+        );
+    }
+}
+
+/// End-to-end serving pass at N = 8: allocation, per-agent routers and
+/// batchers, shared jittered medium, fleet telemetry rollup.
+#[test]
+fn fleet_serving_loop_end_to_end() {
+    let fp = mixed(8);
+    let alloc = fleet::solve_proposed(&fp);
+    assert!(alloc.admitted >= 6, "water-filling should seat most of N=8");
+    let report = sim::run(
+        &fp,
+        &alloc,
+        &FleetSimConfig {
+            requests_per_agent: 12,
+            arrival: Arrival::Poisson { lambda_rps: 1.5 },
+            seed: 5,
+            batcher: BatcherConfig::default(),
+        },
+    );
+    assert_eq!(report.served + report.rejected as usize, 8 * 12);
+    assert_eq!(report.served, alloc.admitted * 12);
+    assert_eq!(report.e2e_s.len(), report.served);
+    // compute-side QoS holds by construction; e2e adds queue + shared link
+    assert_eq!(report.qos_violations, 0);
+    assert!(report.e2e_s.p95() >= report.e2e_s.p50());
+    assert!(report.total_energy_j > 0.0);
+    assert_eq!(report.weighted_gap, alloc.objective);
+    // per-agent rollups are consistent with the fleet rollup
+    let per_agent_served: usize = report.per_agent.iter().map(|a| a.served).sum();
+    assert_eq!(per_agent_served, report.served);
+    for a in &report.per_agent {
+        if a.admitted {
+            assert!(a.b_hat >= 1 && a.b_hat <= fp.base.b_max);
+        } else {
+            assert_eq!(a.served, 0);
+        }
+    }
+}
+
+/// Overload regime: the equal split serves nobody at N = 32 on one paper
+/// server, while the proposed allocator's admission control keeps the
+/// high-priority slice of the fleet alive.
+#[test]
+fn admission_control_under_overload() {
+    let fp = mixed(32);
+    let equal = fleet::solve_equal_share(&fp);
+    assert_eq!(equal.admitted, 0);
+    let proposed = fleet::solve_proposed(&fp);
+    assert!(proposed.admitted >= 4, "expected a served subset, got {}", proposed.admitted);
+    assert!(proposed.objective < equal.objective - 1e-9);
+    // shares stay a valid partition under heavy reallocation
+    for shares in [proposed.server_shares(), proposed.airtime_shares()] {
+        assert!(shares.iter().all(|&s| (0.0..=1.0 + 1e-9).contains(&s)));
+        assert!(shares.iter().sum::<f64>() <= 1.0 + 1e-9);
+    }
+    // the serving loop surfaces the rejected traffic
+    let report = sim::run(
+        &fp,
+        &proposed,
+        &FleetSimConfig {
+            requests_per_agent: 4,
+            arrival: Arrival::Batch,
+            seed: 2,
+            batcher: BatcherConfig::default(),
+        },
+    );
+    assert_eq!(report.rejected, ((32 - proposed.admitted) * 4) as u64);
+}
+
+/// The three named algorithms all produce valid allocations via the
+/// dispatch entry point.
+#[test]
+fn algorithm_dispatch_and_parsing() {
+    let fp = mixed(4);
+    for (name, algorithm) in [
+        ("proposed", FleetAlgorithm::Proposed),
+        ("equal-share", FleetAlgorithm::EqualShare),
+        ("feasible-random", FleetAlgorithm::FeasibleRandom),
+    ] {
+        assert_eq!(FleetAlgorithm::parse(name), Some(algorithm));
+        assert_eq!(algorithm.name(), name);
+        let alloc = fleet::solve(&fp, algorithm, 13);
+        assert_eq!(alloc.agents.len(), 4);
+        assert!(alloc.objective.is_finite());
+    }
+    assert_eq!(FleetAlgorithm::parse("equal"), Some(FleetAlgorithm::EqualShare));
+    assert_eq!(FleetAlgorithm::parse("nope"), None);
+}

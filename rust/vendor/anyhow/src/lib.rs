@@ -1,0 +1,217 @@
+//! Vendored stand-in for the `anyhow` crate.
+//!
+//! The build container has no network access to crates.io, so this path
+//! dependency implements the (small) API subset the qaci codebase uses:
+//!
+//! * [`Result<T>`] with a defaulted error type
+//! * [`Error`] — a context-chained message error; `{e}` prints the
+//!   outermost context, `{e:#}` prints the whole chain (anyhow's
+//!   alternate formatting), `{e:?}` prints a "Caused by" report
+//! * [`Context`] — `.context(...)` / `.with_context(|| ...)` on both
+//!   `Result` and `Option`
+//! * [`anyhow!`], [`ensure!`], [`bail!`] macros
+//!
+//! Dropping the real `anyhow` back in is a one-line Cargo.toml change;
+//! nothing in the codebase relies on behavior beyond the above.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-chained error: `chain[0]` is the outermost context, the last
+/// element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `.context(...)` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Outermost-to-root iterator over the context chain.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if f.alternate() {
+            for cause in &self.chain[1..] {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent
+// (and makes `?` work on any std error).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/qaci")
+            .map(|_| ())
+            .context("reading config")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = fails_io().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("reading config: "), "{alt}");
+        assert!(alt.len() > "reading config: ".len());
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("value missing").unwrap_err();
+        assert_eq!(format!("{e}"), "value missing");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n > 2, "n too small: {n}");
+            ensure!(n < 100);
+            if n == 50 {
+                bail!("fifty is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(check(10).unwrap(), 10);
+        assert_eq!(format!("{}", check(1).unwrap_err()), "n too small: 1");
+        assert!(format!("{}", check(200).unwrap_err()).contains("condition failed"));
+        assert!(check(50).is_err());
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+    }
+}
