@@ -56,8 +56,15 @@ fn main() -> anyhow::Result<()> {
     );
     let mut table = Table::new(
         "end-to-end co-inference (BLIP-2-like on COCO-like)",
-        &["algorithm", "CIDEr(x100)", "mean b̂", "sim T p95 [ms]", "sim E mean [mJ]",
-          "wall [req/s]", "QoS viol"],
+        &[
+            "algorithm",
+            "CIDEr(x100)",
+            "mean b̂",
+            "sim T p95 [ms]",
+            "sim E mean [mJ]",
+            "wall [req/s]",
+            "QoS viol",
+        ],
     );
 
     for alg in [
@@ -66,8 +73,7 @@ fn main() -> anyhow::Result<()> {
         Algorithm::FixedFreq,
         Algorithm::FeasibleRandom,
     ] {
-        let mut scheduler =
-            Scheduler::new(platform, lambda, alg, Scheme::Uniform, 11);
+        let mut scheduler = Scheduler::new(platform, lambda, alg, Scheme::Uniform, 11);
         if alg == Algorithm::Ppo {
             let ranges = BudgetRanges {
                 t0: (0.8 * t_scale, 7.0 * t_scale),
@@ -114,8 +120,7 @@ fn main() -> anyhow::Result<()> {
 
     // show a few captions from the proposed configuration
     println!("\nsample captions (proposed design, standard class):");
-    let mut scheduler =
-        Scheduler::new(platform, lambda, Algorithm::Proposed, Scheme::Uniform, 11);
+    let mut scheduler = Scheduler::new(platform, lambda, Algorithm::Proposed, Scheme::Uniform, 11);
     let (t0, e0) = policy.budget("standard").unwrap();
     let plan = scheduler.plan(t0, e0).unwrap();
     for i in 0..4.min(eval.len()) {

@@ -21,8 +21,7 @@ fn main() {
     // N sweep: objective + admission per algorithm
     let mut t = Table::new(
         "fleet size sweep (fleet-weighted bound gap; lower is better)",
-        &["N", "proposed", "equal-share", "random (mean, 20)", "admitted prop.",
-          "admitted equal"],
+        &["N", "proposed", "equal-share", "random (mean, 20)", "admitted prop.", "admitted equal"],
     );
     for n in [1usize, 2, 4, 8, 16, 32, 64] {
         let fp = FleetProblem::new(base, AgentSpec::mixed_fleet(n));
@@ -47,8 +46,7 @@ fn main() {
     let equal = fleet::solve_equal_share(&fp);
     let mut t = Table::new(
         "per-agent outcome at N = 8 (b̂ / server share μ)",
-        &["agent", "class", "weight", "proposed b̂", "proposed μ", "equal b̂",
-          "equal μ"],
+        &["agent", "class", "weight", "proposed b̂", "proposed μ", "equal b̂", "equal μ"],
     );
     for i in 0..n {
         let fmt = |a: &fleet::AgentAllocation| match &a.design {

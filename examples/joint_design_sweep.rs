@@ -32,8 +32,15 @@ fn main() {
     // delay sweep at fixed E0 = 2 J (Fig. 5-left shape)
     let mut t = Table::new(
         "delay sweep @ E0 = 2.0 J",
-        &["T0 [s]", "proposed b̂", "f/f̃ [GHz]", "exact b̂", "fixed-freq b̂",
-          "rand mean gap", "proposed gap"],
+        &[
+            "T0 [s]",
+            "proposed b̂",
+            "f/f̃ [GHz]",
+            "exact b̂",
+            "fixed-freq b̂",
+            "rand mean gap",
+            "proposed gap",
+        ],
     );
     for t0 in [2.50, 2.75, 3.00, 3.25, 3.50, 3.75, 4.00] {
         let prob = Problem::new(platform, LAMBDA, t0, 2.0);
@@ -61,8 +68,15 @@ fn main() {
     // energy sweep at fixed T0 = 3.5 s (Fig. 5-right shape)
     let mut t = Table::new(
         "energy sweep @ T0 = 3.5 s",
-        &["E0 [J]", "proposed b̂", "f/f̃ [GHz]", "exact b̂", "fixed-freq b̂",
-          "rand mean gap", "proposed gap"],
+        &[
+            "E0 [J]",
+            "proposed b̂",
+            "f/f̃ [GHz]",
+            "exact b̂",
+            "fixed-freq b̂",
+            "rand mean gap",
+            "proposed gap",
+        ],
     );
     for e0 in [0.50, 1.00, 1.50, 2.00, 2.50, 3.00, 4.00] {
         let prob = Problem::new(platform, LAMBDA, 3.5, e0);

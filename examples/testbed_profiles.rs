@@ -75,8 +75,7 @@ fn main() -> anyhow::Result<()> {
             match scheduler.plan(t0, e0) {
                 None => row.push("infeasible".into()),
                 Some(_) => {
-                    let router =
-                        Router::new(QosPolicy::uniform(t0, e0), scheduler);
+                    let router = Router::new(QosPolicy::uniform(t0, e0), scheduler);
                     let mut engine = Engine::new(
                         &mut model,
                         router,

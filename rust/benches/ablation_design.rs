@@ -25,8 +25,7 @@ use qaci::util::timer::Stopwatch;
 fn a1_solver_ablation() {
     let mut t = Table::new(
         "A1 — solver ablation @ paper BLIP-2 platform",
-        &["(T0,E0)", "exact b̂", "SCA b̂", "grid32 b̂", "grid96 b̂",
-          "exact µs", "SCA µs", "grid96 µs"],
+        &["(T0,E0)", "exact b̂", "SCA b̂", "grid32 b̂", "grid96 b̂", "exact µs", "SCA µs", "grid96 µs"],
     );
     for (t0, e0) in [(2.5, 2.0), (3.0, 1.0), (3.5, 2.0), (4.0, 0.8)] {
         let prob = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
@@ -69,8 +68,7 @@ fn a2_batching(reg: &Registry) -> anyhow::Result<()> {
         &["max_batch", "req/s", "mean wall/req [ms]"],
     );
     for max_batch in [1usize, 2, 4] {
-        let scheduler =
-            Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
+        let scheduler = Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
         let router = Router::new(QosPolicy::uniform(3.5, 2.0), scheduler);
         let mut engine = Engine::new(
             &mut model,
@@ -114,10 +112,7 @@ fn a3_fixed_pin() {
 fn a4_weight_cache(reg: &Registry) -> anyhow::Result<()> {
     let mut model = CoModel::load(reg, "blip2ish")?;
     let eval = EvalSet::load(&reg.dir, &reg.manifest, "coco")?;
-    let mut t = Table::new(
-        "A4 — quantized-weight literal cache",
-        &["request", "encode wall [ms]"],
-    );
+    let mut t = Table::new("A4 — quantized-weight literal cache", &["request", "encode wall [ms]"]);
     let one = eval.sample(0).to_vec();
     // cold: first request at a fresh bit-width pays quantize+literals
     let sw = Stopwatch::start();

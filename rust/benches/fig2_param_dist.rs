@@ -56,20 +56,17 @@ fn main() -> anyhow::Result<()> {
             for (side, store) in
                 [("agent", &model.agent_weights), ("server", &model.server_weights)]
             {
-                let mags: Vec<f64> =
-                    store.blob.iter().map(|w| w.abs() as f64).collect();
+                let mags: Vec<f64> = store.blob.iter().map(|w| w.abs() as f64).collect();
                 report(&mut summary, &format!("{name}/{side}"), &mags);
             }
         }
         let fcdnn = qaci::runtime::executor::Fcdnn::load(&reg)?;
-        let mags: Vec<f64> =
-            fcdnn.weights.blob.iter().map(|w| w.abs() as f64).collect();
+        let mags: Vec<f64> = fcdnn.weights.blob.iter().map(|w| w.abs() as f64).collect();
         report(&mut summary, "fcdnn16", &mags);
 
         // density comparison for the headline model (the Fig. 2 panels)
         let model = CoModel::load(&reg, "blip2ish")?;
-        let mags: Vec<f64> =
-            model.agent_weights.blob.iter().map(|w| w.abs() as f64).collect();
+        let mags: Vec<f64> = model.agent_weights.blob.iter().map(|w| w.abs() as f64).collect();
         summary.print();
         density_rows("blip2ish/agent", &mags);
     } else {

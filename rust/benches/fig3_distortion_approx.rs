@@ -73,8 +73,7 @@ fn fcdnn_rows(reg: &Registry, scheme: Scheme) -> anyhow::Result<()> {
         let out_dist = stats::l1_dist(&y_full, &y_q);
         let param_dist = stats::l1_dist(&fcdnn.weights.blob, &qblob);
         let q_layers = to_layers(&qblob);
-        let prop31 =
-            distortion::output_distortion_bound(&full_layers, &q_layers) * max_x1;
+        let prop31 = distortion::output_distortion_bound(&full_layers, &q_layers) * max_x1;
         rows.push((bits, param_dist, out_dist, prop31));
     }
     let h = rows
@@ -84,8 +83,14 @@ fn fcdnn_rows(reg: &Registry, scheme: Scheme) -> anyhow::Result<()> {
 
     let mut t = Table::new(
         &format!("Fig. 3 FCDNN-16 / {} quantization (H={h:.3e})", scheme.name()),
-        &["b̂", "param L1 (eq.15)", "H·param (bound)", "output L1 (measured)",
-          "bound/meas", "Prop3.1 product (log10)"],
+        &[
+            "b̂",
+            "param L1 (eq.15)",
+            "H·param (bound)",
+            "output L1 (measured)",
+            "bound/meas",
+            "Prop3.1 product (log10)",
+        ],
     );
     for (bits, param, out, prop31) in rows {
         t.row(&[
@@ -131,8 +136,7 @@ fn captioner_rows(reg: &Registry, name: &str, scheme: Scheme) -> anyhow::Result<
 
     let mut t = Table::new(
         &format!("Fig. 3 {name} / {} quantization (H={h:.3e})", scheme.name()),
-        &["b̂", "param L1 (eq.15)", "H·param (bound)", "output L1 (measured)",
-          "bound/meas"],
+        &["b̂", "param L1 (eq.15)", "H·param (bound)", "output L1 (measured)", "bound/meas"],
     );
     for (bits, param, out) in pairs {
         t.row(&[

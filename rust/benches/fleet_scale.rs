@@ -18,8 +18,18 @@ use qaci::util::timer::Stopwatch;
 fn main() {
     let mut t = Table::new(
         "fleet scale: N agents on one edge server + one medium (mixed QoS fleet)",
-        &["N", "algorithm", "admitted", "wgt gap", "wgt D^U", "e2e p50 [s]",
-          "e2e p95 [s]", "E/req [J]", "alloc [ms]", "plans/s"],
+        &[
+            "N",
+            "algorithm",
+            "admitted",
+            "wgt gap",
+            "wgt D^U",
+            "e2e p50 [s]",
+            "e2e p95 [s]",
+            "E/req [J]",
+            "alloc [ms]",
+            "plans/s",
+        ],
     );
     for n in [1usize, 2, 4, 8, 16, 32, 64] {
         let fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n));
@@ -39,6 +49,7 @@ fn main() {
                     arrival: Arrival::Poisson { lambda_rps: 2.0 },
                     seed: 1,
                     batcher: BatcherConfig::default(),
+                    queue: None,
                 },
             );
             let (p50, p95, epr) = if report.served > 0 {

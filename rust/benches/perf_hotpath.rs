@@ -91,23 +91,20 @@ fn main() -> anyhow::Result<()> {
     });
     time("scheduler plan: cached", 2, iters, || {
         let mut s =
-            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact,
-                           Scheme::Uniform, 1);
+            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact, Scheme::Uniform, 1);
         s.plan(3.5, 2.0).unwrap();
         s.plan(3.5, 2.0).unwrap(); // warm
     });
 
     // ---- L3: metrics + routing (no PJRT) ---------------------------------
     let scorer = CiderScorer::new(&eval.refs);
-    let candidates: Vec<String> =
-        (0..eval.len()).map(|i| eval.refs[i][0].clone()).collect();
+    let candidates: Vec<String> = (0..eval.len()).map(|i| eval.refs[i][0].clone()).collect();
     time("CIDEr corpus scoring (64 candidates)", 2, iters, || {
         scorer.score(&candidates);
     });
     time("router+batcher 1k requests (no exec)", 2, scaled(20), || {
         let scheduler =
-            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact,
-                           Scheme::Uniform, 1);
+            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact, Scheme::Uniform, 1);
         let mut router = Router::new(QosPolicy::paper_default(), scheduler);
         let mut batcher = Batcher::new(BatcherConfig::default());
         let mut count = 0;
@@ -127,17 +124,34 @@ fn main() -> anyhow::Result<()> {
         "L1 Pallas kernel structure (TPU estimates; interpret mode is not a perf proxy)",
         &["kernel", "block", "VMEM/block", "MXU-aligned", "est. utilization"],
     );
-    t.row(&["matmul".into(), "128x128x512".into(),
-            format!("{} KiB", (128 * 512 + 512 * 128 + 128 * 128) * 4 / 1024),
-            "yes (128 lanes)".into(), "~0.85 (K-major accum)".into()]);
-    t.row(&["fake_quant".into(), "8x128".into(),
-            format!("{} KiB", 8 * 128 * 4 * 2 / 1024),
-            "yes (8 sublanes)".into(), "VPU elementwise".into()]);
-    t.row(&["attention".into(), "per-head lq*dh".into(),
-            format!("{} KiB", (64 * 32 * 3 + 64 * 64) * 4 / 1024),
-            "dh=32 sublane packed".into(), "fused softmax".into()]);
-    t.row(&["layernorm".into(), "8x128".into(), "8 KiB".into(),
-            "yes".into(), "single HBM pass".into()]);
+    t.row(&[
+        "matmul".into(),
+        "128x128x512".into(),
+        format!("{} KiB", (128 * 512 + 512 * 128 + 128 * 128) * 4 / 1024),
+        "yes (128 lanes)".into(),
+        "~0.85 (K-major accum)".into(),
+    ]);
+    t.row(&[
+        "fake_quant".into(),
+        "8x128".into(),
+        format!("{} KiB", 8 * 128 * 4 * 2 / 1024),
+        "yes (8 sublanes)".into(),
+        "VPU elementwise".into(),
+    ]);
+    t.row(&[
+        "attention".into(),
+        "per-head lq*dh".into(),
+        format!("{} KiB", (64 * 32 * 3 + 64 * 64) * 4 / 1024),
+        "dh=32 sublane packed".into(),
+        "fused softmax".into(),
+    ]);
+    t.row(&[
+        "layernorm".into(),
+        "8x128".into(),
+        "8 KiB".into(),
+        "yes".into(),
+        "single HBM pass".into(),
+    ]);
     t.print();
 
     // ---- L2: lowered module size audit -----------------------------------
@@ -145,13 +159,19 @@ fn main() -> anyhow::Result<()> {
         "L2 lowered HLO audit (fusion health: chars ~ op count)",
         &["module", "HLO chars", "while-loops", "fusions"],
     );
-    for f in ["blip2ish_agent_b1.hlo.txt", "blip2ish_server_b1.hlo.txt",
-              "gitish_agent_b1.hlo.txt", "fcdnn16_b8.hlo.txt"] {
+    for f in [
+        "blip2ish_agent_b1.hlo.txt",
+        "blip2ish_server_b1.hlo.txt",
+        "gitish_agent_b1.hlo.txt",
+        "fcdnn16_b8.hlo.txt",
+    ] {
         let text = std::fs::read_to_string(reg.dir.join(f))?;
-        t.row(&[f.into(),
-                format!("{}", text.len()),
-                format!("{}", text.matches("while(").count()),
-                format!("{}", text.matches("fusion").count())]);
+        t.row(&[
+            f.into(),
+            format!("{}", text.len()),
+            format!("{}", text.matches("while(").count()),
+            format!("{}", text.matches("fusion").count()),
+        ]);
     }
     t.print();
     Ok(())

@@ -63,13 +63,15 @@ fn main() -> anyhow::Result<()> {
 
         let mut table = Table::new(
             &format!("Table I — {model_name} testbed CIDEr(x100), coarse profiles"),
-            &["profile",
-              &format!("T0={:.2}s", delay_budgets[0]),
-              &format!("T0={:.2}s", delay_budgets[1]),
-              &format!("T0={:.2}s", delay_budgets[2]),
-              &format!("E0={:.1}J", energy_budgets[0]),
-              &format!("E0={:.1}J", energy_budgets[1]),
-              &format!("E0={:.1}J", energy_budgets[2])],
+            &[
+                "profile",
+                &format!("T0={:.2}s", delay_budgets[0]),
+                &format!("T0={:.2}s", delay_budgets[1]),
+                &format!("T0={:.2}s", delay_budgets[2]),
+                &format!("E0={:.1}J", energy_budgets[0]),
+                &format!("E0={:.1}J", energy_budgets[1]),
+                &format!("E0={:.1}J", energy_budgets[2]),
+            ],
         );
 
         for profile in ["low", "medium", "high"] {

@@ -9,6 +9,7 @@ use qaci::coordinator::server::PipelinedServer;
 use qaci::data::eval::EvalSet;
 use qaci::data::vocab::Vocab;
 use qaci::data::workload::{generate, Arrival};
+use qaci::fleet::churn::{self, ChurnConfig};
 use qaci::fleet::{sim as fleet_sim, FleetSimConfig};
 use qaci::opt::fleet::{self as fleet_opt, AgentSpec, FleetAlgorithm, FleetProblem};
 use qaci::opt::{bisection, sca, Problem};
@@ -17,6 +18,7 @@ use qaci::rl::env::BudgetRanges;
 use qaci::rl::PpoConfig;
 use qaci::runtime::executor::CoModel;
 use qaci::runtime::Registry;
+use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
 use qaci::theory::expdist::ExponentialModel;
 use qaci::util::cli::Args;
@@ -28,14 +30,33 @@ pub fn main() {
         .describe("t0", "delay budget [s]", Some("3.5"))
         .describe("e0", "energy budget [J]", Some("2.0"))
         .describe("model", "blip2ish | gitish", Some("blip2ish"))
-        .describe("algorithm", "proposed|exact|ppo|fixed-freq|random (fleet: proposed|equal|random)", Some("proposed"))
+        .describe(
+            "algorithm",
+            "proposed|exact|ppo|fixed-freq|random (fleet: proposed|equal|random)",
+            Some("proposed"),
+        )
         .describe("scheme", "uniform | pot", Some("uniform"))
         .describe("requests", "number of requests (fleet: per agent, default 16)", Some("32"))
         .describe("rps", "Poisson arrival rate (fleet default 2)", Some("20"))
         .describe("seed", "rng seed", Some("0"))
         .describe("paper-platform", "use paper FLOPs instead of measured", None)
         .describe("agents", "fleet size N (fleet subcommand)", Some("8"))
-        .describe("rate-mbps", "shared uplink goodput (fleet)", Some("400"));
+        .describe("rate-mbps", "shared uplink goodput (fleet)", Some("400"))
+        .describe(
+            "queue",
+            "shared edge queue: fifo | priority | off (churn default fifo)",
+            Some("off"),
+        )
+        .describe("churn", "fleet: run the churn comparison instead of one allocation", None)
+        .describe("horizon", "churn: simulated horizon [s]", Some("600"))
+        .describe("join-rps", "churn: Poisson join rate [1/s]", Some("0.02"))
+        .describe("leave-rps", "churn: per-agent leave rate [1/s]", Some("0.003"))
+        .describe("burst-rps", "churn: load-burst start rate [1/s]", Some("0.01"))
+        .describe("burst-factor", "churn: arrival multiplier during a burst", Some("5"))
+        .describe("burst-dur", "churn: burst duration [s]", Some("40"))
+        .describe("tick", "churn: fingerprint re-check period [s]", Some("20"))
+        .describe("max-agents", "churn: population cap", Some("16"))
+        .describe("arrival-rps", "churn: steady per-agent request rate [1/s]", Some("0.02"));
     let unknown = args.unknown_keys();
     if !unknown.is_empty() {
         eprintln!("unknown flags: {unknown:?}");
@@ -89,10 +110,8 @@ fn platform_for(args: &Args, model: &CoModel) -> Platform {
 fn scheduler_for(args: &Args, platform: Platform, lambda: f64) -> Scheduler {
     let algorithm = Algorithm::parse(&args.str("algorithm", "proposed"))
         .unwrap_or(Algorithm::Proposed);
-    let scheme =
-        Scheme::parse(&args.str("scheme", "uniform")).unwrap_or(Scheme::Uniform);
-    let mut s = Scheduler::new(platform, lambda, algorithm, scheme,
-                               args.usize("seed", 0) as u64);
+    let scheme = Scheme::parse(&args.str("scheme", "uniform")).unwrap_or(Scheme::Uniform);
+    let mut s = Scheduler::new(platform, lambda, algorithm, scheme, args.usize("seed", 0) as u64);
     if algorithm == Algorithm::Ppo {
         eprintln!("training PPO policy (one-time)...");
         s.train_ppo(BudgetRanges::default(), PpoConfig::default());
@@ -294,19 +313,37 @@ fn cmd_serve(args: &Args) -> i32 {
 
 /// Fleet-scale co-inference: joint multi-agent allocation + serving-loop
 /// simulation. Artifact-free (analytic models only), so it runs anywhere.
+/// `--churn` switches to the online-re-allocation comparison.
 fn cmd_fleet(args: &Args) -> i32 {
+    if args.has("churn") {
+        return cmd_fleet_churn(args);
+    }
     let n = args.usize("agents", 8).max(1);
     let algorithm = FleetAlgorithm::parse(&args.str("algorithm", "proposed"))
         .unwrap_or(FleetAlgorithm::Proposed);
     let seed = args.usize("seed", 0) as u64;
-    let fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
+    let queue = QueueDiscipline::parse(&args.str("queue", "off"));
+    // with the queue on, the allocator's analytic load and the simulated
+    // arrivals must describe the same traffic: one rate drives both
+    // (explicit --rps still wins for stress runs)
+    let arrival_rps = if queue.is_some() && !args.has("rps") {
+        args.f64("arrival-rps", 0.02)
+    } else {
+        args.f64("rps", 2.0)
+    };
+    let mut fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
         .with_link(args.f64("rate-mbps", 400.0) * 1e6, 2e-3);
+    if let Some(discipline) = queue {
+        fp = fp.with_queue(QueueModel::uniform(discipline, n, arrival_rps));
+    }
     println!(
         "fleet: N={n} agents, shared server f̃^max={:.1} GHz, shared uplink {:.0} Mbps, \
-         algorithm={}",
+         algorithm={}, queue={}, arrivals {:.3}/s per agent",
         fp.base.server.f_max / 1e9,
         fp.link_rate_bps / 1e6,
-        algorithm.name()
+        algorithm.name(),
+        queue.map_or("off", QueueDiscipline::name),
+        arrival_rps
     );
 
     let sw = Stopwatch::start();
@@ -315,16 +352,19 @@ fn cmd_fleet(args: &Args) -> i32 {
 
     let cfg = FleetSimConfig {
         requests_per_agent: args.usize("requests", 16),
-        arrival: Arrival::Poisson { lambda_rps: args.f64("rps", 2.0) },
+        arrival: Arrival::Poisson { lambda_rps: arrival_rps },
         seed,
         batcher: BatcherConfig::default(),
+        queue,
     };
     let report = fleet_sim::run(&fp, &alloc, &cfg);
 
     let mut t = Table::new(
         "per-agent allocation",
-        &["agent", "class", "w", "T0", "E0", "b̂", "μ", "α", "link ms",
-          "e2e p50", "e2e p95", "E mean", "served"],
+        &[
+            "agent", "class", "w", "T0", "E0", "b̂", "μ", "α", "link ms", "e2e p50", "e2e p95",
+            "E mean", "served",
+        ],
     );
     for (a, spec) in report.per_agent.iter().zip(&fp.agents) {
         let slot = &alloc.agents[a.agent];
@@ -367,6 +407,14 @@ fn cmd_fleet(args: &Args) -> i32 {
             report.served,
             report.rejected
         );
+        if queue.is_some() {
+            println!(
+                "  edge-queue wait: p50 {:.3}s  p95 {:.3}s  max {:.3}s",
+                report.queue_wait_s.p50(),
+                report.queue_wait_s.p95(),
+                report.queue_wait_s.max()
+            );
+        }
     } else {
         println!("  no requests served (fleet inadmissible); rejected {}", report.rejected);
     }
@@ -381,6 +429,92 @@ fn cmd_fleet(args: &Args) -> i32 {
         1
     } else {
         0
+    }
+}
+
+/// `qaci fleet --churn`: replay one churn timeline (Poisson joins,
+/// leaves, load bursts) under the static t=0 allocations and the online
+/// warm-started re-allocation, and compare time-averaged fleet cost.
+fn cmd_fleet_churn(args: &Args) -> i32 {
+    let cfg = ChurnConfig {
+        initial_agents: args.usize("agents", 4).max(1),
+        horizon_s: args.f64("horizon", 600.0),
+        join_rps: args.f64("join-rps", 0.02),
+        leave_rps_per_agent: args.f64("leave-rps", 0.003),
+        burst_rps: args.f64("burst-rps", 0.01),
+        burst_factor: args.f64("burst-factor", 5.0),
+        burst_duration_s: args.f64("burst-dur", 40.0),
+        tick_s: args.f64("tick", 20.0),
+        max_agents: args.usize("max-agents", 16),
+        arrival_rps: args.f64("arrival-rps", 0.02),
+        queue: QueueDiscipline::parse(&args.str("queue", "fifo")),
+        link_rate_bps: args.f64("rate-mbps", 400.0) * 1e6,
+        link_base_latency_s: 2e-3,
+        seed: args.usize("seed", 0) as u64,
+    };
+    let (tl, reports) = churn::compare(Platform::fleet_edge(), &cfg);
+    println!(
+        "churn: N0={} agents, horizon {:.0}s, {} events ({} joins, {} leaves, {} bursts), \
+         queue={}",
+        cfg.initial_agents,
+        cfg.horizon_s,
+        tl.events.len(),
+        tl.joins,
+        tl.leaves,
+        tl.bursts,
+        cfg.queue.map_or("off", QueueDiscipline::name)
+    );
+
+    let mut t = Table::new(
+        "policy comparison (time-averaged fleet-weighted cost; lower is better)",
+        &[
+            "policy",
+            "avg cost",
+            "avg D^U",
+            "reallocs",
+            "skipped",
+            "solve p50 ms",
+            "solve max ms",
+            "final N",
+            "final admitted",
+        ],
+    );
+    for r in &reports {
+        t.row(&[
+            r.policy.name().to_string(),
+            format!("{:.4e}", r.time_avg_cost),
+            format!("{:.4e}", r.time_avg_d_upper),
+            format!("{}", r.reallocations),
+            format!("{}", r.realloc_skipped),
+            format!("{:.2}", r.solve_ms.p50()),
+            format!("{:.2}", r.solve_ms.max()),
+            format!("{}", r.final_population),
+            format!("{}", r.final_alloc.admitted),
+        ]);
+    }
+    t.print();
+
+    let cost = |name: &str| {
+        reports
+            .iter()
+            .find(|r| r.policy.name() == name)
+            .map(|r| r.time_avg_cost)
+            .unwrap_or(f64::INFINITY)
+    };
+    let online = cost("online-proposed");
+    let best_static = cost("static-equal").min(cost("static-proposed"));
+    if tl.events.is_empty() || tl.joins + tl.leaves + tl.bursts == 0 {
+        println!("\nno churn events fired — static and online coincide by design");
+        0
+    } else if online < best_static {
+        println!(
+            "\nOK: online re-allocation beats the best static policy by {:.1}%",
+            (1.0 - online / best_static) * 100.0
+        );
+        0
+    } else {
+        println!("\nWARNING: online did not beat the best static policy");
+        1
     }
 }
 

@@ -104,8 +104,7 @@ mod tests {
     fn routed(n: usize, seed: u64) -> Vec<RoutedRequest> {
         let mut router = Router::new(
             QosPolicy::paper_default(),
-            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact,
-                           Scheme::Uniform, 1),
+            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact, Scheme::Uniform, 1),
         );
         generate(n, 16, Arrival::Poisson { lambda_rps: 100.0 }, seed)
             .into_iter()

@@ -88,8 +88,7 @@ impl<'a> Engine<'a> {
         // uplink: one transfer per request's embedding
         let emb_bytes =
             Channel::embedding_bytes(self.model.dims.emb_tokens, self.model.dims.d_model);
-        let link_times: Vec<f64> =
-            (0..n).map(|_| self.channel.transmit_s(emb_bytes)).collect();
+        let link_times: Vec<f64> = (0..n).map(|_| self.channel.transmit_s(emb_bytes)).collect();
         // edge stage
         let tokens = self.model.decode(&embs, n)?;
         let wall = sw.elapsed_s() / n as f64;

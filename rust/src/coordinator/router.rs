@@ -30,11 +30,7 @@ impl QosPolicy {
 
     /// A uniform single-budget policy (figure sweeps).
     pub fn uniform(t0: f64, e0: f64) -> QosPolicy {
-        QosPolicy::new(&[
-            ("interactive", t0, e0),
-            ("standard", t0, e0),
-            ("background", t0, e0),
-        ])
+        QosPolicy::new(&[("interactive", t0, e0), ("standard", t0, e0), ("background", t0, e0)])
     }
 
     pub fn budget(&self, class: &str) -> Option<(f64, f64)> {
@@ -103,8 +99,7 @@ mod tests {
     fn router() -> Router {
         Router::new(
             QosPolicy::paper_default(),
-            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact,
-                           Scheme::Uniform, 3),
+            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact, Scheme::Uniform, 3),
         )
     }
 
@@ -146,8 +141,7 @@ mod tests {
     fn infeasible_budget_is_rejected() {
         let mut r = Router::new(
             QosPolicy::uniform(1e-9, 1e-12),
-            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact,
-                           Scheme::Uniform, 3),
+            Scheduler::new(Platform::paper_blip2(), 15.0, Algorithm::Exact, Scheme::Uniform, 3),
         );
         let req = Request { id: 0, sample: 0, arrival_s: 0.0, class: "standard" };
         assert!(matches!(r.route(req), Err(RouteError::Infeasible { .. })));

@@ -68,9 +68,7 @@ impl PipelinedServer {
 
         let mut telemetry = Telemetry::default();
         let mut batcher = Batcher::new(self.batcher_cfg);
-        let submit = |batch: super::batcher::Batch,
-                          tx: &Sender<AgentJob>|
-         -> Result<()> {
+        let submit = |batch: super::batcher::Batch, tx: &Sender<AgentJob>| -> Result<()> {
             let scheme = batch.requests[0].plan.scheme;
             let mut inputs = Vec::new();
             let mut records = Vec::with_capacity(batch.requests.len());
@@ -86,8 +84,7 @@ impl PipelinedServer {
                     sample: rr.request.sample,
                     b_hat: rr.plan.design.b_hat,
                     t_agent_sim_s: delay::agent_delay(&platform, b, rr.plan.f_realized),
-                    t_server_sim_s: delay::server_delay(
-                        &platform, rr.plan.f_tilde_realized),
+                    t_server_sim_s: delay::server_delay(&platform, rr.plan.f_tilde_realized),
                     t_link_s: 0.0,
                     energy_sim_j: energy::total_energy(
                         &platform, b, rr.plan.f_realized, rr.plan.f_tilde_realized),
@@ -150,8 +147,7 @@ fn spawn_agent_stage(
             let reg = Registry::open(&artifacts)?;
             let mut model = CoModel::load(&reg, &model_name)?;
             let mut channel = Channel::wlan_5ghz(0xA9E17);
-            let emb_bytes =
-                Channel::embedding_bytes(model.dims.emb_tokens, model.dims.d_model);
+            let emb_bytes = Channel::embedding_bytes(model.dims.emb_tokens, model.dims.d_model);
             while let Some(mut job) = rx.recv() {
                 let n = job.records.len();
                 let sw = Stopwatch::start();

@@ -97,8 +97,7 @@ impl FigureRunner {
         seed: u64,
     ) -> anyhow::Result<Vec<QualityPoint>> {
         let lambda = self.model.agent_weights.lambda;
-        let mut scheduler =
-            Scheduler::new(self.platform, lambda, algorithm, scheme, seed);
+        let mut scheduler = Scheduler::new(self.platform, lambda, algorithm, scheme, seed);
         if algorithm == Algorithm::Ppo {
             let pts = sweep.points();
             let (t_lo, t_hi) = pts

@@ -1,0 +1,654 @@
+//! Event-driven churn: agents join, burst and leave while contending for
+//! one edge server — and the allocation follows them online.
+//!
+//! The static allocator ([`crate::opt::fleet`]) answers "who gets what"
+//! for a fixed population; this module answers what the paper's
+//! single-shot design cannot: **what happens when the population changes
+//! mid-flight**. A deterministic [`Timeline`] of Poisson joins, leaves
+//! and load bursts is generated once per seed and replayed under three
+//! policies:
+//!
+//! * [`ChurnPolicy::StaticEqual`] / [`ChurnPolicy::StaticProposed`] —
+//!   the allocation computed at t = 0 is kept forever: departed agents'
+//!   shares idle, joiners are turned away (rejection penalty), and a
+//!   burst that blows an agent's queue-aware delay budget turns its
+//!   frozen design infeasible (penalty while the burst lasts);
+//! * [`ChurnPolicy::Online`] — every event re-fingerprints the fleet
+//!   problem (the same config-fingerprint idiom the coordinator's
+//!   [`Scheduler`](crate::coordinator::Scheduler) uses to invalidate its
+//!   plan cache); on a change, the water-filling exchange re-runs
+//!   **warm-started** from the previous allocation
+//!   ([`crate::opt::fleet::solve_proposed_warm`]). Periodic `Tick`
+//!   events re-check the fingerprint and are counted as skipped
+//!   re-allocations when nothing changed — with churn disabled the
+//!   online path therefore never re-solves and reproduces the static
+//!   proposed allocation exactly.
+//!
+//! The score is the **time-averaged fleet-weighted distortion cost**
+//! (the (P1) objective integrated over the horizon, rejection penalties
+//! included), plus the matching time-averaged weighted D^U.
+
+use crate::opt::fleet::{
+    self, AgentAllocation, AgentSpec, FleetAllocation, FleetProblem, ProposedOptions,
+};
+use crate::system::queue::{QueueDiscipline, QueueModel};
+use crate::system::Platform;
+use crate::theory::rate_distortion as rd;
+use crate::util::rng::Rng;
+use crate::util::timer::{Samples, Stopwatch};
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+
+/// Knobs for a churn run. Rates are per second of simulated time.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnConfig {
+    /// population at t = 0
+    pub initial_agents: usize,
+    pub horizon_s: f64,
+    /// Poisson rate of agents joining (suppressed at `max_agents`)
+    pub join_rps: f64,
+    /// per-live-agent Poisson rate of leaving (suppressed at 1 agent)
+    pub leave_rps_per_agent: f64,
+    /// Poisson rate of load bursts starting (on a non-bursting agent)
+    pub burst_rps: f64,
+    /// arrival-rate multiplier while an agent bursts
+    pub burst_factor: f64,
+    pub burst_duration_s: f64,
+    /// period of fingerprint re-check ticks (0 disables them)
+    pub tick_s: f64,
+    pub max_agents: usize,
+    /// steady-state per-agent request rate (feeds the queue model)
+    pub arrival_rps: f64,
+    /// shared edge-queue discipline; `None` = PR 1's fluid sharing (load
+    /// bursts are then invisible to the allocator)
+    pub queue: Option<QueueDiscipline>,
+    /// shared uplink
+    pub link_rate_bps: f64,
+    pub link_base_latency_s: f64,
+    pub seed: u64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            initial_agents: 4,
+            horizon_s: 600.0,
+            join_rps: 0.02,
+            leave_rps_per_agent: 0.003,
+            burst_rps: 0.01,
+            burst_factor: 5.0,
+            burst_duration_s: 40.0,
+            tick_s: 20.0,
+            max_agents: 16,
+            arrival_rps: 0.02,
+            queue: Some(QueueDiscipline::Fifo),
+            link_rate_bps: 400e6,
+            link_base_latency_s: 2e-3,
+            seed: 0,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// Same fleet, zero churn: only ticks fire. The online policy must
+    /// then reproduce the static proposed allocation exactly.
+    pub fn without_churn(mut self) -> ChurnConfig {
+        self.join_rps = 0.0;
+        self.leave_rps_per_agent = 0.0;
+        self.burst_rps = 0.0;
+        self
+    }
+}
+
+/// One population change. Agents are identified by a stable key; the
+/// key also determines the agent's QoS contract
+/// ([`AgentSpec::class_spec`]), so a replayed timeline is exactly
+/// reproducible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEvent {
+    Join(u64),
+    Leave(u64),
+    BurstStart(u64),
+    BurstEnd(u64),
+    /// periodic fingerprint re-check (no state change)
+    Tick,
+}
+
+/// A pre-generated event schedule, shared verbatim by every policy so
+/// the comparison is apples-to-apples.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    /// keys live at t = 0
+    pub initial: Vec<u64>,
+    /// (time, event), non-decreasing in time, all ≤ the horizon
+    pub events: Vec<(f64, ChurnEvent)>,
+    pub joins: usize,
+    pub leaves: usize,
+    pub bursts: usize,
+}
+
+/// Generate the churn timeline for a config (deterministic per seed).
+pub fn timeline(cfg: &ChurnConfig) -> Timeline {
+    assert!(cfg.initial_agents >= 1 && cfg.horizon_s > 0.0);
+    let mut rng = Rng::new(cfg.seed ^ 0xC0FF_EE00);
+    let mut events: Vec<(f64, ChurnEvent)> = Vec::new();
+    let mut live: Vec<u64> = (0..cfg.initial_agents as u64).collect();
+    let mut next_key = cfg.initial_agents as u64;
+    // pending burst ends, kept sorted by end time
+    let mut burst_ends: Vec<(f64, u64)> = Vec::new();
+    let mut next_tick = if cfg.tick_s > 0.0 { cfg.tick_s } else { f64::INFINITY };
+    let mut t = 0.0;
+    let (mut joins, mut leaves, mut bursts) = (0usize, 0usize, 0usize);
+    loop {
+        let bursting: HashSet<u64> = burst_ends.iter().map(|&(_, k)| k).collect();
+        let idle: Vec<u64> = live.iter().copied().filter(|k| !bursting.contains(k)).collect();
+        let r_join = if live.len() < cfg.max_agents { cfg.join_rps } else { 0.0 };
+        let r_leave = if live.len() > 1 {
+            cfg.leave_rps_per_agent * live.len() as f64
+        } else {
+            0.0
+        };
+        let r_burst = if idle.is_empty() { 0.0 } else { cfg.burst_rps };
+        let total = r_join + r_leave + r_burst;
+        let t_next = if total > 0.0 { t + rng.exponential(total) } else { f64::INFINITY };
+        // deterministic events (burst ends, ticks) due before the next
+        // random event fire first
+        let mut burst_end_fired = None;
+        loop {
+            let end = burst_ends.first().map_or(f64::INFINITY, |&(e, _)| e);
+            let due = end.min(next_tick);
+            if due > t_next || due > cfg.horizon_s {
+                break;
+            }
+            if end <= next_tick {
+                let (e, k) = burst_ends.remove(0);
+                events.push((e, ChurnEvent::BurstEnd(k)));
+                burst_end_fired = Some(e);
+            } else {
+                events.push((next_tick, ChurnEvent::Tick));
+                next_tick += cfg.tick_s;
+            }
+        }
+        if t_next > cfg.horizon_s {
+            // an all-suppressed rate vector (e.g. a 1-agent fleet whose
+            // only member is mid-burst) is not terminal: a burst end that
+            // just fired restores eligibility, so resume the clock there
+            // instead of silently ending the timeline
+            if total <= 0.0 {
+                if let Some(resume) = burst_end_fired {
+                    t = resume;
+                    continue;
+                }
+            }
+            break;
+        }
+        t = t_next;
+        let pick = rng.f64() * total;
+        if pick < r_join {
+            let key = next_key;
+            next_key += 1;
+            live.push(key);
+            events.push((t, ChurnEvent::Join(key)));
+            joins += 1;
+        } else if pick < r_join + r_leave {
+            let key = live.remove(rng.below(live.len()));
+            burst_ends.retain(|&(_, k)| k != key);
+            events.push((t, ChurnEvent::Leave(key)));
+            leaves += 1;
+        } else {
+            let key = idle[rng.below(idle.len())];
+            let end = t + cfg.burst_duration_s;
+            let at = burst_ends.partition_point(|&(e, _)| e <= end);
+            burst_ends.insert(at, (end, key));
+            events.push((t, ChurnEvent::BurstStart(key)));
+            bursts += 1;
+        }
+    }
+    Timeline { initial: (0..cfg.initial_agents as u64).collect(), events, joins, leaves, bursts }
+}
+
+/// Which allocation policy rides the timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChurnPolicy {
+    /// equal split frozen at t = 0
+    StaticEqual,
+    /// proposed allocation frozen at t = 0
+    StaticProposed,
+    /// warm-started proposed re-allocation on every fingerprint change
+    Online,
+}
+
+impl ChurnPolicy {
+    pub const ALL: [ChurnPolicy; 3] =
+        [ChurnPolicy::StaticEqual, ChurnPolicy::StaticProposed, ChurnPolicy::Online];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChurnPolicy::StaticEqual => "static-equal",
+            ChurnPolicy::StaticProposed => "static-proposed",
+            ChurnPolicy::Online => "online-proposed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ChurnPolicy> {
+        match s {
+            "static-equal" | "equal" => Some(ChurnPolicy::StaticEqual),
+            "static-proposed" | "static" => Some(ChurnPolicy::StaticProposed),
+            "online-proposed" | "online" => Some(ChurnPolicy::Online),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of one policy over one timeline.
+#[derive(Debug, Clone)]
+pub struct ChurnReport {
+    pub policy: ChurnPolicy,
+    pub horizon_s: f64,
+    pub events: usize,
+    pub joins: usize,
+    pub leaves: usize,
+    pub bursts: usize,
+    /// online re-solves actually run (0 for static policies)
+    pub reallocations: usize,
+    /// fingerprint checks that found nothing changed (ticks, no-op
+    /// events) — the config-fingerprint reuse at work
+    pub realloc_skipped: usize,
+    /// ∫ fleet-weighted (P1) cost dt / horizon — the headline score
+    pub time_avg_cost: f64,
+    /// ∫ fleet-weighted D^U dt / horizon
+    pub time_avg_d_upper: f64,
+    pub final_population: usize,
+    /// the allocation in force at the horizon (static: the t = 0 one)
+    pub final_alloc: FleetAllocation,
+    /// allocation solve wall times [ms]: the t = 0 solve plus every
+    /// online re-solve (static policies only ever record the first)
+    pub solve_ms: Samples,
+    /// (event time, fleet cost rate) after each event — for plots/CLI
+    pub cost_trace: Vec<(f64, f64)>,
+}
+
+/// Everything the fleet problem depends on, hashed — the same
+/// invalidation idiom as the coordinator scheduler's `config_stamp`.
+fn fingerprint(fp: &FleetProblem) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    fp.n().hash(&mut h);
+    for a in &fp.agents {
+        a.class.hash(&mut h);
+        for x in [a.lambda, a.t0, a.e0, a.weight] {
+            x.to_bits().hash(&mut h);
+        }
+        a.payload_bytes.hash(&mut h);
+    }
+    fp.link_rate_bps.to_bits().hash(&mut h);
+    fp.link_base_latency_s.to_bits().hash(&mut h);
+    match &fp.queue {
+        None => 0u8.hash(&mut h),
+        Some(q) => {
+            1u8.hash(&mut h);
+            q.discipline.hash(&mut h);
+            for r in &q.arrival_rps {
+                r.to_bits().hash(&mut h);
+            }
+        }
+    }
+    h.finish()
+}
+
+/// The live population under a policy run.
+struct Population {
+    live: Vec<u64>,
+    bursting: HashSet<u64>,
+}
+
+impl Population {
+    fn spec(key: u64) -> AgentSpec {
+        AgentSpec::class_spec(key as usize)
+    }
+
+    fn problem(&self, base: Platform, cfg: &ChurnConfig) -> FleetProblem {
+        let specs: Vec<AgentSpec> = self.live.iter().map(|&k| Self::spec(k)).collect();
+        let mut fp = FleetProblem::new(base, specs)
+            .with_link(cfg.link_rate_bps, cfg.link_base_latency_s);
+        if let Some(discipline) = cfg.queue {
+            let rates: Vec<f64> = self
+                .live
+                .iter()
+                .map(|k| {
+                    let boost = if self.bursting.contains(k) { cfg.burst_factor } else { 1.0 };
+                    cfg.arrival_rps * boost
+                })
+                .collect();
+            fp = fp.with_queue(QueueModel::new(discipline, rates));
+        }
+        fp
+    }
+
+    fn apply(&mut self, event: ChurnEvent) {
+        match event {
+            ChurnEvent::Join(k) => self.live.push(k),
+            ChurnEvent::Leave(k) => {
+                self.live.retain(|&x| x != k);
+                self.bursting.remove(&k);
+            }
+            ChurnEvent::BurstStart(k) => {
+                self.bursting.insert(k);
+            }
+            ChurnEvent::BurstEnd(k) => {
+                self.bursting.remove(&k);
+            }
+            ChurnEvent::Tick => {}
+        }
+    }
+}
+
+/// Cost and D^U rates of a **frozen** allocation under current
+/// conditions: keys absent from the t = 0 slots (joiners) pay the
+/// rejection penalty; frozen designs that the current conditions (queue
+/// load, shares) no longer support pay it too.
+fn static_rates(
+    fp: &FleetProblem,
+    live: &[u64],
+    slots: &HashMap<u64, AgentAllocation>,
+) -> (f64, f64) {
+    let (mut cost, mut du) = (0.0, 0.0);
+    for (i, key) in live.iter().enumerate() {
+        let spec = &fp.agents[i];
+        let served_bits = slots.get(key).and_then(|slot| {
+            let d = slot.design?;
+            fp.agent_problem(i, slot.server_share, slot.airtime_share)
+                .is_some_and(|p| p.is_feasible(&d))
+                .then_some(d.b_hat)
+        });
+        match served_bits {
+            Some(b) => {
+                cost += spec.weight * rd::bound_gap(b as f64, spec.lambda);
+                du += spec.weight * rd::d_upper(b as f64 - 1.0, spec.lambda);
+            }
+            None => {
+                cost += fp.rejection_cost(i);
+                du += spec.weight * rd::d_upper(0.0, spec.lambda);
+            }
+        }
+    }
+    (cost, du)
+}
+
+/// Replay `timeline` under `policy` and integrate the fleet cost.
+pub fn run_churn(
+    base: Platform,
+    timeline: &Timeline,
+    policy: ChurnPolicy,
+    cfg: &ChurnConfig,
+) -> ChurnReport {
+    let opts = ProposedOptions::default();
+    let mut pop = Population {
+        live: timeline.initial.clone(),
+        bursting: HashSet::new(),
+    };
+    let mut fp = pop.problem(base, cfg);
+    let mut stamp = fingerprint(&fp);
+
+    // t = 0 allocation
+    let mut solve_ms = Samples::new();
+    let sw = Stopwatch::start();
+    let mut alloc = match policy {
+        ChurnPolicy::StaticEqual => fleet::solve_equal_share(&fp),
+        ChurnPolicy::StaticProposed | ChurnPolicy::Online => fleet::solve_proposed(&fp),
+    };
+    solve_ms.push(sw.elapsed_s() * 1e3);
+    // frozen per-key slots for the static policies
+    let slots: HashMap<u64, AgentAllocation> = pop
+        .live
+        .iter()
+        .zip(&alloc.agents)
+        .map(|(&k, a)| (k, *a))
+        .collect();
+    // which key owns which row of `alloc` (online warm-start mapping)
+    let mut assoc: Vec<u64> = pop.live.clone();
+
+    let mut rates = match policy {
+        ChurnPolicy::Online => (alloc.objective, alloc.weighted_d_upper(&fp)),
+        _ => static_rates(&fp, &pop.live, &slots),
+    };
+    let mut cost_trace = vec![(0.0, rates.0)];
+    let (mut acc_cost, mut acc_du) = (0.0, 0.0);
+    let (mut reallocations, mut realloc_skipped) = (0usize, 0usize);
+    let mut t_cur = 0.0;
+
+    for &(t, event) in &timeline.events {
+        let dt = (t - t_cur).max(0.0);
+        acc_cost += rates.0 * dt;
+        acc_du += rates.1 * dt;
+        t_cur = t;
+        pop.apply(event);
+        fp = pop.problem(base, cfg);
+        if policy == ChurnPolicy::Online {
+            let new_stamp = fingerprint(&fp);
+            if new_stamp == stamp {
+                realloc_skipped += 1;
+            } else {
+                stamp = new_stamp;
+                let prev_by_key: HashMap<u64, (f64, f64)> = assoc
+                    .iter()
+                    .zip(&alloc.agents)
+                    .map(|(&k, a)| (k, (a.server_share, a.airtime_share)))
+                    .collect();
+                let prev: Vec<Option<(f64, f64)>> = pop
+                    .live
+                    .iter()
+                    .map(|k| prev_by_key.get(k).copied())
+                    .collect();
+                let sw = Stopwatch::start();
+                alloc = fleet::solve_proposed_warm(&fp, &prev, opts);
+                solve_ms.push(sw.elapsed_s() * 1e3);
+                assoc.clone_from(&pop.live);
+                reallocations += 1;
+            }
+            rates = (alloc.objective, alloc.weighted_d_upper(&fp));
+        } else {
+            rates = static_rates(&fp, &pop.live, &slots);
+        }
+        cost_trace.push((t, rates.0));
+    }
+    let dt = (cfg.horizon_s - t_cur).max(0.0);
+    acc_cost += rates.0 * dt;
+    acc_du += rates.1 * dt;
+
+    ChurnReport {
+        policy,
+        horizon_s: cfg.horizon_s,
+        events: timeline.events.len(),
+        joins: timeline.joins,
+        leaves: timeline.leaves,
+        bursts: timeline.bursts,
+        reallocations,
+        realloc_skipped,
+        time_avg_cost: acc_cost / cfg.horizon_s,
+        time_avg_d_upper: acc_du / cfg.horizon_s,
+        final_population: pop.live.len(),
+        final_alloc: alloc,
+        solve_ms,
+        cost_trace,
+    }
+}
+
+/// Run all three policies over one shared timeline (the comparison the
+/// bench and CLI print).
+pub fn compare(base: Platform, cfg: &ChurnConfig) -> (Timeline, Vec<ChurnReport>) {
+    let tl = timeline(cfg);
+    let reports = ChurnPolicy::ALL
+        .into_iter()
+        .map(|p| run_churn(base, &tl, p, cfg))
+        .collect();
+    (tl, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Platform {
+        Platform::fleet_edge()
+    }
+
+    #[test]
+    fn timeline_is_deterministic_and_ordered() {
+        let cfg = ChurnConfig::default();
+        let a = timeline(&cfg);
+        let b = timeline(&cfg);
+        assert_eq!(a.events, b.events);
+        assert!(a.events.windows(2).all(|w| w[0].0 <= w[1].0), "unsorted");
+        assert!(a.events.iter().all(|&(t, _)| t <= cfg.horizon_s));
+        assert!(a.joins + a.leaves + a.bursts > 0, "default config must churn");
+        let c = timeline(&ChurnConfig { seed: 99, ..cfg });
+        assert_ne!(a.events, c.events, "seed must matter");
+    }
+
+    #[test]
+    fn timeline_respects_population_bounds() {
+        let cfg = ChurnConfig {
+            join_rps: 0.2,
+            leave_rps_per_agent: 0.05,
+            max_agents: 6,
+            ..ChurnConfig::default()
+        };
+        let tl = timeline(&cfg);
+        let mut n = tl.initial.len() as i64;
+        for &(_, e) in &tl.events {
+            match e {
+                ChurnEvent::Join(_) => n += 1,
+                ChurnEvent::Leave(_) => n -= 1,
+                _ => {}
+            }
+            assert!(n >= 1, "population emptied");
+            assert!(n <= cfg.max_agents as i64, "population overflowed");
+        }
+    }
+
+    #[test]
+    fn solo_agent_bursts_repeat_after_recovery() {
+        // regression: with a capped 1-agent fleet every random rate is
+        // suppressed while the agent bursts; the timeline must resume
+        // once the burst ends instead of going silent for the rest of
+        // the horizon
+        let cfg = ChurnConfig {
+            initial_agents: 1,
+            max_agents: 1,
+            join_rps: 0.0,
+            leave_rps_per_agent: 0.0,
+            burst_rps: 0.05,
+            burst_duration_s: 10.0,
+            tick_s: 0.0,
+            horizon_s: 400.0,
+            ..ChurnConfig::default()
+        };
+        let tl = timeline(&cfg);
+        assert!(tl.bursts >= 2, "only {} burst(s) fired over 400s", tl.bursts);
+        let ends = tl
+            .events
+            .iter()
+            .filter(|(_, e)| matches!(e, ChurnEvent::BurstEnd(_)))
+            .count();
+        assert!(ends >= 2, "burst ends missing: {ends}");
+    }
+
+    #[test]
+    fn burst_ends_pair_with_starts() {
+        let tl = timeline(&ChurnConfig { burst_rps: 0.05, ..ChurnConfig::default() });
+        let mut open: HashSet<u64> = HashSet::new();
+        for &(_, e) in &tl.events {
+            match e {
+                ChurnEvent::BurstStart(k) => {
+                    assert!(open.insert(k), "double burst on {k}");
+                }
+                ChurnEvent::BurstEnd(k) => {
+                    assert!(open.remove(&k), "end without start on {k}");
+                }
+                ChurnEvent::Leave(k) => {
+                    open.remove(&k); // leaving cancels the pending end
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn no_churn_online_reproduces_static_proposed_exactly() {
+        // acceptance: with churn disabled the online path must be
+        // indistinguishable from PR 1's static solve_proposed — no
+        // re-solve fires (the fingerprint never changes) and the final
+        // allocation matches field for field
+        let cfg = ChurnConfig { queue: None, ..ChurnConfig::default() }.without_churn();
+        let tl = timeline(&cfg);
+        assert!(tl.events.iter().all(|&(_, e)| e == ChurnEvent::Tick));
+        let online = run_churn(base(), &tl, ChurnPolicy::Online, &cfg);
+        let statik = run_churn(base(), &tl, ChurnPolicy::StaticProposed, &cfg);
+        assert_eq!(online.reallocations, 0);
+        assert!(online.realloc_skipped > 0, "ticks must exercise the fingerprint");
+        assert_eq!(online.time_avg_cost, statik.time_avg_cost);
+        assert_eq!(online.final_alloc.objective, statik.final_alloc.objective);
+        assert_eq!(online.final_alloc.admitted, statik.final_alloc.admitted);
+        for (a, b) in online.final_alloc.agents.iter().zip(&statik.final_alloc.agents) {
+            assert_eq!(a.design.map(|d| d.b_hat), b.design.map(|d| d.b_hat));
+            assert_eq!(a.server_share, b.server_share);
+            assert_eq!(a.airtime_share, b.airtime_share);
+        }
+        // and byte-identical to calling the allocator directly
+        let pop = Population { live: tl.initial.clone(), bursting: HashSet::new() };
+        let direct = fleet::solve_proposed(&pop.problem(base(), &cfg));
+        assert_eq!(direct.objective, online.final_alloc.objective);
+    }
+
+    #[test]
+    fn online_beats_both_static_policies_under_churn() {
+        // acceptance: under joins/leaves/bursts the online re-allocation
+        // achieves strictly lower time-averaged fleet cost than the best
+        // static allocation computed at t = 0
+        for seed in [0u64, 1, 2] {
+            let cfg = ChurnConfig { seed, ..ChurnConfig::default() };
+            let (tl, reports) = compare(base(), &cfg);
+            assert!(tl.joins + tl.leaves + tl.bursts > 0);
+            let cost =
+                |p: ChurnPolicy| reports.iter().find(|r| r.policy == p).unwrap().time_avg_cost;
+            let online = cost(ChurnPolicy::Online);
+            let best_static = cost(ChurnPolicy::StaticEqual).min(cost(ChurnPolicy::StaticProposed));
+            assert!(
+                online < best_static,
+                "seed {seed}: online {online} !< best static {best_static}"
+            );
+            let r_online = reports.iter().find(|r| r.policy == ChurnPolicy::Online).unwrap();
+            assert!(r_online.reallocations > 0, "churn must trigger re-solves");
+        }
+    }
+
+    #[test]
+    fn static_policies_never_reallocate() {
+        let cfg = ChurnConfig::default();
+        let tl = timeline(&cfg);
+        for p in [ChurnPolicy::StaticEqual, ChurnPolicy::StaticProposed] {
+            let r = run_churn(base(), &tl, p, &cfg);
+            assert_eq!(r.reallocations, 0);
+            assert!(r.time_avg_cost.is_finite());
+            assert!(r.time_avg_d_upper.is_finite());
+        }
+    }
+
+    #[test]
+    fn cost_trace_integrates_to_the_average() {
+        let cfg = ChurnConfig::default();
+        let tl = timeline(&cfg);
+        let r = run_churn(base(), &tl, ChurnPolicy::Online, &cfg);
+        // re-integrate the step-function trace
+        let mut acc = 0.0;
+        for w in r.cost_trace.windows(2) {
+            acc += w[0].1 * (w[1].0 - w[0].0);
+        }
+        acc += r.cost_trace.last().unwrap().1
+            * (cfg.horizon_s - r.cost_trace.last().unwrap().0);
+        assert!(
+            (acc / cfg.horizon_s - r.time_avg_cost).abs() < 1e-9,
+            "trace does not integrate to the reported average"
+        );
+    }
+}

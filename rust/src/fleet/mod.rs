@@ -5,21 +5,32 @@
 //! wholesale:
 //!
 //! * the **contention model** lives in
-//!   [`crate::system::channel::MultiAccessChannel`] (airtime shares) and
+//!   [`crate::system::channel::MultiAccessChannel`] (airtime shares),
 //!   [`crate::opt::fleet::FleetProblem::agent_platform`] (server-frequency
-//!   shares) — each agent's slice of the shared resources is expressed as
-//!   an ordinary [`crate::system::Platform`];
+//!   shares) and [`crate::system::queue`] (the shared edge queue between
+//!   the per-agent batchers and the server shares) — each agent's slice
+//!   of the shared resources is expressed as an ordinary
+//!   [`crate::system::Platform`];
 //! * the **joint multi-agent allocator** is [`crate::opt::fleet`]:
 //!   per-agent exact bisection inside a water-filling outer loop, with
-//!   greedy admission control and equal-share / feasible-random baselines;
+//!   greedy admission control, queue-aware delay budgets and equal-share
+//!   / feasible-random baselines;
 //! * the **serving loop** ([`sim`]) drives one router + batcher +
 //!   contention-aware [`crate::coordinator::Scheduler`] per agent through
-//!   the shared medium, and aggregates per-agent
-//!   [`crate::coordinator::Telemetry`] into fleet-level percentiles.
+//!   the shared medium (and optionally the shared serialized edge
+//!   queue), and aggregates per-agent [`crate::coordinator::Telemetry`]
+//!   into fleet-level percentiles;
+//! * the **churn loop** ([`churn`]) replays Poisson joins/leaves/bursts
+//!   and re-runs the allocator online, warm-started from the previous
+//!   allocation and gated by a config fingerprint — static t = 0
+//!   allocations ride the same timeline for comparison.
 //!
-//! Entry points: `qaci fleet` (CLI), `benches/fleet_scale.rs` (N-sweep),
-//! `examples/fleet_sweep.rs`.
+//! Entry points: `qaci fleet [--churn]` (CLI), `benches/fleet_scale.rs`
+//! (N-sweep), `benches/fleet_churn.rs` (policy comparison under churn),
+//! `examples/fleet_sweep.rs`, `examples/fleet_churn.rs`.
 
+pub mod churn;
 pub mod sim;
 
+pub use churn::{ChurnConfig, ChurnPolicy, ChurnReport, Timeline};
 pub use sim::{AgentReport, FleetReport, FleetSimConfig};

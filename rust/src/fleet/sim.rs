@@ -4,32 +4,46 @@
 //! Per admitted agent, the loop instantiates the same request path the
 //! single-pair coordinator uses — [`Router`] (QoS budgets → plans, via a
 //! **contention-aware** [`Scheduler`] built on the agent's share-scaled
-//! platform and link-reduced delay budget) and [`Batcher`] — then walks
-//! the arrival sequence with a single-inflight FIFO per agent: a request
-//! starts once it has arrived, its batch was released, and the agent's
-//! previous request finished; it pays the simulated agent-compute,
-//! shared-uplink (jittered [`MultiAccessChannel`]) and server-compute
-//! times and lands in the agent's [`Telemetry`]. The *allocation's*
-//! per-agent design is the authoritative operating point for the
-//! simulated physics (for proposed/equal-share it coincides with the
-//! router's exact re-plan; the random baseline is simulated at its own
-//! random designs). Agents the allocator rejected (admission control)
-//! have every request counted as rejected.
+//! platform and link/queue-reduced delay budget) and [`Batcher`] — then
+//! walks the arrival sequence with a single-inflight FIFO per agent: a
+//! request starts once it has arrived, its batch was released, and the
+//! agent's previous request finished; it pays the simulated
+//! agent-compute, shared-uplink (jittered [`MultiAccessChannel`]) and
+//! server-compute times and lands in the agent's [`Telemetry`]. The
+//! *allocation's* per-agent design is the authoritative operating point
+//! for the simulated physics (for proposed/equal-share it coincides with
+//! the router's exact re-plan; the random baseline is simulated at its
+//! own random designs). Agents the allocator rejected (admission
+//! control) have every request counted as rejected.
+//!
+//! Two server models are available ([`FleetSimConfig::queue`]):
+//!
+//! * `None` — PR 1's fluid sharing: every agent's server stage runs
+//!   concurrently on its frequency slice (optimistic; no cross-agent
+//!   interference beyond the shared medium).
+//! * `Some(discipline)` — the server-stage jobs of **all** agents
+//!   serialize through one shared [`EdgeQueue`] (FIFO or weighted
+//!   priority): a burst from one agent head-of-line blocks the rest, and
+//!   the measured per-request queue wait lands in the report — the
+//!   event-level counterpart of the allocator's analytic
+//!   [`QueueModel`](crate::system::queue::QueueModel) term.
 //!
 //! Delay/energy are the paper's models (eq. 4–9) at the planned
 //! frequencies; wall-clock execution is intentionally absent so the loop
 //! runs in tests and benches without artifacts.
 
-use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
-use crate::coordinator::router::{QosPolicy, Router};
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::router::{QosPolicy, RoutedRequest, Router};
 use crate::coordinator::scheduler::Algorithm;
 use crate::coordinator::telemetry::{RequestRecord, Telemetry};
 use crate::coordinator::Scheduler;
 use crate::data::workload::{generate, Arrival};
 use crate::opt::fleet::{FleetAllocation, FleetProblem};
+use crate::opt::Design;
 use crate::quant::Scheme;
 use crate::system::channel::MultiAccessChannel;
-use crate::system::{delay, energy};
+use crate::system::queue::{EdgeQueue, QueueDiscipline};
+use crate::system::{delay, energy, Platform};
 use crate::util::timer::Samples;
 
 /// Knobs for one fleet serving run.
@@ -39,6 +53,9 @@ pub struct FleetSimConfig {
     pub arrival: Arrival,
     pub seed: u64,
     pub batcher: BatcherConfig,
+    /// `Some(discipline)` serializes all server stages through one
+    /// shared edge queue; `None` keeps PR 1's concurrent slices
+    pub queue: Option<QueueDiscipline>,
 }
 
 impl Default for FleetSimConfig {
@@ -48,6 +65,7 @@ impl Default for FleetSimConfig {
             arrival: Arrival::Poisson { lambda_rps: 2.0 },
             seed: 0,
             batcher: BatcherConfig::default(),
+            queue: None,
         }
     }
 }
@@ -68,6 +86,9 @@ pub struct AgentReport {
     pub e2e_s: Samples,
     /// simulated energy per request [J]
     pub energy_j: Samples,
+    /// time spent waiting in the shared edge queue per request [s]
+    /// (all zeros when the run used concurrent slices)
+    pub queue_wait_s: Samples,
     /// records whose *compute* delay/energy broke the planned budgets
     pub qos_violations: usize,
     /// requests whose *end-to-end* time exceeded the agent's full T0
@@ -80,6 +101,8 @@ pub struct FleetReport {
     pub per_agent: Vec<AgentReport>,
     /// e2e percentiles across every served request in the fleet
     pub e2e_s: Samples,
+    /// shared edge-queue waits across every served request
+    pub queue_wait_s: Samples,
     pub served: usize,
     pub rejected: u64,
     pub qos_violations: usize,
@@ -92,6 +115,77 @@ pub struct FleetReport {
     pub admitted_agents: usize,
 }
 
+/// One admitted agent's prepared request stream plus its runtime state.
+struct Lane {
+    agent: usize,
+    design: Design,
+    platform: Platform,
+    weight: f64,
+    t0_full: f64,
+    payload_bytes: usize,
+    /// (routed request, batch release time) in execution order
+    jobs: Vec<(RoutedRequest, f64)>,
+    next: usize,
+    prev_finish: f64,
+    /// readiness + stage times of the head job once computed
+    head: Option<(f64, f64, f64)>, // (ready_s, t_agent, t_link)
+    telemetry: Telemetry,
+    e2e: Samples,
+    waits: Samples,
+    slo_misses: usize,
+}
+
+impl Lane {
+    /// Compute (once) when the head job is ready for the server stage;
+    /// draws the head's uplink jitter from the shared medium.
+    fn ready_head(&mut self, medium: &mut MultiAccessChannel) -> Option<(f64, f64, f64)> {
+        if self.head.is_none() {
+            let (rr, release) = self.jobs.get(self.next)?;
+            let t_agent =
+                delay::agent_delay(&self.platform, self.design.b_hat as f64, self.design.f);
+            let t_link = medium.transmit_s(self.agent, self.payload_bytes);
+            let start = rr.request.arrival_s.max(*release).max(self.prev_finish);
+            self.head = Some((start + t_agent + t_link, t_agent, t_link));
+        }
+        self.head
+    }
+
+    /// Land the head job: it occupied the server during
+    /// [server_start, server_finish).
+    fn finish_head(&mut self, ready_s: f64, t_agent: f64, t_link: f64, finish: f64) {
+        let (rr, _) = &self.jobs[self.next];
+        let t_server = delay::server_delay(&self.platform, self.design.f_tilde);
+        let total = finish - rr.request.arrival_s;
+        self.e2e.push(total);
+        self.waits.push((finish - t_server - ready_s).max(0.0));
+        if total > self.t0_full {
+            self.slo_misses += 1;
+        }
+        self.telemetry.push(RequestRecord {
+            id: rr.request.id,
+            class: rr.request.class,
+            sample: rr.request.sample,
+            b_hat: self.design.b_hat,
+            t_agent_sim_s: t_agent,
+            t_server_sim_s: t_server,
+            t_link_s: t_link,
+            energy_sim_j: energy::total_energy(
+                &self.platform,
+                self.design.b_hat as f64,
+                self.design.f,
+                self.design.f_tilde,
+            ),
+            t_wall_s: 0.0,
+            caption: String::new(),
+            t0: rr.t0,
+            e0: rr.e0,
+        });
+        self.prev_finish = finish;
+        self.next += 1;
+        self.head = None;
+    }
+}
+
 /// Run the fleet serving loop for a solved allocation.
 pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> FleetReport {
     assert_eq!(alloc.agents.len(), fp.n());
@@ -102,10 +196,10 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
         alloc.airtime_shares(),
         cfg.seed ^ 0x5EED_F1EE,
     );
-    let mut per_agent = Vec::with_capacity(fp.n());
-    let mut fleet_e2e = Samples::new();
-    let mut total_energy = 0.0;
+    let mut rejected_reports: Vec<AgentReport> = Vec::new();
+    let mut lanes: Vec<Lane> = Vec::new();
 
+    // ---- phase 1: per-agent routing + batching (order-preserving) ----
     for (i, slot) in alloc.agents.iter().enumerate() {
         let spec = &fp.agents[i];
         let mut requests = generate(
@@ -120,7 +214,7 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
 
         let Some(design) = slot.design else {
             // admission control rejected this agent: nothing is served
-            per_agent.push(AgentReport {
+            rejected_reports.push(AgentReport {
                 agent: i,
                 class: spec.class,
                 admitted: false,
@@ -131,6 +225,7 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
                 rejected: requests.len() as u64,
                 e2e_s: Samples::new(),
                 energy_j: Samples::new(),
+                queue_wait_s: Samples::new(),
                 qos_violations: 0,
                 slo_misses: 0,
             });
@@ -138,9 +233,10 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
         };
 
         // contention-aware scheduler: the agent's slice of the shared
-        // server, and the delay budget net of its nominal uplink time
+        // server, and the delay budget net of its nominal uplink time and
+        // (when the queue model is on) its expected queue wait
         let platform = fp.agent_platform(slot.server_share);
-        let t0_compute = spec.t0 - slot.link_s;
+        let t0_compute = fp.effective_t0(i, slot.server_share, slot.airtime_share);
         let scheduler = Scheduler::new(
             platform,
             spec.lambda,
@@ -154,82 +250,21 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
         );
         let mut batcher = Batcher::new(cfg.batcher);
         let mut telemetry = Telemetry::default();
-        let mut e2e = Samples::new();
-        let mut slo_misses = 0usize;
-        let mut busy_until = 0.0f64;
+        let mut jobs: Vec<(RoutedRequest, f64)> = Vec::new();
 
         // `release_s` = simulated time the batcher actually let the batch
         // go (size fill, deadline poll, or end-of-stream drain): requests
         // pay their batching wait in e2e, not just queue + compute
-        let execute = |batch: Batch,
-                           release_s: f64,
-                           telemetry: &mut Telemetry,
-                           e2e: &mut Samples,
-                           slo_misses: &mut usize,
-                           busy_until: &mut f64,
-                           medium: &mut MultiAccessChannel| {
-            for rr in batch.requests {
-                // the fleet allocation's design is the authoritative
-                // operating point: for proposed/equal-share it coincides
-                // with the router's exact re-plan, while the random
-                // baseline must be simulated at the random designs it
-                // actually chose, not at what exact bisection would pick
-                let b = design.b_hat as f64;
-                let (f, ft) = (design.f, design.f_tilde);
-                let t_agent = delay::agent_delay(&platform, b, f);
-                let t_server = delay::server_delay(&platform, ft);
-                let t_link = medium.transmit_s(i, spec.payload_bytes);
-                let start = rr.request.arrival_s.max(release_s).max(*busy_until);
-                let finish = start + t_agent + t_link + t_server;
-                *busy_until = finish;
-                let total = finish - rr.request.arrival_s;
-                e2e.push(total);
-                if total > spec.t0 {
-                    *slo_misses += 1;
-                }
-                telemetry.push(RequestRecord {
-                    id: rr.request.id,
-                    class: rr.request.class,
-                    sample: rr.request.sample,
-                    b_hat: design.b_hat,
-                    t_agent_sim_s: t_agent,
-                    t_server_sim_s: t_server,
-                    t_link_s: t_link,
-                    energy_sim_j: energy::total_energy(&platform, b, f, ft),
-                    t_wall_s: 0.0,
-                    caption: String::new(),
-                    t0: rr.t0,
-                    e0: rr.e0,
-                });
-            }
-        };
-
         let end_s = requests.last().map_or(0.0, |r| r.arrival_s);
         for req in requests {
             let now = req.arrival_s;
             match router.route(req) {
                 Ok(routed) => {
                     if let Some(batch) = batcher.push(routed) {
-                        execute(
-                            batch,
-                            now,
-                            &mut telemetry,
-                            &mut e2e,
-                            &mut slo_misses,
-                            &mut busy_until,
-                            &mut medium,
-                        );
+                        jobs.extend(batch.requests.into_iter().map(|rr| (rr, now)));
                     }
                     for batch in batcher.poll_deadlines(now) {
-                        execute(
-                            batch,
-                            now,
-                            &mut telemetry,
-                            &mut e2e,
-                            &mut slo_misses,
-                            &mut busy_until,
-                            &mut medium,
-                        );
+                        jobs.extend(batch.requests.into_iter().map(|rr| (rr, now)));
                     }
                 }
                 Err(_) => telemetry.rejected += 1,
@@ -237,40 +272,102 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
         }
         // the stream ends at the last arrival; leftover groups drain then
         for batch in batcher.drain() {
-            execute(
-                batch,
-                end_s,
-                &mut telemetry,
-                &mut e2e,
-                &mut slo_misses,
-                &mut busy_until,
-                &mut medium,
-            );
+            jobs.extend(batch.requests.into_iter().map(|rr| (rr, end_s)));
         }
 
+        lanes.push(Lane {
+            agent: i,
+            design,
+            platform,
+            weight: spec.weight,
+            t0_full: spec.t0,
+            payload_bytes: spec.payload_bytes,
+            jobs,
+            next: 0,
+            prev_finish: 0.0,
+            head: None,
+            telemetry,
+            e2e: Samples::new(),
+            waits: Samples::new(),
+            slo_misses: 0,
+        });
+    }
+
+    // ---- phase 2: dispatch ----
+    match cfg.queue {
+        None => {
+            // PR 1 semantics: slices run concurrently; each agent's chain
+            // is independent once the (jittered) medium draws are made
+            for lane in &mut lanes {
+                while let Some((ready, t_agent, t_link)) = lane.ready_head(&mut medium) {
+                    let t_server = delay::server_delay(&lane.platform, lane.design.f_tilde);
+                    lane.finish_head(ready, t_agent, t_link, ready + t_server);
+                }
+            }
+        }
+        Some(discipline) => {
+            // all server stages serialize through one shared queue
+            let mut queue = EdgeQueue::new(discipline);
+            loop {
+                let mut pushed_any = false;
+                for lane in &mut lanes {
+                    if lane.head.is_none() {
+                        if let Some((ready, _, _)) = lane.ready_head(&mut medium) {
+                            let t_server = delay::server_delay(&lane.platform, lane.design.f_tilde);
+                            queue.push(lane.agent, ready, t_server, lane.weight);
+                            pushed_any = true;
+                        }
+                    }
+                }
+                let Some((job, _, finish)) = queue.pop() else {
+                    debug_assert!(!pushed_any, "pushed jobs must be dispatchable");
+                    break;
+                };
+                let lane = lanes
+                    .iter_mut()
+                    .find(|l| l.agent == job.agent)
+                    .expect("job belongs to a lane");
+                let (ready, t_agent, t_link) = lane.head.expect("head in flight");
+                lane.finish_head(ready, t_agent, t_link, finish);
+            }
+        }
+    }
+
+    // ---- rollup ----
+    let mut per_agent = rejected_reports;
+    let mut fleet_e2e = Samples::new();
+    let mut fleet_waits = Samples::new();
+    let mut total_energy = 0.0;
+    for lane in lanes {
         let mut energy_samples = Samples::new();
-        for r in &telemetry.records {
+        for r in &lane.telemetry.records {
             energy_samples.push(r.energy_sim_j);
             total_energy += r.energy_sim_j;
         }
-        for &v in e2e.values() {
+        for &v in lane.e2e.values() {
             fleet_e2e.push(v);
         }
+        for &v in lane.waits.values() {
+            fleet_waits.push(v);
+        }
+        let slot = &alloc.agents[lane.agent];
         per_agent.push(AgentReport {
-            agent: i,
-            class: spec.class,
+            agent: lane.agent,
+            class: fp.agents[lane.agent].class,
             admitted: true,
-            b_hat: design.b_hat,
+            b_hat: lane.design.b_hat,
             server_share: slot.server_share,
             airtime_share: slot.airtime_share,
-            served: telemetry.len(),
-            rejected: telemetry.rejected,
-            qos_violations: telemetry.qos_violations(),
-            e2e_s: e2e,
+            served: lane.telemetry.len(),
+            rejected: lane.telemetry.rejected,
+            qos_violations: lane.telemetry.qos_violations(),
+            e2e_s: lane.e2e,
             energy_j: energy_samples,
-            slo_misses,
+            queue_wait_s: lane.waits,
+            slo_misses: lane.slo_misses,
         });
     }
+    per_agent.sort_by_key(|a| a.agent);
 
     // fleet-level rollup from the per-agent reports
     let served = per_agent.iter().map(|a| a.served).sum();
@@ -279,6 +376,7 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
     let slo_misses = per_agent.iter().map(|a| a.slo_misses).sum();
     FleetReport {
         e2e_s: fleet_e2e,
+        queue_wait_s: fleet_waits,
         served,
         rejected,
         qos_violations,
@@ -307,6 +405,7 @@ mod tests {
             arrival: Arrival::Poisson { lambda_rps: 1.0 },
             seed: 7,
             batcher: BatcherConfig::default(),
+            queue: None,
         }
     }
 
@@ -369,6 +468,7 @@ mod tests {
                 arrival: Arrival::Batch,
                 seed: 3,
                 batcher: BatcherConfig::default(),
+                queue: None,
             },
         );
         assert!(report.served > 0);
@@ -384,5 +484,89 @@ mod tests {
         assert_eq!(a.served, b.served);
         assert_eq!(a.e2e_s.mean(), b.e2e_s.mean());
         assert_eq!(a.total_energy_j, b.total_energy_j);
+        // and the queued flavors are deterministic too
+        for d in [QueueDiscipline::Fifo, QueueDiscipline::WeightedPriority] {
+            let mut c = cfg(5);
+            c.queue = Some(d);
+            let x = run(&fp, &alloc, &c);
+            let y = run(&fp, &alloc, &c);
+            assert_eq!(x.e2e_s.mean(), y.e2e_s.mean());
+            assert_eq!(x.queue_wait_s.mean(), y.queue_wait_s.mean());
+        }
+    }
+
+    #[test]
+    fn shared_queue_only_delays_never_drops() {
+        // same allocation, same arrivals: serializing the server stages
+        // keeps every request served but stretches the tail — and the
+        // measured queue waits become visible
+        let fp = fp(6);
+        let alloc = fleet::solve_proposed(&fp);
+        let base = FleetSimConfig {
+            requests_per_agent: 8,
+            arrival: Arrival::Batch,
+            seed: 11,
+            batcher: BatcherConfig::default(),
+            queue: None,
+        };
+        let plain = run(&fp, &alloc, &base);
+        let queued = run(
+            &fp,
+            &alloc,
+            &FleetSimConfig { queue: Some(QueueDiscipline::Fifo), ..base },
+        );
+        assert_eq!(plain.served, queued.served);
+        assert_eq!(plain.rejected, queued.rejected);
+        assert!(plain.queue_wait_s.max() == 0.0);
+        assert!(
+            queued.queue_wait_s.max() > 0.0,
+            "contended batch arrivals must produce visible queue waits"
+        );
+        assert!(
+            queued.e2e_s.max() >= plain.e2e_s.max(),
+            "serialization cannot shrink the tail: {} < {}",
+            queued.e2e_s.max(),
+            plain.e2e_s.max()
+        );
+    }
+
+    #[test]
+    fn weighted_priority_favors_heavy_classes() {
+        // under contention the weighted discipline must cut the
+        // interactive (w = 2) queue wait relative to FIFO, at the expense
+        // of background (w = 0.5)
+        let fp = fp(6);
+        let alloc = fleet::solve_proposed(&fp);
+        let base = FleetSimConfig {
+            requests_per_agent: 8,
+            arrival: Arrival::Batch,
+            seed: 4,
+            batcher: BatcherConfig::default(),
+            queue: Some(QueueDiscipline::Fifo),
+        };
+        let class_wait = |r: &FleetReport, class: &str| -> f64 {
+            let mut s = Samples::new();
+            for a in r.per_agent.iter().filter(|a| a.class == class && a.admitted) {
+                for &v in a.queue_wait_s.values() {
+                    s.push(v);
+                }
+            }
+            s.mean()
+        };
+        let fifo = run(&fp, &alloc, &base);
+        let prio = run(
+            &fp,
+            &alloc,
+            &FleetSimConfig { queue: Some(QueueDiscipline::WeightedPriority), ..base },
+        );
+        let (fi, pi) = (class_wait(&fifo, "interactive"), class_wait(&prio, "interactive"));
+        let (fb, pb) = (class_wait(&fifo, "background"), class_wait(&prio, "background"));
+        assert!(pi < fi * 0.5, "priority should cut interactive waits: {pi} vs {fi}");
+        // background may not pay more than jitter noise, but must not gain
+        assert!(pb >= fb - 0.01, "priority helped background: {pb} < {fb}");
+        assert!(
+            pi < pb,
+            "interactive must wait less than background under priority: {pi} vs {pb}"
+        );
     }
 }

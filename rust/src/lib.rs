@@ -1,5 +1,7 @@
 //! # qaci — Quantization-Aware Collaborative Inference for Large Embodied AI Models
 //!
+//! [![ci](../../../actions/workflows/ci.yml/badge.svg)](../../../actions/workflows/ci.yml)
+//!
 //! Production-shaped reproduction of Lyu et al. (2026). The crate is the
 //! L3 coordinator of a three-layer Rust + JAX + Pallas stack:
 //!
@@ -23,18 +25,39 @@
 //! | substrates | [`util`] (json, cli, rng, pool, prop), [`nn`], [`metrics`], [`data`] |
 //! | theory (§III–IV) | [`theory`] |
 //! | quantizers (§II-C) | [`quant`] |
-//! | system model (§II-D) | [`system`] (incl. multi-access contention) |
+//! | system model (§II-D) | [`system`] (incl. multi-access contention + [`system::queue`]) |
 //! | joint design (§V) | [`opt`] (incl. [`opt::fleet`]), [`rl`] |
-//! | serving | [`runtime`], [`coordinator`], [`fleet`] |
+//! | serving | [`runtime`], [`coordinator`], [`fleet`] (incl. [`fleet::churn`]) |
 //! | evaluation | [`bench_harness`], `rust/benches/*` |
 //!
 //! The **fleet layer** generalizes the paper's single agent–server pair to
 //! N agents contending for one edge server and one wireless medium:
 //! airtime shares live in [`system::channel::MultiAccessChannel`], the
-//! joint multi-agent allocator (per-agent bisection + water-filling +
-//! admission control) in [`opt::fleet`], and the fleet serving loop in
+//! shared edge queue (analytic M/G/1 feedback + event-level dispatch) in
+//! [`system::queue`], the joint multi-agent allocator (per-agent
+//! bisection + water-filling + admission control, queue-aware delay
+//! budgets) in [`opt::fleet`], and the fleet serving loop in
 //! [`fleet::sim`]. Entry points: `qaci fleet`, `benches/fleet_scale.rs`,
 //! `examples/fleet_sweep.rs`.
+//!
+//! ## Churn mode
+//!
+//! Real fleets are not static: agents arrive, burst and leave while the
+//! edge resources stay fixed. [`fleet::churn`] replays a deterministic
+//! Poisson timeline of joins/leaves/load-bursts and re-runs the
+//! water-filling allocator **online** — warm-started from the previous
+//! [`opt::fleet::FleetAllocation`] and gated by a fleet config
+//! fingerprint (the same invalidation idiom the coordinator's scheduler
+//! uses for its plan cache), so an unchanged fleet never re-solves and a
+//! changed one re-converges in a few exchange moves. Static t = 0
+//! allocations ride the same timeline for comparison: they strand the
+//! shares of departed agents, turn joiners away, and lose their frozen
+//! designs when a burst blows the queue-aware delay budget — which is
+//! why online re-allocation strictly wins on time-averaged
+//! fleet-weighted distortion cost whenever the population actually
+//! churns (and reproduces the static allocation exactly when it does
+//! not). Entry points: `qaci fleet --churn`, `benches/fleet_churn.rs`,
+//! `examples/fleet_churn.rs`.
 
 pub mod bench_harness;
 pub mod coordinator;

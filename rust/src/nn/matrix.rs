@@ -125,8 +125,7 @@ mod tests {
         let mut rng = Rng::new(0);
         let m = Matrix::he(256, 256, &mut rng);
         let mean = m.data.iter().sum::<f64>() / m.data.len() as f64;
-        let var =
-            m.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m.data.len() as f64;
+        let var = m.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m.data.len() as f64;
         assert!(mean.abs() < 0.01);
         assert!((var - 2.0 / 256.0).abs() < 0.002);
     }

@@ -105,8 +105,7 @@ mod tests {
             |r| (r.range(0.3, 4.0), r.range(0.1, 4.0)),
             |&(t0, e0)| {
                 let tight = Problem::new(Platform::paper_blip2(), 15.0, t0, e0);
-                let loose =
-                    Problem::new(Platform::paper_blip2(), 15.0, t0 * 1.5, e0 * 1.5);
+                let loose = Problem::new(Platform::paper_blip2(), 15.0, t0 * 1.5, e0 * 1.5);
                 match (solve(&tight), solve(&loose)) {
                     (Some(a), Some(b)) if b.design.b_hat >= a.design.b_hat => Ok(()),
                     (None, _) => Ok(()),

@@ -101,8 +101,7 @@ impl ConvexProgram {
                 let slope: f64 = g.iter().zip(&dir).map(|(gi, di)| gi * di).sum();
                 let mut advanced = false;
                 for _ in 0..60 {
-                    let xn: Vec<f64> =
-                        x.iter().zip(&dir).map(|(xi, di)| xi + alpha * di).collect();
+                    let xn: Vec<f64> = x.iter().zip(&dir).map(|(xi, di)| xi + alpha * di).collect();
                     let fn_ = self.barrier(&xn, t);
                     if fn_.is_finite() && fn_ <= f0 + 1e-4 * alpha * slope {
                         x = xn;
@@ -152,11 +151,7 @@ mod tests {
         // min -x-y s.t. x+y<=1, x,y>=0 -> boundary x+y=1
         let prog = ConvexProgram {
             objective: boxed(|x| -x[0] - x[1]),
-            constraints: vec![
-                boxed(|x| x[0] + x[1] - 1.0),
-                boxed(|x| -x[0]),
-                boxed(|x| -x[1]),
-            ],
+            constraints: vec![boxed(|x| x[0] + x[1] - 1.0), boxed(|x| -x[0]), boxed(|x| -x[1])],
             scales: vec![1.0, 1.0],
         };
         let sol = prog.solve(&[0.2, 0.2]).unwrap();

@@ -41,11 +41,25 @@
 //! that seats agents by weight at their minimal feasible shares — the
 //! path that serves part of the fleet when the equal split is entirely
 //! infeasible.
+//!
+//! ## Queueing feedback and online re-allocation
+//!
+//! With [`FleetProblem::with_queue`], burst interference at the shared
+//! edge server enters each agent's delay constraint: the compute stages
+//! get T0_i − t_link(α_i) − W_i(μ_i), where W_i is the analytic
+//! [`QueueModel`] wait at agent i's slice-capacity service rate (an
+//! effective-service-rate term: a bigger μ_i drains the queue faster).
+//! An overloaded queue makes W_i infinite and the agent cleanly
+//! unservable at those shares. For churning fleets,
+//! [`solve_proposed_warm`] re-runs the water-filling exchange online from
+//! the previous allocation instead of from scratch — the entry point the
+//! event-driven loop in [`crate::fleet::churn`] drives.
 
 use super::bisection;
 use super::feasible_random;
 use super::problem::{Design, Problem};
 use crate::system::channel::MultiAccessChannel;
+use crate::system::queue::QueueModel;
 use crate::system::Platform;
 use crate::theory::rate_distortion as rd;
 use crate::util::rng::Rng;
@@ -71,33 +85,39 @@ impl AgentSpec {
     /// BLIP-2-2.7b-scale embedding upload: 32 query tokens × d = 2560 f32.
     pub const PAYLOAD_BLIP2: usize = 32 * 2560 * 4;
 
-    /// Heterogeneous fleet used by benches and the CLI: cycles the
-    /// coordinator's three QoS classes (fleet SLA bands in the paper's
-    /// Fig. 5 budget range, interactive slightly tightened) with weights
+    /// The canonical QoS bands (fleet SLA bands in the paper's Fig. 5
+    /// budget range, interactive slightly tightened) with weights
     /// expressing their relative priority.
+    const CLASSES: [(&'static str, f64, f64, f64); 3] = [
+        ("interactive", 2.40, 2.50, 2.0),
+        ("standard", 3.50, 2.00, 1.0),
+        ("background", 5.00, 1.00, 0.5),
+    ];
+
+    /// The spec a (joining) agent with ordinal `idx` gets: classes cycle
+    /// — also how churn assigns contracts to newcomers, so a joined
+    /// agent is indistinguishable from one seeded at t = 0.
+    pub fn class_spec(idx: usize) -> AgentSpec {
+        let (class, t0, e0, weight) = Self::CLASSES[idx % Self::CLASSES.len()];
+        AgentSpec {
+            class,
+            lambda: 15.0,
+            t0,
+            e0,
+            weight,
+            payload_bytes: Self::PAYLOAD_BLIP2,
+        }
+    }
+
+    /// Heterogeneous fleet used by benches and the CLI: cycles the
+    /// coordinator's three QoS classes.
     pub fn mixed_fleet(n: usize) -> Vec<AgentSpec> {
-        const CLASSES: [(&str, f64, f64, f64); 3] = [
-            ("interactive", 2.40, 2.50, 2.0),
-            ("standard", 3.50, 2.00, 1.0),
-            ("background", 5.00, 1.00, 0.5),
-        ];
-        (0..n)
-            .map(|i| {
-                let (class, t0, e0, weight) = CLASSES[i % CLASSES.len()];
-                AgentSpec {
-                    class,
-                    lambda: 15.0,
-                    t0,
-                    e0,
-                    weight,
-                    payload_bytes: Self::PAYLOAD_BLIP2,
-                }
-            })
-            .collect()
+        (0..n).map(Self::class_spec).collect()
     }
 }
 
-/// Fleet instance: shared silicon + shared medium + per-agent contracts.
+/// Fleet instance: shared silicon + shared medium + per-agent contracts,
+/// optionally with the shared edge queue's analytic feedback.
 #[derive(Debug, Clone)]
 pub struct FleetProblem {
     /// silicon profile: `base.device` is each agent's own processor,
@@ -108,18 +128,35 @@ pub struct FleetProblem {
     pub link_rate_bps: f64,
     /// per-message MAC latency [s]
     pub link_base_latency_s: f64,
+    /// shared edge-queue model; `None` = PR 1's fluid sharing (no
+    /// queueing term in the delay constraint)
+    pub queue: Option<QueueModel>,
 }
 
 impl FleetProblem {
-    /// Shared testbed WLAN defaults (400 Mbps, 2 ms).
+    /// Shared testbed WLAN defaults (400 Mbps, 2 ms), no queue feedback.
     pub fn new(base: Platform, agents: Vec<AgentSpec>) -> FleetProblem {
         assert!(!agents.is_empty());
-        FleetProblem { base, agents, link_rate_bps: 400e6, link_base_latency_s: 2e-3 }
+        FleetProblem {
+            base,
+            agents,
+            link_rate_bps: 400e6,
+            link_base_latency_s: 2e-3,
+            queue: None,
+        }
     }
 
     pub fn with_link(mut self, rate_bps: f64, base_latency_s: f64) -> FleetProblem {
         self.link_rate_bps = rate_bps;
         self.link_base_latency_s = base_latency_s;
+        self
+    }
+
+    /// Enable the shared edge queue: its expected wait is carved out of
+    /// every agent's delay budget (effective-service-rate feedback).
+    pub fn with_queue(mut self, queue: QueueModel) -> FleetProblem {
+        assert_eq!(queue.arrival_rps.len(), self.agents.len(), "one rate per agent");
+        self.queue = Some(queue);
         self
     }
 
@@ -141,30 +178,54 @@ impl FleetProblem {
     }
 
     /// Nominal (jitter-free) uplink time at airtime share α — what the
-    /// allocator budgets against.
+    /// allocator budgets against. A non-finite α is treated as "no
+    /// airtime" so a poisoned share vector degrades to a clean +inf
+    /// (→ rejection) instead of propagating NaN into costs.
     pub fn link_time(&self, i: usize, alpha: f64) -> f64 {
+        let share = if alpha.is_finite() { alpha.clamp(0.0, 1.0) } else { 0.0 };
         MultiAccessChannel::nominal_transmit_s(
             self.link_rate_bps,
             self.link_base_latency_s,
-            alpha.clamp(0.0, 1.0),
+            share,
             self.agents[i].payload_bytes,
         )
     }
 
+    /// Expected shared-queue wait for agent i at server share μ (0 when
+    /// no queue model is attached). The agent drains at its slice
+    /// capacity μ f̃^max; rivals are estimated at the uniform split.
+    pub fn queue_wait(&self, i: usize, mu: f64) -> f64 {
+        let Some(queue) = &self.queue else { return 0.0 };
+        if !(mu > 0.0) || !mu.is_finite() {
+            return f64::INFINITY;
+        }
+        let c2 = self.base.server_cycles();
+        let own = c2 / (self.base.server.f_max * mu.clamp(0.0, 1.0));
+        let reference = c2 * self.n() as f64 / self.base.server.f_max;
+        queue.expected_wait_s(i, own, reference, |j| self.agents[j].weight)
+    }
+
+    /// The delay budget left for the compute stages at shares (μ, α):
+    /// T0 minus the nominal uplink time minus the expected queue wait.
+    pub fn effective_t0(&self, i: usize, mu: f64, alpha: f64) -> f64 {
+        self.agents[i].t0 - self.link_time(i, alpha) - self.queue_wait(i, mu)
+    }
+
     /// Agent i's effective single-agent (P1) instance under shares
     /// (μ, α): the paper's problem on the share-scaled platform with the
-    /// uplink time carved out of the delay budget. `None` when the shares
-    /// leave no compute budget at all.
+    /// uplink time (and any queue wait) carved out of the delay budget.
+    /// `None` when the shares leave no compute budget at all — including
+    /// every degenerate input (share ~0, overloaded queue, non-finite
+    /// shares), so callers always see a clean rejection, never inf/NaN.
     pub fn agent_problem(&self, i: usize, mu: f64, alpha: f64) -> Option<Problem> {
-        if mu <= 0.0 {
+        if !(mu > 0.0) || !mu.is_finite() || !alpha.is_finite() {
             return None;
         }
-        let spec = &self.agents[i];
-        let t0 = spec.t0 - self.link_time(i, alpha);
+        let t0 = self.effective_t0(i, mu, alpha);
         if !(t0 > 0.0) {
-            return None; // also catches the +inf link time of α = 0
+            return None; // also catches the +inf link/queue times
         }
-        Some(Problem::new(self.agent_platform(mu), spec.lambda, t0, spec.e0))
+        Some(Problem::new(self.agent_platform(mu), self.agents[i].lambda, t0, self.agents[i].e0))
     }
 
     /// Best per-agent design (exact bisection) under shares, or `None`
@@ -182,13 +243,20 @@ impl FleetProblem {
 
     /// The single source of truth for the fleet objective: an agent's
     /// weighted contribution given whatever design it was (not) assigned.
+    /// Always finite — a degenerate design scores as a rejection so the
+    /// water-filling exchange can never be poisoned by inf/NaN costs.
     pub fn design_cost(&self, i: usize, design: &Option<Design>) -> f64 {
-        match design {
+        let cost = match design {
             Some(d) => {
                 self.agents[i].weight
                     * rd::bound_gap(d.b_hat as f64, self.agents[i].lambda)
             }
             None => self.rejection_cost(i),
+        };
+        if cost.is_finite() {
+            cost
+        } else {
+            self.rejection_cost(i)
         }
     }
 
@@ -368,11 +436,67 @@ pub fn solve_proposed_with(fp: &FleetProblem, opts: ProposedOptions) -> FleetAll
     for (mut mu, mut alpha) in inits {
         improve(fp, &mut mu, &mut alpha, opts);
         let alloc = evaluate(fp, &mu, &alpha);
-        if best.as_ref().map_or(true, |b| alloc.objective < b.objective) {
+        if best.as_ref().is_none_or(|b| alloc.objective < b.objective) {
             best = Some(alloc);
         }
     }
     best.expect("at least the equal init was evaluated")
+}
+
+/// Warm-started online re-solve for a churning fleet: seed the
+/// water-filling exchange from a previous allocation's shares instead of
+/// the cold inits. `prev[i]` is `Some((μ, α))` for agents that survive
+/// from the previous population and `None` for newcomers; newcomers are
+/// seated at a weight-proportional slice of the pie (carved from the
+/// departed agents' freed mass first, then from incumbents), and the
+/// exchange refines from there. With an unchanged population this starts
+/// at the previous optimum, so the improvement loop terminates
+/// immediately and the result can only match or improve it.
+pub fn solve_proposed_warm(
+    fp: &FleetProblem,
+    prev: &[Option<(f64, f64)>],
+    opts: ProposedOptions,
+) -> FleetAllocation {
+    assert_eq!(prev.len(), fp.n());
+    let n = fp.n();
+    let weight_all: f64 = fp.agents.iter().map(|a| a.weight).sum();
+    let mut mu: Vec<f64> = prev.iter().map(|p| p.map_or(0.0, |(m, _)| m.max(0.0))).collect();
+    let mut alpha: Vec<f64> = prev.iter().map(|p| p.map_or(0.0, |(_, a)| a.max(0.0))).collect();
+    for shares in [&mut mu, &mut alpha] {
+        let used: f64 = shares.iter().sum();
+        if used > 1.0 {
+            // defensive renormalization; previous allocations are valid
+            for s in shares.iter_mut() {
+                *s /= used;
+            }
+        }
+        let used = used.min(1.0);
+        let newcomers: Vec<usize> = (0..n).filter(|&i| shares[i] <= 0.0).collect();
+        if newcomers.is_empty() {
+            // departed agents' mass goes back to everyone, by weight
+            let free = 1.0 - used;
+            for (i, s) in shares.iter_mut().enumerate() {
+                *s += free * fp.agents[i].weight / weight_all;
+            }
+            continue;
+        }
+        let weight_new: f64 = newcomers.iter().map(|&i| fp.agents[i].weight).sum();
+        let target = weight_new / weight_all; // newcomers' fair slice
+        let mut free = 1.0 - used;
+        if free < target && used > 0.0 {
+            // shrink incumbents proportionally to make room
+            let scale = (1.0 - target) / used;
+            for s in shares.iter_mut() {
+                *s *= scale;
+            }
+            free = target;
+        }
+        for &i in &newcomers {
+            shares[i] = free * fp.agents[i].weight / weight_new;
+        }
+    }
+    improve(fp, &mut mu, &mut alpha, opts);
+    evaluate(fp, &mu, &alpha)
 }
 
 /// The feasible-random baseline: Dirichlet(1) shares on both resources
@@ -434,7 +558,7 @@ fn admission_init(fp: &FleetProblem) -> Option<(Vec<f64>, Vec<f64>)> {
     let n = fp.n();
     let servable = |i: usize, mu: f64, alpha: f64| -> bool {
         fp.agent_problem(i, mu, alpha)
-            .map_or(false, |p| p.plan_frequencies(1.0).is_some())
+            .is_some_and(|p| p.plan_frequencies(1.0).is_some())
     };
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&a, &b| {
@@ -522,8 +646,7 @@ fn exchange(
         let gain = cur - cost_at(i, s + step);
         (cur, loss, gain)
     };
-    let mut cached: Vec<(f64, f64, f64)> =
-        (0..n).map(|i| triple(i, shares[i])).collect();
+    let mut cached: Vec<(f64, f64, f64)> = (0..n).map(|i| triple(i, shares[i])).collect();
     let mut total_gain = 0.0;
     for _ in 0..max_moves {
         let mut best: Option<(usize, usize, f64)> = None;
@@ -555,6 +678,8 @@ fn exchange(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::system::queue::QueueDiscipline;
+    use crate::util::prop::forall;
 
     fn fleet(n: usize) -> FleetProblem {
         FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
@@ -577,10 +702,7 @@ mod tests {
             let d = alloc.agents[0].design.expect("fleet of one admitted");
             assert_eq!(d.b_hat, single.design.b_hat, "{algorithm:?}");
             assert!((d.f - single.design.f).abs() / single.design.f < 1e-9);
-            assert!(
-                (d.f_tilde - single.design.f_tilde).abs() / single.design.f_tilde
-                    < 1e-9
-            );
+            assert!((d.f_tilde - single.design.f_tilde).abs() / single.design.f_tilde < 1e-9);
             assert_eq!(alloc.admitted, 1);
         }
     }
@@ -690,13 +812,148 @@ mod tests {
         assert_eq!(a.admitted, b.admitted);
         assert_eq!(a.objective, b.objective);
         for (x, y) in a.agents.iter().zip(&b.agents) {
-            assert_eq!(
-                x.design.map(|d| d.b_hat),
-                y.design.map(|d| d.b_hat)
-            );
+            assert_eq!(x.design.map(|d| d.b_hat), y.design.map(|d| d.b_hat));
         }
         let r1 = solve_feasible_random(&fp, 3).objective;
         let r2 = solve_feasible_random(&fp, 3).objective;
         assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn queue_feedback_tightens_but_never_relaxes_designs() {
+        // same shares, same agents: adding the queue term shrinks every
+        // delay budget, so per-agent bit-widths can only stay or drop and
+        // the equal-share objective can only stay or rise
+        let n = 4;
+        let plain = fleet(n);
+        let queued = fleet(n)
+            .with_queue(QueueModel::uniform(QueueDiscipline::Fifo, n, 0.05));
+        let a = solve_equal_share(&plain);
+        let b = solve_equal_share(&queued);
+        assert!(b.objective >= a.objective - 1e-12);
+        for (x, y) in a.agents.iter().zip(&b.agents) {
+            let (bx, by) = (x.design.map_or(0, |d| d.b_hat), y.design.map_or(0, |d| d.b_hat));
+            assert!(by <= bx, "queue feedback raised a bit-width: {by} > {bx}");
+        }
+        // and the wait itself is visible and monotone in the share
+        assert!(queued.queue_wait(0, 0.25) > 0.0);
+        assert!(queued.queue_wait(0, 0.5) < queued.queue_wait(0, 0.25));
+        assert_eq!(plain.queue_wait(0, 0.25), 0.0);
+    }
+
+    #[test]
+    fn overloaded_queue_rejects_cleanly_and_proposed_recovers() {
+        // load heavy enough that the equal split's queue diverges: every
+        // agent must be *cleanly* rejected (finite penalty costs), and the
+        // proposed allocator must recover a served subset by concentrating
+        // server shares (a bigger slice drains the queue faster)
+        let n = 4;
+        let fp = fleet(n)
+            .with_queue(QueueModel::uniform(QueueDiscipline::Fifo, n, 0.2));
+        let equal = solve_equal_share(&fp);
+        assert_eq!(equal.admitted, 0, "equal split should be queue-overloaded");
+        assert!(equal.objective.is_finite());
+        let proposed = solve_proposed(&fp);
+        assert!(proposed.admitted >= 1, "concentration should recover service");
+        assert!(proposed.objective < equal.objective - 1e-9);
+        assert!(proposed.objective.is_finite());
+    }
+
+    #[test]
+    fn degenerate_shares_reject_cleanly_not_nan() {
+        // regression: an airtime share driven to ~0 by the exchange (or a
+        // poisoned share vector) must surface as a rejection with finite
+        // cost, never as inf/NaN designs that poison the water-filling
+        let fp = fleet(3);
+        assert!(fp.agent_problem(0, f64::NAN, 0.5).is_none());
+        assert!(fp.agent_problem(0, 0.5, f64::NAN).is_none());
+        assert!(fp.agent_design(0, 1e-300, 0.5).is_none(), "μ ~ 0 is unservable");
+        assert!(fp.agent_problem(0, 0.5, 0.0).is_none());
+        assert!(fp.agent_problem(0, 0.5, 1e-12).is_none(), "α ~ 0 is unservable");
+        let alloc = evaluate(&fp, &[0.5, 0.3, 0.2], &[1.0, 0.0, 1e-300]);
+        assert!(alloc.objective.is_finite());
+        assert_eq!(alloc.admitted, 1);
+        for a in &alloc.agents {
+            assert!(a.cost.is_finite());
+        }
+        // agent_cost (the exchange's probe) is finite on the whole domain
+        for mu in [0.0, 1e-300, 0.1, f64::NAN] {
+            for alpha in [0.0, 1e-300, 0.1, f64::NAN] {
+                assert!(fp.agent_cost(0, mu, alpha).is_finite(), "({mu},{alpha})");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_matches_or_improves_cold_solve() {
+        for fp in [fleet(4), fleet(7), fleet(4).ideal_link()] {
+            let cold = solve_proposed(&fp);
+            let prev: Vec<Option<(f64, f64)>> = cold
+                .agents
+                .iter()
+                .map(|a| Some((a.server_share, a.airtime_share)))
+                .collect();
+            let warm = solve_proposed_warm(&fp, &prev, ProposedOptions::default());
+            assert!(
+                warm.objective <= cold.objective + 1e-12,
+                "warm {} regressed past cold {}",
+                warm.objective,
+                cold.objective
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_seats_newcomers() {
+        // grow a solved 3-fleet to 5: the two newcomers start with no
+        // shares and must still end up served
+        let small = fleet(3);
+        let cold = solve_proposed(&small);
+        let grown = fleet(5);
+        let mut prev: Vec<Option<(f64, f64)>> = cold
+            .agents
+            .iter()
+            .map(|a| Some((a.server_share, a.airtime_share)))
+            .collect();
+        prev.extend([None, None]);
+        let warm = solve_proposed_warm(&grown, &prev, ProposedOptions::default());
+        assert!(warm.admitted >= 4, "newcomers not seated: {}", warm.admitted);
+        let shares: f64 = warm.server_shares().iter().sum();
+        assert!(shares <= 1.0 + 1e-9);
+        assert!(warm.agents[3].server_share > 0.0);
+        assert!(warm.agents[4].server_share > 0.0);
+    }
+
+    #[test]
+    fn fleet_of_one_never_beats_single_agent_optimum() {
+        // property (satellite): the N = 1 fleet's weighted D^U is bounded
+        // below by the unshared single-agent bisection optimum — the
+        // shared-medium carve-out can only cost bits, never mint them
+        forall(
+            "N=1 weighted D^U >= single-agent optimum",
+            60,
+            |r| (r.range(0.5, 6.0), r.range(0.3, 6.0), r.range(50.0, 1000.0)),
+            |&(t0, e0, rate_mbps)| {
+                let mut spec = AgentSpec::class_spec(0);
+                spec.t0 = t0;
+                spec.e0 = e0;
+                let single = bisection::solve(&Problem::new(
+                    Platform::fleet_edge(),
+                    spec.lambda,
+                    t0,
+                    e0,
+                ));
+                let single_du = spec.weight
+                    * rd::d_upper(single.map_or(0.0, |s| s.design.b_hat as f64 - 1.0), spec.lambda);
+                let fp = FleetProblem::new(Platform::fleet_edge(), vec![spec])
+                    .with_link(rate_mbps * 1e6, 2e-3);
+                let fleet_du = solve_proposed(&fp).weighted_d_upper(&fp);
+                if fleet_du >= single_du - 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("fleet {fleet_du} < single {single_du}"))
+                }
+            },
+        );
     }
 }

@@ -14,7 +14,10 @@
 //! * [`fleet`] — the multi-agent generalization: N agents contending for
 //!   one edge server (server-frequency shares) and one wireless medium
 //!   (airtime shares), solved by alternating per-agent bisection with a
-//!   water-filling outer loop plus admission control.
+//!   water-filling outer loop plus admission control. Optionally
+//!   queue-aware (the shared edge queue's expected wait tightens each
+//!   delay budget) and re-runnable online via
+//!   [`fleet::solve_proposed_warm`] when the population churns.
 
 pub mod bisection;
 pub mod convex;

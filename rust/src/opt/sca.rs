@@ -72,8 +72,7 @@ fn solve_subproblem(
     let a1 = p.agent_cycles(1.0); // N/(b c): agent cycles per unit b̂
     let c2 = p.server_cycles();
     let (t0, e0) = (problem.t0, problem.e0);
-    let (eta_psi, eta_psi_s) =
-        (p.device.pue * p.device.psi, p.server.pue * p.server.psi);
+    let (eta_psi, eta_psi_s) = (p.device.pue * p.device.psi, p.server.pue * p.server.psi);
     let (f_max, fs_max) = (p.device.f_max, p.server.f_max);
     let b_max = p.b_max as f64;
 
@@ -121,8 +120,8 @@ pub fn solve(problem: &Problem, opts: ScaOptions) -> Option<ScaResult> {
     // nudged b̃ still fits it
     for factor in [0.5, 1.5] {
         let b0 = (1.0 + (base[0] - 1.0) * factor).clamp(1.0 + 1e-4, problem.platform.b_max as f64);
-        let inner = Problem::new(problem.platform, problem.lambda,
-                                 problem.t0 * 0.97, problem.e0 * 0.97);
+        let inner =
+            Problem::new(problem.platform, problem.lambda, problem.t0 * 0.97, problem.e0 * 0.97);
         if let Some(plan) = inner.plan_frequencies(b0) {
             let f = plan.f.min(problem.platform.device.f_max * 0.999);
             let ft = plan.f_tilde.min(problem.platform.server.f_max * 0.999);

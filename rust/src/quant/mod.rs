@@ -73,8 +73,13 @@ mod tests {
         forall(
             "quantize twice == once",
             40,
-            |r| (r.next_u64(), 2 + r.below(7) as u32,
-                 if r.f64() < 0.5 { Scheme::Uniform } else { Scheme::Pot }),
+            |r| {
+                (
+                    r.next_u64(),
+                    2 + r.below(7) as u32,
+                    if r.f64() < 0.5 { Scheme::Uniform } else { Scheme::Pot },
+                )
+            },
             |&(seed, bits, scheme)| {
                 let w = blob(seed, 512);
                 let q1 = quantize_magnitudes(&w, bits, scheme);
@@ -131,8 +136,13 @@ mod tests {
         forall(
             "sign preservation",
             30,
-            |r| (r.next_u64(), 1 + r.below(8) as u32,
-                 if r.f64() < 0.5 { Scheme::Uniform } else { Scheme::Pot }),
+            |r| {
+                (
+                    r.next_u64(),
+                    1 + r.below(8) as u32,
+                    if r.f64() < 0.5 { Scheme::Uniform } else { Scheme::Pot },
+                )
+            },
             |&(seed, bits, scheme)| {
                 let w = blob(seed, 256);
                 let q = quantize_magnitudes(&w, bits, scheme);

@@ -92,8 +92,7 @@ impl Ppo {
     /// surrogate) and value (MSE) for `epochs` passes.
     pub fn train_iteration(&mut self, rng: &mut Rng) -> f64 {
         let batch = self.collect(rng);
-        let mean_reward =
-            batch.iter().map(|t| t.reward).sum::<f64>() / batch.len() as f64;
+        let mean_reward = batch.iter().map(|t| t.reward).sum::<f64>() / batch.len() as f64;
 
         // advantages, normalized
         let mut adv: Vec<f64> = batch

@@ -74,11 +74,7 @@ pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        dims,
-        bytes,
-    )?)
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)?)
 }
 
 /// Scalar f32 literal.

@@ -79,9 +79,7 @@ pub struct CoModel {
 impl CoModel {
     pub fn load(reg: &Registry, name: &str) -> Result<CoModel> {
         let entry = reg.model(name)?.clone();
-        let dims = ModelDims::from_manifest(
-            entry.get("config").context("config missing")?,
-        )?;
+        let dims = ModelDims::from_manifest(entry.get("config").context("config missing")?)?;
         let mut agent_exes = HashMap::new();
         let mut server_exes = HashMap::new();
         for (side, exes) in
@@ -151,8 +149,7 @@ impl CoModel {
             let exe = self.agent_exes.get(&batch).context("no batch exe")?.clone();
             let mut shape = vec![batch];
             shape.extend(&self.dims.input);
-            let input =
-                literal_f32(&inputs[i * in_len..(i + batch) * in_len], &shape)?;
+            let input = literal_f32(&inputs[i * in_len..(i + batch) * in_len], &shape)?;
             let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.literals.len());
             args.push(&input);
             for w in &weights.literals {
@@ -175,8 +172,7 @@ impl CoModel {
             let batch = self.pick_batch(&self.server_exes, n - i);
             let exe = self.server_exes.get(&batch).context("no batch exe")?.clone();
             let shape = vec![batch, self.dims.emb_tokens, self.dims.d_model];
-            let input =
-                literal_f32(&embs[i * emb_len..(i + batch) * emb_len], &shape)?;
+            let input = literal_f32(&embs[i * emb_len..(i + batch) * emb_len], &shape)?;
             let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.literals.len());
             args.push(&input);
             for w in &weights.literals {

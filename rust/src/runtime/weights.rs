@@ -177,10 +177,7 @@ mod tests {
     fn store() -> WeightStore {
         let mut rng = Rng::new(0);
         let blob: Vec<f32> = (0..256 + 16).map(|_| 0.1 * rng.normal() as f32).collect();
-        WeightStore::from_parts(
-            vec![("w".into(), vec![16, 16]), ("b".into(), vec![16])],
-            blob,
-        )
+        WeightStore::from_parts(vec![("w".into(), vec![16, 16]), ("b".into(), vec![16])], blob)
     }
 
     #[test]

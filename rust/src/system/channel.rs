@@ -310,4 +310,77 @@ mod tests {
         }));
         assert!(res.is_err(), "oversubscription must be rejected");
     }
+
+    #[test]
+    fn prop_set_shares_preserves_partition_invariants() {
+        // property: any valid re-allocation (the online churn path calls
+        // set_shares constantly) leaves the medium a valid partition —
+        // every α in [0, 1], Σ α ≤ 1, and the shares readable back intact
+        use crate::util::prop::forall;
+        forall(
+            "set_shares keeps a valid airtime partition",
+            150,
+            |r| {
+                let n = 1 + r.below(8);
+                let raw: Vec<f64> = (0..n).map(|_| r.range(0.0, 1.0)).collect();
+                let total: f64 = raw.iter().sum();
+                // scale into [0, 1] with random slack so Σ < 1 and Σ = 1
+                // both occur
+                let scale = r.range(0.1, 1.0) / total.max(1e-9);
+                (raw.iter().map(|x| x * scale).collect::<Vec<f64>>(), n)
+            },
+            |(shares, n)| {
+                let mut ch = MultiAccessChannel::wlan_5ghz(MultiAccessChannel::equal_shares(*n), 4);
+                ch.set_shares(shares.clone());
+                let back = ch.shares();
+                if back != shares.as_slice() {
+                    return Err(format!("shares mangled: {back:?}"));
+                }
+                let total: f64 = back.iter().sum();
+                if !back.iter().all(|&a| (0.0..=1.0).contains(&a)) || total > 1.0 + 1e-9 {
+                    return Err(format!("invalid partition: {back:?} (Σ={total})"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_transmit_monotone_decreasing_in_share() {
+        // property: more airtime never slows a transmission — nominal and
+        // jittered times are (strictly, for finite rate) decreasing in α
+        use crate::util::prop::forall;
+        forall(
+            "transmit_s monotone decreasing in share",
+            200,
+            |r| {
+                let lo = r.range(1e-3, 0.5);
+                let hi = lo + r.range(1e-3, 0.5);
+                (
+                    r.range(1e6, 1e9),          // rate
+                    r.range(0.0, 0.01),         // base latency
+                    1 + r.below(10_000_000),    // bytes
+                    lo,
+                    hi.min(1.0),
+                )
+            },
+            |&(rate, base, bytes, lo, hi)| {
+                let t_lo = MultiAccessChannel::nominal_transmit_s(rate, base, lo, bytes);
+                let t_hi = MultiAccessChannel::nominal_transmit_s(rate, base, hi, bytes);
+                if t_hi >= t_lo {
+                    return Err(format!("nominal not decreasing: {t_hi} >= {t_lo}"));
+                }
+                // the jittered path preserves the ordering per-draw: with
+                // the same seed both agents see the same wobble sequence
+                let mut a = MultiAccessChannel::new(rate, base, 0.1, vec![lo, 0.0], 9);
+                let mut b = MultiAccessChannel::new(rate, base, 0.1, vec![hi, 0.0], 9);
+                for _ in 0..5 {
+                    if a.transmit_s(0, bytes) <= b.transmit_s(0, bytes) {
+                        return Err("jittered not decreasing".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }

@@ -60,9 +60,6 @@ mod tests {
     fn additivity() {
         let p = Platform::paper_git();
         let (b, f, ft) = (6.0, 1.5e9, 8e9);
-        assert_eq!(
-            total_delay(&p, b, f, ft),
-            agent_delay(&p, b, f) + server_delay(&p, ft)
-        );
+        assert_eq!(total_delay(&p, b, f, ft), agent_delay(&p, b, f) + server_delay(&p, ft));
     }
 }

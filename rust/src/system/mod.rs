@@ -1,11 +1,14 @@
 //! The paper's system model (§II): platform profiles, computation delay
-//! (eq. 4–5, 8), energy (eq. 6–7, 9), DVFS governors, and the (substrate)
-//! wireless link carrying embeddings between agent and server.
+//! (eq. 4–5, 8), energy (eq. 6–7, 9), DVFS governors, the (substrate)
+//! wireless link carrying embeddings between agent and server, and the
+//! shared edge-server queue the fleet contends on.
 
 pub mod channel;
 pub mod delay;
 pub mod dvfs;
 pub mod energy;
 pub mod platform;
+pub mod queue;
 
 pub use platform::{DeviceSpec, Platform, ServerSpec};
+pub use queue::{EdgeQueue, QueueDiscipline, QueueModel};

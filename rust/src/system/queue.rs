@@ -1,0 +1,407 @@
+//! Shared edge-server queue: the dispatch stage between the per-agent
+//! batchers and the server's frequency shares.
+//!
+//! PR 1's fleet model partitions the server's frequency into shares μ_i
+//! and lets every agent's server stage run concurrently on its slice —
+//! the optimistic, fluid end of the sharing spectrum. A real edge box
+//! serializes admission (one DMA/KV-cache load, one dispatch path), so a
+//! burst from one agent head-of-line blocks the others. This module
+//! captures that interference twice, at matching fidelity levels:
+//!
+//! * [`QueueModel`] — the **analytic** feedback term the fleet allocator
+//!   budgets against: a non-preemptive M/G/1 mean waiting time with
+//!   deterministic per-agent service times, under FIFO or weighted-
+//!   priority discipline. Agent i's service time is its slice-capacity
+//!   drain time C̃/(μ_i f̃^max), so the wait is strictly decreasing in
+//!   μ_i and the water-filling exchange in [`crate::opt::fleet`] stays
+//!   exact coordinate descent. Rival agents enter through a mean-field
+//!   estimate at the uniform split (their true shares are not visible to
+//!   a separable per-agent cost), which keeps the term conservative and
+//!   share-vector independent.
+//! * [`EdgeQueue`] — the **event-level** queue the fleet serving loop
+//!   ([`crate::fleet::sim`]) pushes actual jobs through: jobs from all
+//!   agents serialize on one server, the discipline picks who goes next,
+//!   and the measured per-request queue wait lands in telemetry.
+//!
+//! An overloaded queue (utilization ≥ 1) yields an **infinite** analytic
+//! wait; [`crate::opt::fleet::FleetProblem::agent_problem`] turns that
+//! into a clean rejection instead of letting ±inf/NaN poison the
+//! exchange.
+
+/// Service order at the shared edge queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueueDiscipline {
+    /// first ready, first dispatched
+    Fifo,
+    /// non-preemptive priority by fleet weight (ties FIFO)
+    WeightedPriority,
+}
+
+impl QueueDiscipline {
+    pub fn name(self) -> &'static str {
+        match self {
+            QueueDiscipline::Fifo => "fifo",
+            QueueDiscipline::WeightedPriority => "priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QueueDiscipline> {
+        match s {
+            "fifo" => Some(QueueDiscipline::Fifo),
+            "priority" | "weighted-priority" => Some(QueueDiscipline::WeightedPriority),
+            _ => None,
+        }
+    }
+}
+
+/// Analytic queueing model: Poisson request arrivals per agent, one
+/// serialized server, deterministic service times.
+#[derive(Debug, Clone)]
+pub struct QueueModel {
+    pub discipline: QueueDiscipline,
+    /// per-agent request arrival rate [req/s]
+    pub arrival_rps: Vec<f64>,
+}
+
+impl QueueModel {
+    pub fn new(discipline: QueueDiscipline, arrival_rps: Vec<f64>) -> QueueModel {
+        assert!(!arrival_rps.is_empty(), "at least one agent");
+        assert!(
+            arrival_rps.iter().all(|&r| r.is_finite() && r >= 0.0),
+            "arrival rates must be finite and non-negative: {arrival_rps:?}"
+        );
+        QueueModel { discipline, arrival_rps }
+    }
+
+    /// Every agent offering the same load.
+    pub fn uniform(discipline: QueueDiscipline, n: usize, rps: f64) -> QueueModel {
+        QueueModel::new(discipline, vec![rps; n])
+    }
+
+    /// Total offered utilization at a common reference service time
+    /// (diagnostics; ≥ 1 means no discipline can keep up).
+    pub fn utilization(&self, ref_service_s: f64) -> f64 {
+        self.arrival_rps.iter().map(|r| r * ref_service_s).sum()
+    }
+
+    /// Mean queueing delay seen by `agent`, whose own jobs take
+    /// `own_service_s`, with every rival estimated at `ref_service_s`
+    /// (mean-field: the uniform-split drain time). `weight_of(j)` is
+    /// agent j's priority weight — a lookup closure so the hot probe
+    /// path (the water-filling exchange calls this per cost evaluation)
+    /// never materializes a weights vector.
+    ///
+    /// Non-preemptive M/G/1 with deterministic service: the wait is the
+    /// residual work R₀ = Σ_j r_j S_j²/2 inflated by the utilization of
+    /// whoever may be dispatched first. Under FIFO that is the whole
+    /// fleet (Pollaczek–Khinchine); under weighted priority, strictly
+    /// heavier agents plus the agent's own class. Returns `INFINITY`
+    /// when the relevant utilization reaches 1 (overload) or any input
+    /// is non-finite — callers must treat that as "unservable here".
+    pub fn expected_wait_s(
+        &self,
+        agent: usize,
+        own_service_s: f64,
+        ref_service_s: f64,
+        weight_of: impl Fn(usize) -> f64,
+    ) -> f64 {
+        if !(own_service_s.is_finite() && own_service_s >= 0.0)
+            || !(ref_service_s.is_finite() && ref_service_s >= 0.0)
+        {
+            return f64::INFINITY;
+        }
+        let w_own = weight_of(agent);
+        let mut residual = 0.0; // R0: mean residual work found on arrival
+        let mut rho_ahead = 0.0; // strictly-higher-priority utilization
+        let mut rho_class = 0.0; // own class (and self) utilization
+        for (j, &r) in self.arrival_rps.iter().enumerate() {
+            let s = if j == agent { own_service_s } else { ref_service_s };
+            residual += r * s * s / 2.0;
+            let rho = r * s;
+            match self.discipline {
+                QueueDiscipline::Fifo => rho_class += rho,
+                QueueDiscipline::WeightedPriority => {
+                    let w = weight_of(j);
+                    if w > w_own {
+                        rho_ahead += rho;
+                    } else if j == agent || w == w_own {
+                        rho_class += rho;
+                    }
+                    // strictly lighter agents only contribute residual work
+                }
+            }
+        }
+        let d1 = 1.0 - rho_ahead;
+        let d2 = 1.0 - rho_ahead - rho_class;
+        if d1 <= 0.0 || d2 <= 0.0 {
+            return f64::INFINITY;
+        }
+        residual / (d1 * d2)
+    }
+}
+
+/// One job waiting at (or flowing through) the shared edge queue.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedJob {
+    pub agent: usize,
+    /// simulated time the job became ready for the server stage
+    pub ready_s: f64,
+    /// server-stage service time at the agent's planned frequency
+    pub service_s: f64,
+    /// fleet weight (the priority key)
+    pub weight: f64,
+    /// arrival sequence number (FIFO tie-break)
+    seq: u64,
+}
+
+/// Event-level shared queue: jobs from every agent serialize on one
+/// server; `pop` dispatches them under the configured discipline.
+#[derive(Debug, Clone)]
+pub struct EdgeQueue {
+    pub discipline: QueueDiscipline,
+    waiting: Vec<QueuedJob>,
+    free_at: f64,
+    seq: u64,
+    /// jobs dispatched so far
+    pub served: u64,
+    /// total service time dispatched (work conservation check)
+    pub busy_s: f64,
+}
+
+impl EdgeQueue {
+    pub fn new(discipline: QueueDiscipline) -> EdgeQueue {
+        EdgeQueue { discipline, waiting: Vec::new(), free_at: 0.0, seq: 0, served: 0, busy_s: 0.0 }
+    }
+
+    pub fn push(&mut self, agent: usize, ready_s: f64, service_s: f64, weight: f64) {
+        assert!(ready_s.is_finite() && service_s.is_finite() && service_s >= 0.0);
+        self.waiting.push(QueuedJob { agent, ready_s, service_s, weight, seq: self.seq });
+        self.seq += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.waiting.is_empty()
+    }
+
+    /// When the server next becomes idle.
+    pub fn free_at(&self) -> f64 {
+        self.free_at
+    }
+
+    /// Dispatch the next job: among jobs ready by the instant the server
+    /// can start (its free time, or the earliest readiness if it would
+    /// idle), FIFO picks the earliest-ready and weighted priority the
+    /// heaviest. Returns the job with its start and finish times.
+    pub fn pop(&mut self) -> Option<(QueuedJob, f64, f64)> {
+        if self.waiting.is_empty() {
+            return None;
+        }
+        let earliest = self
+            .waiting
+            .iter()
+            .map(|j| j.ready_s)
+            .fold(f64::INFINITY, f64::min);
+        let start_floor = self.free_at.max(earliest);
+        let fifo_key = |j: &QueuedJob| (j.ready_s, j.seq);
+        let mut best = 0;
+        for k in 1..self.waiting.len() {
+            let (b, c) = (&self.waiting[best], &self.waiting[k]);
+            let b_ready = b.ready_s <= start_floor;
+            let c_ready = c.ready_s <= start_floor;
+            let better = match (b_ready, c_ready) {
+                (true, false) => false,
+                (false, true) => true,
+                // both ready: the discipline decides; both still arriving:
+                // same keys stand in (harmless — a ready job always wins
+                // the scan, and at least one is ready at the start floor)
+                _ => match self.discipline {
+                    QueueDiscipline::Fifo => fifo_key(c) < fifo_key(b),
+                    QueueDiscipline::WeightedPriority => c
+                        .weight
+                        .partial_cmp(&b.weight)
+                        .expect("weights are finite")
+                        .then_with(|| {
+                            // heavier first; ties dispatch FIFO
+                            if fifo_key(c) < fifo_key(b) {
+                                std::cmp::Ordering::Greater
+                            } else {
+                                std::cmp::Ordering::Less
+                            }
+                        })
+                        .is_gt(),
+                },
+            };
+            if better {
+                best = k;
+            }
+        }
+        let job = self.waiting.swap_remove(best);
+        let start = self.free_at.max(job.ready_s);
+        let finish = start + job.service_s;
+        self.free_at = finish;
+        self.served += 1;
+        self.busy_s += job.service_s;
+        Some((job, start, finish))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut EdgeQueue) -> Vec<(usize, f64, f64)> {
+        let mut out = Vec::new();
+        while let Some((job, start, finish)) = q.pop() {
+            out.push((job.agent, start, finish));
+        }
+        out
+    }
+
+    #[test]
+    fn fifo_dispatches_in_ready_order() {
+        let mut q = EdgeQueue::new(QueueDiscipline::Fifo);
+        q.push(0, 0.3, 1.0, 1.0);
+        q.push(1, 0.1, 1.0, 5.0);
+        q.push(2, 0.2, 1.0, 9.0);
+        let order: Vec<usize> = drain(&mut q).iter().map(|&(a, _, _)| a).collect();
+        assert_eq!(order, vec![1, 2, 0], "weights must not matter under FIFO");
+    }
+
+    #[test]
+    fn priority_dispatches_heaviest_waiting_job() {
+        let mut q = EdgeQueue::new(QueueDiscipline::WeightedPriority);
+        q.push(0, 0.0, 1.0, 0.5);
+        q.push(1, 0.0, 1.0, 2.0);
+        q.push(2, 0.0, 1.0, 1.0);
+        let order: Vec<usize> = drain(&mut q).iter().map(|&(a, _, _)| a).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn priority_is_non_preemptive() {
+        // the light job is alone at t=0 and starts; the heavy job arriving
+        // at t=0.5 must wait for it to finish, not preempt
+        let mut q = EdgeQueue::new(QueueDiscipline::WeightedPriority);
+        q.push(0, 0.0, 2.0, 0.5);
+        q.push(1, 0.5, 1.0, 9.0);
+        let served = drain(&mut q);
+        assert_eq!(served[0].0, 0);
+        assert_eq!(served[1], (1, 2.0, 3.0));
+    }
+
+    #[test]
+    fn head_of_line_blocking_delays_later_agents() {
+        // a burst from agent 0 arrives first; agent 1's job, ready just
+        // after, waits behind the whole burst under FIFO
+        let mut q = EdgeQueue::new(QueueDiscipline::Fifo);
+        for k in 0..4 {
+            q.push(0, 0.01 * k as f64, 1.0, 1.0);
+        }
+        q.push(1, 0.05, 1.0, 1.0);
+        let served = drain(&mut q);
+        let (agent, start, _) = served[4];
+        assert_eq!(agent, 1);
+        assert!((start - 4.0).abs() < 1e-12, "start {start}");
+    }
+
+    #[test]
+    fn server_idles_to_earliest_job_when_nothing_is_ready() {
+        let mut q = EdgeQueue::new(QueueDiscipline::Fifo);
+        q.push(0, 5.0, 1.0, 1.0);
+        let (_, start, finish) = q.pop().unwrap();
+        assert_eq!((start, finish), (5.0, 6.0));
+        assert_eq!(q.free_at(), 6.0);
+    }
+
+    #[test]
+    fn work_is_conserved() {
+        let mut q = EdgeQueue::new(QueueDiscipline::WeightedPriority);
+        for k in 0..10usize {
+            q.push(k % 3, 0.1 * k as f64, 0.5, (k % 3) as f64);
+        }
+        drain(&mut q);
+        assert_eq!(q.served, 10);
+        assert!((q.busy_s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fifo_wait_matches_pollaczek_khinchine_shape() {
+        // utilization below 1: finite wait, increasing in load
+        let q1 = QueueModel::uniform(QueueDiscipline::Fifo, 4, 0.02);
+        let q2 = QueueModel::uniform(QueueDiscipline::Fifo, 4, 0.08);
+        let w = [1.0, 1.0, 1.0, 1.0];
+        let (s_own, s_ref) = (1.0, 1.0);
+        let w1 = q1.expected_wait_s(0, s_own, s_ref, |j| w[j]);
+        let w2 = q2.expected_wait_s(0, s_own, s_ref, |j| w[j]);
+        assert!(w1.is_finite() && w1 > 0.0);
+        assert!(w2 > w1, "wait must grow with load: {w2} vs {w1}");
+        // closed form: R0 / (1 - rho) with R0 = n r s^2 / 2
+        let rho = 4.0 * 0.02;
+        assert!((w1 - (4.0 * 0.02 * 0.5) / (1.0 - rho)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overload_yields_infinite_wait() {
+        let q = QueueModel::uniform(QueueDiscipline::Fifo, 2, 0.6);
+        let w = [1.0, 1.0];
+        assert!(q.expected_wait_s(0, 1.0, 1.0, |j| w[j]).is_infinite());
+        assert!((q.utilization(1.0) - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priority_shields_heavy_agents_from_light_load() {
+        // heavy agent (w=2) vs two light ones (w=0.5): under priority the
+        // heavy agent's wait ignores the light agents' utilization (they
+        // still contribute residual work), so it must sit strictly below
+        // its FIFO wait; the light agents pay at least FIFO
+        let rates = vec![0.05, 0.05, 0.05];
+        let weights = [2.0, 0.5, 0.5];
+        let fifo = QueueModel::new(QueueDiscipline::Fifo, rates.clone());
+        let prio = QueueModel::new(QueueDiscipline::WeightedPriority, rates);
+        let heavy_fifo = fifo.expected_wait_s(0, 2.0, 2.0, |j| weights[j]);
+        let heavy_prio = prio.expected_wait_s(0, 2.0, 2.0, |j| weights[j]);
+        let light_fifo = fifo.expected_wait_s(1, 2.0, 2.0, |j| weights[j]);
+        let light_prio = prio.expected_wait_s(1, 2.0, 2.0, |j| weights[j]);
+        assert!(heavy_prio < heavy_fifo, "{heavy_prio} !< {heavy_fifo}");
+        assert!(light_prio >= light_fifo, "{light_prio} < {light_fifo}");
+    }
+
+    #[test]
+    fn wait_decreases_in_own_service_time() {
+        // faster own service (a bigger server share) strictly reduces the
+        // agent's analytic wait — the monotonicity the water-filling needs
+        let q = QueueModel::uniform(QueueDiscipline::Fifo, 4, 0.03);
+        let w = [1.0; 4];
+        let mut prev = f64::INFINITY;
+        for s_own in [4.0, 2.0, 1.0, 0.5, 0.25] {
+            let wait = q.expected_wait_s(2, s_own, 1.0, |j| w[j]);
+            assert!(wait < prev, "s_own {s_own}: {wait} !< {prev}");
+            prev = wait;
+        }
+    }
+
+    #[test]
+    fn non_finite_service_rejected_cleanly() {
+        let q = QueueModel::uniform(QueueDiscipline::Fifo, 2, 0.1);
+        let w = [1.0, 1.0];
+        assert!(q.expected_wait_s(0, f64::INFINITY, 1.0, |j| w[j]).is_infinite());
+        assert!(q.expected_wait_s(0, f64::NAN, 1.0, |j| w[j]).is_infinite());
+        assert!(q.expected_wait_s(0, 1.0, f64::NAN, |j| w[j]).is_infinite());
+    }
+
+    #[test]
+    fn discipline_parse_roundtrip() {
+        for d in [QueueDiscipline::Fifo, QueueDiscipline::WeightedPriority] {
+            assert_eq!(QueueDiscipline::parse(d.name()), Some(d));
+        }
+        assert_eq!(
+            QueueDiscipline::parse("weighted-priority"),
+            Some(QueueDiscipline::WeightedPriority)
+        );
+        assert_eq!(QueueDiscipline::parse("lifo"), None);
+    }
+}

@@ -142,11 +142,13 @@ impl BlahutArimoto {
     /// are in units of 1/E[Θ], scaled by λ.
     pub fn default_slopes(lambda: f64) -> Vec<f64> {
         // s ≈ -λ * k: larger |s| => lower distortion => higher rate
-        [0.35, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.5, 7.0, 10.0, 16.0, 24.0,
-         40.0, 64.0, 100.0, 160.0, 260.0]
-            .iter()
-            .map(|k| -lambda * k)
-            .collect()
+        [
+            0.35, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.5, 7.0, 10.0, 16.0, 24.0, 40.0, 64.0, 100.0,
+            160.0, 260.0,
+        ]
+        .iter()
+        .map(|k| -lambda * k)
+        .collect()
     }
 }
 

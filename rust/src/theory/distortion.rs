@@ -171,11 +171,7 @@ mod tests {
 
     fn quantize_net(net: &[LayerMatrix], bits: u32, scheme: Scheme) -> Vec<LayerMatrix> {
         net.iter()
-            .map(|w| LayerMatrix::new(
-                w.rows,
-                w.cols,
-                quantize_magnitudes(&w.data, bits, scheme),
-            ))
+            .map(|w| LayerMatrix::new(w.rows, w.cols, quantize_magnitudes(&w.data, bits, scheme)))
             .collect()
     }
 
@@ -243,8 +239,7 @@ mod tests {
                 }
                 let y = fc_forward(&net, &x);
                 let yq = fc_forward(&qnet, &x);
-                let true_dist: f64 =
-                    y.iter().zip(&yq).map(|(a, b)| (a - b).abs()).sum();
+                let true_dist: f64 = y.iter().zip(&yq).map(|(a, b)| (a - b).abs()).sum();
                 let bound = output_distortion_bound(&net, &qnet);
                 if true_dist <= bound + 1e-9 {
                     Ok(())

@@ -142,8 +142,7 @@ mod tests {
         let mut r = Rng::new(4);
         let d = 0.3;
         let n = 200_000;
-        let mean_abs: f64 =
-            (0..n).map(|_| r.laplace(d).abs()).sum::<f64>() / n as f64;
+        let mean_abs: f64 = (0..n).map(|_| r.laplace(d).abs()).sum::<f64>() / n as f64;
         assert!((mean_abs - d).abs() < 0.01, "E|Z| {mean_abs}");
     }
 

@@ -1,0 +1,187 @@
+//! Churn integration: the whole online-fleet path — shared edge queue
+//! (analytic + event-level), queue-aware allocation, churn timeline,
+//! fingerprint-gated warm re-allocation — exercised through the public
+//! API, artifact-free.
+
+use qaci::coordinator::batcher::BatcherConfig;
+use qaci::data::workload::Arrival;
+use qaci::fleet::churn::{self, ChurnConfig, ChurnEvent, ChurnPolicy};
+use qaci::fleet::{sim, FleetSimConfig};
+use qaci::opt::fleet::{self, AgentSpec, FleetProblem, ProposedOptions};
+use qaci::system::queue::{QueueDiscipline, QueueModel};
+use qaci::system::Platform;
+
+fn mixed(n: usize) -> FleetProblem {
+    FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
+}
+
+/// Acceptance: under joins/leaves/bursts, online re-allocation achieves
+/// strictly lower time-averaged fleet-weighted cost than the best static
+/// allocation computed at t = 0.
+#[test]
+fn online_reallocation_beats_best_static_under_churn() {
+    let cfg = ChurnConfig::default();
+    let (tl, reports) = churn::compare(Platform::fleet_edge(), &cfg);
+    assert!(tl.joins + tl.leaves + tl.bursts > 0, "default config must churn");
+    let by = |p: ChurnPolicy| reports.iter().find(|r| r.policy == p).unwrap();
+    let online = by(ChurnPolicy::Online);
+    let best_static = by(ChurnPolicy::StaticEqual)
+        .time_avg_cost
+        .min(by(ChurnPolicy::StaticProposed).time_avg_cost);
+    assert!(
+        online.time_avg_cost < best_static,
+        "online {} !< best static {}",
+        online.time_avg_cost,
+        best_static
+    );
+    assert!(online.reallocations > 0);
+    // the same holds for the distortion upper bound
+    let best_static_du = by(ChurnPolicy::StaticEqual)
+        .time_avg_d_upper
+        .min(by(ChurnPolicy::StaticProposed).time_avg_d_upper);
+    assert!(online.time_avg_d_upper < best_static_du);
+}
+
+/// Acceptance: with churn disabled the online path reproduces the static
+/// proposed allocation exactly — the fingerprint never changes, so the
+/// warm re-solve never fires.
+#[test]
+fn online_without_churn_is_exactly_static_proposed() {
+    let cfg = ChurnConfig { queue: None, ..ChurnConfig::default() }.without_churn();
+    let tl = churn::timeline(&cfg);
+    assert!(tl.events.iter().all(|&(_, e)| e == ChurnEvent::Tick));
+    let online = churn::run_churn(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+    let statik = churn::run_churn(Platform::fleet_edge(), &tl, ChurnPolicy::StaticProposed, &cfg);
+    assert_eq!(online.reallocations, 0);
+    assert!(online.realloc_skipped > 0);
+    assert_eq!(online.time_avg_cost, statik.time_avg_cost);
+    assert_eq!(online.final_alloc.objective, statik.final_alloc.objective);
+    for (a, b) in online.final_alloc.agents.iter().zip(&statik.final_alloc.agents) {
+        assert_eq!(a.design.map(|d| d.b_hat), b.design.map(|d| d.b_hat));
+        assert_eq!(a.server_share, b.server_share);
+        assert_eq!(a.airtime_share, b.airtime_share);
+    }
+    // and both equal a direct static solve of the same fleet
+    let direct = fleet::solve_proposed(
+        &mixed(cfg.initial_agents)
+            .with_link(cfg.link_rate_bps, cfg.link_base_latency_s),
+    );
+    assert_eq!(direct.objective, online.final_alloc.objective);
+}
+
+/// The same timeline replays identically, so policy comparisons are
+/// apples-to-apples and reports are reproducible.
+#[test]
+fn churn_runs_are_deterministic() {
+    let cfg = ChurnConfig::default();
+    let tl = churn::timeline(&cfg);
+    let a = churn::run_churn(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+    let b = churn::run_churn(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+    assert_eq!(a.time_avg_cost, b.time_avg_cost);
+    assert_eq!(a.reallocations, b.reallocations);
+    assert_eq!(a.cost_trace, b.cost_trace);
+}
+
+/// The analytic queue term behaves like a contention model should: it
+/// can only cost bits at identical shares, and overload rejects cleanly
+/// (finite penalty, no NaN poisoning) instead of admitting garbage.
+#[test]
+fn queue_aware_allocation_degrades_gracefully_with_load() {
+    let n = 6;
+    let mut last = f64::NEG_INFINITY;
+    for rps in [0.0, 0.02, 0.05, 0.1, 0.5] {
+        let fp = mixed(n)
+            .with_queue(QueueModel::uniform(QueueDiscipline::Fifo, n, rps));
+        let alloc = fleet::solve_equal_share(&fp);
+        assert!(alloc.objective.is_finite(), "rps={rps}");
+        assert!(
+            alloc.objective >= last - 1e-12,
+            "rps={rps}: more load cannot reduce equal-share cost"
+        );
+        last = alloc.objective;
+    }
+    // zero load with a queue attached equals no queue at all
+    let with0 = fleet::solve_equal_share(
+        &mixed(n).with_queue(QueueModel::uniform(QueueDiscipline::Fifo, n, 0.0)),
+    );
+    let without = fleet::solve_equal_share(&mixed(n));
+    assert_eq!(with0.objective, without.objective);
+}
+
+/// Warm-started re-allocation is never worse than what it started from
+/// and seats newcomers carved into an already-full allocation.
+#[test]
+fn warm_start_online_resolve_is_sound() {
+    let fp = mixed(6);
+    let cold = fleet::solve_proposed(&fp);
+    let prev: Vec<Option<(f64, f64)>> = cold
+        .agents
+        .iter()
+        .map(|a| Some((a.server_share, a.airtime_share)))
+        .collect();
+    let warm = fleet::solve_proposed_warm(&fp, &prev, ProposedOptions::default());
+    assert!(warm.objective <= cold.objective + 1e-12);
+
+    // population grows by two: the joiners arrive with None
+    let grown = mixed(8);
+    let mut prev_grown = prev;
+    prev_grown.extend([None, None]);
+    let warm8 = fleet::solve_proposed_warm(&grown, &prev_grown, ProposedOptions::default());
+    for shares in [warm8.server_shares(), warm8.airtime_shares()] {
+        assert!(shares.iter().all(|&s| (0.0..=1.0 + 1e-9).contains(&s)));
+        assert!(shares.iter().sum::<f64>() <= 1.0 + 1e-9);
+        assert!(shares[6] > 0.0 && shares[7] > 0.0, "newcomers unseated");
+    }
+}
+
+/// End-to-end: the event-level shared queue in the serving loop agrees
+/// qualitatively with the analytic model — serialization produces
+/// visible waits and a longer tail, and never loses requests.
+#[test]
+fn shared_queue_serving_loop_end_to_end() {
+    let fp = mixed(6);
+    let alloc = fleet::solve_proposed(&fp);
+    let base = FleetSimConfig {
+        requests_per_agent: 10,
+        arrival: Arrival::Batch,
+        seed: 9,
+        batcher: BatcherConfig::default(),
+        queue: None,
+    };
+    let plain = sim::run(&fp, &alloc, &base);
+    let queued = sim::run(
+        &fp,
+        &alloc,
+        &FleetSimConfig { queue: Some(QueueDiscipline::Fifo), ..base },
+    );
+    assert_eq!(plain.served + plain.rejected as usize, 60);
+    assert_eq!(queued.served, plain.served, "serialization must not drop requests");
+    assert_eq!(queued.queue_wait_s.len(), queued.served);
+    assert!(queued.queue_wait_s.max() > 0.0, "contention must surface as waits");
+    assert!(plain.queue_wait_s.max() == 0.0, "no shared queue, no waits");
+    assert!(queued.e2e_s.max() >= plain.e2e_s.max());
+    // compute-side QoS still holds: waits are e2e, not compute
+    assert_eq!(queued.qos_violations, 0);
+}
+
+/// Churn + queue discipline interact sanely: a priority queue can only
+/// help the heavy classes relative to FIFO on the same timeline.
+#[test]
+fn priority_discipline_is_no_worse_for_online_cost() {
+    let fifo_cfg = ChurnConfig { seed: 5, ..ChurnConfig::default() };
+    let prio_cfg = ChurnConfig {
+        queue: Some(QueueDiscipline::WeightedPriority),
+        ..fifo_cfg
+    };
+    // same seed, same event structure (the timeline does not depend on
+    // the queue discipline)
+    let tl_fifo = churn::timeline(&fifo_cfg);
+    let tl_prio = churn::timeline(&prio_cfg);
+    assert_eq!(tl_fifo.events, tl_prio.events);
+    let fifo = churn::run_churn(Platform::fleet_edge(), &tl_fifo, ChurnPolicy::Online, &fifo_cfg);
+    let prio = churn::run_churn(Platform::fleet_edge(), &tl_prio, ChurnPolicy::Online, &prio_cfg);
+    assert!(fifo.time_avg_cost.is_finite() && prio.time_avg_cost.is_finite());
+    // both adapt; neither collapses (finite, positive, same event count)
+    assert_eq!(fifo.events, prio.events);
+    assert!(prio.time_avg_cost > 0.0 && fifo.time_avg_cost > 0.0);
+}

@@ -114,8 +114,7 @@ fn pipelined_server_matches_engine_results() {
         .iter()
         .map(|r| (r.id, r.caption.clone()))
         .collect();
-    let mut b: Vec<(u64, String)> =
-        t2.records.iter().map(|r| (r.id, r.caption.clone())).collect();
+    let mut b: Vec<(u64, String)> = t2.records.iter().map(|r| (r.id, r.caption.clone())).collect();
     a.sort();
     b.sort();
     assert_eq!(a, b, "pipelined and single-thread captions diverge");
@@ -135,8 +134,7 @@ fn lower_bit_budget_lowers_quality_but_saves_energy() {
     let probe = CoModel::load(&reg, "blip2ish").unwrap();
     let platform_probe = platform_for(&probe);
     let t0 = 1.2 * platform_probe.min_delay(16.0);
-    let prob = qaci::opt::Problem::new(
-        platform_probe, probe.agent_weights.lambda, t0, 1e9);
+    let prob = qaci::opt::Problem::new(platform_probe, probe.agent_weights.lambda, t0, 1e9);
     let e_tight = prob.plan_frequencies(6.0).unwrap().energy * 1.05;
     let e_loose = prob.plan_frequencies(16.0).unwrap().energy * 1.50;
     assert!(e_loose > e_tight);
@@ -146,8 +144,7 @@ fn lower_bit_budget_lowers_quality_but_saves_energy() {
         let mut model = CoModel::load(&reg, "blip2ish").unwrap();
         let platform = platform_for(&model);
         let lambda = model.agent_weights.lambda;
-        let scheduler =
-            Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
+        let scheduler = Scheduler::new(platform, lambda, Algorithm::Exact, Scheme::Uniform, 1);
         let router = Router::new(QosPolicy::uniform(t0, e0), scheduler);
         let mut engine = Engine::new(
             &mut model,
@@ -159,8 +156,7 @@ fn lower_bit_budget_lowers_quality_but_saves_energy() {
         );
         let t = engine.run(generate(20, eval.len(), Arrival::Batch, 11)).unwrap();
         assert_eq!(t.qos_violations(), 0);
-        let bits =
-            t.records.iter().map(|r| r.b_hat as f64).sum::<f64>() / t.len() as f64;
+        let bits = t.records.iter().map(|r| r.b_hat as f64).sum::<f64>() / t.len() as f64;
         (t.cider_x100(&eval.refs), t.total_energy_j() / t.len() as f64, bits)
     };
     let (cider_tight, energy_tight, bits_tight) = run_with_budget(e_tight);

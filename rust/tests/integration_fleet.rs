@@ -83,6 +83,7 @@ fn fleet_serving_loop_end_to_end() {
             arrival: Arrival::Poisson { lambda_rps: 1.5 },
             seed: 5,
             batcher: BatcherConfig::default(),
+            queue: None,
         },
     );
     assert_eq!(report.served + report.rejected as usize, 8 * 12);
@@ -130,6 +131,7 @@ fn admission_control_under_overload() {
             arrival: Arrival::Batch,
             seed: 2,
             batcher: BatcherConfig::default(),
+            queue: None,
         },
     );
     assert_eq!(report.rejected, ((32 - proposed.admitted) * 4) as u64);

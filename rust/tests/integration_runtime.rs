@@ -170,9 +170,7 @@ fn manifest_lambda_matches_rust_fit() {
     // python fit excluded layernorm params; the rust blob fit includes
     // them — agreement within 2x is enough (λ enters the bounds
     // multiplicatively and both fits are reported in benches)
-    let rust_fit = qaci::theory::expdist::ExponentialModel::fit_weights(
-        &model.agent_weights.blob,
-    );
+    let rust_fit = qaci::theory::expdist::ExponentialModel::fit_weights(&model.agent_weights.blob);
     let ratio = rust_fit.lambda / model.agent_weights.lambda;
     assert!(
         (0.5..2.0).contains(&ratio),

@@ -223,9 +223,8 @@ mod tests {
     fn literal_roundtrip_f32() {
         let xs = [1.0f32, -2.5, 3.25, 0.0, 5.5, -6.0];
         let bytes: Vec<u8> = xs.iter().flat_map(|v| v.to_le_bytes()).collect();
-        let lit =
-            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &bytes)
-                .unwrap();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &bytes)
+            .unwrap();
         assert_eq!(lit.element_count(), 6);
         assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
     }
@@ -235,19 +234,15 @@ mod tests {
         assert!(Literal::create_from_shape_and_untyped_data(
             ElementType::F32,
             &[4],
-            &[0u8; 12]
+            &[0u8; 12],
         )
         .is_err());
     }
 
     #[test]
     fn literal_type_mismatch_rejected() {
-        let lit = Literal::create_from_shape_and_untyped_data(
-            ElementType::F32,
-            &[1],
-            &[0u8; 4],
-        )
-        .unwrap();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0u8; 4])
+            .unwrap();
         assert!(lit.to_vec::<i32>().is_err());
     }
 
