@@ -7,12 +7,14 @@
 //!
 //! Acceptance properties checked inline: whenever the timeline actually
 //! churns, the online policy achieves strictly lower time-averaged
-//! fleet-weighted cost than the *best* static policy; with churn
-//! disabled the online policy reproduces static-proposed exactly and
-//! never re-solves.
+//! fleet-weighted cost than the *best* static policy — including on the
+//! heterogeneous-silicon scenario, where newcomers draw from the full
+//! orin/xavier/phone ladder; with churn disabled the online policy
+//! reproduces static-proposed exactly and never re-solves.
 
 use qaci::bench_harness::Table;
 use qaci::fleet::churn::{self, ChurnConfig, ChurnPolicy};
+use qaci::opt::fleet::AgentSpec;
 use qaci::system::queue::QueueDiscipline;
 use qaci::system::Platform;
 
@@ -31,7 +33,7 @@ fn main() {
             "final N",
         ],
     );
-    let scenarios: [(&str, ChurnConfig); 4] = [
+    let scenarios: [(&str, ChurnConfig); 5] = [
         ("baseline", ChurnConfig::default()),
         (
             "no-churn",
@@ -51,6 +53,14 @@ fn main() {
             "priority-queue",
             ChurnConfig {
                 queue: Some(QueueDiscipline::WeightedPriority),
+                seed: 3,
+                ..ChurnConfig::default()
+            },
+        ),
+        (
+            "hetero-tiers",
+            ChurnConfig {
+                tiers: AgentSpec::tier_mix(2),
                 seed: 3,
                 ..ChurnConfig::default()
             },

@@ -3,15 +3,24 @@
 //! proposed joint multi-agent design against the equal-share and
 //! feasible-random baselines. Artifact-free (analytic serving loop).
 //!
-//! Acceptance property checked inline: the proposed allocator never loses
-//! to the equal split, and strictly beats it on fleet-weighted distortion
-//! for every contended size N ≥ 4.
+//! Acceptance properties checked inline:
+//! * the proposed allocator never loses to the equal split, and strictly
+//!   beats it on fleet-weighted distortion for every contended size N ≥ 4;
+//! * on heterogeneous silicon (the orin/xavier/phone ladder) the margin
+//!   over equal-share is non-decreasing in tier spread at every
+//!   fully-admitted size and strictly widens once all three tiers are
+//!   present, while the uniform-orin ladder reproduces the homogeneous
+//!   fleet bit for bit;
+//! * the fixed-point interference pass converges (no mean-field
+//!   fallback) on every queued scenario in the table below, and its
+//!   waits never leave the mean-field bracket.
 
 use qaci::bench_harness::{scaled, Table};
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
 use qaci::fleet::{sim, FleetSimConfig};
 use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem};
+use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
 use qaci::util::timer::Stopwatch;
 
@@ -94,4 +103,156 @@ fn main() {
     }
     t.print();
     println!("\nOK: proposed <= equal-share everywhere, strictly better for N >= 4");
+
+    hetero_margin_ladder();
+    fixed_point_scenarios();
+}
+
+/// Margin over equal-share vs. silicon spread, at fully-admitted fleet
+/// sizes (the regime where heterogeneity — not admission control — is
+/// the whole story). Margin is the absolute fleet-weighted objective
+/// difference equal − proposed.
+fn hetero_margin_ladder() {
+    let mut t = Table::new(
+        "hetero ladder: margin over equal-share vs tier spread (higher = wider win)",
+        &["N", "spread", "tiers", "proposed", "equal", "margin", "admitted"],
+    );
+    for n in [4usize, 6, 7] {
+        let mut margins = Vec::new();
+        for spread in 0..=2 {
+            let tiers = AgentSpec::tier_mix(spread);
+            let fp = FleetProblem::new(
+                Platform::fleet_edge(),
+                AgentSpec::tiered_fleet(n, &tiers),
+            );
+            let proposed = fleet::solve_proposed(&fp);
+            let equal = fleet::solve_equal_share(&fp);
+            let margin = equal.objective - proposed.objective;
+            t.row(&[
+                format!("{n}"),
+                format!("{spread}"),
+                tiers.iter().map(|p| p.tier).collect::<Vec<_>>().join("+"),
+                format!("{:.3e}", proposed.objective),
+                format!("{:.3e}", equal.objective),
+                format!("{:.3e}", margin),
+                format!("{}/{n}", proposed.admitted),
+            ]);
+            if spread == 0 {
+                // the uniform ladder is the homogeneous fleet, exactly
+                let homogeneous = fleet::solve_proposed(&FleetProblem::new(
+                    Platform::fleet_edge(),
+                    AgentSpec::mixed_fleet(n),
+                ));
+                assert_eq!(
+                    proposed.objective, homogeneous.objective,
+                    "N={n}: uniform tier ladder must reproduce the homogeneous fleet"
+                );
+            }
+            assert!(
+                proposed.objective <= equal.objective + 1e-12,
+                "N={n} spread={spread}: proposed above equal-share"
+            );
+            margins.push(margin);
+        }
+        assert!(
+            margins.windows(2).all(|w| w[0] <= w[1] + 1e-12),
+            "N={n}: margin not non-decreasing in tier spread: {margins:?}"
+        );
+        if n == 7 {
+            assert!(
+                margins[2] > margins[1] * 1.5,
+                "N=7: 3-tier margin {} does not strictly widen past 2-tier {}",
+                margins[2],
+                margins[1]
+            );
+        }
+    }
+    t.print();
+    println!("\nOK: margin over equal-share non-decreasing in tier spread, widening at N=7");
+}
+
+/// Designated queued scenarios for the fixed-point interference pass:
+/// every one must converge (no mean-field fallback), with waits inside
+/// the mean-field bracket spanned by the fastest and slowest active
+/// service — the pass sharpens the mean-field envelope, never exits it.
+fn fixed_point_scenarios() {
+    let mut t = Table::new(
+        "fixed-point interference: designated scenarios (all must converge)",
+        &["N", "spread", "rps", "alloc", "active", "max wait [s]"],
+    );
+    for &(n, rps) in &[(2usize, 0.02), (2, 0.05), (4, 0.02), (4, 0.05), (6, 0.02)] {
+        for spread in [0usize, 2] {
+            let fp = FleetProblem::new(
+                Platform::fleet_edge(),
+                AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(spread)),
+            )
+            .with_queue(QueueModel::uniform(QueueDiscipline::Fifo, n, rps));
+            for name in ["equal", "proposed"] {
+                let alloc = if name == "equal" {
+                    fleet::solve_equal_share(&fp)
+                } else {
+                    fleet::solve_proposed(&fp)
+                };
+                let result =
+                    fp.interference_waits(&alloc.server_shares(), &alloc.airtime_shares());
+                assert!(
+                    result.converged,
+                    "N={n} rps={rps} spread={spread} {name}: fixed point fell back"
+                );
+                let services: Vec<f64> =
+                    alloc.server_shares().iter().map(|&m| fp.own_service(m)).collect();
+                let act: Vec<f64> =
+                    result.active.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
+                let active_s: Vec<f64> = services
+                    .iter()
+                    .zip(&result.active)
+                    .filter(|(s, &a)| a && s.is_finite())
+                    .map(|(s, _)| *s)
+                    .collect();
+                let queue = fp.queue.as_ref().unwrap();
+                if let (Some(&s_min), Some(&s_max)) = (
+                    active_s.iter().min_by(|a, b| a.total_cmp(b)),
+                    active_s.iter().max_by(|a, b| a.total_cmp(b)),
+                ) {
+                    for i in 0..n {
+                        if !result.active[i] || !services[i].is_finite() {
+                            continue;
+                        }
+                        let mut lo_vec = vec![s_min; n];
+                        lo_vec[i] = services[i];
+                        let mut hi_vec = vec![s_max; n];
+                        hi_vec[i] = services[i];
+                        let lo = queue.waits_given(&lo_vec, &act, |j| fp.agents[j].weight)[i];
+                        let hi = queue.waits_given(&hi_vec, &act, |j| fp.agents[j].weight)[i];
+                        assert!(
+                            result.waits[i] >= lo - 1e-12,
+                            "N={n} rps={rps} {name}: wait {} under bracket {lo}",
+                            result.waits[i]
+                        );
+                        assert!(
+                            result.waits[i] <= hi + 1e-12 || hi.is_infinite(),
+                            "N={n} rps={rps} {name}: wait {} over bracket {hi}",
+                            result.waits[i]
+                        );
+                    }
+                }
+                let max_wait = result
+                    .waits
+                    .iter()
+                    .cloned()
+                    .filter(|w| w.is_finite())
+                    .fold(0.0f64, f64::max);
+                t.row(&[
+                    format!("{n}"),
+                    format!("{spread}"),
+                    format!("{rps}"),
+                    name.to_string(),
+                    format!("{}", result.active.iter().filter(|&&a| a).count()),
+                    format!("{max_wait:.3}"),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("\nOK: fixed-point pass converged within the mean-field bracket on all scenarios");
 }

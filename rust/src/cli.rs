@@ -18,6 +18,7 @@ use qaci::rl::env::BudgetRanges;
 use qaci::rl::PpoConfig;
 use qaci::runtime::executor::CoModel;
 use qaci::runtime::Registry;
+use qaci::system::platform::DeviceProfile;
 use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
 use qaci::theory::expdist::ExponentialModel;
@@ -41,6 +42,11 @@ pub fn main() {
         .describe("seed", "rng seed", Some("0"))
         .describe("paper-platform", "use paper FLOPs instead of measured", None)
         .describe("agents", "fleet size N (fleet subcommand)", Some("8"))
+        .describe(
+            "tiers",
+            "fleet silicon ladder, comma list of orin|xavier|phone (one QoS cycle per tier)",
+            Some("orin"),
+        )
         .describe("rate-mbps", "shared uplink goodput (fleet)", Some("400"))
         .describe(
             "queue",
@@ -323,6 +329,10 @@ fn cmd_fleet(args: &Args) -> i32 {
         .unwrap_or(FleetAlgorithm::Proposed);
     let seed = args.usize("seed", 0) as u64;
     let queue = QueueDiscipline::parse(&args.str("queue", "off"));
+    let Some(tiers) = DeviceProfile::parse_mix(&args.str("tiers", "orin")) else {
+        eprintln!("unknown --tiers (expected comma list of orin|xavier|phone)");
+        return 2;
+    };
     // with the queue on, the allocator's analytic load and the simulated
     // arrivals must describe the same traffic: one rate drives both
     // (explicit --rps still wins for stress runs)
@@ -331,14 +341,15 @@ fn cmd_fleet(args: &Args) -> i32 {
     } else {
         args.f64("rps", 2.0)
     };
-    let mut fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
+    let mut fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::tiered_fleet(n, &tiers))
         .with_link(args.f64("rate-mbps", 400.0) * 1e6, 2e-3);
     if let Some(discipline) = queue {
         fp = fp.with_queue(QueueModel::uniform(discipline, n, arrival_rps));
     }
     println!(
-        "fleet: N={n} agents, shared server f̃^max={:.1} GHz, shared uplink {:.0} Mbps, \
-         algorithm={}, queue={}, arrivals {:.3}/s per agent",
+        "fleet: N={n} agents, tiers [{}], shared server f̃^max={:.1} GHz, shared uplink \
+         {:.0} Mbps, algorithm={}, queue={}, arrivals {:.3}/s per agent",
+        tiers.iter().map(|t| t.tier).collect::<Vec<_>>().join(","),
         fp.base.server.f_max / 1e9,
         fp.link_rate_bps / 1e6,
         algorithm.name(),
@@ -362,8 +373,8 @@ fn cmd_fleet(args: &Args) -> i32 {
     let mut t = Table::new(
         "per-agent allocation",
         &[
-            "agent", "class", "w", "T0", "E0", "b̂", "μ", "α", "link ms", "e2e p50", "e2e p95",
-            "E mean", "served",
+            "agent", "class", "tier", "w", "T0", "E0", "b̂", "μ", "α", "link ms", "e2e p50",
+            "e2e p95", "E mean", "served",
         ],
     );
     for (a, spec) in report.per_agent.iter().zip(&fp.agents) {
@@ -371,6 +382,7 @@ fn cmd_fleet(args: &Args) -> i32 {
         t.row(&[
             format!("{}", a.agent),
             a.class.to_string(),
+            a.tier.to_string(),
             format!("{:.1}", spec.weight),
             format!("{:.2}", spec.t0),
             format!("{:.2}", spec.e0),
@@ -436,6 +448,10 @@ fn cmd_fleet(args: &Args) -> i32 {
 /// leaves, load bursts) under the static t=0 allocations and the online
 /// warm-started re-allocation, and compare time-averaged fleet cost.
 fn cmd_fleet_churn(args: &Args) -> i32 {
+    let Some(tiers) = DeviceProfile::parse_mix(&args.str("tiers", "orin")) else {
+        eprintln!("unknown --tiers (expected comma list of orin|xavier|phone)");
+        return 2;
+    };
     let cfg = ChurnConfig {
         initial_agents: args.usize("agents", 4).max(1),
         horizon_s: args.f64("horizon", 600.0),
@@ -450,13 +466,15 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         queue: QueueDiscipline::parse(&args.str("queue", "fifo")),
         link_rate_bps: args.f64("rate-mbps", 400.0) * 1e6,
         link_base_latency_s: 2e-3,
+        tiers,
         seed: args.usize("seed", 0) as u64,
     };
     let (tl, reports) = churn::compare(Platform::fleet_edge(), &cfg);
     println!(
-        "churn: N0={} agents, horizon {:.0}s, {} events ({} joins, {} leaves, {} bursts), \
-         queue={}",
+        "churn: N0={} agents, tiers [{}], horizon {:.0}s, {} events ({} joins, {} leaves, \
+         {} bursts), queue={}",
         cfg.initial_agents,
+        cfg.tiers.iter().map(|t| t.tier).collect::<Vec<_>>().join(","),
         cfg.horizon_s,
         tl.events.len(),
         tl.joins,

@@ -31,6 +31,7 @@
 use crate::opt::fleet::{
     self, AgentAllocation, AgentSpec, FleetAllocation, FleetProblem, ProposedOptions,
 };
+use crate::system::platform::DeviceProfile;
 use crate::system::queue::{QueueDiscipline, QueueModel};
 use crate::system::Platform;
 use crate::theory::rate_distortion as rd;
@@ -40,7 +41,7 @@ use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 
 /// Knobs for a churn run. Rates are per second of simulated time.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ChurnConfig {
     /// population at t = 0
     pub initial_agents: usize,
@@ -65,6 +66,11 @@ pub struct ChurnConfig {
     /// shared uplink
     pub link_rate_bps: f64,
     pub link_base_latency_s: f64,
+    /// silicon ladder newcomers draw from: an agent's stable key picks
+    /// its tier via [`AgentSpec::tiered_spec`], so a replayed timeline
+    /// seats identical silicon every run. The default uniform-Orin
+    /// ladder reproduces the homogeneous fleet exactly.
+    pub tiers: Vec<DeviceProfile>,
     pub seed: u64,
 }
 
@@ -84,6 +90,7 @@ impl Default for ChurnConfig {
             queue: Some(QueueDiscipline::Fifo),
             link_rate_bps: 400e6,
             link_base_latency_s: 2e-3,
+            tiers: vec![DeviceProfile::orin()],
             seed: 0,
         }
     }
@@ -270,6 +277,10 @@ pub struct ChurnReport {
 
 /// Everything the fleet problem depends on, hashed — the same
 /// invalidation idiom as the coordinator scheduler's `config_stamp`.
+/// Covers each agent's device profile and channel gain: once agents
+/// differ in silicon, two fleets with identical contracts but different
+/// tiers must not alias to the same warm-start cache entry (regression-
+/// tested below).
 fn fingerprint(fp: &FleetProblem) -> u64 {
     let mut h = std::collections::hash_map::DefaultHasher::new();
     fp.n().hash(&mut h);
@@ -279,6 +290,17 @@ fn fingerprint(fp: &FleetProblem) -> u64 {
             x.to_bits().hash(&mut h);
         }
         a.payload_bytes.hash(&mut h);
+        a.device.tier.hash(&mut h);
+        for x in [
+            a.device.spec.f_max,
+            a.device.spec.flops_per_cycle,
+            a.device.spec.pue,
+            a.device.spec.psi,
+            a.device.link_gain,
+            a.channel_gain,
+        ] {
+            x.to_bits().hash(&mut h);
+        }
     }
     fp.link_rate_bps.to_bits().hash(&mut h);
     fp.link_base_latency_s.to_bits().hash(&mut h);
@@ -302,12 +324,12 @@ struct Population {
 }
 
 impl Population {
-    fn spec(key: u64) -> AgentSpec {
-        AgentSpec::class_spec(key as usize)
+    fn spec(cfg: &ChurnConfig, key: u64) -> AgentSpec {
+        AgentSpec::tiered_spec(key as usize, &cfg.tiers)
     }
 
     fn problem(&self, base: Platform, cfg: &ChurnConfig) -> FleetProblem {
-        let specs: Vec<AgentSpec> = self.live.iter().map(|&k| Self::spec(k)).collect();
+        let specs: Vec<AgentSpec> = self.live.iter().map(|&k| Self::spec(cfg, k)).collect();
         let mut fp = FleetProblem::new(base, specs)
             .with_link(cfg.link_rate_bps, cfg.link_base_latency_s);
         if let Some(discipline) = cfg.queue {
@@ -345,18 +367,30 @@ impl Population {
 /// Cost and D^U rates of a **frozen** allocation under current
 /// conditions: keys absent from the t = 0 slots (joiners) pay the
 /// rejection penalty; frozen designs that the current conditions (queue
-/// load, shares) no longer support pay it too.
+/// load, shares) no longer support pay it too. Feasibility is checked
+/// at the actual-share waits of the frozen slots held by the live
+/// population (frozen-admitted agents load the queue, everyone else's
+/// traffic is turned away) — the same interference model the online
+/// policy is scored under, so the comparison stays apples-to-apples.
 fn static_rates(
     fp: &FleetProblem,
     live: &[u64],
     slots: &HashMap<u64, AgentAllocation>,
 ) -> (f64, f64) {
     let (mut cost, mut du) = (0.0, 0.0);
+    let (services, activity): (Vec<f64>, Vec<f64>) = live
+        .iter()
+        .map(|key| match slots.get(key) {
+            Some(slot) if slot.design.is_some() => (fp.own_service(slot.server_share), 1.0),
+            _ => (f64::INFINITY, 0.0),
+        })
+        .unzip();
+    let waits = fp.queue_waits_given(&services, &activity);
     for (i, key) in live.iter().enumerate() {
         let spec = &fp.agents[i];
         let served_bits = slots.get(key).and_then(|slot| {
             let d = slot.design?;
-            fp.agent_problem(i, slot.server_share, slot.airtime_share)
+            fp.agent_problem_at_wait(i, slot.server_share, slot.airtime_share, waits[i])
                 .is_some_and(|p| p.is_feasible(&d))
                 .then_some(d.b_hat)
         });
@@ -632,6 +666,53 @@ mod tests {
             assert!(r.time_avg_cost.is_finite());
             assert!(r.time_avg_d_upper.is_finite());
         }
+    }
+
+    #[test]
+    fn fingerprint_covers_device_profiles_and_channel_gains() {
+        // regression (bugfix): two fleets with identical QoS contracts
+        // but different silicon or radios must not alias to the same
+        // warm-start cache entry — before tiers existed the fingerprint
+        // hashed contracts only
+        let base_fleet = |tiers: &[DeviceProfile]| {
+            FleetProblem::new(base(), AgentSpec::tiered_fleet(6, tiers))
+        };
+        let uniform = base_fleet(&AgentSpec::tier_mix(0));
+        let hetero = base_fleet(&AgentSpec::tier_mix(2));
+        assert_ne!(
+            fingerprint(&uniform),
+            fingerprint(&hetero),
+            "tier mix must change the fleet fingerprint"
+        );
+        // a lone channel-gain change (same tiers, same contracts) counts
+        let mut faded = uniform.clone();
+        faded.agents[3].channel_gain = 0.7;
+        assert_ne!(fingerprint(&uniform), fingerprint(&faded));
+        // and a lone device-constant change counts too
+        let mut hotter = uniform.clone();
+        hotter.agents[0].device.spec.psi *= 2.0;
+        assert_ne!(fingerprint(&uniform), fingerprint(&hotter));
+        // while re-deriving the same fleet reproduces the same stamp
+        assert_eq!(fingerprint(&uniform), fingerprint(&base_fleet(&AgentSpec::tier_mix(0))));
+    }
+
+    #[test]
+    fn tiered_churn_online_still_beats_best_static() {
+        // newcomers drawn from the full silicon ladder: the online
+        // policy's edge survives heterogeneity (bench scenario seed)
+        let cfg = ChurnConfig { tiers: AgentSpec::tier_mix(2), seed: 3, ..ChurnConfig::default() };
+        let (tl, reports) = compare(base(), &cfg);
+        assert!(tl.joins + tl.leaves + tl.bursts > 0);
+        let cost =
+            |p: ChurnPolicy| reports.iter().find(|r| r.policy == p).unwrap().time_avg_cost;
+        let online = cost(ChurnPolicy::Online);
+        let best_static = cost(ChurnPolicy::StaticEqual).min(cost(ChurnPolicy::StaticProposed));
+        assert!(online < best_static, "online {online} !< best static {best_static}");
+        // the timeline's key->spec map is tier-stable: replaying the
+        // same config seats identical silicon
+        let (_, again) = compare(base(), &cfg);
+        let online_again = again.iter().find(|r| r.policy == ChurnPolicy::Online).unwrap();
+        assert_eq!(online_again.time_avg_cost, online);
     }
 
     #[test]

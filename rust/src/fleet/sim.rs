@@ -3,8 +3,10 @@
 //!
 //! Per admitted agent, the loop instantiates the same request path the
 //! single-pair coordinator uses — [`Router`] (QoS budgets → plans, via a
-//! **contention-aware** [`Scheduler`] built on the agent's share-scaled
-//! platform and link/queue-reduced delay budget) and [`Batcher`] — then
+//! **contention-aware** [`Scheduler`] built on the agent's own silicon
+//! tier, its share-scaled server slice, and its link/queue-reduced delay
+//! budget; the shared medium applies each agent's channel gain) and
+//! [`Batcher`] — then
 //! walks the arrival sequence with a single-inflight FIFO per agent: a
 //! request starts once it has arrived, its batch was released, and the
 //! agent's previous request finished; it pays the simulated
@@ -75,6 +77,8 @@ impl Default for FleetSimConfig {
 pub struct AgentReport {
     pub agent: usize,
     pub class: &'static str,
+    /// silicon tier name ([`crate::system::platform::DeviceProfile`])
+    pub tier: &'static str,
     pub admitted: bool,
     /// planned bit-width (0 when rejected)
     pub b_hat: u32,
@@ -195,7 +199,8 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
         0.10,
         alloc.airtime_shares(),
         cfg.seed ^ 0x5EED_F1EE,
-    );
+    )
+    .with_gains(fp.agents.iter().map(|a| a.channel_gain).collect());
     let mut rejected_reports: Vec<AgentReport> = Vec::new();
     let mut lanes: Vec<Lane> = Vec::new();
 
@@ -217,6 +222,7 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
             rejected_reports.push(AgentReport {
                 agent: i,
                 class: spec.class,
+                tier: spec.device.tier,
                 admitted: false,
                 b_hat: 0,
                 server_share: slot.server_share,
@@ -232,11 +238,12 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
             continue;
         };
 
-        // contention-aware scheduler: the agent's slice of the shared
-        // server, and the delay budget net of its nominal uplink time and
-        // (when the queue model is on) its expected queue wait
-        let platform = fp.agent_platform(slot.server_share);
-        let t0_compute = fp.effective_t0(i, slot.server_share, slot.airtime_share);
+        // contention-aware scheduler: the agent's own silicon tier on
+        // its slice of the shared server, and the delay budget net of
+        // its nominal uplink time and the analytic queue wait its design
+        // was scored at (fixed-point when it converged)
+        let platform = fp.agent_platform(i, slot.server_share);
+        let t0_compute = spec.t0 - fp.link_time(i, slot.airtime_share) - slot.queue_wait_s;
         let scheduler = Scheduler::new(
             platform,
             spec.lambda,
@@ -354,6 +361,7 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
         per_agent.push(AgentReport {
             agent: lane.agent,
             class: fp.agents[lane.agent].class,
+            tier: fp.agents[lane.agent].device.tier,
             admitted: true,
             b_hat: lane.design.b_hat,
             server_share: slot.server_share,
@@ -432,6 +440,35 @@ mod tests {
                 assert!(a.e2e_s.min() > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn tiered_fleet_serves_with_per_agent_silicon() {
+        // a mixed-tier fleet runs end to end; tier names surface in the
+        // per-agent reports and weak-silicon agents pay visibly longer
+        // agent-stage compute than Orin peers of the same class
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(7, &AgentSpec::tier_mix(2)),
+        );
+        let alloc = fleet::solve_proposed(&fp);
+        assert_eq!(alloc.admitted, 7, "mixed-tier N=7 fleet should be fully seated");
+        let report = run(&fp, &alloc, &cfg(6));
+        assert_eq!(report.served, 7 * 6);
+        assert_eq!(report.qos_violations, 0);
+        let tiers: Vec<&str> = report.per_agent.iter().map(|a| a.tier).collect();
+        assert!(tiers.contains(&"orin") && tiers.contains(&"xavier") && tiers.contains(&"phone"));
+        // same QoS class, weaker silicon: the phone-tier interactive
+        // agent (6) runs at fewer bits than the Orin one (0)
+        let (orin_i, phone_i) = (&report.per_agent[0], &report.per_agent[6]);
+        assert_eq!((orin_i.class, phone_i.class), ("interactive", "interactive"));
+        assert_eq!((orin_i.tier, phone_i.tier), ("orin", "phone"));
+        assert!(
+            phone_i.b_hat < orin_i.b_hat,
+            "phone-tier b̂ {} should trail orin b̂ {}",
+            phone_i.b_hat,
+            orin_i.b_hat
+        );
     }
 
     #[test]

@@ -32,13 +32,33 @@
 //!
 //! The **fleet layer** generalizes the paper's single agent–server pair to
 //! N agents contending for one edge server and one wireless medium:
-//! airtime shares live in [`system::channel::MultiAccessChannel`], the
-//! shared edge queue (analytic M/G/1 feedback + event-level dispatch) in
-//! [`system::queue`], the joint multi-agent allocator (per-agent
-//! bisection + water-filling + admission control, queue-aware delay
-//! budgets) in [`opt::fleet`], and the fleet serving loop in
-//! [`fleet::sim`]. Entry points: `qaci fleet`, `benches/fleet_scale.rs`,
-//! `examples/fleet_sweep.rs`.
+//! airtime shares and per-agent channel gains live in
+//! [`system::channel::MultiAccessChannel`], the shared edge queue
+//! (analytic M/G/1 feedback + event-level dispatch) in [`system::queue`],
+//! the joint multi-agent allocator (per-agent bisection + water-filling +
+//! admission control, queue-aware delay budgets) in [`opt::fleet`], and
+//! the fleet serving loop in [`fleet::sim`]. Entry points: `qaci fleet`,
+//! `benches/fleet_scale.rs`, `examples/fleet_sweep.rs`.
+//!
+//! ## Heterogeneous silicon
+//!
+//! Fleets are not built from one device: each
+//! [`opt::fleet::AgentSpec`] carries a [`system::DeviceProfile`] — the
+//! Jetson-Orin / Xavier / phone-class tier ladder with per-tier f^max,
+//! compute efficiency κ, power curve and radio gain — and every
+//! per-agent subproblem runs on that silicon
+//! ([`opt::fleet::FleetProblem::agent_platform`]). The uniform-Orin
+//! ladder reproduces the homogeneous fleet bit for bit (regression-
+//! tested); on a mixed ladder the proposed allocator's margin over the
+//! equal split widens with tier spread, because only the exchange can
+//! buy a weak device the fatter server slice its QoS needs. Queue
+//! interference is scored by a damped **fixed-point pass over the
+//! actual shares** ([`opt::fleet::FleetProblem::interference_waits`];
+//! mean-field fallback on non-convergence), with property/golden tests
+//! (`system/queue.rs`, `tests/golden_theory.rs`) pinning the numeric
+//! core. Entry points: `qaci fleet --tiers orin,xavier,phone`,
+//! `examples/hetero_fleet.rs`, the hetero sections of
+//! `benches/fleet_scale.rs` and `benches/fleet_churn.rs`.
 //!
 //! ## Churn mode
 //!

@@ -7,10 +7,12 @@
 //!   serve    threaded pipelined serving demo over a Poisson workload
 //!   fleet    N agents on one edge server + one medium: joint multi-agent
 //!            allocation (proposed | equal-share | feasible-random) and the
-//!            fleet serving loop — artifact-free; `--queue fifo|priority`
-//!            adds the shared edge queue, `--churn` replays a churning
-//!            population (Poisson joins/leaves/bursts) and compares the
-//!            static t=0 allocations against online re-allocation
+//!            fleet serving loop — artifact-free; `--tiers orin,xavier,phone`
+//!            mixes heterogeneous silicon (one QoS cycle per tier),
+//!            `--queue fifo|priority` adds the shared edge queue, `--churn`
+//!            replays a churning population (Poisson joins/leaves/bursts)
+//!            and compares the static t=0 allocations against online
+//!            re-allocation
 //!   fit      fit the exponential magnitude model to a weight blob
 //!
 //! Examples:
@@ -18,6 +20,7 @@
 //!   qaci eval --model blip2ish --algorithm proposed --requests 64
 //!   qaci serve --model gitish --rps 20 --requests 100
 //!   qaci fleet --agents 8 --algorithm proposed --requests 16
+//!   qaci fleet --agents 7 --tiers orin,xavier,phone
 //!   qaci fleet --churn --agents 4 --horizon 600 --queue fifo
 fn main() { cli::main() }
 mod cli;

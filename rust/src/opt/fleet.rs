@@ -42,15 +42,35 @@
 //! path that serves part of the fleet when the equal split is entirely
 //! infeasible.
 //!
+//! ## Heterogeneous silicon and channels
+//!
+//! Each [`AgentSpec`] carries its own [`DeviceProfile`] (Orin-, Xavier-
+//! or phone-class silicon — per-device f^max, κ, power curve) and a
+//! channel gain g_i scaling its slice of the shared medium's goodput
+//! (α_i·g_i·R). Every per-agent subproblem is built on the agent's own
+//! tier ([`FleetProblem::agent_platform`]), which is where the joint
+//! design earns its keep over the equal split: a weak device needs a
+//! fatter server slice (and more airtime) to meet the same QoS, and
+//! only the exchange can move that mass. The benches assert the margin
+//! over equal-share widens as the tier spread grows, and that the
+//! uniform-Orin ladder reproduces the homogeneous fleet bit for bit.
+//!
 //! ## Queueing feedback and online re-allocation
 //!
 //! With [`FleetProblem::with_queue`], burst interference at the shared
 //! edge server enters each agent's delay constraint: the compute stages
-//! get T0_i − t_link(α_i) − W_i(μ_i), where W_i is the analytic
+//! get T0_i − t_link(α_i) − W_i, where W_i is the analytic
 //! [`QueueModel`] wait at agent i's slice-capacity service rate (an
 //! effective-service-rate term: a bigger μ_i drains the queue faster).
-//! An overloaded queue makes W_i infinite and the agent cleanly
-//! unservable at those shares. For churning fleets,
+//! The water-filling exchange probes W_i with a **mean-field** rival
+//! estimate (uniform split — separable, so coordinate descent stays
+//! exact); the allocation that comes out is then **scored** by a damped
+//! fixed-point pass over the actual shares
+//! ([`FleetProblem::interference_waits`]): rival service times at their
+//! real slices, rejected agents' traffic dropped at admission, and a
+//! clean fall-back to the mean-field estimate when no binary active-set
+//! equilibrium exists. An overloaded queue makes W_i infinite and the
+//! agent cleanly unservable at those shares. For churning fleets,
 //! [`solve_proposed_warm`] re-runs the water-filling exchange online from
 //! the previous allocation instead of from scratch — the entry point the
 //! event-driven loop in [`crate::fleet::churn`] drives.
@@ -59,12 +79,13 @@ use super::bisection;
 use super::feasible_random;
 use super::problem::{Design, Problem};
 use crate::system::channel::MultiAccessChannel;
+use crate::system::platform::DeviceProfile;
 use crate::system::queue::QueueModel;
 use crate::system::Platform;
 use crate::theory::rate_distortion as rd;
 use crate::util::rng::Rng;
 
-/// One agent's QoS contract in the fleet.
+/// One agent's QoS contract in the fleet, plus the silicon it runs on.
 #[derive(Debug, Clone, Copy)]
 pub struct AgentSpec {
     /// QoS class label (matches the coordinator's class names)
@@ -79,6 +100,11 @@ pub struct AgentSpec {
     pub weight: f64,
     /// uplink payload per request [bytes]
     pub payload_bytes: usize,
+    /// this agent's silicon tier: its [`DeviceProfile::spec`] replaces
+    /// the base platform's device in every per-agent subproblem
+    pub device: DeviceProfile,
+    /// uplink channel gain g_i ∈ (0, 1]: effective goodput is α_i·g_i·R
+    pub channel_gain: f64,
 }
 
 impl AgentSpec {
@@ -96,7 +122,9 @@ impl AgentSpec {
 
     /// The spec a (joining) agent with ordinal `idx` gets: classes cycle
     /// — also how churn assigns contracts to newcomers, so a joined
-    /// agent is indistinguishable from one seeded at t = 0.
+    /// agent is indistinguishable from one seeded at t = 0. Silicon is
+    /// the uniform Orin tier at nominal channel gain (the homogeneous
+    /// pre-tier fleet, reproduced bit for bit).
     pub fn class_spec(idx: usize) -> AgentSpec {
         let (class, t0, e0, weight) = Self::CLASSES[idx % Self::CLASSES.len()];
         AgentSpec {
@@ -106,13 +134,43 @@ impl AgentSpec {
             e0,
             weight,
             payload_bytes: Self::PAYLOAD_BLIP2,
+            device: DeviceProfile::orin(),
+            channel_gain: 1.0,
         }
     }
 
+    /// [`Self::class_spec`] on a heterogeneous silicon ladder: agents
+    /// cycle through the QoS classes as always, and every full class
+    /// cycle (3 agents) steps to the next tier in `tiers` — so each
+    /// tier hosts a complete interactive/standard/background block and
+    /// churn newcomers (keyed by ordinal) land on a reproducible tier.
+    /// The tier's nominal radio sets the agent's channel gain.
+    pub fn tiered_spec(idx: usize, tiers: &[DeviceProfile]) -> AgentSpec {
+        assert!(!tiers.is_empty());
+        let profile = tiers[(idx / Self::CLASSES.len()) % tiers.len()];
+        AgentSpec { device: profile, channel_gain: profile.link_gain, ..Self::class_spec(idx) }
+    }
+
     /// Heterogeneous fleet used by benches and the CLI: cycles the
-    /// coordinator's three QoS classes.
+    /// coordinator's three QoS classes on uniform Orin silicon.
     pub fn mixed_fleet(n: usize) -> Vec<AgentSpec> {
         (0..n).map(Self::class_spec).collect()
+    }
+
+    /// A fleet cycling both QoS classes and silicon tiers
+    /// ([`Self::tiered_spec`]). `tiered_fleet(n, &[DeviceProfile::orin()])`
+    /// is exactly [`Self::mixed_fleet`].
+    pub fn tiered_fleet(n: usize, tiers: &[DeviceProfile]) -> Vec<AgentSpec> {
+        (0..n).map(|i| Self::tiered_spec(i, tiers)).collect()
+    }
+
+    /// The canonical tier ladder by spread level: 0 = uniform Orin,
+    /// 1 = Orin + Xavier, 2 = Orin + Xavier + phone. The fleet benches
+    /// sweep this to show the proposed allocator's margin over the
+    /// equal split widening with silicon disparity.
+    pub fn tier_mix(spread: usize) -> Vec<DeviceProfile> {
+        let ladder = [DeviceProfile::orin(), DeviceProfile::xavier(), DeviceProfile::phone()];
+        ladder[..=spread.min(2)].to_vec()
     }
 }
 
@@ -120,8 +178,10 @@ impl AgentSpec {
 /// optionally with the shared edge queue's analytic feedback.
 #[derive(Debug, Clone)]
 pub struct FleetProblem {
-    /// silicon profile: `base.device` is each agent's own processor,
-    /// `base.server` is the one shared edge server
+    /// shared-infrastructure profile: `base.server` is the one shared
+    /// edge server (and `base` carries the workload constants); each
+    /// agent's processor comes from its own [`AgentSpec::device`] tier,
+    /// substituted per subproblem by [`Self::agent_platform`]
     pub base: Platform,
     pub agents: Vec<AgentSpec>,
     /// shared uplink goodput R [bits/s]
@@ -137,6 +197,10 @@ impl FleetProblem {
     /// Shared testbed WLAN defaults (400 Mbps, 2 ms), no queue feedback.
     pub fn new(base: Platform, agents: Vec<AgentSpec>) -> FleetProblem {
         assert!(!agents.is_empty());
+        assert!(
+            agents.iter().all(|a| a.channel_gain > 0.0 && a.channel_gain <= 1.0),
+            "channel gains must lie in (0, 1]"
+        );
         FleetProblem {
             base,
             agents,
@@ -170,30 +234,48 @@ impl FleetProblem {
         self.agents.len()
     }
 
-    /// The platform agent i sees under server-frequency share μ.
-    pub fn agent_platform(&self, mu: f64) -> Platform {
+    /// The platform agent i sees under server-frequency share μ: its own
+    /// silicon tier ([`AgentSpec::device`]) in front of the share-scaled
+    /// shared server. The uniform Orin tier reproduces the base device
+    /// exactly (same constants), so homogeneous fleets are unchanged.
+    pub fn agent_platform(&self, i: usize, mu: f64) -> Platform {
         let mut p = self.base;
+        p.device = self.agents[i].device.spec;
         p.server.f_max *= mu.clamp(0.0, 1.0);
         p
     }
 
     /// Nominal (jitter-free) uplink time at airtime share α — what the
-    /// allocator budgets against. A non-finite α is treated as "no
+    /// allocator budgets against; the agent's channel gain scales its
+    /// effective goodput (α·g_i·R). A non-finite α is treated as "no
     /// airtime" so a poisoned share vector degrades to a clean +inf
     /// (→ rejection) instead of propagating NaN into costs.
     pub fn link_time(&self, i: usize, alpha: f64) -> f64 {
         let share = if alpha.is_finite() { alpha.clamp(0.0, 1.0) } else { 0.0 };
         MultiAccessChannel::nominal_transmit_s(
-            self.link_rate_bps,
+            self.link_rate_bps * self.agents[i].channel_gain,
             self.link_base_latency_s,
             share,
             self.agents[i].payload_bytes,
         )
     }
 
-    /// Expected shared-queue wait for agent i at server share μ (0 when
-    /// no queue model is attached). The agent drains at its slice
-    /// capacity μ f̃^max; rivals are estimated at the uniform split.
+    /// Slice-capacity drain time of one server-stage job at share μ
+    /// (infinite for a degenerate share — the agent can never drain).
+    pub fn own_service(&self, mu: f64) -> f64 {
+        if !(mu > 0.0) || !mu.is_finite() {
+            return f64::INFINITY;
+        }
+        self.base.server_cycles() / (self.base.server.f_max * mu.clamp(0.0, 1.0))
+    }
+
+    /// Mean-field expected shared-queue wait for agent i at server share
+    /// μ (0 when no queue model is attached): the agent drains at its
+    /// slice capacity μ f̃^max, rivals are estimated at the uniform
+    /// split. This is the **separable probe** the water-filling exchange
+    /// evaluates (cost must depend on the owner's share alone); the
+    /// final allocation is scored by the sharper fixed-point pass
+    /// ([`Self::interference_waits`]) over the actual share vector.
     pub fn queue_wait(&self, i: usize, mu: f64) -> f64 {
         let Some(queue) = &self.queue else { return 0.0 };
         if !(mu > 0.0) || !mu.is_finite() {
@@ -205,31 +287,61 @@ impl FleetProblem {
         queue.expected_wait_s(i, own, reference, |j| self.agents[j].weight)
     }
 
-    /// The delay budget left for the compute stages at shares (μ, α):
-    /// T0 minus the nominal uplink time minus the expected queue wait.
+    /// Per-agent waits for explicit service/activity vectors (0 when no
+    /// queue is attached) — the churn replay scores frozen allocations
+    /// with this so static and online policies face the same
+    /// actual-share interference model.
+    pub fn queue_waits_given(&self, services: &[f64], activity: &[f64]) -> Vec<f64> {
+        match &self.queue {
+            None => vec![0.0; self.n()],
+            Some(q) => q.waits_given(services, activity, |j| self.agents[j].weight),
+        }
+    }
+
+    /// The delay budget left for the compute stages at shares (μ, α)
+    /// under the mean-field queue estimate.
     pub fn effective_t0(&self, i: usize, mu: f64, alpha: f64) -> f64 {
         self.agents[i].t0 - self.link_time(i, alpha) - self.queue_wait(i, mu)
     }
 
     /// Agent i's effective single-agent (P1) instance under shares
-    /// (μ, α): the paper's problem on the share-scaled platform with the
-    /// uplink time (and any queue wait) carved out of the delay budget.
-    /// `None` when the shares leave no compute budget at all — including
-    /// every degenerate input (share ~0, overloaded queue, non-finite
-    /// shares), so callers always see a clean rejection, never inf/NaN.
-    pub fn agent_problem(&self, i: usize, mu: f64, alpha: f64) -> Option<Problem> {
+    /// (μ, α) with an explicitly supplied queue wait: the paper's
+    /// problem on the agent's tier silicon and share-scaled server, with
+    /// the uplink time and the wait carved out of the delay budget.
+    /// `None` when nothing is left — including every degenerate input
+    /// (share ~0, infinite wait, non-finite shares), so callers always
+    /// see a clean rejection, never inf/NaN.
+    pub fn agent_problem_at_wait(
+        &self,
+        i: usize,
+        mu: f64,
+        alpha: f64,
+        wait: f64,
+    ) -> Option<Problem> {
         if !(mu > 0.0) || !mu.is_finite() || !alpha.is_finite() {
             return None;
         }
-        let t0 = self.effective_t0(i, mu, alpha);
+        let t0 = self.agents[i].t0 - self.link_time(i, alpha) - wait;
         if !(t0 > 0.0) {
             return None; // also catches the +inf link/queue times
         }
-        Some(Problem::new(self.agent_platform(mu), self.agents[i].lambda, t0, self.agents[i].e0))
+        Some(Problem::new(self.agent_platform(i, mu), self.agents[i].lambda, t0, self.agents[i].e0))
     }
 
-    /// Best per-agent design (exact bisection) under shares, or `None`
-    /// when the agent is unservable there.
+    /// [`Self::agent_problem_at_wait`] at the mean-field queue wait —
+    /// the separable form the exchange and admission probes use.
+    pub fn agent_problem(&self, i: usize, mu: f64, alpha: f64) -> Option<Problem> {
+        self.agent_problem_at_wait(i, mu, alpha, self.queue_wait(i, mu))
+    }
+
+    /// Best per-agent design (exact bisection) under shares and an
+    /// explicit wait, or `None` when the agent is unservable there.
+    pub fn agent_design_at_wait(&self, i: usize, mu: f64, alpha: f64, wait: f64) -> Option<Design> {
+        let problem = self.agent_problem_at_wait(i, mu, alpha, wait)?;
+        bisection::solve(&problem).map(|r| r.design)
+    }
+
+    /// Best per-agent design under the mean-field queue estimate.
     pub fn agent_design(&self, i: usize, mu: f64, alpha: f64) -> Option<Design> {
         let problem = self.agent_problem(i, mu, alpha)?;
         bisection::solve(&problem).map(|r| r.design)
@@ -260,10 +372,97 @@ impl FleetProblem {
         }
     }
 
-    /// Weighted per-agent objective contribution at shares (μ, α).
+    /// Weighted per-agent objective contribution at shares (μ, α) under
+    /// the mean-field queue estimate — the exchange's probe cost, a
+    /// function of the owner's shares alone (separability keeps the
+    /// water-filling exact coordinate descent).
     pub fn agent_cost(&self, i: usize, mu: f64, alpha: f64) -> f64 {
         self.design_cost(i, &self.agent_design(i, mu, alpha))
     }
+
+    /// Can agent i be served at all (b̂ = 1 feasible) at these shares
+    /// and this queue wait?
+    fn servable_at_wait(&self, i: usize, mu: f64, alpha: f64, wait: f64) -> bool {
+        self.agent_problem_at_wait(i, mu, alpha, wait)
+            .is_some_and(|p| p.plan_frequencies(1.0).is_some())
+    }
+
+    /// Damped fixed-point interference pass over the **actual** share
+    /// vector — the refinement that replaces the mean-field rival
+    /// estimate when an allocation is scored ([`evaluate`]).
+    ///
+    /// Each agent's service time is its slice-capacity drain time at its
+    /// actual μ_i; an agent that cannot be served at the resulting waits
+    /// is rejected at admission, so its traffic drops out of every
+    /// rival's load. Servability depends on the waits and the waits on
+    /// who is served — a fixed point on the active set, iterated with
+    /// damped activity levels a_i ∈ [0, 1] (θ = ½) until they settle,
+    /// then validated: the thresholded active set must reproduce itself
+    /// under the exact servability map. When no such equilibrium exists
+    /// (marginal agents flip-flop — e.g. a symmetric overload where
+    /// everyone is unservable together and servable alone), the pass
+    /// **falls back to the mean-field estimate** unchanged, so callers
+    /// never act on an unconverged guess.
+    ///
+    /// Returned waits are the converged actual-share waits (rejected
+    /// agents keep the wait that rejected them) or the mean-field vector
+    /// on fallback; `converged` distinguishes the two.
+    pub fn interference_waits(&self, mu: &[f64], alpha: &[f64]) -> Interference {
+        let n = self.n();
+        assert_eq!(mu.len(), n);
+        assert_eq!(alpha.len(), n);
+        let Some(queue) = &self.queue else {
+            return Interference { waits: vec![0.0; n], converged: true, active: vec![true; n] };
+        };
+        let weight_of = |j: usize| self.agents[j].weight;
+        let services: Vec<f64> = mu.iter().map(|&m| self.own_service(m)).collect();
+        let want_at = |waits: &[f64]| -> Vec<f64> {
+            (0..n)
+                .map(|i| {
+                    let ok = services[i].is_finite()
+                        && self.servable_at_wait(i, mu[i], alpha[i], waits[i]);
+                    if ok { 1.0 } else { 0.0 }
+                })
+                .collect()
+        };
+        let mut act: Vec<f64> =
+            services.iter().map(|s| if s.is_finite() { 1.0 } else { 0.0 }).collect();
+        for _ in 0..48 {
+            let waits = queue.waits_given(&services, &act, weight_of);
+            let want = want_at(&waits);
+            let mut delta = 0.0f64;
+            for (a, w) in act.iter_mut().zip(&want) {
+                let next = 0.5 * *a + 0.5 * w;
+                delta = delta.max((next - *a).abs());
+                *a = next;
+            }
+            if delta < 1e-9 {
+                break;
+            }
+        }
+        let fixed: Vec<f64> = act.iter().map(|&a| if a >= 0.5 { 1.0 } else { 0.0 }).collect();
+        let waits = queue.waits_given(&services, &fixed, weight_of);
+        if want_at(&waits) == fixed {
+            let active = fixed.iter().map(|&a| a >= 0.5).collect();
+            return Interference { waits, converged: true, active };
+        }
+        // no binary equilibrium: clean mean-field fallback
+        let waits = (0..n).map(|i| self.queue_wait(i, mu[i])).collect();
+        Interference { waits, converged: false, active: vec![true; n] }
+    }
+}
+
+/// Result of [`FleetProblem::interference_waits`].
+#[derive(Debug, Clone)]
+pub struct Interference {
+    /// per-agent expected shared-queue wait [s]
+    pub waits: Vec<f64>,
+    /// `true` = the active-set fixed point settled; `false` = mean-field
+    /// fallback (waits are exactly the [`FleetProblem::queue_wait`] vector)
+    pub converged: bool,
+    /// who the converged pass considers admitted-and-loading the queue
+    /// (all `true` on fallback: mean-field counts everyone)
+    pub active: Vec<bool>,
 }
 
 /// One agent's slice of a fleet allocation.
@@ -277,6 +476,10 @@ pub struct AgentAllocation {
     pub airtime_share: f64,
     /// nominal uplink time at α_i [s]
     pub link_s: f64,
+    /// the analytic shared-queue wait this agent was scored at [s]
+    /// (fixed-point when converged, mean-field on fallback, 0 without a
+    /// queue) — the budget the serving loop carves out of T0
+    pub queue_wait_s: f64,
     /// w_i-weighted objective contribution (penalty when rejected)
     pub cost: f64,
 }
@@ -318,11 +521,13 @@ impl FleetAllocation {
 
 /// Assemble an allocation from per-agent designs produced by `design_of`
 /// — shared by the bisection-based [`evaluate`] and the random baseline,
-/// so every algorithm scores against the same objective.
+/// so every algorithm scores against the same objective. `waits[i]` is
+/// the analytic queue wait each design was scored at.
 fn assemble(
     fp: &FleetProblem,
     mu: &[f64],
     alpha: &[f64],
+    waits: &[f64],
     mut design_of: impl FnMut(usize) -> Option<Design>,
 ) -> FleetAllocation {
     assert_eq!(mu.len(), fp.n());
@@ -336,6 +541,7 @@ fn assemble(
                 server_share: mu[i],
                 airtime_share: alpha[i],
                 link_s: fp.link_time(i, alpha[i]),
+                queue_wait_s: waits[i],
             }
         })
         .collect();
@@ -346,9 +552,14 @@ fn assemble(
     }
 }
 
-/// Evaluate a share assignment: per-agent exact bisection + costs.
+/// Evaluate a share assignment: fixed-point interference waits over the
+/// actual shares (mean-field fallback), then per-agent exact bisection +
+/// costs at those waits. Without a queue the waits are zero and this is
+/// the plain (P1)-per-agent scoring, bit for bit.
 pub fn evaluate(fp: &FleetProblem, mu: &[f64], alpha: &[f64]) -> FleetAllocation {
-    assemble(fp, mu, alpha, |i| fp.agent_design(i, mu[i], alpha[i]))
+    let interference = fp.interference_waits(mu, alpha);
+    let waits = interference.waits;
+    assemble(fp, mu, alpha, &waits, |i| fp.agent_design_at_wait(i, mu[i], alpha[i], waits[i]))
 }
 
 /// Which fleet allocator drives a run.
@@ -432,15 +643,19 @@ pub fn solve_proposed_with(fp: &FleetProblem, opts: ProposedOptions) -> FleetAll
             inits.push((mu0, alpha0));
         }
     }
-    let mut best: Option<FleetAllocation> = None;
+    // the untouched equal split is always a candidate: the structural
+    // "never worse than equal-share" guarantee must survive the final
+    // fixed-point scoring even when the exchange (which probes the
+    // separable mean-field costs) wanders off under queue feedback
+    let mut best = solve_equal_share(fp);
     for (mut mu, mut alpha) in inits {
         improve(fp, &mut mu, &mut alpha, opts);
         let alloc = evaluate(fp, &mu, &alpha);
-        if best.as_ref().is_none_or(|b| alloc.objective < b.objective) {
-            best = Some(alloc);
+        if alloc.objective < best.objective {
+            best = alloc;
         }
     }
-    best.expect("at least the equal init was evaluated")
+    best
 }
 
 /// Warm-started online re-solve for a churning fleet: seed the
@@ -470,7 +685,15 @@ pub fn solve_proposed_warm(
                 *s /= used;
             }
         }
-        let used = used.min(1.0);
+    }
+    // the previous operating point itself is a candidate: with an
+    // unchanged population the warm solve then can only match or improve
+    // it under the final fixed-point scoring, even though reseating
+    // treats zero-share survivors like newcomers and the exchange probes
+    // the mean-field surrogate
+    let raw = evaluate(fp, &mu, &alpha);
+    for shares in [&mut mu, &mut alpha] {
+        let used: f64 = shares.iter().sum::<f64>().min(1.0);
         let newcomers: Vec<usize> = (0..n).filter(|&i| shares[i] <= 0.0).collect();
         if newcomers.is_empty() {
             // departed agents' mass goes back to everyone, by weight
@@ -495,8 +718,18 @@ pub fn solve_proposed_warm(
             shares[i] = free * fp.agents[i].weight / weight_new;
         }
     }
+    let seeded = evaluate(fp, &mu, &alpha);
     improve(fp, &mut mu, &mut alpha, opts);
-    evaluate(fp, &mu, &alpha)
+    let mut best = evaluate(fp, &mu, &alpha);
+    // the current population's equal split rides along too, so the
+    // online path keeps the same structural never-worse-than-equal
+    // guarantee as the cold solve
+    for cand in [seeded, raw, solve_equal_share(fp)] {
+        if cand.objective < best.objective {
+            best = cand;
+        }
+    }
+    best
 }
 
 /// The feasible-random baseline: Dirichlet(1) shares on both resources
@@ -511,8 +744,9 @@ pub fn solve_feasible_random(fp: &FleetProblem, seed: u64) -> FleetAllocation {
     };
     let mu = draw_shares(fp.n());
     let alpha = draw_shares(fp.n());
-    assemble(fp, &mu, &alpha, |i| {
-        fp.agent_problem(i, mu[i], alpha[i])
+    let waits = fp.interference_waits(&mu, &alpha).waits;
+    assemble(fp, &mu, &alpha, &waits, |i| {
+        fp.agent_problem_at_wait(i, mu[i], alpha[i], waits[i])
             .and_then(|p| feasible_random::solve(&p, rng.next_u64()))
     })
 }
@@ -784,14 +1018,20 @@ mod tests {
 
     #[test]
     fn admitted_designs_are_feasible_for_their_subproblem() {
-        let fp = fleet(6);
-        let alloc = solve_proposed(&fp);
-        for (i, a) in alloc.agents.iter().enumerate() {
-            if let Some(d) = &a.design {
-                let p = fp
-                    .agent_problem(i, a.server_share, a.airtime_share)
-                    .expect("admitted agent has a subproblem");
-                assert!(p.is_feasible(d), "agent {i}: {d:?}");
+        // every admitted design satisfies (P1) at the wait it was scored
+        // at — with and without the queue model attached
+        for fp in [
+            fleet(6),
+            fleet(6).with_queue(QueueModel::uniform(QueueDiscipline::Fifo, 6, 0.02)),
+        ] {
+            let alloc = solve_proposed(&fp);
+            for (i, a) in alloc.agents.iter().enumerate() {
+                if let Some(d) = &a.design {
+                    let p = fp
+                        .agent_problem_at_wait(i, a.server_share, a.airtime_share, a.queue_wait_s)
+                        .expect("admitted agent has a subproblem");
+                    assert!(p.is_feasible(d), "agent {i}: {d:?}");
+                }
             }
         }
     }
@@ -922,6 +1162,198 @@ mod tests {
         assert!(shares <= 1.0 + 1e-9);
         assert!(warm.agents[3].server_share > 0.0);
         assert!(warm.agents[4].server_share > 0.0);
+    }
+
+    #[test]
+    fn uniform_orin_tier_reproduces_the_homogeneous_fleet_exactly() {
+        // acceptance regression: a tiered fleet on the uniform Orin
+        // ladder is field-for-field the pre-tier homogeneous fleet —
+        // same specs, same allocations, bit for bit
+        for n in [1usize, 4, 8, 16] {
+            let uniform = FleetProblem::new(
+                Platform::fleet_edge(),
+                AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(0)),
+            );
+            let mixed = fleet(n);
+            for (a, b) in uniform.agents.iter().zip(&mixed.agents) {
+                assert_eq!(a.device.spec, b.device.spec);
+                assert_eq!(a.channel_gain, 1.0);
+                assert_eq!(a.device.spec, Platform::fleet_edge().device);
+            }
+            let x = solve_proposed(&uniform);
+            let y = solve_proposed(&mixed);
+            assert_eq!(x.objective, y.objective, "n={n}");
+            assert_eq!(x.admitted, y.admitted);
+            for (a, b) in x.agents.iter().zip(&y.agents) {
+                assert_eq!(a.design.map(|d| d.b_hat), b.design.map(|d| d.b_hat));
+                assert_eq!(a.server_share, b.server_share);
+                assert_eq!(a.airtime_share, b.airtime_share);
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_n1_fleets_reduce_to_their_single_agent_design() {
+        // the N = 1 reduction holds on every silicon tier: the fleet
+        // path's per-agent platform substitution is exactly the paper's
+        // single-pair platform with that device
+        for profile in AgentSpec::tier_mix(2) {
+            let spec = AgentSpec::tiered_spec(0, &[profile]);
+            let fp = FleetProblem::new(Platform::fleet_edge(), vec![spec]).ideal_link();
+            let mut single_platform = Platform::fleet_edge();
+            single_platform.device = profile.spec;
+            let single =
+                bisection::solve(&Problem::new(single_platform, spec.lambda, spec.t0, spec.e0))
+                    .expect("single-agent feasible on every tier");
+            let alloc = solve_proposed(&fp);
+            let d = alloc.agents[0].design.expect("admitted");
+            assert_eq!(d.b_hat, single.design.b_hat, "{}", profile.tier);
+        }
+    }
+
+    #[test]
+    fn hetero_margin_over_equal_share_widens_with_tier_spread() {
+        // acceptance: at a fully-admitted fleet size the proposed
+        // allocator's absolute margin over the equal split is
+        // non-decreasing in silicon spread and strictly widens once all
+        // three tiers are present (N = 7 seats a phone-class agent)
+        let margin = |n: usize, spread: usize| -> (f64, FleetAllocation) {
+            let fp = FleetProblem::new(
+                Platform::fleet_edge(),
+                AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(spread)),
+            );
+            let eq = solve_equal_share(&fp);
+            let pr = solve_proposed(&fp);
+            assert!(
+                pr.objective <= eq.objective + 1e-12,
+                "n={n} spread={spread}: proposed above equal"
+            );
+            (eq.objective - pr.objective, pr)
+        };
+        for n in [4usize, 6, 7] {
+            let (m0, _) = margin(n, 0);
+            let (m1, _) = margin(n, 1);
+            let (m2, _) = margin(n, 2);
+            assert!(m0 <= m1 + 1e-12 && m1 <= m2 + 1e-12, "n={n}: {m0} {m1} {m2}");
+        }
+        let (m1, _) = margin(7, 1);
+        let (m2, alloc) = margin(7, 2);
+        assert!(m2 > m1 * 1.5, "3-tier margin {m2} does not widen past 2-tier {m1}");
+        assert_eq!(alloc.admitted, 7, "proposed must seat the whole mixed-tier fleet");
+    }
+
+    #[test]
+    fn prop_interference_pass_converges_or_falls_back_cleanly() {
+        // satellite property (seeded sweep): the fixed-point pass either
+        // settles on a self-consistent active set — waits bracketed by
+        // the mean-field estimates at the fastest and slowest active
+        // service — or returns the mean-field vector bit for bit
+        forall(
+            "fixed-point interference converges or falls back to mean-field",
+            120,
+            |r| {
+                let n = 2 + r.below(6);
+                let rps = r.range(0.005, 0.12);
+                let fifo = r.f64() < 0.5;
+                let raw: Vec<f64> = (0..n).map(|_| r.range(0.02, 1.0)).collect();
+                let total: f64 = raw.iter().sum();
+                let scale = r.range(0.5, 1.0) / total;
+                let mu: Vec<f64> = raw.iter().map(|x| x * scale).collect();
+                (n, rps, fifo, mu)
+            },
+            |(n, rps, fifo, mu)| {
+                let discipline = if *fifo {
+                    QueueDiscipline::Fifo
+                } else {
+                    QueueDiscipline::WeightedPriority
+                };
+                let fp = fleet(*n).with_queue(QueueModel::uniform(discipline, *n, *rps));
+                let alpha = MultiAccessChannel::equal_shares(*n);
+                let result = fp.interference_waits(mu, &alpha);
+                if !result.converged {
+                    let mf: Vec<f64> = (0..*n).map(|i| fp.queue_wait(i, mu[i])).collect();
+                    return if result.waits == mf {
+                        Ok(())
+                    } else {
+                        Err(format!("unclean fallback: {:?} vs {mf:?}", result.waits))
+                    };
+                }
+                let services: Vec<f64> = mu.iter().map(|&m| fp.own_service(m)).collect();
+                let act: Vec<f64> =
+                    result.active.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
+                let active_s: Vec<f64> = services
+                    .iter()
+                    .zip(&result.active)
+                    .filter(|(s, &a)| a && s.is_finite())
+                    .map(|(s, _)| *s)
+                    .collect();
+                let Some((&s_min, &s_max)) = active_s
+                    .iter()
+                    .min_by(|a, b| a.total_cmp(b))
+                    .zip(active_s.iter().max_by(|a, b| a.total_cmp(b)))
+                else {
+                    return Ok(()); // empty active set: nothing to bracket
+                };
+                let queue = fp.queue.as_ref().unwrap();
+                for i in 0..*n {
+                    if !result.active[i] || !services[i].is_finite() {
+                        continue;
+                    }
+                    let mut lo_vec = vec![s_min; *n];
+                    lo_vec[i] = services[i];
+                    let mut hi_vec = vec![s_max; *n];
+                    hi_vec[i] = services[i];
+                    let lo = queue.waits_given(&lo_vec, &act, |j| fp.agents[j].weight)[i];
+                    let hi = queue.waits_given(&hi_vec, &act, |j| fp.agents[j].weight)[i];
+                    if result.waits[i] < lo - 1e-12 {
+                        return Err(format!("agent {i}: wait {} below {lo}", result.waits[i]));
+                    }
+                    if result.waits[i] > hi + 1e-12 && hi.is_finite() {
+                        return Err(format!("agent {i}: wait {} above {hi}", result.waits[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn invalid_channel_gain_rejected_at_construction() {
+        // the analytic path multiplies the shared rate by the gain, so a
+        // degenerate gain must fail fast at construction (mirroring the
+        // medium's with_gains validation), not warp delay budgets
+        for bad in [0.0, -0.5, 1.5, f64::NAN] {
+            let mut specs = AgentSpec::mixed_fleet(2);
+            specs[1].channel_gain = bad;
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                FleetProblem::new(Platform::fleet_edge(), specs.clone());
+            }));
+            assert!(res.is_err(), "gain {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn warm_start_sound_under_queue_feedback() {
+        // the warm re-solve's raw-previous candidate keeps it no worse
+        // than the cold solve even when fixed-point scoring disagrees
+        // with the exchange's mean-field probes
+        for n in [4usize, 6, 7] {
+            let fp =
+                fleet(n).with_queue(QueueModel::uniform(QueueDiscipline::Fifo, n, 0.05));
+            let cold = solve_proposed(&fp);
+            let prev: Vec<Option<(f64, f64)>> = cold
+                .agents
+                .iter()
+                .map(|a| Some((a.server_share, a.airtime_share)))
+                .collect();
+            let warm = solve_proposed_warm(&fp, &prev, ProposedOptions::default());
+            assert!(
+                warm.objective <= cold.objective + 1e-12,
+                "n={n}: warm {} regressed past cold {}",
+                warm.objective,
+                cold.objective
+            );
+        }
     }
 
     #[test]

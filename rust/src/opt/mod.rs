@@ -11,12 +11,14 @@
 //!   feasibility per b̂ is an analytic 2-D convex problem.
 //! * [`fixed_freq`], [`feasible_random`] — the paper's benchmark schemes 2
 //!   and 3; [`grid`] — exhaustive oracle for tests.
-//! * [`fleet`] — the multi-agent generalization: N agents contending for
-//!   one edge server (server-frequency shares) and one wireless medium
-//!   (airtime shares), solved by alternating per-agent bisection with a
-//!   water-filling outer loop plus admission control. Optionally
-//!   queue-aware (the shared edge queue's expected wait tightens each
-//!   delay budget) and re-runnable online via
+//! * [`fleet`] — the multi-agent generalization: N agents, each on its
+//!   own silicon tier ([`crate::system::DeviceProfile`]) with its own
+//!   channel gain, contending for one edge server (server-frequency
+//!   shares) and one wireless medium (airtime shares), solved by
+//!   alternating per-agent bisection with a water-filling outer loop
+//!   plus admission control. Optionally queue-aware (the shared edge
+//!   queue's expected wait tightens each delay budget — mean-field
+//!   probes, fixed-point scoring) and re-runnable online via
 //!   [`fleet::solve_proposed_warm`] when the population churns.
 
 pub mod bisection;

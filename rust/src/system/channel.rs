@@ -72,9 +72,12 @@ impl Channel {
 ///
 /// Multi-access is modeled as airtime shares α_i ∈ [0, 1] with
 /// Σ α_i ≤ 1 (TDMA slot fractions / OFDMA subcarrier fractions): agent i
-/// sees an effective goodput α_i · R, so its transmission delay is
-/// strictly decreasing in its share and an agent with α_i = 0 cannot
-/// transmit at all. Base MAC latency is per-message and share-independent.
+/// sees an effective goodput α_i · g_i · R, where g_i ∈ (0, 1] is the
+/// agent's **channel gain** (radio quality / path loss; 1.0 = nominal,
+/// the homogeneous default set by [`Self::with_gains`]). Transmission
+/// delay is strictly decreasing in share and gain, and an agent with
+/// α_i = 0 cannot transmit at all. Base MAC latency is per-message and
+/// share-independent.
 #[derive(Debug, Clone)]
 pub struct MultiAccessChannel {
     /// total medium goodput R [bits/s]
@@ -84,6 +87,8 @@ pub struct MultiAccessChannel {
     /// multiplicative jitter half-width (applied per transmission)
     pub jitter: f64,
     shares: Vec<f64>,
+    /// per-agent channel gain g_i ∈ (0, 1]
+    gains: Vec<f64>,
     rng: Rng,
 }
 
@@ -106,13 +111,31 @@ impl MultiAccessChannel {
             total <= 1.0 + 1e-9,
             "airtime shares must sum to <= 1, got {total} ({shares:?})"
         );
+        let gains = vec![1.0; shares.len()];
         MultiAccessChannel {
             total_rate_bps,
             base_latency_s,
             jitter,
             shares,
+            gains,
             rng: Rng::new(seed),
         }
+    }
+
+    /// Set per-agent channel gains (heterogeneous radios); every gain
+    /// must lie in (0, 1]. Construction defaults every gain to 1.0.
+    pub fn with_gains(mut self, gains: Vec<f64>) -> MultiAccessChannel {
+        assert_eq!(gains.len(), self.shares.len(), "one gain per agent");
+        assert!(
+            gains.iter().all(|&g| g > 0.0 && g <= 1.0),
+            "channel gains must lie in (0, 1]: {gains:?}"
+        );
+        self.gains = gains;
+        self
+    }
+
+    pub fn gain(&self, agent: usize) -> f64 {
+        self.gains[agent]
     }
 
     /// The testbed WLAN (400 Mbps, 2 ms, ±10%) split across the fleet.
@@ -169,7 +192,8 @@ impl MultiAccessChannel {
         base_latency_s + (bytes as f64 * 8.0) / (total_rate_bps * share)
     }
 
-    /// Simulated (jittered) transmission time for `agent`.
+    /// Simulated (jittered) transmission time for `agent` at its share
+    /// and channel gain.
     pub fn transmit_s(&mut self, agent: usize, bytes: usize) -> f64 {
         let share = self.shares[agent];
         if self.total_rate_bps.is_infinite() {
@@ -179,14 +203,15 @@ impl MultiAccessChannel {
             return f64::INFINITY;
         }
         let wobble = 1.0 + self.jitter * (2.0 * self.rng.f64() - 1.0);
-        self.base_latency_s + (bytes as f64 * 8.0) / (self.total_rate_bps * share * wobble)
+        let rate = self.total_rate_bps * self.gains[agent];
+        self.base_latency_s + (bytes as f64 * 8.0) / (rate * share * wobble)
     }
 
-    /// Per-agent single-link view (rate α_i · R): lets fleet components
-    /// reuse everything written against [`Channel`].
+    /// Per-agent single-link view (rate α_i · g_i · R): lets fleet
+    /// components reuse everything written against [`Channel`].
     pub fn subchannel(&self, agent: usize, seed: u64) -> Channel {
         Channel::custom(
-            self.total_rate_bps * self.shares[agent],
+            self.total_rate_bps * self.gains[agent] * self.shares[agent],
             self.base_latency_s,
             self.jitter,
             seed,
@@ -298,6 +323,31 @@ mod tests {
         let sub = ch.subchannel(0, 11);
         assert!((sub.rate_bps - 100e6).abs() < 1.0);
         assert_eq!(sub.base_latency_s, 2e-3);
+    }
+
+    #[test]
+    fn channel_gain_scales_goodput() {
+        // same share, half the gain => strictly slower; gain 1.0 is the
+        // exact homogeneous behavior (bit-for-bit, no epsilon)
+        let mut nominal = MultiAccessChannel::new(400e6, 2e-3, 0.0, vec![0.5, 0.5], 3);
+        let mut faded = MultiAccessChannel::new(400e6, 2e-3, 0.0, vec![0.5, 0.5], 3)
+            .with_gains(vec![1.0, 0.5]);
+        let t_full = nominal.transmit_s(1, 1 << 20);
+        let t_half = faded.transmit_s(1, 1 << 20);
+        assert!((t_half - 2e-3) > (t_full - 2e-3) * 1.99, "{t_half} vs {t_full}");
+        assert_eq!(nominal.transmit_s(0, 1 << 20), faded.transmit_s(0, 1 << 20));
+        let sub = faded.subchannel(1, 7);
+        assert!((sub.rate_bps - 400e6 * 0.5 * 0.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn bad_gains_rejected() {
+        for gains in [vec![1.0], vec![0.0, 1.0], vec![1.5, 1.0], vec![f64::NAN, 1.0]] {
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                MultiAccessChannel::wlan_5ghz(vec![0.5, 0.5], 1).with_gains(gains.clone());
+            }));
+            assert!(res.is_err(), "{gains:?} must be rejected");
+        }
     }
 
     #[test]

@@ -10,5 +10,5 @@ pub mod energy;
 pub mod platform;
 pub mod queue;
 
-pub use platform::{DeviceSpec, Platform, ServerSpec};
+pub use platform::{DeviceProfile, DeviceSpec, Platform, ServerSpec};
 pub use queue::{EdgeQueue, QueueDiscipline, QueueModel};

@@ -15,6 +15,88 @@ pub struct DeviceSpec {
     pub psi: f64,
 }
 
+/// A named silicon tier for heterogeneous fleets: the device half of a
+/// [`Platform`] plus the tier's nominal uplink quality. The fleet layer
+/// ([`crate::opt::fleet`]) substitutes a profile's [`DeviceSpec`] into the
+/// shared base platform per agent, so the paper's per-device constants
+/// (f^max, the compute efficiency κ ≡ `flops_per_cycle`, and the cubic
+/// power curve ηψf³) become per-agent quantities — the Sec. V joint
+/// design's "per-device statistics".
+///
+/// Three presets span the embodied-silicon range the testbed literature
+/// reports (Jetson AGX Orin vs. Xavier NX vs. phone-class SoCs — roughly
+/// the device ladder of "The Larger the Merrier?", arXiv:2505.09214):
+///
+/// | tier     | f^max   | κ (FLOPs/cyc) | η    | ψ       | link gain |
+/// |----------|---------|---------------|------|---------|-----------|
+/// | `orin`   | 2.0 GHz | 32            | 1.00 | 2e-29   | 1.0       |
+/// | `xavier` | 1.4 GHz | 16            | 1.10 | 3e-29   | 0.8       |
+/// | `phone`  | 1.0 GHz | 8             | 1.20 | 5e-29   | 0.5       |
+///
+/// `orin` is **exactly** the paper's §VI-C device (the one every fleet
+/// shared before heterogeneity existed), so a uniform-`orin` fleet
+/// reproduces the homogeneous results bit for bit — the regression the
+/// tier tests pin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// tier name (CLI `--tiers` token)
+    pub tier: &'static str,
+    /// the tier's silicon constants (frequency range [0, f^max], κ, power curve)
+    pub spec: DeviceSpec,
+    /// nominal uplink channel gain g ∈ (0, 1] of this tier's radio: the
+    /// agent's effective share of the shared medium's goodput is α·g·R
+    pub link_gain: f64,
+}
+
+impl DeviceProfile {
+    /// Jetson-AGX-Orin class: the paper's §VI-C simulation device.
+    pub fn orin() -> DeviceProfile {
+        DeviceProfile {
+            tier: "orin",
+            spec: DeviceSpec { f_max: 2.0e9, flops_per_cycle: 32.0, pue: 1.0, psi: 2.0e-29 },
+            link_gain: 1.0,
+        }
+    }
+
+    /// Jetson-Xavier-NX class: lower clock ceiling, half the per-cycle
+    /// throughput, a slightly worse power curve, and a weaker radio.
+    pub fn xavier() -> DeviceProfile {
+        DeviceProfile {
+            tier: "xavier",
+            spec: DeviceSpec { f_max: 1.4e9, flops_per_cycle: 16.0, pue: 1.1, psi: 3.0e-29 },
+            link_gain: 0.8,
+        }
+    }
+
+    /// Phone-class SoC (sustained, not burst, clocks): the weak end of
+    /// the embodied fleet — a quarter of Orin's per-cycle throughput,
+    /// the costliest power curve, and half the radio gain.
+    pub fn phone() -> DeviceProfile {
+        DeviceProfile {
+            tier: "phone",
+            spec: DeviceSpec { f_max: 1.0e9, flops_per_cycle: 8.0, pue: 1.2, psi: 5.0e-29 },
+            link_gain: 0.5,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeviceProfile> {
+        match s {
+            "orin" => Some(DeviceProfile::orin()),
+            "xavier" => Some(DeviceProfile::xavier()),
+            "phone" => Some(DeviceProfile::phone()),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI tier mix like `"orin,xavier,phone"`; `None` on any
+    /// unknown tier name or an empty list.
+    pub fn parse_mix(s: &str) -> Option<Vec<DeviceProfile>> {
+        let tiers: Option<Vec<DeviceProfile>> =
+            s.split(',').map(str::trim).map(DeviceProfile::parse).collect();
+        tiers.filter(|t| !t.is_empty())
+    }
+}
+
 /// Server-side processor (paper notation: f̃, c̃, η̃, ψ̃).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServerSpec {
@@ -167,6 +249,47 @@ mod tests {
         let p = Platform::paper_blip2();
         assert!(p.min_delay(32.0) > 2.0, "{}", p.min_delay(32.0));
         assert!(p.min_delay(2.0) < 1.0, "{}", p.min_delay(2.0));
+    }
+
+    #[test]
+    fn orin_tier_is_exactly_the_paper_device() {
+        // uniform-orin fleets must reproduce the homogeneous results bit
+        // for bit, which requires the tier constants to *be* the §VI-C
+        // device constants
+        assert_eq!(DeviceProfile::orin().spec, Platform::paper_blip2().device);
+        assert_eq!(DeviceProfile::orin().spec, Platform::fleet_edge().device);
+        assert_eq!(DeviceProfile::orin().link_gain, 1.0);
+    }
+
+    #[test]
+    fn tiers_are_strictly_ordered_in_capability() {
+        // throughput f^max·κ strictly decreasing, power curve ψ and PUE
+        // strictly increasing, radio gain strictly decreasing — a real
+        // silicon ladder, not three relabelings of one device
+        let ladder = [DeviceProfile::orin(), DeviceProfile::xavier(), DeviceProfile::phone()];
+        for w in ladder.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            assert!(a.spec.f_max * a.spec.flops_per_cycle > b.spec.f_max * b.spec.flops_per_cycle);
+            assert!(a.spec.psi < b.spec.psi);
+            assert!(a.spec.pue < b.spec.pue);
+            assert!(a.link_gain > b.link_gain);
+            assert!(b.link_gain > 0.0 && b.link_gain <= 1.0);
+        }
+    }
+
+    #[test]
+    fn tier_parse_roundtrip_and_mix() {
+        for p in [DeviceProfile::orin(), DeviceProfile::xavier(), DeviceProfile::phone()] {
+            assert_eq!(DeviceProfile::parse(p.tier), Some(p));
+        }
+        assert_eq!(DeviceProfile::parse("tpu"), None);
+        let mix = DeviceProfile::parse_mix("orin, xavier,phone").unwrap();
+        assert_eq!(
+            mix.iter().map(|p| p.tier).collect::<Vec<_>>(),
+            vec!["orin", "xavier", "phone"]
+        );
+        assert!(DeviceProfile::parse_mix("orin,nope").is_none());
+        assert!(DeviceProfile::parse_mix("").is_none());
     }
 
     #[test]

@@ -110,24 +110,58 @@ impl QueueModel {
         {
             return f64::INFINITY;
         }
-        let w_own = weight_of(agent);
+        self.accumulate_wait(
+            agent,
+            |j| if j == agent { own_service_s } else { ref_service_s },
+            |j| self.arrival_rps[j],
+            weight_of,
+        )
+    }
+
+    /// The one non-preemptive M/G/1 accumulation both estimators share:
+    /// the wait of a virtual class-`i` arrival given per-agent service
+    /// times and offered loads. Zero-load flows are invisible; an
+    /// offered flow whose service never completes (non-finite) makes the
+    /// wait infinite, as does overload of the dispatched-first
+    /// utilization.
+    ///
+    /// Non-preemptive M/G/1 with deterministic service: the wait is the
+    /// residual work R₀ = Σ_j load_j S_j²/2 inflated by the utilization
+    /// of whoever may be dispatched first. Under FIFO that is the whole
+    /// fleet (Pollaczek–Khinchine); under weighted priority, strictly
+    /// heavier agents plus the agent's own class (strictly lighter
+    /// agents only contribute residual work).
+    fn accumulate_wait(
+        &self,
+        i: usize,
+        service_of: impl Fn(usize) -> f64,
+        load_of: impl Fn(usize) -> f64,
+        weight_of: impl Fn(usize) -> f64,
+    ) -> f64 {
+        let w_own = weight_of(i);
         let mut residual = 0.0; // R0: mean residual work found on arrival
         let mut rho_ahead = 0.0; // strictly-higher-priority utilization
         let mut rho_class = 0.0; // own class (and self) utilization
-        for (j, &r) in self.arrival_rps.iter().enumerate() {
-            let s = if j == agent { own_service_s } else { ref_service_s };
-            residual += r * s * s / 2.0;
-            let rho = r * s;
+        for j in 0..self.arrival_rps.len() {
+            let load = load_of(j);
+            if !(load > 0.0) {
+                continue;
+            }
+            let s = service_of(j);
+            if !s.is_finite() {
+                return f64::INFINITY;
+            }
+            residual += load * s * s / 2.0;
+            let rho = load * s;
             match self.discipline {
                 QueueDiscipline::Fifo => rho_class += rho,
                 QueueDiscipline::WeightedPriority => {
                     let w = weight_of(j);
                     if w > w_own {
                         rho_ahead += rho;
-                    } else if j == agent || w == w_own {
+                    } else if j == i || w == w_own {
                         rho_class += rho;
                     }
-                    // strictly lighter agents only contribute residual work
                 }
             }
         }
@@ -137,6 +171,45 @@ impl QueueModel {
             return f64::INFINITY;
         }
         residual / (d1 * d2)
+    }
+
+    /// Per-agent waits with **actual** per-agent service times — the
+    /// sharpened estimate the fixed-point interference pass in
+    /// [`crate::opt::fleet`] evaluates, replacing the mean-field
+    /// `ref_service_s` of [`Self::expected_wait_s`] with each rival's
+    /// own slice-capacity drain time. `activity[j]` scales rival j's
+    /// offered load (0 drops the flow entirely — a rejected agent's
+    /// traffic is turned away at admission, so rivals never see it).
+    ///
+    /// Per agent: infinite own service ⇒ infinite wait; an *active*
+    /// rival with infinite service ⇒ infinite wait (its backlog never
+    /// drains); overload of the relevant utilization ⇒ infinite wait.
+    /// Monotone increasing in every active rival's service time, which
+    /// is what brackets the result between the mean-field estimates at
+    /// the fastest and slowest active service (property-tested below).
+    pub fn waits_given(
+        &self,
+        service_s: &[f64],
+        activity: &[f64],
+        weight_of: impl Fn(usize) -> f64,
+    ) -> Vec<f64> {
+        let n = self.arrival_rps.len();
+        assert_eq!(service_s.len(), n);
+        assert_eq!(activity.len(), n);
+        (0..n)
+            .map(|i| {
+                let s_i = service_s[i];
+                if !(s_i.is_finite() && s_i >= 0.0) {
+                    return f64::INFINITY;
+                }
+                self.accumulate_wait(
+                    i,
+                    |j| service_s[j],
+                    |j| self.arrival_rps[j] * activity[j],
+                    &weight_of,
+                )
+            })
+            .collect()
     }
 }
 
@@ -391,6 +464,183 @@ mod tests {
         assert!(q.expected_wait_s(0, f64::INFINITY, 1.0, |j| w[j]).is_infinite());
         assert!(q.expected_wait_s(0, f64::NAN, 1.0, |j| w[j]).is_infinite());
         assert!(q.expected_wait_s(0, 1.0, f64::NAN, |j| w[j]).is_infinite());
+    }
+
+    #[test]
+    fn waits_given_reduces_to_mean_field_at_uniform_services() {
+        // with every agent at the reference service time and full
+        // activity, the actual-shares form IS the mean-field form
+        use crate::util::prop::forall;
+        forall(
+            "waits_given == expected_wait_s at uniform services",
+            150,
+            |r| {
+                let n = 1 + r.below(7);
+                let rps = r.range(0.001, 0.4 / n as f64);
+                let s = r.range(0.1, 2.0);
+                let weights: Vec<f64> = (0..n).map(|_| r.range(0.5, 3.0)).collect();
+                let fifo = r.f64() < 0.5;
+                (n, rps, s, weights, fifo)
+            },
+            |(n, rps, s, weights, fifo)| {
+                let d = if *fifo {
+                    QueueDiscipline::Fifo
+                } else {
+                    QueueDiscipline::WeightedPriority
+                };
+                let q = QueueModel::uniform(d, *n, *rps);
+                let waits = q.waits_given(&vec![*s; *n], &vec![1.0; *n], |j| weights[j]);
+                for i in 0..*n {
+                    let mf = q.expected_wait_s(i, *s, *s, |j| weights[j]);
+                    let both_infinite = waits[i].is_infinite() && mf.is_infinite();
+                    if (waits[i] - mf).abs() > 1e-12 && !both_infinite {
+                        return Err(format!("agent {i}: {} vs mean-field {mf}", waits[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_wait_strictly_decreasing_in_server_share() {
+        // satellite property: an agent's expected wait is strictly
+        // decreasing in its server share μ (service = drain / μ), under
+        // both disciplines — the monotonicity the water-filling exchange
+        // needs from the queue term
+        use crate::util::prop::forall;
+        forall(
+            "expected wait strictly decreasing in server share",
+            200,
+            |r| {
+                let n = 2 + r.below(6);
+                let rps = r.range(0.005, 0.15 / n as f64);
+                let drain = r.range(0.1, 1.5);
+                let mu_lo = r.range(0.05, 0.5);
+                let mu_hi = (mu_lo + r.range(0.05, 0.5)).min(1.0);
+                let fifo = r.f64() < 0.5;
+                (n, rps, drain, mu_lo, mu_hi, fifo)
+            },
+            |&(n, rps, drain, mu_lo, mu_hi, fifo)| {
+                let d = if fifo {
+                    QueueDiscipline::Fifo
+                } else {
+                    QueueDiscipline::WeightedPriority
+                };
+                let q = QueueModel::uniform(d, n, rps);
+                let w = vec![1.0; n];
+                let reference = drain * n as f64;
+                let w_lo = q.expected_wait_s(0, drain / mu_lo, reference, |j| w[j]);
+                let w_hi = q.expected_wait_s(0, drain / mu_hi, reference, |j| w[j]);
+                if w_hi < w_lo || (w_hi.is_infinite() && w_lo.is_infinite()) {
+                    Ok(())
+                } else {
+                    Err(format!("μ {mu_lo}->{mu_hi}: wait {w_lo} -> {w_hi} not decreasing"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_priority_no_worse_than_fifo_for_top_weight_agent() {
+        // satellite property: the strictly-heaviest agent can only gain
+        // from weighted priority — its priority wait divides by its own
+        // class utilization alone, FIFO by the whole fleet's
+        use crate::util::prop::forall;
+        forall(
+            "priority <= FIFO for the top-weight agent",
+            200,
+            |r| {
+                let n = 2 + r.below(6);
+                let rates: Vec<f64> = (0..n).map(|_| r.range(0.001, 0.3 / n as f64)).collect();
+                let services: Vec<f64> = (0..n).map(|_| r.range(0.1, 2.0)).collect();
+                let mut weights: Vec<f64> = (0..n).map(|_| r.range(0.2, 1.5)).collect();
+                let top = r.below(n);
+                weights[top] = 2.0; // unique strict maximum
+                (rates, services, weights, top)
+            },
+            |(rates, services, weights, top)| {
+                let fifo = QueueModel::new(QueueDiscipline::Fifo, rates.clone());
+                let prio = QueueModel::new(QueueDiscipline::WeightedPriority, rates.clone());
+                let act = vec![1.0; rates.len()];
+                let wf = fifo.waits_given(services, &act, |j| weights[j])[*top];
+                let wp = prio.waits_given(services, &act, |j| weights[j])[*top];
+                if wp <= wf || wf.is_infinite() {
+                    Ok(())
+                } else {
+                    Err(format!("priority {wp} > fifo {wf}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_actual_service_waits_lie_in_mean_field_bracket() {
+        // satellite property: with heterogeneous service times, the
+        // actual-shares wait of every agent lies between the mean-field
+        // estimates taken at the fastest and at the slowest service in
+        // the fleet — waits_given is monotone in every rival's service,
+        // so the actual mix can sharpen the mean-field family's envelope
+        // but never exit it
+        use crate::util::prop::forall;
+        forall(
+            "waits_given within [all-fastest, all-slowest] mean-field bracket",
+            200,
+            |r| {
+                let n = 2 + r.below(6);
+                let rates: Vec<f64> = (0..n).map(|_| r.range(0.001, 0.25 / n as f64)).collect();
+                let services: Vec<f64> = (0..n).map(|_| r.range(0.05, 3.0)).collect();
+                let weights: Vec<f64> = (0..n).map(|_| r.range(0.5, 3.0)).collect();
+                let fifo = r.f64() < 0.5;
+                (rates, services, weights, fifo)
+            },
+            |(rates, services, weights, fifo)| {
+                let d = if *fifo {
+                    QueueDiscipline::Fifo
+                } else {
+                    QueueDiscipline::WeightedPriority
+                };
+                let q = QueueModel::new(d, rates.clone());
+                let n = rates.len();
+                let act = vec![1.0; n];
+                let actual = q.waits_given(services, &act, |j| weights[j]);
+                let s_min = services.iter().cloned().fold(f64::INFINITY, f64::min);
+                let s_max = services.iter().cloned().fold(0.0f64, f64::max);
+                for i in 0..n {
+                    let mut lo_vec = vec![s_min; n];
+                    lo_vec[i] = services[i];
+                    let mut hi_vec = vec![s_max; n];
+                    hi_vec[i] = services[i];
+                    let lo = q.waits_given(&lo_vec, &act, |j| weights[j])[i];
+                    let hi = q.waits_given(&hi_vec, &act, |j| weights[j])[i];
+                    if actual[i] < lo - 1e-12 {
+                        return Err(format!("agent {i}: {} below bracket floor {lo}", actual[i]));
+                    }
+                    if actual[i] > hi + 1e-12 && hi.is_finite() {
+                        return Err(format!("agent {i}: {} above bracket ceiling {hi}", actual[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn waits_given_activity_drops_flows_and_infinite_service_propagates() {
+        let q = QueueModel::uniform(QueueDiscipline::Fifo, 3, 0.1);
+        let w = [1.0; 3];
+        // dropping rival flows can only reduce the wait
+        let all = q.waits_given(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0], |j| w[j]);
+        let one = q.waits_given(&[1.0, 1.0, 1.0], &[1.0, 0.0, 0.0], |j| w[j]);
+        assert!(one[0] < all[0]);
+        // an *active* rival that can never drain poisons everyone ...
+        let poisoned = q.waits_given(&[1.0, f64::INFINITY, 1.0], &[1.0, 1.0, 1.0], |j| w[j]);
+        assert!(poisoned.iter().all(|x| x.is_infinite()));
+        // ... but an inactive one is invisible to rivals (infinite only
+        // for itself)
+        let dropped = q.waits_given(&[1.0, f64::INFINITY, 1.0], &[1.0, 0.0, 1.0], |j| w[j]);
+        assert!(dropped[0].is_finite() && dropped[2].is_finite());
+        assert!(dropped[1].is_infinite());
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Golden-value regression tests for the figure-generating theory math:
+//! the §IV rate–distortion bounds ([`qaci::theory::rate_distortion`]) and
+//! the §III output-distortion propagation ([`qaci::theory::distortion`]).
+//!
+//! The property tests in-module assert *shapes* (monotonicity, bound
+//! ordering, inversion); these tests pin *values* on a fixed bit-width
+//! grid so the numbers behind every figure cannot silently drift. The
+//! constants were computed independently (IEEE-754 f64, same operation
+//! order as the Rust expressions) and agree to well under 1e-12 relative.
+
+use qaci::theory::distortion::{fc_forward, output_distortion_bound, surrogate_l1, LayerMatrix};
+use qaci::theory::rate_distortion as rd;
+
+fn assert_close(got: f64, want: f64, what: &str) {
+    let tol = 1e-12 * want.abs().max(1e-300);
+    assert!(
+        (got - want).abs() <= tol,
+        "{what}: got {got:.17e}, pinned {want:.17e}"
+    );
+}
+
+/// D^L(b̂−1) on the full achievable bit-width grid at the canonical
+/// λ = 15 (the fitted magnitude parameter every preset fleet uses).
+#[test]
+fn golden_d_lower_grid_lambda_15() {
+    #[rustfmt::skip]
+    let pinned = [
+        3.33333333333333329e-02, 1.66666666666666664e-02, 8.33333333333333322e-03,
+        4.16666666666666661e-03, 2.08333333333333330e-03, 1.04166666666666665e-03,
+        5.20833333333333326e-04, 2.60416666666666663e-04, 1.30208333333333332e-04,
+        6.51041666666666658e-05, 3.25520833333333329e-05, 1.62760416666666664e-05,
+        8.13802083333333322e-06, 4.06901041666666661e-06, 2.03450520833333331e-06,
+        1.01725260416666665e-06,
+    ];
+    for (b, want) in (1..=16u32).zip(pinned) {
+        assert_close(rd::d_lower(b as f64 - 1.0, 15.0), want, &format!("D^L(b̂={b})"));
+    }
+}
+
+/// D^U(b̂−1) on the same grid at λ = 15.
+#[test]
+fn golden_d_upper_grid_lambda_15() {
+    #[rustfmt::skip]
+    let pinned = [
+        6.66666666666666657e-02, 4.12022659166596597e-02, 1.75841743883982174e-02,
+        8.45221136853391286e-03, 4.18209559140918490e-03, 2.08530987527011380e-03,
+        1.04191718683764502e-03, 5.20864879856082963e-04, 2.60420624968101444e-04,
+        1.30208829074240912e-04, 6.51042286943829624e-05, 3.25520910905652286e-05,
+        1.62760426365575008e-05, 8.13802095458449026e-06, 4.06901043182491158e-06,
+        2.03450521022811382e-06,
+    ];
+    for (b, want) in (1..=16u32).zip(pinned) {
+        assert_close(rd::d_upper(b as f64 - 1.0, 15.0), want, &format!("D^U(b̂={b})"));
+    }
+}
+
+/// Spot pins at the sweep extremes λ = 4 and λ = 50 (the benches sweep
+/// λ across models), plus the (P1) objective values the allocator
+/// actually minimizes.
+#[test]
+fn golden_spot_values_other_lambdas_and_gap() {
+    assert_close(rd::d_lower(0.0, 4.0), 1.25000000000000000e-01, "D^L(0) λ=4");
+    assert_close(rd::d_upper(1.0, 4.0), 1.54508497187473726e-01, "D^U(1) λ=4");
+    assert_close(rd::d_upper(7.0, 4.0), 1.95324329946031106e-03, "D^U(7) λ=4");
+    assert_close(rd::d_lower(15.0, 50.0), 3.05175781250000006e-07, "D^L(15) λ=50");
+    assert_close(rd::d_upper(15.0, 50.0), 6.10351563068434189e-07, "D^U(15) λ=50");
+    assert_close(rd::bound_gap(1.0, 15.0), 3.33333333333333329e-02, "gap(1)");
+    assert_close(rd::bound_gap(2.0, 15.0), 2.45355992499929933e-02, "gap(2)");
+    assert_close(rd::bound_gap(4.0, 15.0), 4.28554470186724625e-03, "gap(4)");
+    assert_close(rd::bound_gap(8.0, 15.0), 2.60448213189416300e-04, "gap(8)");
+    assert_close(rd::bound_gap(16.0, 15.0), 1.01725260606144717e-06, "gap(16)");
+}
+
+/// Structural invariants re-checked on the pinned grid: the lower bound
+/// sits below the upper everywhere and both fall monotonically in b̂ —
+/// if a refactor bends either shape, the pins above catch the values
+/// and this catches the geometry.
+#[test]
+fn golden_grid_is_ordered_and_monotone() {
+    for lambda in [4.0, 15.0, 50.0] {
+        let mut prev_lo = f64::INFINITY;
+        let mut prev_hi = f64::INFINITY;
+        for b in 1..=16u32 {
+            let rate = b as f64 - 1.0;
+            let (lo, hi) = (rd::d_lower(rate, lambda), rd::d_upper(rate, lambda));
+            assert!(lo <= hi, "λ={lambda} b̂={b}: D^L {lo} > D^U {hi}");
+            assert!(lo < prev_lo, "λ={lambda} b̂={b}: D^L not strictly decreasing");
+            assert!(hi <= prev_hi, "λ={lambda} b̂={b}: D^U not decreasing");
+            prev_lo = lo;
+            prev_hi = hi;
+        }
+    }
+}
+
+/// Fixed two-layer net with dyadic (exactly representable) weights and
+/// a dyadic quantization perturbation: every Prop. 3.1 quantity is an
+/// exact binary fraction, pinned here end to end.
+#[test]
+fn golden_output_distortion_fixed_net() {
+    let w1 = LayerMatrix::new(2, 2, vec![0.5, -0.25, 0.75, 1.0]);
+    let w2 = LayerMatrix::new(2, 2, vec![1.0, 0.5, -0.5, 0.25]);
+    let q1 = LayerMatrix::new(2, 2, vec![0.625, -0.25, 0.75, 0.9375]);
+    let q2 = LayerMatrix::new(2, 2, vec![1.0, 0.53125, -0.4375, 0.25]);
+
+    // induced-L1 operator norms (max absolute column sum)
+    assert_close(w1.induced_l1(), 1.25, "‖W1‖");
+    assert_close(w2.induced_l1(), 1.5, "‖W2‖");
+    assert_close(w1.entrywise_l1(), 2.5, "‖W1‖_entrywise");
+
+    // per-layer quantization errors in both norms
+    assert_close(w1.sub_l1_induced(&q1), 0.125, "τ1");
+    assert_close(w2.sub_l1_induced(&q2), 0.0625, "τ2");
+    assert_close(
+        surrogate_l1(&[w1.clone(), w2.clone()], &[q1.clone(), q2.clone()]),
+        0.28125,
+        "surrogate eq. 15",
+    );
+
+    // Prop. 3.1: A_1 = (‖W2‖ + τ2), A_2 = ‖W1‖ → bound Σ A_l τ_l
+    assert_close(
+        output_distortion_bound(&[w1.clone(), w2.clone()], &[q1.clone(), q2.clone()]),
+        0.2734375,
+        "Prop. 3.1 bound",
+    );
+
+    // forward passes at the normalized input x = (0.75, 0.25)
+    let x = [0.75, 0.25];
+    let y = fc_forward(&[w1.clone(), w2.clone()], &x);
+    let yq = fc_forward(&[q1, q2], &x);
+    assert_close(y[0], 0.71875, "y[0]");
+    assert_close(y[1], 0.046875, "y[1]");
+    assert_close(yq[0], 0.82958984375, "ŷ[0]");
+    assert_close(yq[1], 0.021484375, "ŷ[1]");
+    let true_dist: f64 = y.iter().zip(&yq).map(|(a, b)| (a - b).abs()).sum();
+    assert_close(true_dist, 0.13623046875, "‖f(x,W)−f(x,Ŵ)‖₁");
+    // and the pinned bound dominates the pinned truth, as Prop. 3.1 demands
+    assert!(true_dist <= 0.2734375);
+}

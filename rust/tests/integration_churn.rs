@@ -171,7 +171,7 @@ fn priority_discipline_is_no_worse_for_online_cost() {
     let fifo_cfg = ChurnConfig { seed: 5, ..ChurnConfig::default() };
     let prio_cfg = ChurnConfig {
         queue: Some(QueueDiscipline::WeightedPriority),
-        ..fifo_cfg
+        ..fifo_cfg.clone()
     };
     // same seed, same event structure (the timeline does not depend on
     // the queue discipline)

@@ -1,6 +1,7 @@
 //! Fleet integration: the whole multi-agent path — contention model,
-//! joint allocator, admission control, serving loop — exercised through
-//! the public API, artifact-free.
+//! joint allocator, admission control, heterogeneous silicon tiers,
+//! serving loop, and the `qaci fleet` CLI binary — exercised through the
+//! public API and a spawned subprocess, artifact-free.
 
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
@@ -11,6 +12,13 @@ use qaci::system::Platform;
 
 fn mixed(n: usize) -> FleetProblem {
     FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n))
+}
+
+fn tiered(n: usize, spread: usize) -> FleetProblem {
+    FleetProblem::new(
+        Platform::fleet_edge(),
+        AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(spread)),
+    )
 }
 
 /// The headline reduction: a fleet of one with the medium to itself is
@@ -135,6 +143,140 @@ fn admission_control_under_overload() {
         },
     );
     assert_eq!(report.rejected, ((32 - proposed.admitted) * 4) as u64);
+}
+
+/// Acceptance (regression): the uniform-Orin ladder *is* the pre-tier
+/// homogeneous fleet — identical specs and identical allocations across
+/// sizes, including a queue-free churn-style warm path.
+#[test]
+fn uniform_tier_fleet_reproduces_homogeneous_results_exactly() {
+    for n in [1usize, 4, 8, 16, 32] {
+        let a = fleet::solve_proposed(&tiered(n, 0));
+        let b = fleet::solve_proposed(&mixed(n));
+        assert_eq!(a.objective, b.objective, "N={n}");
+        assert_eq!(a.admitted, b.admitted, "N={n}");
+        for (x, y) in a.agents.iter().zip(&b.agents) {
+            assert_eq!(x.design.map(|d| d.b_hat), y.design.map(|d| d.b_hat));
+            assert_eq!(x.server_share, y.server_share);
+            assert_eq!(x.airtime_share, y.airtime_share);
+        }
+    }
+}
+
+/// Acceptance: on the silicon ladder the proposed allocator strictly
+/// beats the equal split, with the absolute margin non-decreasing in
+/// tier spread and strictly widening at N = 7 (the first size that
+/// seats a phone-class agent).
+#[test]
+fn hetero_fleet_margin_widens_with_tier_spread() {
+    let margin = |n: usize, spread: usize| {
+        let fp = tiered(n, spread);
+        let eq = fleet::solve_equal_share(&fp);
+        let pr = fleet::solve_proposed(&fp);
+        assert!(pr.objective <= eq.objective + 1e-12, "N={n} spread={spread}");
+        eq.objective - pr.objective
+    };
+    for n in [4usize, 6, 7] {
+        let (m0, m1, m2) = (margin(n, 0), margin(n, 1), margin(n, 2));
+        assert!(m0 <= m1 + 1e-12 && m1 <= m2 + 1e-12, "N={n}: {m0} {m1} {m2}");
+        assert!(m1 > 0.0, "N={n}: mixed-tier fleet must show a strict margin");
+    }
+    assert!(margin(7, 2) > margin(7, 1) * 1.5, "margin must widen at full spread");
+    // the mechanism: the equal split starves exactly the phone-class
+    // interactive agent while the proposed design seats the whole fleet
+    let fp = tiered(7, 2);
+    let eq = fleet::solve_equal_share(&fp);
+    let pr = fleet::solve_proposed(&fp);
+    assert_eq!(pr.admitted, 7);
+    assert_eq!(eq.admitted, 6);
+    assert!(eq.agents[6].design.is_none(), "equal split should reject the phone agent");
+    assert_eq!(fp.agents[6].device.tier, "phone");
+}
+
+// ---------------------------------------------------------------------------
+// CLI end-to-end (spawns the qaci binary; fleet paths are artifact-free)
+// ---------------------------------------------------------------------------
+
+fn qaci(args: &[&str]) -> (String, bool) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_qaci"))
+        .args(args)
+        .output()
+        .expect("qaci binary runs");
+    (String::from_utf8_lossy(&out.stdout).into_owned(), out.status.success())
+}
+
+fn parse_weighted_gap(stdout: &str) -> f64 {
+    let tail = stdout
+        .split("weighted gap ")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no weighted gap in output:\n{stdout}"));
+    let token = tail.split_whitespace().next().expect("gap value token");
+    token.parse::<f64>().unwrap_or_else(|e| panic!("unparseable gap {token:?}: {e}"))
+}
+
+/// `qaci fleet --tiers` end to end: parseable output, finite costs, and
+/// the hetero margin over equal-share strictly exceeding the uniform
+/// one — the CLI surface of the tier acceptance property.
+#[test]
+fn cli_fleet_hetero_vs_uniform_margin_ordering() {
+    let gap = |tiers: &str, algorithm: &str| -> f64 {
+        let (stdout, ok) = qaci(&[
+            "fleet", "--agents", "7", "--tiers", tiers, "--algorithm", algorithm,
+            "--requests", "4",
+        ]);
+        assert!(ok, "qaci fleet --tiers {tiers} --algorithm {algorithm} failed:\n{stdout}");
+        assert!(stdout.contains("per-agent allocation"), "table missing:\n{stdout}");
+        let gap = parse_weighted_gap(&stdout);
+        assert!(gap.is_finite() && gap >= 0.0, "gap {gap} not finite");
+        gap
+    };
+    let uniform_margin = gap("orin", "equal") - gap("orin", "proposed");
+    let hetero_margin =
+        gap("orin,xavier,phone", "equal") - gap("orin,xavier,phone", "proposed");
+    assert!(uniform_margin >= 0.0);
+    assert!(
+        hetero_margin > uniform_margin * 2.0,
+        "hetero margin {hetero_margin} does not dominate uniform {uniform_margin}"
+    );
+    // the hetero run surfaces the tier column
+    let (stdout, _) = qaci(&["fleet", "--agents", "7", "--tiers", "orin,xavier,phone",
+        "--requests", "4"]);
+    for tier in ["orin", "xavier", "phone"] {
+        assert!(stdout.contains(tier), "tier {tier} missing from CLI table:\n{stdout}");
+    }
+}
+
+/// `qaci fleet --churn --queue --tiers` smoke: the full online
+/// re-allocation comparison on heterogeneous silicon completes, prints
+/// all three policies with finite costs, and the online policy wins
+/// (exit code 0).
+#[test]
+fn cli_fleet_churn_queue_tiers_smoke() {
+    let (stdout, ok) = qaci(&[
+        "fleet", "--churn", "--queue", "fifo", "--tiers", "orin,xavier,phone",
+        "--horizon", "240", "--seed", "0",
+    ]);
+    assert!(ok, "churn CLI exited nonzero:\n{stdout}");
+    assert!(stdout.contains("tiers [orin,xavier,phone]"), "{stdout}");
+    for policy in ["static-equal", "static-proposed", "online-proposed"] {
+        assert!(stdout.contains(policy), "policy {policy} missing:\n{stdout}");
+    }
+    assert!(
+        stdout.contains("OK: online re-allocation beats the best static policy"),
+        "online did not win:\n{stdout}"
+    );
+    // every cost cell in the comparison table parses to a finite f64
+    let costs: Vec<f64> = stdout
+        .lines()
+        .filter(|l| l.contains("static-") || l.contains("online-"))
+        .filter_map(|l| l.split_whitespace().nth(1).map(str::to_owned))
+        .map(|tok| tok.parse::<f64>().unwrap_or_else(|e| panic!("bad cost {tok:?}: {e}")))
+        .collect();
+    assert_eq!(costs.len(), 3, "expected one cost per policy:\n{stdout}");
+    assert!(costs.iter().all(|c| c.is_finite() && *c >= 0.0));
+    // unknown tiers are rejected up front
+    let (_, ok) = qaci(&["fleet", "--tiers", "tpu"]);
+    assert!(!ok, "unknown tier must fail");
 }
 
 /// The three named algorithms all produce valid allocations via the
