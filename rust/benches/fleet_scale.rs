@@ -15,13 +15,14 @@
 //!   fallback) on every queued scenario in the table below, and its
 //!   waits never leave the mean-field bracket.
 
-use qaci::bench_harness::{scaled, Table};
+use qaci::bench_harness::{emit_bench_artifact, num_or_null, scaled, Table};
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
 use qaci::fleet::{sim, FleetSimConfig};
 use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem};
 use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
+use qaci::util::json::Json;
 use qaci::util::timer::Stopwatch;
 
 fn main() {
@@ -40,6 +41,7 @@ fn main() {
             "plans/s",
         ],
     );
+    let mut records: Vec<Json> = Vec::new();
     for n in [1usize, 2, 4, 8, 16, 32, 64] {
         let fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n));
         let mut objective = [0.0f64; 3];
@@ -82,6 +84,18 @@ fn main() {
                 format!("{:.2}", alloc_s * 1e3),
                 format!("{:.0}", n as f64 / alloc_s),
             ]);
+            assert!(alloc.objective.is_finite(), "N={n} {algorithm:?}: non-finite objective");
+            let p99 = if report.served > 0 { report.e2e_s.p99() } else { f64::NAN };
+            records.push(
+                Json::obj()
+                    .set("scenario", format!("scale-{n}"))
+                    .set("policy", algorithm.name())
+                    .set("cost", alloc.objective)
+                    .set("d_upper", d_upper[k])
+                    .set("admitted", alloc.admitted)
+                    .set("p99_s", num_or_null(p99))
+                    .set("wall_clock_s", alloc_s),
+            );
         }
         let (proposed, equal) = (objective[0], objective[1]);
         assert!(
@@ -106,6 +120,31 @@ fn main() {
 
     hetero_margin_ladder();
     fixed_point_scenarios();
+
+    // machine-readable artifact (schema in the crate root under "Bench
+    // artifacts"); the ordering invariant is re-checked against the
+    // parsed-back document so CI uploads exactly what was verified
+    let (_, doc) = emit_bench_artifact("fleet_scale", records);
+    let results = doc.get("results").and_then(Json::as_arr).expect("results array");
+    let cost_of = |scenario: &str, policy: &str| -> f64 {
+        results
+            .iter()
+            .find(|r| {
+                r.get("scenario").and_then(Json::as_str) == Some(scenario)
+                    && r.get("policy").and_then(Json::as_str) == Some(policy)
+            })
+            .and_then(|r| r.get("cost"))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("missing cost for {scenario}/{policy}"))
+    };
+    for n in [4usize, 8, 16, 32, 64] {
+        let scenario = format!("scale-{n}");
+        let (proposed, equal) = (cost_of(&scenario, "proposed"), cost_of(&scenario, "equal-share"));
+        assert!(
+            proposed < equal,
+            "artifact: {scenario} proposed {proposed} !< equal-share {equal}"
+        );
+    }
 }
 
 /// Margin over equal-share vs. silicon spread, at fully-admitted fleet

@@ -1,13 +1,20 @@
 //! Benchmark harness (criterion stand-in) + paper-table printer.
 //!
-//! Two roles:
+//! Three roles:
 //! * `time(...)` — warmup + timed iterations with percentile reporting, for
 //!   hot-path micro/macro benchmarks (`perf_hotpath` bench, §Perf).
 //! * [`Table`] — aligned row printer used by every `fig*`/`table1` bench to
 //!   emit the same rows/series the paper reports, so `cargo bench` output
 //!   can be diffed against EXPERIMENTS.md.
+//! * [`emit_bench_artifact`] — machine-readable `BENCH_<name>.json` result
+//!   files (schema documented in the crate root under "Bench artifacts")
+//!   that the `bench-artifacts` CI job uploads; emission round-trips the
+//!   file through the crate's own JSON parser and rejects any non-finite
+//!   number, so a NaN/inf result can never land in a green artifact.
 
+use crate::util::json::{self, Json};
 use crate::util::timer::{Samples, Stopwatch};
+use std::path::PathBuf;
 
 /// Time `f` for `iters` iterations after `warmup` untimed runs.
 pub fn time(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Samples {
@@ -35,6 +42,67 @@ pub fn scaled(n: usize) -> usize {
         (n / 8).max(1)
     } else {
         n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// machine-readable bench artifacts
+// ---------------------------------------------------------------------------
+
+/// Where bench artifacts land: `$QACI_BENCH_DIR` if set, else the
+/// working directory (`rust/` under `cargo bench`, which is what the CI
+/// job uploads from).
+pub fn artifact_dir() -> PathBuf {
+    std::env::var_os("QACI_BENCH_DIR").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Write `BENCH_<bench>.json` with the given result records and return
+/// the path plus the **parsed-back** document.
+///
+/// The round trip is the validity gate: the file is re-read through
+/// [`crate::util::json::parse`] (our serializer renders NaN/±inf as
+/// bare `NaN`/`inf` tokens, which the parser rejects), and every number
+/// in the parsed tree is additionally asserted finite. Benches then
+/// re-check their ordering invariants *against the parsed document*, so
+/// the artifact CI uploads is exactly what was verified.
+pub fn emit_bench_artifact(bench: &str, results: Vec<Json>) -> (PathBuf, Json) {
+    let doc = Json::obj()
+        .set("bench", bench)
+        .set("version", 1usize)
+        .set("results", Json::Arr(results));
+    let path = artifact_dir().join(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, doc.to_string_pretty())
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("re-reading {}: {e}", path.display()));
+    let back = json::parse(&text)
+        .unwrap_or_else(|e| panic!("{} is not valid JSON: {e}", path.display()));
+    assert_all_finite(&back, bench);
+    assert_eq!(back, doc, "artifact round-trip must be lossless");
+    println!("\nwrote {}", path.display());
+    (path, back)
+}
+
+/// Recursively assert every number in a JSON tree is finite.
+pub fn assert_all_finite(j: &Json, context: &str) {
+    match j {
+        Json::Num(n) => assert!(n.is_finite(), "{context}: non-finite number {n}"),
+        Json::Arr(a) => a.iter().for_each(|v| assert_all_finite(v, context)),
+        Json::Obj(kv) => kv.iter().for_each(|(k, v)| {
+            assert_all_finite(v, &format!("{context}.{k}"));
+        }),
+        _ => {}
+    }
+}
+
+/// `f64` → JSON, representing a missing measurement (`NaN`, e.g. a
+/// percentile over zero completions) as `null` instead of a non-finite
+/// number the artifact gate would reject.
+pub fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
     }
 }
 
@@ -130,5 +198,30 @@ mod tests {
     fn time_returns_all_samples() {
         let s = time("noop", 1, 5, || {});
         assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn bench_artifact_roundtrips_and_rejects_non_finite() {
+        let dir = std::env::temp_dir().join("qaci_bench_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("QACI_BENCH_DIR", &dir);
+        let rec = Json::obj()
+            .set("scenario", "s")
+            .set("policy", "p")
+            .set("cost", 0.25)
+            .set("p99", num_or_null(f64::NAN));
+        let (path, back) = emit_bench_artifact("selftest", vec![rec]);
+        std::env::remove_var("QACI_BENCH_DIR");
+        assert!(path.ends_with("BENCH_selftest.json"));
+        assert_eq!(back.get("bench").and_then(Json::as_str), Some("selftest"));
+        let results = back.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("cost").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(results[0].get("p99"), Some(&Json::Null));
+        // a genuinely non-finite number must be rejected, not uploaded
+        let bad = Json::obj().set("x", f64::INFINITY);
+        let res = std::panic::catch_unwind(|| assert_all_finite(&bad, "bad"));
+        assert!(res.is_err());
+        std::fs::remove_file(path).ok();
     }
 }

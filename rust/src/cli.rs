@@ -10,8 +10,10 @@ use qaci::data::eval::EvalSet;
 use qaci::data::vocab::Vocab;
 use qaci::data::workload::{generate, Arrival};
 use qaci::fleet::churn::{self, ChurnConfig};
-use qaci::fleet::{sim as fleet_sim, FleetSimConfig};
-use qaci::opt::fleet::{self as fleet_opt, AgentSpec, FleetAlgorithm, FleetProblem};
+use qaci::fleet::{events, sim as fleet_sim, FleetSimConfig};
+use qaci::opt::fleet::{
+    self as fleet_opt, AdmissionPricing, AgentSpec, FleetAlgorithm, FleetProblem,
+};
 use qaci::opt::{bisection, sca, Problem};
 use qaci::quant::Scheme;
 use qaci::rl::env::BudgetRanges;
@@ -54,6 +56,16 @@ pub fn main() {
             Some("off"),
         )
         .describe("churn", "fleet: run the churn comparison instead of one allocation", None)
+        .describe(
+            "events",
+            "churn: also replay request-level traffic and print tail telemetry",
+            None,
+        )
+        .describe(
+            "admission-pricing",
+            "fleet: rejection pricing, uniform | tiered (capability-scaled)",
+            Some("uniform"),
+        )
         .describe("horizon", "churn: simulated horizon [s]", Some("600"))
         .describe("join-rps", "churn: Poisson join rate [1/s]", Some("0.02"))
         .describe("leave-rps", "churn: per-agent leave rate [1/s]", Some("0.003"))
@@ -333,6 +345,10 @@ fn cmd_fleet(args: &Args) -> i32 {
         eprintln!("unknown --tiers (expected comma list of orin|xavier|phone)");
         return 2;
     };
+    let Some(pricing) = AdmissionPricing::parse(&args.str("admission-pricing", "uniform")) else {
+        eprintln!("unknown --admission-pricing (expected uniform | tiered)");
+        return 2;
+    };
     // with the queue on, the allocator's analytic load and the simulated
     // arrivals must describe the same traffic: one rate drives both
     // (explicit --rps still wins for stress runs)
@@ -342,18 +358,20 @@ fn cmd_fleet(args: &Args) -> i32 {
         args.f64("rps", 2.0)
     };
     let mut fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::tiered_fleet(n, &tiers))
-        .with_link(args.f64("rate-mbps", 400.0) * 1e6, 2e-3);
+        .with_link(args.f64("rate-mbps", 400.0) * 1e6, 2e-3)
+        .with_pricing(pricing);
     if let Some(discipline) = queue {
         fp = fp.with_queue(QueueModel::uniform(discipline, n, arrival_rps));
     }
     println!(
         "fleet: N={n} agents, tiers [{}], shared server f̃^max={:.1} GHz, shared uplink \
-         {:.0} Mbps, algorithm={}, queue={}, arrivals {:.3}/s per agent",
+         {:.0} Mbps, algorithm={}, queue={}, pricing={}, arrivals {:.3}/s per agent",
         tiers.iter().map(|t| t.tier).collect::<Vec<_>>().join(","),
         fp.base.server.f_max / 1e9,
         fp.link_rate_bps / 1e6,
         algorithm.name(),
         queue.map_or("off", QueueDiscipline::name),
+        pricing.name(),
         arrival_rps
     );
 
@@ -452,6 +470,10 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         eprintln!("unknown --tiers (expected comma list of orin|xavier|phone)");
         return 2;
     };
+    let Some(pricing) = AdmissionPricing::parse(&args.str("admission-pricing", "uniform")) else {
+        eprintln!("unknown --admission-pricing (expected uniform | tiered)");
+        return 2;
+    };
     let cfg = ChurnConfig {
         initial_agents: args.usize("agents", 4).max(1),
         horizon_s: args.f64("horizon", 600.0),
@@ -467,12 +489,13 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         link_rate_bps: args.f64("rate-mbps", 400.0) * 1e6,
         link_base_latency_s: 2e-3,
         tiers,
+        pricing,
         seed: args.usize("seed", 0) as u64,
     };
     let (tl, reports) = churn::compare(Platform::fleet_edge(), &cfg);
     println!(
         "churn: N0={} agents, tiers [{}], horizon {:.0}s, {} events ({} joins, {} leaves, \
-         {} bursts), queue={}",
+         {} bursts), queue={}, pricing={}",
         cfg.initial_agents,
         cfg.tiers.iter().map(|t| t.tier).collect::<Vec<_>>().join(","),
         cfg.horizon_s,
@@ -480,7 +503,8 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         tl.joins,
         tl.leaves,
         tl.bursts,
-        cfg.queue.map_or("off", QueueDiscipline::name)
+        cfg.queue.map_or("off", QueueDiscipline::name),
+        cfg.pricing.name()
     );
 
     let mut t = Table::new(
@@ -511,6 +535,52 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         ]);
     }
     t.print();
+
+    if args.has("events") {
+        // the same timeline, request level: what each policy's traffic
+        // actually experienced (rejected/departure-dropped requests count
+        // as deadline violations — they never completed)
+        let mut et = Table::new(
+            "event-level telemetry (per-request; e2e/wait over completed requests)",
+            &[
+                "policy",
+                "arrivals",
+                "completed",
+                "rejected",
+                "dropped",
+                "e2e p50",
+                "e2e p95",
+                "e2e p99",
+                "wait p50",
+                "wait p99",
+                "deadline viol",
+            ],
+        );
+        let sec = |s: &qaci::util::timer::Samples, p: f64| {
+            if s.is_empty() {
+                "--".into()
+            } else {
+                format!("{:.3}s", s.percentile(p))
+            }
+        };
+        for policy in churn::ChurnPolicy::ALL {
+            let r = events::run_events(Platform::fleet_edge(), &tl, policy, &cfg);
+            et.row(&[
+                r.policy.name().to_string(),
+                format!("{}", r.arrivals),
+                format!("{}", r.completed),
+                format!("{}", r.rejected),
+                format!("{}", r.dropped_departure),
+                sec(&r.e2e_s, 50.0),
+                sec(&r.e2e_s, 95.0),
+                sec(&r.e2e_s, 99.0),
+                sec(&r.queue_wait_s, 50.0),
+                sec(&r.queue_wait_s, 99.0),
+                format!("{:.1}%", r.violation_rate() * 100.0),
+            ]);
+        }
+        et.print();
+    }
 
     let cost = |name: &str| {
         reports

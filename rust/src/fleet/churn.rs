@@ -26,10 +26,15 @@
 //!
 //! The score is the **time-averaged fleet-weighted distortion cost**
 //! (the (P1) objective integrated over the horizon, rejection penalties
-//! included), plus the matching time-averaged weighted D^U.
+//! included), plus the matching time-averaged weighted D^U. This is the
+//! *analytic* view — what the allocator guarantees between events; the
+//! same [`Timeline`] can be replayed at the request level by
+//! [`super::events`], which measures the tails (p50/p95/p99 wait and
+//! e2e, deadline-violation rate) the integration cannot see.
 
 use crate::opt::fleet::{
-    self, AgentAllocation, AgentSpec, FleetAllocation, FleetProblem, ProposedOptions,
+    self, AdmissionPricing, AgentAllocation, AgentSpec, FleetAllocation, FleetProblem,
+    ProposedOptions,
 };
 use crate::system::platform::DeviceProfile;
 use crate::system::queue::{QueueDiscipline, QueueModel};
@@ -71,6 +76,10 @@ pub struct ChurnConfig {
     /// seats identical silicon every run. The default uniform-Orin
     /// ladder reproduces the homogeneous fleet exactly.
     pub tiers: Vec<DeviceProfile>,
+    /// how the allocator prices rejections (the default
+    /// [`AdmissionPricing::Uniform`] reproduces the silicon-blind 2/λ
+    /// scoring bit for bit)
+    pub pricing: AdmissionPricing,
     pub seed: u64,
 }
 
@@ -91,6 +100,7 @@ impl Default for ChurnConfig {
             link_rate_bps: 400e6,
             link_base_latency_s: 2e-3,
             tiers: vec![DeviceProfile::orin()],
+            pricing: AdmissionPricing::Uniform,
             seed: 0,
         }
     }
@@ -281,7 +291,7 @@ pub struct ChurnReport {
 /// differ in silicon, two fleets with identical contracts but different
 /// tiers must not alias to the same warm-start cache entry (regression-
 /// tested below).
-fn fingerprint(fp: &FleetProblem) -> u64 {
+pub(crate) fn fingerprint(fp: &FleetProblem) -> u64 {
     let mut h = std::collections::hash_map::DefaultHasher::new();
     fp.n().hash(&mut h);
     for a in &fp.agents {
@@ -314,24 +324,28 @@ fn fingerprint(fp: &FleetProblem) -> u64 {
             }
         }
     }
+    fp.pricing.hash(&mut h);
     h.finish()
 }
 
-/// The live population under a policy run.
-struct Population {
-    live: Vec<u64>,
-    bursting: HashSet<u64>,
+/// The live population under a policy run (shared with the event-level
+/// replay in [`crate::fleet::events`], so both score against the same
+/// fleet problem derivation).
+pub(crate) struct Population {
+    pub(crate) live: Vec<u64>,
+    pub(crate) bursting: HashSet<u64>,
 }
 
 impl Population {
-    fn spec(cfg: &ChurnConfig, key: u64) -> AgentSpec {
+    pub(crate) fn spec(cfg: &ChurnConfig, key: u64) -> AgentSpec {
         AgentSpec::tiered_spec(key as usize, &cfg.tiers)
     }
 
-    fn problem(&self, base: Platform, cfg: &ChurnConfig) -> FleetProblem {
+    pub(crate) fn problem(&self, base: Platform, cfg: &ChurnConfig) -> FleetProblem {
         let specs: Vec<AgentSpec> = self.live.iter().map(|&k| Self::spec(cfg, k)).collect();
         let mut fp = FleetProblem::new(base, specs)
-            .with_link(cfg.link_rate_bps, cfg.link_base_latency_s);
+            .with_link(cfg.link_rate_bps, cfg.link_base_latency_s)
+            .with_pricing(cfg.pricing);
         if let Some(discipline) = cfg.queue {
             let rates: Vec<f64> = self
                 .live
@@ -346,7 +360,7 @@ impl Population {
         fp
     }
 
-    fn apply(&mut self, event: ChurnEvent) {
+    pub(crate) fn apply(&mut self, event: ChurnEvent) {
         match event {
             ChurnEvent::Join(k) => self.live.push(k),
             ChurnEvent::Leave(k) => {

@@ -23,14 +23,24 @@
 //! * the **churn loop** ([`churn`]) replays Poisson joins/leaves/bursts
 //!   and re-runs the allocator online, warm-started from the previous
 //!   allocation and gated by a config fingerprint — static t = 0
-//!   allocations ride the same timeline for comparison.
+//!   allocations ride the same timeline for comparison;
+//! * the **event-level churn replay** ([`events`]) threads per-request
+//!   traffic through the same timeline: lanes created/retired at
+//!   join/leave, queued work dropped (and accounted) at departure,
+//!   re-allocations swapping the share vector without resetting the
+//!   shared queue — producing the tail telemetry (p50/p95/p99 queue wait
+//!   and end-to-end delay, deadline-violation rate) the analytic scoring
+//!   cannot see.
 //!
-//! Entry points: `qaci fleet [--churn]` (CLI), `benches/fleet_scale.rs`
-//! (N-sweep), `benches/fleet_churn.rs` (policy comparison under churn),
-//! `examples/fleet_sweep.rs`, `examples/fleet_churn.rs`.
+//! Entry points: `qaci fleet [--churn [--events]]` (CLI),
+//! `benches/fleet_scale.rs` (N-sweep), `benches/fleet_churn.rs` (policy
+//! comparison under churn), `examples/fleet_sweep.rs`,
+//! `examples/fleet_churn.rs`.
 
 pub mod churn;
+pub mod events;
 pub mod sim;
 
 pub use churn::{ChurnConfig, ChurnPolicy, ChurnReport, Timeline};
+pub use events::{EventAgentReport, EventReport};
 pub use sim::{AgentReport, FleetReport, FleetSimConfig};

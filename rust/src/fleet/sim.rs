@@ -33,6 +33,11 @@
 //! Delay/energy are the paper's models (eq. 4–9) at the planned
 //! frequencies; wall-clock execution is intentionally absent so the loop
 //! runs in tests and benches without artifacts.
+//!
+//! This loop serves a **fixed population** against one allocation; its
+//! churning counterpart — lanes created and retired mid-flight by a
+//! [`Timeline`](super::churn::Timeline), slot-bounded dispatch, queued
+//! work re-priced on re-allocation — is [`super::events`].
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::router::{QosPolicy, RoutedRequest, Router};
@@ -190,6 +195,53 @@ impl Lane {
     }
 }
 
+/// PR 1 semantics: slices run concurrently; each agent's chain is
+/// independent once the (jittered) medium draws are made.
+fn dispatch_fluid(lanes: &mut [Lane], medium: &mut MultiAccessChannel) {
+    for lane in lanes {
+        while let Some((ready, t_agent, t_link)) = lane.ready_head(medium) {
+            let t_server = delay::server_delay(&lane.platform, lane.design.f_tilde);
+            lane.finish_head(ready, t_agent, t_link, ready + t_server);
+        }
+    }
+}
+
+/// All server stages serialize through one shared [`EdgeQueue`]. The
+/// population is fixed for the whole run, so the unbounded [`EdgeQueue::pop`]
+/// is sound here; the churning variant of this loop lives in
+/// [`super::events`] and must use the slot-bounded
+/// [`EdgeQueue::pop_due`] instead (lanes appear, retire and re-price
+/// mid-flight there).
+fn dispatch_queued(
+    lanes: &mut [Lane],
+    medium: &mut MultiAccessChannel,
+    discipline: QueueDiscipline,
+) {
+    let mut queue = EdgeQueue::new(discipline);
+    loop {
+        let mut pushed_any = false;
+        for lane in lanes.iter_mut() {
+            if lane.head.is_none() {
+                if let Some((ready, _, _)) = lane.ready_head(medium) {
+                    let t_server = delay::server_delay(&lane.platform, lane.design.f_tilde);
+                    queue.push(lane.agent, ready, t_server, lane.weight);
+                    pushed_any = true;
+                }
+            }
+        }
+        let Some((job, _, finish)) = queue.pop() else {
+            debug_assert!(!pushed_any, "pushed jobs must be dispatchable");
+            break;
+        };
+        let lane = lanes
+            .iter_mut()
+            .find(|l| l.agent == job.agent)
+            .expect("job belongs to a lane");
+        let (ready, t_agent, t_link) = lane.head.expect("head in flight");
+        lane.finish_head(ready, t_agent, t_link, finish);
+    }
+}
+
 /// Run the fleet serving loop for a solved allocation.
 pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> FleetReport {
     assert_eq!(alloc.agents.len(), fp.n());
@@ -302,42 +354,8 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
 
     // ---- phase 2: dispatch ----
     match cfg.queue {
-        None => {
-            // PR 1 semantics: slices run concurrently; each agent's chain
-            // is independent once the (jittered) medium draws are made
-            for lane in &mut lanes {
-                while let Some((ready, t_agent, t_link)) = lane.ready_head(&mut medium) {
-                    let t_server = delay::server_delay(&lane.platform, lane.design.f_tilde);
-                    lane.finish_head(ready, t_agent, t_link, ready + t_server);
-                }
-            }
-        }
-        Some(discipline) => {
-            // all server stages serialize through one shared queue
-            let mut queue = EdgeQueue::new(discipline);
-            loop {
-                let mut pushed_any = false;
-                for lane in &mut lanes {
-                    if lane.head.is_none() {
-                        if let Some((ready, _, _)) = lane.ready_head(&mut medium) {
-                            let t_server = delay::server_delay(&lane.platform, lane.design.f_tilde);
-                            queue.push(lane.agent, ready, t_server, lane.weight);
-                            pushed_any = true;
-                        }
-                    }
-                }
-                let Some((job, _, finish)) = queue.pop() else {
-                    debug_assert!(!pushed_any, "pushed jobs must be dispatchable");
-                    break;
-                };
-                let lane = lanes
-                    .iter_mut()
-                    .find(|l| l.agent == job.agent)
-                    .expect("job belongs to a lane");
-                let (ready, t_agent, t_link) = lane.head.expect("head in flight");
-                lane.finish_head(ready, t_agent, t_link, finish);
-            }
-        }
+        None => dispatch_fluid(&mut lanes, &mut medium),
+        Some(discipline) => dispatch_queued(&mut lanes, &mut medium, discipline),
     }
 
     // ---- rollup ----

@@ -27,7 +27,7 @@
 //! | quantizers (§II-C) | [`quant`] |
 //! | system model (§II-D) | [`system`] (incl. multi-access contention + [`system::queue`]) |
 //! | joint design (§V) | [`opt`] (incl. [`opt::fleet`]), [`rl`] |
-//! | serving | [`runtime`], [`coordinator`], [`fleet`] (incl. [`fleet::churn`]) |
+//! | serving | [`runtime`], [`coordinator`], [`fleet`] (incl. [`fleet::churn`] + [`fleet::events`]) |
 //! | evaluation | [`bench_harness`], `rust/benches/*` |
 //!
 //! The **fleet layer** generalizes the paper's single agent–server pair to
@@ -78,6 +78,71 @@
 //! churns (and reproduces the static allocation exactly when it does
 //! not). Entry points: `qaci fleet --churn`, `benches/fleet_churn.rs`,
 //! `examples/fleet_churn.rs`.
+//!
+//! ## Event mode
+//!
+//! The analytic churn score integrates what the allocator *guarantees*;
+//! `qaci fleet --churn --events` additionally replays the same timeline
+//! at the **request level** ([`fleet::events`]): every live agent emits
+//! an open Poisson request stream (continuous across events — rate
+//! changes rescale the residual gap, so every policy sees identical
+//! arrivals), each request pays agent-compute + uplink at its arrival
+//! operating point and serializes through the shared
+//! [`system::queue::EdgeQueue`], dispatch is slot-bounded
+//! ([`system::queue::EdgeQueue::pop_due`], invariant under slot
+//! refinement), lanes are created/retired at joins/leaves (queued work
+//! of a leaver is dropped *and accounted* — every request completes, is
+//! rejected, or is dropped at departure), and online re-allocations
+//! re-price the waiting queue without resetting it. The result is tail
+//! telemetry the analytic path cannot see: per-agent/fleet p50/p95/p99
+//! queue wait and end-to-end delay plus deadline-violation rate. Under
+//! burst overload frozen static shares let the queue diverge while the
+//! online re-solve keeps p99 bounded (the `burst-storm` bench scenario
+//! pins online beating the best static policy on p99); admission
+//! pricing can be made silicon-aware with `--admission-pricing tiered`
+//! ([`opt::fleet::AdmissionPricing`]), trading phone-class coverage for
+//! orin throughput — visibly, in the same traces. A stationary-load
+//! property test pins the event engine to the analytic M/G/1
+//! [`system::queue::QueueModel`] per-agent waits for both disciplines.
+//!
+//! ## Bench artifacts
+//!
+//! `benches/fleet_churn.rs` and `benches/fleet_scale.rs` emit
+//! machine-readable results next to their tables —
+//! `BENCH_fleet_churn.json` / `BENCH_fleet_scale.json` (or under
+//! `$QACI_BENCH_DIR`), uploaded by the `bench-artifacts` CI job. Schema
+//! (version 1):
+//!
+//! ```json
+//! {
+//!   "bench": "fleet_churn",
+//!   "version": 1,
+//!   "results": [
+//!     {
+//!       "scenario": "burst-storm",
+//!       "policy": "online-proposed",
+//!       "cost": 0.2563,
+//!       "d_upper": 0.0461,
+//!       "reallocations": 29,
+//!       "arrivals": 362, "completed": 158,
+//!       "p99_s": 19.7, "queue_wait_p99_s": 17.8,
+//!       "deadline_violation_rate": 0.718,
+//!       "wall_clock_s": 0.42
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `fleet_scale` records carry `scenario: "scale-<N>"`, `policy` (the
+//! allocator name), `cost`, `d_upper`, `admitted`, `p99_s` and
+//! `wall_clock_s` (the allocation solve time). Fields whose measurement
+//! does not exist (e.g. a p99 over zero completions) are `null`, never
+//! NaN: emission ([`bench_harness::emit_bench_artifact`]) re-parses the
+//! file and rejects any non-finite number, the benches re-check their
+//! ordering invariants (online ≤ best-static under churn, online p99
+//! under burst-storm, proposed ≤ equal at N ≥ 4) against the parsed
+//! document, and the CI job validates the files once more before
+//! uploading.
 
 pub mod bench_harness;
 pub mod coordinator;

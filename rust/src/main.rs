@@ -12,7 +12,10 @@
 //!            `--queue fifo|priority` adds the shared edge queue, `--churn`
 //!            replays a churning population (Poisson joins/leaves/bursts)
 //!            and compares the static t=0 allocations against online
-//!            re-allocation
+//!            re-allocation, `--churn --events` adds the request-level
+//!            replay (p50/p95/p99 wait + e2e, deadline-violation rate),
+//!            `--admission-pricing tiered` scales rejection penalties by
+//!            silicon capability (phone coverage vs orin throughput)
 //!   fit      fit the exponential magnitude model to a weight blob
 //!
 //! Examples:
@@ -22,5 +25,6 @@
 //!   qaci fleet --agents 8 --algorithm proposed --requests 16
 //!   qaci fleet --agents 7 --tiers orin,xavier,phone
 //!   qaci fleet --churn --agents 4 --horizon 600 --queue fifo
+//!   qaci fleet --churn --events --admission-pricing tiered --tiers orin,xavier,phone
 fn main() { cli::main() }
 mod cli;

@@ -24,11 +24,15 @@
 //!
 //! Minimize Σ_i w_i · ζ_i where ζ_i is the paper's (P1) objective
 //! D^U(b̂_i−1) − D^L(b̂_i−1) for served agents and a rejection penalty
-//! 2/λ_i (4× the worst feasible gap, so serving at b̂ = 1 always beats
-//! rejecting) for agents the allocator cannot fit. Since both the gap and
-//! D^U alone are strictly decreasing in b̂, the same allocation minimizes
-//! the fleet-weighted distortion upper bound
-//! ([`FleetAllocation::weighted_d_upper`]).
+//! for agents the allocator cannot fit. Under the default
+//! [`AdmissionPricing::Uniform`] the penalty is 2/λ_i — 4× the worst
+//! feasible gap, so serving at b̂ = 1 always beats rejecting; under
+//! [`AdmissionPricing::Tiered`] it is scaled by the agent's silicon
+//! capability, making it *deliberately* cheaper to turn weak tiers away
+//! (the phone-coverage-vs-orin-throughput operator trade). Since both
+//! the gap and D^U alone are strictly decreasing in b̂, the same
+//! allocation minimizes the fleet-weighted distortion upper bound
+//! ([`FleetAllocation::weighted_d_upper`]) under uniform pricing.
 //!
 //! The proposed solver alternates **per-agent exact bisection**
 //! ([`super::bisection`], the inner (P1) solve at fixed shares) with a
@@ -172,6 +176,69 @@ impl AgentSpec {
         let ladder = [DeviceProfile::orin(), DeviceProfile::xavier(), DeviceProfile::phone()];
         ladder[..=spread.min(2)].to_vec()
     }
+
+    /// The platform this agent sees at server-frequency share μ: its own
+    /// silicon tier in front of the share-scaled shared server of `base`
+    /// (the fleet-wide substitution [`FleetProblem::agent_platform`]
+    /// delegates to; the event-level serving loop prices stage times with
+    /// it directly, without a [`FleetProblem`] in hand).
+    pub fn platform_at(&self, base: Platform, mu: f64) -> Platform {
+        let mut p = base;
+        p.device = self.device.spec;
+        p.server.f_max *= mu.clamp(0.0, 1.0);
+        p
+    }
+
+    /// Nominal (jitter-free) uplink time at airtime share α on a medium
+    /// with the given total rate and base latency, through this agent's
+    /// channel gain. A non-finite α is treated as "no airtime" so a
+    /// poisoned share degrades to a clean +inf instead of NaN.
+    pub fn link_time_at(&self, rate_bps: f64, base_latency_s: f64, alpha: f64) -> f64 {
+        let share = if alpha.is_finite() { alpha.clamp(0.0, 1.0) } else { 0.0 };
+        MultiAccessChannel::nominal_transmit_s(
+            rate_bps * self.channel_gain,
+            base_latency_s,
+            share,
+            self.payload_bytes,
+        )
+    }
+}
+
+/// How admission control prices turning an agent away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum AdmissionPricing {
+    /// The silicon-blind penalty w_i · 2/λ_i (4× the worst feasible
+    /// bound gap, so serving any agent at b̂ = 1 always beats rejecting
+    /// it) — the pre-tier behavior, bit for bit.
+    #[default]
+    Uniform,
+    /// The uniform penalty scaled by the agent's
+    /// [`DeviceProfile::capability`] (Orin 1.0, Xavier 0.35, phone
+    /// 0.125): rejecting a weak device forfeits proportionally less
+    /// fleet capability. Deliberately breaks the always-serve guarantee
+    /// for weak tiers — a phone-class agent whose feasible bit-width is
+    /// low (gap above 0.25/λ, i.e. b̂ ≤ 2) is now *better* rejected, and
+    /// its shares flow to the Orin/Xavier blocks. That is the operator
+    /// trade: phone coverage vs. orin throughput, visible directly in
+    /// the event-level tail traces.
+    Tiered,
+}
+
+impl AdmissionPricing {
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionPricing::Uniform => "uniform",
+            AdmissionPricing::Tiered => "tiered",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AdmissionPricing> {
+        match s {
+            "uniform" => Some(AdmissionPricing::Uniform),
+            "tiered" | "tier" | "capability" => Some(AdmissionPricing::Tiered),
+            _ => None,
+        }
+    }
 }
 
 /// Fleet instance: shared silicon + shared medium + per-agent contracts,
@@ -191,6 +258,9 @@ pub struct FleetProblem {
     /// shared edge-queue model; `None` = PR 1's fluid sharing (no
     /// queueing term in the delay constraint)
     pub queue: Option<QueueModel>,
+    /// how rejections are priced ([`AdmissionPricing::Uniform`] keeps the
+    /// silicon-blind 2/λ behavior bit for bit)
+    pub pricing: AdmissionPricing,
 }
 
 impl FleetProblem {
@@ -207,6 +277,7 @@ impl FleetProblem {
             link_rate_bps: 400e6,
             link_base_latency_s: 2e-3,
             queue: None,
+            pricing: AdmissionPricing::default(),
         }
     }
 
@@ -221,6 +292,13 @@ impl FleetProblem {
     pub fn with_queue(mut self, queue: QueueModel) -> FleetProblem {
         assert_eq!(queue.arrival_rps.len(), self.agents.len(), "one rate per agent");
         self.queue = Some(queue);
+        self
+    }
+
+    /// Select the admission-pricing scheme (default
+    /// [`AdmissionPricing::Uniform`], the pre-tier behavior).
+    pub fn with_pricing(mut self, pricing: AdmissionPricing) -> FleetProblem {
+        self.pricing = pricing;
         self
     }
 
@@ -239,10 +317,7 @@ impl FleetProblem {
     /// shared server. The uniform Orin tier reproduces the base device
     /// exactly (same constants), so homogeneous fleets are unchanged.
     pub fn agent_platform(&self, i: usize, mu: f64) -> Platform {
-        let mut p = self.base;
-        p.device = self.agents[i].device.spec;
-        p.server.f_max *= mu.clamp(0.0, 1.0);
-        p
+        self.agents[i].platform_at(self.base, mu)
     }
 
     /// Nominal (jitter-free) uplink time at airtime share α — what the
@@ -251,13 +326,7 @@ impl FleetProblem {
     /// airtime" so a poisoned share vector degrades to a clean +inf
     /// (→ rejection) instead of propagating NaN into costs.
     pub fn link_time(&self, i: usize, alpha: f64) -> f64 {
-        let share = if alpha.is_finite() { alpha.clamp(0.0, 1.0) } else { 0.0 };
-        MultiAccessChannel::nominal_transmit_s(
-            self.link_rate_bps * self.agents[i].channel_gain,
-            self.link_base_latency_s,
-            share,
-            self.agents[i].payload_bytes,
-        )
+        self.agents[i].link_time_at(self.link_rate_bps, self.link_base_latency_s, alpha)
     }
 
     /// Slice-capacity drain time of one server-stage job at share μ
@@ -347,10 +416,17 @@ impl FleetProblem {
         bisection::solve(&problem).map(|r| r.design)
     }
 
-    /// Rejection penalty: 4× the worst feasible bound gap, so serving an
-    /// agent (at any bit-width) always improves the objective.
+    /// Rejection penalty. Uniform pricing: 4× the worst feasible bound
+    /// gap, so serving an agent (at any bit-width) always improves the
+    /// objective. Tiered pricing scales that by the agent's silicon
+    /// capability (see [`AdmissionPricing::Tiered`] for the deliberate
+    /// consequences).
     pub fn rejection_cost(&self, i: usize) -> f64 {
-        self.agents[i].weight * 2.0 / self.agents[i].lambda
+        let base = self.agents[i].weight * 2.0 / self.agents[i].lambda;
+        match self.pricing {
+            AdmissionPricing::Uniform => base,
+            AdmissionPricing::Tiered => base * self.agents[i].device.capability(),
+        }
     }
 
     /// The single source of truth for the fleet objective: an agent's
@@ -1315,6 +1391,116 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn uniform_pricing_is_the_default_and_matches_the_old_penalty() {
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(9, &AgentSpec::tier_mix(2)),
+        );
+        assert_eq!(fp.pricing, AdmissionPricing::Uniform);
+        for (i, spec) in fp.agents.iter().enumerate() {
+            // the pre-tier silicon-blind formula, regardless of tier
+            assert_eq!(fp.rejection_cost(i), spec.weight * 2.0 / spec.lambda);
+        }
+        // and an explicit Uniform is bit-identical to the default
+        let explicit = fp.clone().with_pricing(AdmissionPricing::Uniform);
+        let a = solve_proposed(&fp);
+        let b = solve_proposed(&explicit);
+        assert_eq!(a.objective, b.objective);
+        for (x, y) in a.agents.iter().zip(&b.agents) {
+            assert_eq!(x.design.map(|d| d.b_hat), y.design.map(|d| d.b_hat));
+        }
+    }
+
+    #[test]
+    fn tiered_pricing_orders_penalties_by_capability() {
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(9, &AgentSpec::tier_mix(2)),
+        )
+        .with_pricing(AdmissionPricing::Tiered);
+        // agents 0..3 orin, 3..6 xavier, 6..9 phone; same class cycle per
+        // tier, so same-class penalties order strictly by capability
+        for class_ix in 0..3 {
+            let orin = fp.rejection_cost(class_ix);
+            let xavier = fp.rejection_cost(3 + class_ix);
+            let phone = fp.rejection_cost(6 + class_ix);
+            assert!(phone < xavier && xavier < orin, "{phone} {xavier} {orin}");
+            // orin pays exactly the uniform penalty (capability 1)
+            let spec = &fp.agents[class_ix];
+            assert_eq!(orin, spec.weight * 2.0 / spec.lambda);
+            // and the ratios are the capability ladder itself
+            assert!((xavier / orin - 0.35).abs() < 1e-12);
+            assert!((phone / orin - 0.125).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tiered_pricing_trades_phone_coverage_for_orin_throughput() {
+        // the operator trade, end to end: on a contended 9-agent 3-tier
+        // fleet, uniform pricing squeezes everyone in (phones land at
+        // b̂ = 1), while tiered pricing turns the whole phone block away
+        // and spends the freed shares on the orin/xavier blocks — every
+        // surviving agent's bit-width can only rise, most strictly
+        let specs = AgentSpec::tiered_fleet(9, &AgentSpec::tier_mix(2));
+        let uniform = solve_proposed(&FleetProblem::new(Platform::fleet_edge(), specs.clone()));
+        let tiered = solve_proposed(
+            &FleetProblem::new(Platform::fleet_edge(), specs.clone())
+                .with_pricing(AdmissionPricing::Tiered),
+        );
+        assert_eq!(uniform.admitted, 9, "uniform pricing should seat the full fleet");
+        for (slot, spec) in uniform.agents.iter().zip(&specs) {
+            if spec.device.tier == "phone" {
+                assert_eq!(slot.design.map(|d| d.b_hat), Some(1), "phones at the floor");
+            }
+        }
+        assert!(tiered.admitted < uniform.admitted);
+        for (slot, spec) in tiered.agents.iter().zip(&specs) {
+            if spec.device.tier == "phone" {
+                assert!(slot.design.is_none(), "tiered pricing must reject the phone block");
+            }
+        }
+        let mut strictly_up = 0;
+        for (u, t) in uniform.agents.iter().zip(&tiered.agents).take(6) {
+            let (bu, bt) = (u.design.map_or(0, |d| d.b_hat), t.design.map_or(0, |d| d.b_hat));
+            assert!(bt >= bu, "freed shares must not shrink a surviving design: {bt} < {bu}");
+            if bt > bu {
+                strictly_up += 1;
+            }
+        }
+        assert!(strictly_up >= 4, "only {strictly_up} designs improved");
+    }
+
+    #[test]
+    fn tiered_pricing_never_worse_than_equal_share_under_same_pricing() {
+        // the structural guarantee is pricing-agnostic: proposed and
+        // equal-share are scored with the same rejection costs
+        for spread in 0..=2 {
+            let fp = FleetProblem::new(
+                Platform::fleet_edge(),
+                AgentSpec::tiered_fleet(8, &AgentSpec::tier_mix(spread)),
+            )
+            .with_pricing(AdmissionPricing::Tiered);
+            let equal = solve_equal_share(&fp);
+            let proposed = solve_proposed(&fp);
+            assert!(
+                proposed.objective <= equal.objective + 1e-12,
+                "spread={spread}: {} > {}",
+                proposed.objective,
+                equal.objective
+            );
+        }
+    }
+
+    #[test]
+    fn admission_pricing_parse_roundtrip() {
+        for p in [AdmissionPricing::Uniform, AdmissionPricing::Tiered] {
+            assert_eq!(AdmissionPricing::parse(p.name()), Some(p));
+        }
+        assert_eq!(AdmissionPricing::parse("capability"), Some(AdmissionPricing::Tiered));
+        assert_eq!(AdmissionPricing::parse("free"), None);
     }
 
     #[test]

@@ -16,8 +16,9 @@
 //!   channel gain, contending for one edge server (server-frequency
 //!   shares) and one wireless medium (airtime shares), solved by
 //!   alternating per-agent bisection with a water-filling outer loop
-//!   plus admission control. Optionally queue-aware (the shared edge
-//!   queue's expected wait tightens each delay budget — mean-field
+//!   plus admission control — priced uniformly or by silicon capability
+//!   ([`fleet::AdmissionPricing`]). Optionally queue-aware (the shared
+//!   edge queue's expected wait tightens each delay budget — mean-field
 //!   probes, fixed-point scoring) and re-runnable online via
 //!   [`fleet::solve_proposed_warm`] when the population churns.
 

@@ -79,6 +79,22 @@ impl DeviceProfile {
         }
     }
 
+    /// Peak compute throughput f^max · κ [FLOP/s] — the tier's raw
+    /// capability axis (strictly ordered down the ladder).
+    pub fn peak_flops(&self) -> f64 {
+        self.spec.f_max * self.spec.flops_per_cycle
+    }
+
+    /// Capability relative to the Orin reference tier, clamped to (0, 1]:
+    /// 1.0 for Orin (and anything faster), 0.35 for Xavier, 0.125 for
+    /// phone-class. This is the factor tier-aware admission pricing
+    /// ([`crate::opt::fleet::AdmissionPricing::Tiered`]) scales the
+    /// rejection penalty by — turning a weak device away forfeits
+    /// proportionally less fleet capability than turning an Orin away.
+    pub fn capability(&self) -> f64 {
+        (self.peak_flops() / DeviceProfile::orin().peak_flops()).min(1.0)
+    }
+
     pub fn parse(s: &str) -> Option<DeviceProfile> {
         match s {
             "orin" => Some(DeviceProfile::orin()),
@@ -275,6 +291,21 @@ mod tests {
             assert!(a.link_gain > b.link_gain);
             assert!(b.link_gain > 0.0 && b.link_gain <= 1.0);
         }
+    }
+
+    #[test]
+    fn capability_is_orin_normalized_and_ladder_ordered() {
+        assert_eq!(DeviceProfile::orin().capability(), 1.0);
+        let x = DeviceProfile::xavier().capability();
+        let p = DeviceProfile::phone().capability();
+        assert!((x - 0.35).abs() < 1e-12, "{x}");
+        assert!((p - 0.125).abs() < 1e-12, "{p}");
+        assert!(p < x && x < 1.0);
+        // a hypothetical faster-than-orin tier clamps to 1 (the penalty
+        // scale never exceeds the uniform one)
+        let mut hot = DeviceProfile::orin();
+        hot.spec.f_max *= 4.0;
+        assert_eq!(hot.capability(), 1.0);
     }
 
     #[test]

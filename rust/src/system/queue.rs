@@ -217,6 +217,10 @@ impl QueueModel {
 #[derive(Debug, Clone, Copy)]
 pub struct QueuedJob {
     pub agent: usize,
+    /// caller-side request handle carried through dispatch untouched (the
+    /// event-level churn engine keys its per-request metadata on it;
+    /// plain [`EdgeQueue::push`] leaves it 0)
+    pub tag: u64,
     /// simulated time the job became ready for the server stage
     pub ready_s: f64,
     /// server-stage service time at the agent's planned frequency
@@ -247,8 +251,24 @@ impl EdgeQueue {
     }
 
     pub fn push(&mut self, agent: usize, ready_s: f64, service_s: f64, weight: f64) {
+        self.push_tagged(agent, 0, ready_s, service_s, weight);
+    }
+
+    /// [`Self::push`] with a caller-side request handle that rides along
+    /// to dispatch (see [`QueuedJob::tag`]). Validates the weight too —
+    /// a NaN priority key used to slip in here and only blow up later
+    /// inside `pop`'s comparator (regression-tested below).
+    pub fn push_tagged(
+        &mut self,
+        agent: usize,
+        tag: u64,
+        ready_s: f64,
+        service_s: f64,
+        weight: f64,
+    ) {
         assert!(ready_s.is_finite() && service_s.is_finite() && service_s >= 0.0);
-        self.waiting.push(QueuedJob { agent, ready_s, service_s, weight, seq: self.seq });
+        assert!(weight.is_finite(), "priority weight must be finite");
+        self.waiting.push(QueuedJob { agent, tag, ready_s, service_s, weight, seq: self.seq });
         self.seq += 1;
     }
 
@@ -270,6 +290,28 @@ impl EdgeQueue {
     /// idle), FIFO picks the earliest-ready and weighted priority the
     /// heaviest. Returns the job with its start and finish times.
     pub fn pop(&mut self) -> Option<(QueuedJob, f64, f64)> {
+        self.pop_due(f64::INFINITY)
+    }
+
+    /// [`Self::pop`] bounded by a slot boundary: dispatch the next job
+    /// only if its service would **start strictly before** `until`;
+    /// otherwise leave the queue untouched and return `None`.
+    ///
+    /// This is the fix for the slot-boundary clock drift the event-level
+    /// churn replay would otherwise suffer: an unbounded `pop` at a churn
+    /// event commits jobs that really start *after* the event at their
+    /// stale pre-event service times (and before jobs that only become
+    /// visible in the next slot). Gating on the start floor makes the
+    /// dispatch sequence invariant under slot refinement — inserting
+    /// no-op boundaries (ticks) anywhere cannot change any job's start or
+    /// finish time (property-tested in [`crate::fleet::events`]) — and
+    /// lets a re-allocation [`Self::reprice`] everything still waiting.
+    ///
+    /// The gate is exact, not conservative: `start_floor` is the earliest
+    /// instant *any* waiting job can start, and the selected job always
+    /// starts at it (selection only ever returns a job that is ready by
+    /// the floor), so `start_floor >= until` defers nothing dispatchable.
+    pub fn pop_due(&mut self, until: f64) -> Option<(QueuedJob, f64, f64)> {
         if self.waiting.is_empty() {
             return None;
         }
@@ -279,6 +321,9 @@ impl EdgeQueue {
             .map(|j| j.ready_s)
             .fold(f64::INFINITY, f64::min);
         let start_floor = self.free_at.max(earliest);
+        if start_floor >= until {
+            return None;
+        }
         let fifo_key = |j: &QueuedJob| (j.ready_s, j.seq);
         let mut best = 0;
         for k in 1..self.waiting.len() {
@@ -319,6 +364,40 @@ impl EdgeQueue {
         self.served += 1;
         self.busy_s += job.service_s;
         Some((job, start, finish))
+    }
+
+    /// Remove every **waiting** job of `agent` and hand them back — the
+    /// departure path of the event-level churn replay: when an agent
+    /// leaves mid-service, its in-flight job (already popped) drains on
+    /// the server, but its queued backlog must be explicitly dropped and
+    /// accounted, never silently stranded (conservation of requests).
+    pub fn drain_agent(&mut self, agent: usize) -> Vec<QueuedJob> {
+        let mut removed = Vec::new();
+        self.waiting.retain(|j| {
+            if j.agent == agent {
+                removed.push(*j);
+                false
+            } else {
+                true
+            }
+        });
+        removed
+    }
+
+    /// Re-price every waiting job (a fleet re-allocation swapped the
+    /// share vector without resetting the queue): `f` maps a job to its
+    /// new `(service_s, weight)`. Ready times are untouched — the agent
+    /// and uplink stages already ran at their old operating point; only
+    /// the not-yet-started server stage follows the new shares. Combined
+    /// with the slot-bounded [`Self::pop_due`], waiting jobs are always
+    /// dispatched at the prices in force when their service starts.
+    pub fn reprice(&mut self, mut f: impl FnMut(&QueuedJob) -> (f64, f64)) {
+        for job in &mut self.waiting {
+            let (service_s, weight) = f(job);
+            assert!(service_s.is_finite() && service_s >= 0.0 && weight.is_finite());
+            job.service_s = service_s;
+            job.weight = weight;
+        }
     }
 }
 
@@ -641,6 +720,115 @@ mod tests {
         let dropped = q.waits_given(&[1.0, f64::INFINITY, 1.0], &[1.0, 0.0, 1.0], |j| w[j]);
         assert!(dropped[0].is_finite() && dropped[2].is_finite());
         assert!(dropped[1].is_infinite());
+    }
+
+    #[test]
+    fn pop_due_defers_jobs_starting_at_or_after_the_boundary() {
+        // job ready at 5: a slot ending at 5 must NOT dispatch it (its
+        // start == the boundary, where a churn event may re-price it);
+        // any boundary beyond 5 dispatches it at exactly the same times
+        // the unbounded pop would
+        let mut q = EdgeQueue::new(QueueDiscipline::Fifo);
+        q.push(0, 5.0, 1.0, 1.0);
+        assert!(q.pop_due(4.0).is_none());
+        assert!(q.pop_due(5.0).is_none(), "start == boundary belongs to the next slot");
+        assert_eq!(q.len(), 1, "deferral must not consume the job");
+        let (_, start, finish) = q.pop_due(5.0 + 1e-9).unwrap();
+        assert_eq!((start, finish), (5.0, 6.0));
+        // busy server: the floor is free_at, not readiness
+        q.push(1, 0.0, 1.0, 1.0);
+        assert!(q.pop_due(6.0).is_none(), "server busy until 6");
+        let (job, start, _) = q.pop_due(7.0).unwrap();
+        assert_eq!((job.agent, start), (1, 6.0));
+    }
+
+    #[test]
+    fn pop_due_is_invariant_under_slot_refinement() {
+        // dispatching through arbitrary slot boundaries yields exactly
+        // the unbounded dispatch sequence — the slot-boundary clock-drift
+        // regression, at queue level
+        let jobs: [(usize, f64, f64, f64); 6] = [
+            (0, 0.3, 1.0, 1.0),
+            (1, 0.1, 0.7, 5.0),
+            (2, 0.2, 1.3, 9.0),
+            (0, 2.0, 0.5, 1.0),
+            (1, 2.1, 0.4, 5.0),
+            (2, 6.5, 1.0, 9.0),
+        ];
+        for d in [QueueDiscipline::Fifo, QueueDiscipline::WeightedPriority] {
+            let filled = || {
+                let mut q = EdgeQueue::new(d);
+                for &(a, r, s, w) in &jobs {
+                    q.push(a, r, s, w);
+                }
+                q
+            };
+            let mut plain = filled();
+            let mut reference = Vec::new();
+            while let Some((job, start, finish)) = plain.pop() {
+                reference.push((job.agent, job.seq, start, finish));
+            }
+            let mut sliced = filled();
+            let mut got = Vec::new();
+            for boundary in [0.5, 1.0, 2.05, 3.0, 6.0, 7.0, f64::INFINITY] {
+                while let Some((job, start, finish)) = sliced.pop_due(boundary) {
+                    got.push((job.agent, job.seq, start, finish));
+                }
+            }
+            assert_eq!(got, reference, "{d:?}: slot boundaries changed the dispatch");
+        }
+    }
+
+    #[test]
+    fn drain_agent_conserves_requests() {
+        // conservation regression: every pushed job is either dispatched
+        // or handed back by drain_agent — nothing stranded, nothing
+        // duplicated
+        let mut q = EdgeQueue::new(QueueDiscipline::Fifo);
+        for k in 0..9usize {
+            q.push(k % 3, 0.2 * k as f64, 1.0, 1.0);
+        }
+        let mut dispatched = 0;
+        while q.pop_due(1.5).is_some() {
+            dispatched += 1;
+        }
+        let dropped = q.drain_agent(1);
+        assert!(dropped.iter().all(|j| j.agent == 1));
+        let mut rest = 0;
+        while q.pop().is_some() {
+            rest += 1;
+        }
+        assert_eq!(dispatched + dropped.len() + rest, 9, "requests not conserved");
+        assert!(!dropped.is_empty(), "agent 1 should have had queued backlog");
+        assert!(q.is_empty());
+        // draining an absent agent is a no-op
+        assert!(q.drain_agent(7).is_empty());
+    }
+
+    #[test]
+    fn reprice_rewrites_waiting_jobs_only() {
+        let mut q = EdgeQueue::new(QueueDiscipline::WeightedPriority);
+        q.push_tagged(0, 11, 0.0, 2.0, 1.0);
+        q.push_tagged(1, 22, 0.0, 2.0, 5.0);
+        // first job enters service at its old price
+        let (job, _, finish) = q.pop().unwrap();
+        assert_eq!((job.agent, job.tag, finish), (1, 22, 2.0));
+        // the waiting job is re-priced: shorter service, heavier weight
+        q.reprice(|j| {
+            assert_eq!((j.agent, j.tag), (0, 11));
+            (0.5, 3.0)
+        });
+        let (job, start, finish) = q.pop().unwrap();
+        assert_eq!((job.agent, job.tag), (0, 11));
+        assert_eq!((start, finish), (2.0, 2.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "priority weight must be finite")]
+    fn nan_weight_rejected_at_push() {
+        // regression: a NaN priority key used to be accepted here and
+        // only panic later inside pop's comparator
+        EdgeQueue::new(QueueDiscipline::WeightedPriority).push(0, 0.0, 1.0, f64::NAN);
     }
 
     #[test]

@@ -4,9 +4,9 @@
 //! * [`ThreadPool`] — fixed worker pool executing boxed jobs; `scope`-free,
 //!   jobs must be `'static`. Used for batch fan-out in benches and the PPO
 //!   rollout workers.
-//! * [`Pipeline`] stages connected by bounded channels with backpressure —
-//!   the coordinator's request path (router → batcher → agent → link →
-//!   edge) runs on this.
+//! * pipeline stages connected by bounded [`Sender`]/[`Receiver`]
+//!   channels with backpressure — the coordinator's request path
+//!   (router → batcher → agent → link → edge) runs on this.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

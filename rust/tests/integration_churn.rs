@@ -6,8 +6,8 @@
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
 use qaci::fleet::churn::{self, ChurnConfig, ChurnEvent, ChurnPolicy};
-use qaci::fleet::{sim, FleetSimConfig};
-use qaci::opt::fleet::{self, AgentSpec, FleetProblem, ProposedOptions};
+use qaci::fleet::{events, sim, FleetSimConfig};
+use qaci::opt::fleet::{self, AdmissionPricing, AgentSpec, FleetProblem, ProposedOptions};
 use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
 
@@ -162,6 +162,116 @@ fn shared_queue_serving_loop_end_to_end() {
     assert!(queued.e2e_s.max() >= plain.e2e_s.max());
     // compute-side QoS still holds: waits are e2e, not compute
     assert_eq!(queued.qos_violations, 0);
+}
+
+/// Acceptance (event level): on the designated burst-storm scenario the
+/// online policy beats the best static policy on p99 end-to-end delay by
+/// better than 2× (measured ~11×) — frozen shares let the shared queue
+/// diverge during bursts, online re-allocation keeps the tail bounded —
+/// and on deadline-violation rate, while the analytic cost ordering
+/// holds on the same timeline.
+#[test]
+fn event_level_burst_storm_online_wins_the_tail() {
+    let cfg = ChurnConfig {
+        initial_agents: 5,
+        join_rps: 0.0,
+        leave_rps_per_agent: 0.0,
+        burst_rps: 0.04,
+        burst_factor: 6.0,
+        burst_duration_s: 60.0,
+        arrival_rps: 0.04,
+        seed: 7,
+        ..ChurnConfig::default()
+    };
+    let tl = churn::timeline(&cfg);
+    assert!(tl.bursts > 0, "scenario must burst");
+    let base = Platform::fleet_edge();
+    let by_event = |p| events::run_events(base, &tl, p, &cfg);
+    let online = by_event(ChurnPolicy::Online);
+    let equal = by_event(ChurnPolicy::StaticEqual);
+    let statik = by_event(ChurnPolicy::StaticProposed);
+    // conservation everywhere
+    for r in [&online, &equal, &statik] {
+        assert_eq!(r.arrivals, r.completed + r.rejected + r.dropped_departure);
+        assert!(r.arrivals > 100, "storm must generate real traffic");
+    }
+    let best_static_p99 = equal.e2e_s.p99().min(statik.e2e_s.p99());
+    assert!(
+        online.e2e_s.p99() < best_static_p99 * 0.5,
+        "online p99 {} vs best static {best_static_p99}",
+        online.e2e_s.p99()
+    );
+    let best_static_viol = equal.violation_rate().min(statik.violation_rate());
+    assert!(online.violation_rate() < best_static_viol);
+    // the analytic replay orders the same way on this timeline
+    let cost = |p| churn::run_churn(base, &tl, p, &cfg).time_avg_cost;
+    let best_static_cost =
+        cost(ChurnPolicy::StaticEqual).min(cost(ChurnPolicy::StaticProposed));
+    assert!(cost(ChurnPolicy::Online) < best_static_cost);
+}
+
+/// The events-off analytic path is unaffected by the event-mode and
+/// pricing machinery: the default config carries uniform pricing, whose
+/// rejection penalty is exactly the pre-tier silicon-blind formula, and
+/// the analytic churn replay scores identically whether or not the event
+/// replay runs beside it.
+#[test]
+fn events_off_analytic_path_is_undisturbed() {
+    let cfg = ChurnConfig::default();
+    assert_eq!(cfg.pricing, AdmissionPricing::Uniform);
+    let tl = churn::timeline(&cfg);
+    let before = churn::run_churn(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+    // an event replay in between shares no state with the analytic one
+    let _ = events::run_events(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+    let after = churn::run_churn(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+    assert_eq!(before.time_avg_cost, after.time_avg_cost);
+    assert_eq!(before.cost_trace, after.cost_trace);
+    // and the two replays agree on the re-allocation schedule
+    let ev = events::run_events(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+    assert_eq!(ev.reallocations, before.reallocations);
+    assert_eq!(ev.realloc_skipped, before.realloc_skipped);
+}
+
+/// Tier-aware pricing rides the churn stack end to end: with a 3-tier
+/// ladder and tiered pricing the online policy still beats the best
+/// static policy on analytic cost, and the per-agent event telemetry
+/// shows phone-tier traffic being turned away (the operator trade) while
+/// orin-tier agents keep completing.
+#[test]
+fn tiered_pricing_churn_runs_end_to_end() {
+    let cfg = ChurnConfig {
+        tiers: AgentSpec::tier_mix(2),
+        pricing: AdmissionPricing::Tiered,
+        initial_agents: 9,
+        max_agents: 9,
+        seed: 3,
+        ..ChurnConfig::default()
+    };
+    let tl = churn::timeline(&cfg);
+    let base = Platform::fleet_edge();
+    let cost = |p| churn::run_churn(base, &tl, p, &cfg).time_avg_cost;
+    let online_cost = cost(ChurnPolicy::Online);
+    assert!(online_cost.is_finite());
+    assert!(
+        online_cost <= cost(ChurnPolicy::StaticEqual).min(cost(ChurnPolicy::StaticProposed)),
+        "tiered pricing must not break the online advantage"
+    );
+    let ev = events::run_events(base, &tl, ChurnPolicy::Online, &cfg);
+    assert_eq!(ev.arrivals, ev.completed + ev.rejected + ev.dropped_departure);
+    let phone_rejected: u64 = ev
+        .per_agent
+        .iter()
+        .filter(|a| a.tier == "phone")
+        .map(|a| a.rejected)
+        .sum();
+    let orin_completed: u64 = ev
+        .per_agent
+        .iter()
+        .filter(|a| a.tier == "orin")
+        .map(|a| a.completed)
+        .sum();
+    assert!(phone_rejected > 0, "tiered pricing should turn phone traffic away");
+    assert!(orin_completed > 0, "orin agents must keep completing");
 }
 
 /// Churn + queue discipline interact sanely: a priority queue can only

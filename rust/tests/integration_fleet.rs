@@ -279,6 +279,60 @@ fn cli_fleet_churn_queue_tiers_smoke() {
     assert!(!ok, "unknown tier must fail");
 }
 
+/// `qaci fleet --churn --events` acceptance: the CLI prints per-policy
+/// p50/p95/p99 end-to-end delay and the deadline-violation rate from the
+/// event-level replay, on top of the analytic comparison.
+#[test]
+fn cli_fleet_churn_events_prints_tail_telemetry() {
+    let (stdout, ok) = qaci(&[
+        "fleet", "--churn", "--events", "--horizon", "240", "--seed", "0",
+    ]);
+    assert!(ok, "churn --events CLI exited nonzero:\n{stdout}");
+    assert!(stdout.contains("event-level telemetry"), "event table missing:\n{stdout}");
+    for col in ["e2e p50", "e2e p95", "e2e p99", "wait p99", "deadline viol"] {
+        assert!(stdout.contains(col), "column {col} missing:\n{stdout}");
+    }
+    // one event row per policy, and the violation column parses as a
+    // percentage for each
+    let table = stdout.split("event-level telemetry").nth(1).unwrap();
+    let comparison = table.split("policy comparison").next().unwrap();
+    for policy in ["static-equal", "static-proposed", "online-proposed"] {
+        let row = comparison
+            .lines()
+            .find(|l| l.trim_start().starts_with(policy))
+            .unwrap_or_else(|| panic!("no event row for {policy}:\n{stdout}"));
+        let pct = row
+            .split_whitespace()
+            .last()
+            .unwrap()
+            .trim_end_matches('%')
+            .parse::<f64>()
+            .unwrap_or_else(|e| panic!("bad violation cell in {row:?}: {e}"));
+        assert!((0.0..=100.0).contains(&pct), "{policy}: violation {pct}%");
+    }
+    // without --events the table is absent (analytic fast path only)
+    let (stdout, ok) = qaci(&["fleet", "--churn", "--horizon", "240", "--seed", "0"]);
+    assert!(ok);
+    assert!(!stdout.contains("event-level telemetry"));
+}
+
+/// `--admission-pricing` is surfaced and validated on both fleet paths.
+#[test]
+fn cli_admission_pricing_flag() {
+    let (stdout, ok) = qaci(&[
+        "fleet", "--agents", "9", "--tiers", "orin,xavier,phone",
+        "--admission-pricing", "tiered", "--requests", "4",
+    ]);
+    assert!(ok, "tiered pricing run failed:\n{stdout}");
+    assert!(stdout.contains("pricing=tiered"), "{stdout}");
+    assert!(
+        stdout.contains("REJ"),
+        "tiered pricing at N=9 should reject the phone block:\n{stdout}"
+    );
+    let (_, ok) = qaci(&["fleet", "--admission-pricing", "free"]);
+    assert!(!ok, "unknown pricing must be rejected");
+}
+
 /// The three named algorithms all produce valid allocations via the
 /// dispatch entry point.
 #[test]
