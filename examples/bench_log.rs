@@ -1,0 +1,114 @@
+//! Bench-trajectory store walkthrough: capture a fleet run's metrics
+//! with a scoped registry, shape its headline numbers like a
+//! `BENCH_*.json` artifact, ingest three successive "nightly runs" into
+//! a content-hashed index, query the p99 trajectory back out, and watch
+//! the diff gate stay clean across a healthy re-run, then catch an
+//! injected tail regression (no model execution, no artifacts, fast).
+//!
+//!   cargo run --release --example bench_log
+
+use qaci::bench_harness::Table;
+use qaci::fleet::churn::{self, ChurnConfig, ChurnPolicy};
+use qaci::fleet::events;
+use qaci::obs::benchlog::{self, BenchLog, DiffOptions, Query};
+use qaci::obs::metrics;
+use qaci::system::Platform;
+use qaci::util::json::Json;
+
+fn main() {
+    // one real (short) churn run, with the ambient metrics captured —
+    // the same numbers `qaci fleet --churn --metrics-out` would export
+    let cfg = ChurnConfig { horizon_s: 240.0, seed: 1, ..ChurnConfig::default() };
+    let tl = churn::timeline(&cfg);
+    let ((an, ev), captured) = metrics::scoped(|| {
+        let an = churn::run_churn(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+        let ev = events::run_events(Platform::fleet_edge(), &tl, ChurnPolicy::Online, &cfg);
+        (an, ev)
+    });
+    println!(
+        "fleet run: cost {:.4e}, {} re-solves ({} skipped via warm-start fingerprint), \
+         {} arrivals, e2e p99 {:.3}s",
+        an.time_avg_cost,
+        an.reallocations,
+        an.realloc_skipped,
+        ev.arrivals,
+        ev.e2e_s.p99()
+    );
+    println!(
+        "captured metrics: bisection.calls={}, warm_start hit/miss {}/{}, queue.wait_s n={}",
+        captured.counter("solver.bisection.calls"),
+        captured.counter("solver.warm_start.hit"),
+        captured.counter("solver.warm_start.miss"),
+        captured.histogram("queue.wait_s").map_or(0, |h| h.len())
+    );
+
+    // shape the headline numbers into a bench-artifact payload and
+    // ingest three "nightly runs" into a fresh index: two healthy (the
+    // second marginally faster), one with a synthetic 10x tail blowup
+    let dir = std::env::temp_dir().join(format!("qaci-benchlog-example-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let index = BenchLog::open(dir.join("index.jsonl"));
+    let _ = std::fs::remove_file(index.path());
+    let p99 = ev.e2e_s.p99();
+    for (night, tail) in [("night-1", p99), ("night-2", p99 * 0.97), ("night-3", p99 * 10.0)] {
+        let payload = artifact(an.time_avg_cost, tail);
+        let entry = index.ingest("fleet_churn", "bench", &payload).unwrap();
+        println!("{night}: ingested as seq {} ({})", entry.seq, entry.digest);
+    }
+    // the metrics snapshot rides in the same index under its own kind
+    let snap = index.ingest("fleet_churn_metrics", "metrics", &captured.to_json()).unwrap();
+    println!("metrics snapshot: seq {} kind {}", snap.seq, snap.kind);
+
+    // query the trajectory back out
+    let q = Query {
+        scenario: Some("storm".into()),
+        policy: Some("online-proposed".into()),
+        field: "p99_s".into(),
+        ..Query::default()
+    };
+    let mut t = Table::new("p99_s trajectory (one row per ingested run)", &["seq", "p99_s"]);
+    for row in index.query(&q).unwrap() {
+        t.row(&[format!("{}", row.seq), format!("{:.3}", row.value.unwrap_or(f64::NAN))]);
+    }
+    t.print();
+
+    // night-1 -> night-2 was healthy; night-2 -> night-3 blew the tail
+    // past the value-regression headroom
+    let healthy = BenchLog::open(dir.join("healthy.jsonl"));
+    let _ = std::fs::remove_file(healthy.path());
+    healthy.ingest("fleet_churn", "bench", &artifact(an.time_avg_cost, p99)).unwrap();
+    healthy.ingest("fleet_churn", "bench", &artifact(an.time_avg_cost, p99 * 0.97)).unwrap();
+    let opts = DiffOptions::default();
+    let clean = benchlog::diff_latest_pair(&healthy, &opts).unwrap();
+    println!("\nhealthy night-over-night diff: {} finding(s)", clean.len());
+    assert!(clean.is_empty());
+    let findings = benchlog::diff_latest_pair(&index, &opts).unwrap();
+    println!("regressed night-over-night diff:");
+    for f in &findings {
+        println!("  {f}");
+    }
+    assert!(findings.iter().any(|f| f.kind == "regression"));
+    println!(
+        "\nOK: identical/improved runs gate clean, the injected tail blowup is caught \
+         (CI runs the same gate via `qaci bench-log diff --fail-on-regression`)"
+    );
+}
+
+/// A two-row artifact payload in the `BENCH_fleet_churn.json` shape: the
+/// online policy against a frozen static whose tail does not move.
+fn artifact(cost: f64, online_p99: f64) -> Json {
+    let row = |policy: &str, cost: f64, p99: f64| {
+        Json::obj()
+            .set("scenario", "storm")
+            .set("policy", policy)
+            .set("cost", cost)
+            .set("p99_s", p99)
+    };
+    Json::obj().set("bench", "fleet_churn").set("version", 1.0).set(
+        "results",
+        Json::Arr(vec![
+            row("online-proposed", cost, online_p99),
+            row("static-proposed", cost * 4.0, 600.0),
+        ]),
+    )
+}

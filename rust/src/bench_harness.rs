@@ -65,20 +65,29 @@ pub fn artifact_dir() -> PathBuf {
 /// in the parsed tree is additionally asserted finite. Benches then
 /// re-check their ordering invariants *against the parsed document*, so
 /// the artifact CI uploads is exactly what was verified.
+///
+/// Publication is **atomic**: the bytes are written and validated at a
+/// `.json.tmp` sibling and only renamed into place once the gate
+/// passes. A crash mid-write or a failed validation therefore never
+/// leaves a truncated `BENCH_*.json` behind — the previously published
+/// artifact, if any, survives byte-identical (regression-tested below).
 pub fn emit_bench_artifact(bench: &str, results: Vec<Json>) -> (PathBuf, Json) {
     let doc = Json::obj()
         .set("bench", bench)
         .set("version", 1usize)
         .set("results", Json::Arr(results));
     let path = artifact_dir().join(format!("BENCH_{bench}.json"));
-    std::fs::write(&path, doc.to_string_pretty())
-        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
-    let text = std::fs::read_to_string(&path)
-        .unwrap_or_else(|e| panic!("re-reading {}: {e}", path.display()));
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, doc.to_string_pretty())
+        .unwrap_or_else(|e| panic!("writing {}: {e}", tmp.display()));
+    let text = std::fs::read_to_string(&tmp)
+        .unwrap_or_else(|e| panic!("re-reading {}: {e}", tmp.display()));
     let back = json::parse(&text)
-        .unwrap_or_else(|e| panic!("{} is not valid JSON: {e}", path.display()));
+        .unwrap_or_else(|e| panic!("{} is not valid JSON: {e}", tmp.display()));
     assert_all_finite(&back, bench);
     assert_eq!(back, doc, "artifact round-trip must be lossless");
+    std::fs::rename(&tmp, &path)
+        .unwrap_or_else(|e| panic!("publishing {}: {e}", path.display()));
     println!("\nwrote {}", path.display());
     (path, back)
 }
@@ -211,7 +220,6 @@ mod tests {
             .set("cost", 0.25)
             .set("p99", num_or_null(f64::NAN));
         let (path, back) = emit_bench_artifact("selftest", vec![rec]);
-        std::env::remove_var("QACI_BENCH_DIR");
         assert!(path.ends_with("BENCH_selftest.json"));
         assert_eq!(back.get("bench").and_then(Json::as_str), Some("selftest"));
         let results = back.get("results").and_then(Json::as_arr).unwrap();
@@ -222,6 +230,21 @@ mod tests {
         let bad = Json::obj().set("x", f64::INFINITY);
         let res = std::panic::catch_unwind(|| assert_all_finite(&bad, "bad"));
         assert!(res.is_err());
+        // atomic publication regression: an emit that fails its validity
+        // gate panics before the rename, so the previously published
+        // artifact stays byte-identical — never truncated or clobbered
+        let before = std::fs::read_to_string(&path).unwrap();
+        let failed = std::panic::catch_unwind(|| {
+            emit_bench_artifact("selftest", vec![Json::obj().set("cost", f64::INFINITY)])
+        });
+        std::env::remove_var("QACI_BENCH_DIR");
+        assert!(failed.is_err(), "non-finite artifact must fail to emit");
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            before,
+            "failed emit must leave the published artifact untouched"
+        );
         std::fs::remove_file(path).ok();
+        std::fs::remove_file(dir.join("BENCH_selftest.json.tmp")).ok();
     }
 }

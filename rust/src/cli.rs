@@ -11,6 +11,7 @@ use qaci::data::vocab::Vocab;
 use qaci::data::workload::{generate, Arrival};
 use qaci::fleet::churn::{self, ChurnConfig};
 use qaci::fleet::{events, sim as fleet_sim, FleetSimConfig};
+use qaci::obs::benchlog::{self, BenchLog, DiffOptions, Query};
 use qaci::opt::fleet::{
     self as fleet_opt, AdmissionPricing, AgentSpec, FleetAlgorithm, FleetProblem,
 };
@@ -74,7 +75,30 @@ pub fn main() {
         .describe("burst-dur", "churn: burst duration [s]", Some("40"))
         .describe("tick", "churn: fingerprint re-check period [s]", Some("20"))
         .describe("max-agents", "churn: population cap", Some("16"))
-        .describe("arrival-rps", "churn: steady per-agent request rate [1/s]", Some("0.02"));
+        .describe("arrival-rps", "churn: steady per-agent request rate [1/s]", Some("0.02"))
+        .describe(
+            "metrics-out",
+            "fleet: write the run's qaci.metrics snapshot to this path",
+            None,
+        )
+        .describe("index", "bench-log: index file", Some("benchlog.jsonl"))
+        .describe(
+            "baseline",
+            "bench-log diff: baseline index (omitted: previous vs latest run)",
+            None,
+        )
+        .describe("bench", "bench-log query: restrict to one bench name", None)
+        .describe("scenario", "bench-log query: restrict to one scenario", None)
+        .describe("policy", "bench-log query: restrict to one policy", None)
+        .describe("field", "bench-log query: result field to extract", Some("p99_s"))
+        .describe("last", "bench-log query: only the last K runs (0 = all)", Some("0"))
+        .describe("tolerance", "bench-log diff: relative value-regression headroom", Some("0.05"))
+        .describe(
+            "orderings-only",
+            "bench-log diff: machine-invariant ordering checks only (CI mode)",
+            None,
+        )
+        .describe("fail-on-regression", "bench-log diff: exit nonzero on any finding", None);
     let unknown = args.unknown_keys();
     if !unknown.is_empty() {
         eprintln!("unknown flags: {unknown:?}");
@@ -87,13 +111,14 @@ pub fn main() {
         Some("serve") => cmd_serve(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("fit") => cmd_fit(&args),
+        Some("bench-log") => cmd_bench_log(&args),
         _ => {
             print!(
                 "{}",
                 args.usage(
                     "qaci",
                     "quantization-aware collaborative inference \
-                     (subcommands: info, plan, eval, serve, fleet, fit)"
+                     (subcommands: info, plan, eval, serve, fleet, fit, bench-log)"
                 )
             );
             0
@@ -331,11 +356,25 @@ fn cmd_serve(args: &Args) -> i32 {
 
 /// Fleet-scale co-inference: joint multi-agent allocation + serving-loop
 /// simulation. Artifact-free (analytic models only), so it runs anywhere.
-/// `--churn` switches to the online-re-allocation comparison.
+/// `--churn` switches to the online-re-allocation comparison. With
+/// `--metrics-out <path>` the run's ambient metrics (solver counters,
+/// queue histograms, spans) are written as a schema-versioned
+/// `qaci.metrics` snapshot after the command finishes.
 fn cmd_fleet(args: &Args) -> i32 {
-    if args.has("churn") {
-        return cmd_fleet_churn(args);
+    qaci::obs::metrics::reset(); // snapshot covers this run only
+    let code = if args.has("churn") { cmd_fleet_churn(args) } else { cmd_fleet_alloc(args) };
+    if let Some(path) = args.opt_str("metrics-out") {
+        let body = qaci::obs::metrics::snapshot().to_json().to_string_pretty();
+        if let Err(e) = std::fs::write(&path, body + "\n") {
+            eprintln!("error writing metrics snapshot {path}: {e}");
+            return 1;
+        }
+        println!("wrote metrics snapshot {path}");
     }
+    code
+}
+
+fn cmd_fleet_alloc(args: &Args) -> i32 {
     let n = args.usize("agents", 8).max(1);
     let algorithm = FleetAlgorithm::parse(&args.str("algorithm", "proposed"))
         .unwrap_or(FleetAlgorithm::Proposed);
@@ -603,6 +642,104 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
     } else {
         println!("\nWARNING: online did not beat the best static policy");
         1
+    }
+}
+
+/// `qaci bench-log <ingest|query|diff>`: the persistent, content-hashed
+/// bench-trajectory store (see `obs::benchlog`). `ingest` appends
+/// `BENCH_*.json` artifacts or `qaci.metrics` snapshots to the index;
+/// `query` answers "field F on scenario S over the last K runs"; `diff`
+/// gates the newest run against `--baseline` (or the previous run in
+/// the same index), exiting nonzero with `--fail-on-regression`.
+fn cmd_bench_log(args: &Args) -> i32 {
+    let index = BenchLog::open(args.str("index", "benchlog.jsonl"));
+    match args.positional.first().map(String::as_str) {
+        Some("ingest") => {
+            if args.positional.len() < 2 {
+                eprintln!("bench-log ingest: no files given");
+                return 2;
+            }
+            for file in &args.positional[1..] {
+                match index.ingest_file(std::path::Path::new(file)) {
+                    Ok(e) => println!(
+                        "ingested {file} -> seq {} (bench {}, kind {}, {})",
+                        e.seq, e.bench, e.kind, e.digest
+                    ),
+                    Err(e) => {
+                        eprintln!("error: {e:#}");
+                        return 1;
+                    }
+                }
+            }
+            0
+        }
+        Some("query") => {
+            let q = Query {
+                bench: args.opt_str("bench"),
+                scenario: args.opt_str("scenario"),
+                policy: args.opt_str("policy"),
+                field: args.str("field", "p99_s"),
+                last: args.usize("last", 0),
+            };
+            let rows = match index.query(&q) {
+                Ok(rows) => rows,
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    return 1;
+                }
+            };
+            let mut t = Table::new(
+                &format!("bench-log: {} ({})", q.field, index.path().display()),
+                &["seq", "bench", "scenario", "policy", "value"],
+            );
+            for r in &rows {
+                t.row(&[
+                    format!("{}", r.seq),
+                    r.bench.clone(),
+                    r.scenario.clone(),
+                    r.policy.clone(),
+                    r.value.map_or_else(|| "null".into(), |v| format!("{v}")),
+                ]);
+            }
+            t.print();
+            println!("{} row(s)", rows.len());
+            0
+        }
+        Some("diff") => {
+            let opts = DiffOptions {
+                orderings_only: args.has("orderings-only"),
+                tolerance: args.f64("tolerance", 0.05),
+            };
+            let findings = match args.opt_str("baseline") {
+                Some(b) => benchlog::diff(&index, &BenchLog::open(b), &opts),
+                None => benchlog::diff_latest_pair(&index, &opts),
+            };
+            match findings {
+                Ok(findings) if findings.is_empty() => {
+                    println!("bench-log diff: clean");
+                    0
+                }
+                Ok(findings) => {
+                    for f in &findings {
+                        println!("{f}");
+                    }
+                    println!("bench-log diff: {} finding(s)", findings.len());
+                    if args.has("fail-on-regression") {
+                        1
+                    } else {
+                        0
+                    }
+                }
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    1
+                }
+            }
+        }
+        _ => {
+            eprintln!("bench-log: expected a subcommand — ingest <files...> | query | diff");
+            2
+        }
     }
 }
 

@@ -32,6 +32,7 @@
 //! [`super::events`], which measures the tails (p50/p95/p99 wait and
 //! e2e, deadline-violation rate) the integration cannot see.
 
+use crate::obs::metrics as obs_metrics;
 use crate::opt::fleet::{
     self, AdmissionPricing, AgentAllocation, AgentSpec, FleetAllocation, FleetProblem,
     ProposedOptions,
@@ -475,8 +476,10 @@ pub fn run_churn(
             let new_stamp = fingerprint(&fp);
             if new_stamp == stamp {
                 realloc_skipped += 1;
+                obs_metrics::counter_add("solver.warm_start.hit", 1);
             } else {
                 stamp = new_stamp;
+                obs_metrics::counter_add("solver.warm_start.miss", 1);
                 let prev_by_key: HashMap<u64, (f64, f64)> = assoc
                     .iter()
                     .zip(&alloc.agents)
@@ -727,6 +730,28 @@ mod tests {
         let (_, again) = compare(base(), &cfg);
         let online_again = again.iter().find(|r| r.policy == ChurnPolicy::Online).unwrap();
         assert_eq!(online_again.time_avg_cost, online);
+    }
+
+    #[test]
+    fn warm_start_counters_mirror_fingerprint_gating() {
+        // observability acceptance: the solver.warm_start.hit/miss
+        // counters must equal the report's realloc_skipped/reallocations
+        // — the metrics are the fingerprint gate, not a parallel estimate
+        let cfg = ChurnConfig::default();
+        let tl = timeline(&cfg);
+        let (r, m) =
+            crate::obs::metrics::scoped(|| run_churn(base(), &tl, ChurnPolicy::Online, &cfg));
+        assert_eq!(m.counter("solver.warm_start.hit"), r.realloc_skipped as u64);
+        assert_eq!(m.counter("solver.warm_start.miss"), r.reallocations as u64);
+        assert!(r.reallocations > 0, "default config must churn");
+        // the re-solves themselves show up as solver activity
+        assert!(m.counter("solver.bisection.calls") > 0);
+        assert!(m.histogram("span.solver.warm.s").is_some());
+        // static policies never touch the warm-start gate
+        let (s, ms) =
+            crate::obs::metrics::scoped(|| run_churn(base(), &tl, ChurnPolicy::StaticEqual, &cfg));
+        assert_eq!(s.reallocations, 0);
+        assert_eq!(ms.counter("solver.warm_start.hit") + ms.counter("solver.warm_start.miss"), 0);
     }
 
     #[test]

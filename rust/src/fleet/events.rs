@@ -47,6 +47,8 @@
 //! the designated `burst-storm` bench scenario pins that ordering.
 
 use super::churn::{fingerprint, ChurnConfig, ChurnEvent, ChurnPolicy, Timeline};
+use crate::obs::metrics as obs_metrics;
+use crate::obs::Metrics;
 use crate::opt::fleet::{self, AgentAllocation, AgentSpec, ProposedOptions};
 use crate::opt::Design;
 use crate::system::queue::EdgeQueue;
@@ -126,6 +128,11 @@ pub struct EventReport {
     pub realloc_skipped: usize,
     /// per-agent rollups, ascending by key (departed agents included)
     pub per_agent: Vec<EventAgentReport>,
+    /// everything the run recorded into the ambient metrics registry
+    /// (`events.*` replay counters, the per-slot `events.queue_depth`
+    /// timeline, `queue.*` edge-queue activity, `solver.*` re-solve
+    /// counters, spans), captured via [`crate::obs::metrics::scoped`]
+    pub metrics: Metrics,
 }
 
 impl EventReport {
@@ -351,13 +358,30 @@ fn drop_backlog(
     }
 }
 
-/// Replay `timeline` under `policy` at the request level.
+/// Replay `timeline` under `policy` at the request level. The run's
+/// metrics capture (replay counters, queue activity, solver counters,
+/// spans) rides along in [`EventReport::metrics`]; it is also folded
+/// into the surrounding ambient registry, so an outer `--metrics-out`
+/// snapshot still sees the full run.
 pub fn run_events(
     base: Platform,
     timeline: &Timeline,
     policy: ChurnPolicy,
     cfg: &ChurnConfig,
 ) -> EventReport {
+    let (mut report, metrics) =
+        obs_metrics::scoped(|| run_events_inner(base, timeline, policy, cfg));
+    report.metrics = metrics;
+    report
+}
+
+fn run_events_inner(
+    base: Platform,
+    timeline: &Timeline,
+    policy: ChurnPolicy,
+    cfg: &ChurnConfig,
+) -> EventReport {
+    let _span = obs_metrics::span("events.run");
     let opts = ProposedOptions::default();
     let mut pop = super::churn::Population {
         live: timeline.initial.clone(),
@@ -390,6 +414,11 @@ pub fn run_events(
     for &(t, event) in &timeline.events {
         generate(base, cfg, &pop, &mut lanes, &mut stats, &mut meta, &mut queue, t);
         dispatch_until(base, cfg, &pop, &mut lanes, &mut stats, &meta, &mut queue, t);
+        // per-slot queue-depth timeline: the backlog left at each event
+        // boundary after everything dispatchable before it has started
+        if let Some(q) = &queue {
+            obs_metrics::observe("events.queue_depth", q.len() as f64);
+        }
         pop.apply(event);
         match event {
             ChurnEvent::Join(k) => {
@@ -420,8 +449,10 @@ pub fn run_events(
             let new_stamp = fingerprint(&fp);
             if new_stamp == stamp {
                 realloc_skipped += 1;
+                obs_metrics::counter_add("solver.warm_start.hit", 1);
             } else {
                 stamp = new_stamp;
+                obs_metrics::counter_add("solver.warm_start.miss", 1);
                 let prev_by_key: HashMap<u64, (f64, f64)> = assoc
                     .iter()
                     .zip(&alloc.agents)
@@ -479,20 +510,24 @@ pub fn run_events(
         reallocations,
         realloc_skipped,
         per_agent,
+        metrics: Metrics::new(),
     };
     for a in &report.per_agent {
-        for &v in a.e2e_s.values() {
-            report.e2e_s.push(v);
-        }
-        for &v in a.queue_wait_s.values() {
-            report.queue_wait_s.push(v);
-        }
+        report.e2e_s.merge(&a.e2e_s);
+        report.queue_wait_s.merge(&a.queue_wait_s);
     }
     assert_eq!(
         report.arrivals,
         report.completed + report.rejected + report.dropped_departure,
         "request conservation violated"
     );
+    obs_metrics::counter_add("events.arrivals", report.arrivals);
+    obs_metrics::counter_add("events.completed", report.completed);
+    obs_metrics::counter_add("events.rejected", report.rejected);
+    obs_metrics::counter_add("events.dropped", report.dropped_departure);
+    obs_metrics::counter_add("events.deadline_misses", report.deadline_misses);
+    obs_metrics::counter_add("events.reallocations", report.reallocations as u64);
+    obs_metrics::counter_add("events.realloc_skipped", report.realloc_skipped as u64);
     report
 }
 
@@ -750,6 +785,40 @@ mod tests {
             online.violation_rate(),
             best_static_viol
         );
+    }
+
+    #[test]
+    fn event_report_embeds_its_metrics_capture() {
+        // the report's metrics are the run's own scoped capture: replay
+        // counters mirror the report fields exactly, the warm-start gate
+        // counters mirror the re-allocation schedule, and the queue's
+        // activity (pushes, waits, per-slot depth) is present
+        let cfg = ChurnConfig::default();
+        let tl = timeline(&cfg);
+        let r = run_events(base(), &tl, ChurnPolicy::Online, &cfg);
+        let m = &r.metrics;
+        assert_eq!(m.counter("events.arrivals"), r.arrivals);
+        assert_eq!(m.counter("events.completed"), r.completed);
+        assert_eq!(m.counter("events.rejected"), r.rejected);
+        assert_eq!(m.counter("events.dropped"), r.dropped_departure);
+        assert_eq!(m.counter("events.deadline_misses"), r.deadline_misses);
+        assert_eq!(m.counter("events.reallocations"), r.reallocations as u64);
+        assert_eq!(m.counter("events.realloc_skipped"), r.realloc_skipped as u64);
+        assert_eq!(m.counter("solver.warm_start.miss"), r.reallocations as u64);
+        assert_eq!(m.counter("solver.warm_start.hit"), r.realloc_skipped as u64);
+        // every completed or departure-dropped request was pushed (and a
+        // revocation-rejected one too); arrival-time rejections never are
+        assert!(m.counter("queue.push") >= r.completed + r.dropped_departure);
+        assert!(m.counter("queue.push") <= r.arrivals);
+        assert_eq!(m.counter("queue.pop"), r.completed);
+        assert!(m.histogram("events.queue_depth").is_some(), "per-slot depth timeline");
+        assert!(m.histogram("queue.wait_s").is_some());
+        assert!(m.histogram("span.events.run.s").is_some());
+        // a static policy's capture carries no solver gate activity
+        let s = run_events(base(), &tl, ChurnPolicy::StaticEqual, &cfg);
+        let gate = s.metrics.counter("solver.warm_start.hit")
+            + s.metrics.counter("solver.warm_start.miss");
+        assert_eq!(gate, 0);
     }
 
     #[test]

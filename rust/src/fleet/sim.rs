@@ -369,12 +369,8 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
             energy_samples.push(r.energy_sim_j);
             total_energy += r.energy_sim_j;
         }
-        for &v in lane.e2e.values() {
-            fleet_e2e.push(v);
-        }
-        for &v in lane.waits.values() {
-            fleet_waits.push(v);
-        }
+        fleet_e2e.merge(&lane.e2e);
+        fleet_waits.merge(&lane.waits);
         let slot = &alloc.agents[lane.agent];
         per_agent.push(AgentReport {
             agent: lane.agent,
@@ -602,9 +598,7 @@ mod tests {
         let class_wait = |r: &FleetReport, class: &str| -> f64 {
             let mut s = Samples::new();
             for a in r.per_agent.iter().filter(|a| a.class == class && a.admitted) {
-                for &v in a.queue_wait_s.values() {
-                    s.push(v);
-                }
+                s.merge(&a.queue_wait_s);
             }
             s.mean()
         };

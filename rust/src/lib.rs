@@ -29,6 +29,7 @@
 //! | joint design (§V) | [`opt`] (incl. [`opt::fleet`]), [`rl`] |
 //! | serving | [`runtime`], [`coordinator`], [`fleet`] (incl. [`fleet::churn`] + [`fleet::events`]) |
 //! | evaluation | [`bench_harness`], `rust/benches/*` |
+//! | observability | [`obs`] (metrics/spans, shared percentiles, bench-log store) |
 //!
 //! The **fleet layer** generalizes the paper's single agent–server pair to
 //! N agents contending for one edge server and one wireless medium:
@@ -143,6 +144,53 @@
 //! under burst-storm, proposed ≤ equal at N ≥ 4) against the parsed
 //! document, and the CI job validates the files once more before
 //! uploading.
+//!
+//! ## Observability
+//!
+//! The [`obs`] layer makes the solver and the queue legible at runtime
+//! and across runs.
+//!
+//! **Metrics + spans** ([`obs::metrics`]): a thread-local registry of
+//! monotone counters, last-write gauges and f64 histograms (summarized
+//! with the same p50/p95/p99 convention as every fleet report — the one
+//! percentile implementation lives in [`obs::stats`] and
+//! [`util::timer::Samples`] delegates to it). The hot paths record
+//! under dotted names grouped by subsystem:
+//!
+//! * `solver.*` — `warm_start.hit`/`warm_start.miss` (fingerprint-gated
+//!   online re-solves), `fixed_point.converged`/`fixed_point.fallback`
+//!   (interference pass outcomes), `bisection.calls`/`bisection.iters`,
+//!   `exchange.rounds`/`exchange.moves`, `admission.rejected`;
+//! * `queue.*` — `push`/`pop`/`drain.calls`/`drain.jobs`/
+//!   `reprice.calls`/`reprice.jobs` counters plus `queue.depth` and
+//!   `queue.wait_s` histograms recorded by [`system::queue::EdgeQueue`];
+//! * `events.*` — replay counters (`arrivals`, `completed`, `dropped`,
+//!   `rejected`, `deadline_misses`, `reallocations`, `realloc_skipped`)
+//!   and the per-slot `events.queue_depth` timeline histogram;
+//! * `span.<name>.s` — wall-clock span histograms recorded when an
+//!   [`obs::metrics::Span`] guard drops (e.g. `span.solver.proposed.s`,
+//!   `span.events.run.s`).
+//!
+//! `qaci fleet ... --metrics-out <path>` writes the run's snapshot as
+//! schema-versioned JSON (`{"schema":"qaci.metrics","version":1,
+//! "counters":{...},"gauges":{...},"histograms":{name:{n,mean,min,max,
+//! p50,p95,p99}}}`), and every event replay embeds its own capture in
+//! [`fleet::EventReport::metrics`] via [`obs::metrics::scoped`].
+//!
+//! **Bench-log store** ([`obs::benchlog`]): `qaci bench-log
+//! ingest|query|diff` maintains an append-only JSON-lines index where
+//! each line wraps one ingested `BENCH_*.json` artifact or metrics
+//! snapshot as `{"schema":"qaci.benchlog","version":1,"seq":N,
+//! "bench":...,"kind":"bench"|"metrics","digest":"fnv1a:<16 hex>",
+//! "payload":{...}}`. The digest is 64-bit FNV-1a over the payload's
+//! compact canonical bytes, so corruption is caught on read and
+//! re-serialization is byte-stable; unknown schema names or versions are
+//! rejected cleanly. `query` answers trajectory questions ("p99 on
+//! burst-storm over the last K runs"); `diff` gates regressions against
+//! a stored baseline — ordering-invariant checks (machine-independent,
+//! what CI enforces against `rust/ci/benchlog-baseline.jsonl` with
+//! `--orderings-only --fail-on-regression`) plus tolerance-banded value
+//! checks on the tracked lower-is-better fields for same-machine runs.
 
 pub mod bench_harness;
 pub mod coordinator;
@@ -151,6 +199,7 @@ pub mod data;
 pub mod fleet;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod opt;
 pub mod quant;
 pub mod rl;

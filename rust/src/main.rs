@@ -15,8 +15,18 @@
 //!            re-allocation, `--churn --events` adds the request-level
 //!            replay (p50/p95/p99 wait + e2e, deadline-violation rate),
 //!            `--admission-pricing tiered` scales rejection penalties by
-//!            silicon capability (phone coverage vs orin throughput)
+//!            silicon capability (phone coverage vs orin throughput),
+//!            `--metrics-out m.json` writes the ambient solver/queue/replay
+//!            metrics snapshot (schema `qaci.metrics` v1, see `qaci::obs`)
 //!   fit      fit the exponential magnitude model to a weight blob
+//!   bench-log  persistent content-hashed bench-trajectory store
+//!            (`qaci::obs::benchlog`): `ingest <files...>` appends
+//!            `BENCH_*.json` artifacts / metrics snapshots to `--index`,
+//!            `query` reports `--field` per scenario/policy over `--last K`
+//!            runs, `diff` gates the newest run against `--baseline` (or
+//!            the previous run) — `--orderings-only` restricts to
+//!            machine-invariant policy orderings, `--fail-on-regression`
+//!            turns findings into a nonzero exit for CI
 //!
 //! Examples:
 //!   qaci plan --t0 3.5 --e0 2.0 --algorithm proposed
@@ -26,5 +36,10 @@
 //!   qaci fleet --agents 7 --tiers orin,xavier,phone
 //!   qaci fleet --churn --agents 4 --horizon 600 --queue fifo
 //!   qaci fleet --churn --events --admission-pricing tiered --tiers orin,xavier,phone
+//!   qaci fleet --churn --events --metrics-out metrics.json
+//!   qaci bench-log ingest BENCH_fleet_churn.json --index benchlog.jsonl
+//!   qaci bench-log query --index benchlog.jsonl --scenario burst-storm --field p99_s --last 5
+//!   qaci bench-log diff --index benchlog.jsonl --baseline rust/ci/benchlog-baseline.jsonl \
+//!       --orderings-only --fail-on-regression
 fn main() { cli::main() }
 mod cli;

@@ -1,0 +1,695 @@
+//! Append-only, content-hashed bench-trajectory store backing
+//! `qaci bench-log ingest|query|diff`.
+//!
+//! The index is a JSON-lines file: one compact object per line, each
+//! wrapping one ingested payload (a `BENCH_*.json` artifact or a
+//! `qaci.metrics` snapshot):
+//!
+//! ```text
+//! {"schema":"qaci.benchlog","version":1,"seq":0,"bench":"fleet_churn",
+//!  "kind":"bench","digest":"fnv1a:9c3e4f0a1b2c3d4e","payload":{...}}
+//! ```
+//!
+//! The digest is 64-bit FNV-1a over the payload's *canonical bytes* —
+//! its compact [`crate::util::json`] serialization — so byte-level
+//! corruption of any stored payload is caught on read, and a parsed
+//! entry re-serializes to exactly the bytes its digest covers. Entries
+//! with an unknown schema name or version are rejected cleanly rather
+//! than misread.
+//!
+//! [`diff`] compares the newest run of every bench against a stored
+//! baseline at two strictness levels: **ordering invariants** (strict
+//! per-scenario orderings between policies in the baseline — e.g.
+//! online-proposed cost below the statics — must not invert; these are
+//! machine-invariant, so CI gates on them) and **value regressions**
+//! (tracked lower-is-better fields must stay within a relative
+//! tolerance of the baseline; skipped with
+//! [`DiffOptions::orderings_only`] because absolute timings vary across
+//! machines). `wall_clock_s` is deliberately untracked.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Schema identifier stamped on every index entry.
+pub const BENCHLOG_SCHEMA: &str = "qaci.benchlog";
+/// Entry layout version this build reads and writes.
+pub const BENCHLOG_VERSION: u32 = 1;
+
+/// Numeric result fields [`diff`] tracks (all lower-is-better);
+/// `wall_clock_s` is deliberately absent — absolute machine timings are
+/// too noisy to gate on.
+pub const TRACKED_FIELDS: [&str; 5] =
+    ["cost", "d_upper", "p99_s", "queue_wait_p99_s", "deadline_violation_rate"];
+
+/// 64-bit FNV-1a over raw bytes (the same algorithm the property
+/// harness uses for its per-name seed streams).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Content digest of a payload: FNV-1a over its compact canonical
+/// bytes, rendered as `fnv1a:<16 lowercase hex digits>`.
+pub fn digest_of(payload: &Json) -> String {
+    format!("fnv1a:{:016x}", fnv1a64(payload.to_string_compact().as_bytes()))
+}
+
+/// One verified index entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// position in the index (0-based ingest order)
+    pub seq: u64,
+    /// bench name the payload belongs to (e.g. `fleet_churn`)
+    pub bench: String,
+    /// `"bench"` for bench artifacts, `"metrics"` for metrics snapshots
+    pub kind: String,
+    /// `fnv1a:<hex>` content digest of the canonical payload bytes
+    pub digest: String,
+    /// the stored document itself
+    pub payload: Json,
+}
+
+impl Entry {
+    /// Serialize to the canonical single-line index form.
+    pub fn to_line(&self) -> String {
+        Json::obj()
+            .set("schema", BENCHLOG_SCHEMA)
+            .set("version", BENCHLOG_VERSION as usize)
+            .set("seq", self.seq as usize)
+            .set("bench", self.bench.as_str())
+            .set("kind", self.kind.as_str())
+            .set("digest", self.digest.as_str())
+            .set("payload", self.payload.clone())
+            .to_string_compact()
+    }
+
+    /// Parse and verify one index line: the schema and version must be
+    /// the ones this build writes, and the recomputed payload digest
+    /// must match the stored one (a mismatch means the payload bytes
+    /// were altered after ingest).
+    pub fn from_line(line: &str) -> Result<Entry> {
+        let j = json::parse(line).map_err(|e| anyhow!("bench-log entry: {e}"))?;
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != BENCHLOG_SCHEMA {
+            bail!("bench-log entry: unknown schema {schema:?} (expected {BENCHLOG_SCHEMA:?})");
+        }
+        let version = j.get("version").and_then(Json::as_usize);
+        if version != Some(BENCHLOG_VERSION as usize) {
+            bail!(
+                "bench-log entry: unsupported schema version {version:?} \
+                 (this build reads version {BENCHLOG_VERSION})"
+            );
+        }
+        let field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("bench-log entry: missing field {k:?}"))
+        };
+        let seq = j
+            .get("seq")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("bench-log entry: missing field \"seq\""))?
+            as u64;
+        let bench = field("bench")?;
+        let kind = field("kind")?;
+        let digest = field("digest")?;
+        let payload = j
+            .get("payload")
+            .cloned()
+            .ok_or_else(|| anyhow!("bench-log entry: missing field \"payload\""))?;
+        let actual = digest_of(&payload);
+        if actual != digest {
+            bail!(
+                "bench-log entry seq {seq} ({bench}): digest mismatch — stored {digest}, \
+                 payload hashes to {actual} (corrupted index?)"
+            );
+        }
+        Ok(Entry { seq, bench, kind, digest, payload })
+    }
+}
+
+/// Handle on one append-only index file (which need not exist yet).
+#[derive(Debug, Clone)]
+pub struct BenchLog {
+    path: PathBuf,
+}
+
+impl BenchLog {
+    /// Open (lazily) the index at `path`.
+    pub fn open(path: impl Into<PathBuf>) -> BenchLog {
+        BenchLog { path: path.into() }
+    }
+
+    /// The index file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read and verify every entry; a missing file is an empty index,
+    /// but any malformed or digest-corrupted line fails the whole read
+    /// (an append-only log with a bad record cannot be trusted past it).
+    pub fn entries(&self) -> Result<Vec<Entry>> {
+        let text = match std::fs::read_to_string(&self.path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(anyhow!("reading {}: {e}", self.path.display())),
+        };
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let entry = Entry::from_line(line)
+                .map_err(|e| anyhow!("{} line {}: {e:#}", self.path.display(), i + 1))?;
+            out.push(entry);
+        }
+        Ok(out)
+    }
+
+    /// Append one payload under the given bench name and kind; returns
+    /// the stored entry.
+    pub fn ingest(&self, bench: &str, kind: &str, payload: &Json) -> Result<Entry> {
+        let seq = self.entries()?.len() as u64;
+        let entry = Entry {
+            seq,
+            bench: bench.to_string(),
+            kind: kind.to_string(),
+            digest: digest_of(payload),
+            payload: payload.clone(),
+        };
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+        writeln!(f, "{}", entry.to_line())?;
+        Ok(entry)
+    }
+
+    /// Ingest a JSON document from disk: bench artifacts are recognized
+    /// by their `bench`/`results` keys, metrics snapshots by their
+    /// `qaci.metrics` schema stamp; anything else (including a
+    /// truncated artifact from an interrupted bench run) is rejected.
+    pub fn ingest_file(&self, path: &Path) -> Result<Entry> {
+        let doc = json::parse_file(path)?;
+        if doc.get("schema").and_then(Json::as_str) == Some(super::metrics::METRICS_SCHEMA) {
+            let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("metrics");
+            return self.ingest(stem, "metrics", &doc);
+        }
+        match doc.get("bench").and_then(Json::as_str) {
+            Some(bench) if doc.get("results").and_then(Json::as_arr).is_some() => {
+                let bench = bench.to_string();
+                self.ingest(&bench, "bench", &doc)
+            }
+            _ => bail!(
+                "{}: neither a bench artifact (bench/results keys) nor a metrics snapshot",
+                path.display()
+            ),
+        }
+    }
+
+    /// Answer "field F on scenario S over the last K runs": scan the
+    /// bench entries oldest-to-newest, keep the last `q.last` runs
+    /// matching the bench filter (0 = all), and pull the field out of
+    /// every result row matching the scenario/policy filters.
+    pub fn query(&self, q: &Query) -> Result<Vec<QueryRow>> {
+        let mut entries: Vec<Entry> = self
+            .entries()?
+            .into_iter()
+            .filter(|e| e.kind == "bench")
+            .filter(|e| q.bench.as_deref().is_none_or(|b| e.bench == b))
+            .collect();
+        if q.last > 0 && entries.len() > q.last {
+            entries = entries.split_off(entries.len() - q.last);
+        }
+        let mut rows = Vec::new();
+        for e in &entries {
+            for r in e.payload.get("results").and_then(Json::as_arr).unwrap_or(&[]) {
+                let scenario = r.get("scenario").and_then(Json::as_str).unwrap_or("");
+                let policy = r.get("policy").and_then(Json::as_str).unwrap_or("");
+                if q.scenario.as_deref().is_none_or(|s| s == scenario)
+                    && q.policy.as_deref().is_none_or(|p| p == policy)
+                {
+                    rows.push(QueryRow {
+                        seq: e.seq,
+                        bench: e.bench.clone(),
+                        scenario: scenario.to_string(),
+                        policy: policy.to_string(),
+                        field: q.field.clone(),
+                        value: r.get(&q.field).and_then(Json::as_f64),
+                    });
+                }
+            }
+        }
+        Ok(rows)
+    }
+}
+
+/// Filters for [`BenchLog::query`] (all optional except the field).
+#[derive(Debug, Clone, Default)]
+pub struct Query {
+    /// restrict to one bench name
+    pub bench: Option<String>,
+    /// restrict to one scenario
+    pub scenario: Option<String>,
+    /// restrict to one policy
+    pub policy: Option<String>,
+    /// result field to extract (e.g. `p99_s`)
+    pub field: String,
+    /// only the last K matching runs (0 = all)
+    pub last: usize,
+}
+
+/// One row answered by [`BenchLog::query`].
+#[derive(Debug, Clone)]
+pub struct QueryRow {
+    /// index entry the row came from
+    pub seq: u64,
+    /// bench name
+    pub bench: String,
+    /// scenario label
+    pub scenario: String,
+    /// policy label
+    pub policy: String,
+    /// the queried field name
+    pub field: String,
+    /// `None` when the artifact stored `null` (e.g. a percentile with
+    /// no samples) or lacks the field
+    pub value: Option<f64>,
+}
+
+/// Knobs for [`diff`].
+#[derive(Debug, Clone)]
+pub struct DiffOptions {
+    /// skip the absolute-value regression check (CI mode: orderings are
+    /// machine-invariant, absolute numbers are not)
+    pub orderings_only: bool,
+    /// relative headroom for the value check: latest ≤ baseline·(1+tol)
+    pub tolerance: f64,
+}
+
+impl Default for DiffOptions {
+    fn default() -> Self {
+        DiffOptions { orderings_only: false, tolerance: 0.05 }
+    }
+}
+
+/// One regression finding from [`diff`].
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// `"coverage"`, `"ordering"` or `"regression"`
+    pub kind: &'static str,
+    /// human-readable description
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.kind, self.message)
+    }
+}
+
+type Rows = BTreeMap<(String, String), BTreeMap<&'static str, f64>>;
+
+/// Tracked fields per (scenario, policy) row of one bench payload.
+fn result_rows(e: &Entry) -> Rows {
+    let mut rows = Rows::new();
+    for r in e.payload.get("results").and_then(Json::as_arr).unwrap_or(&[]) {
+        let scenario = r.get("scenario").and_then(Json::as_str).unwrap_or("").to_string();
+        let policy = r.get("policy").and_then(Json::as_str).unwrap_or("").to_string();
+        let mut fields = BTreeMap::new();
+        for name in TRACKED_FIELDS {
+            if let Some(v) = r.get(name).and_then(Json::as_f64) {
+                fields.insert(name, v);
+            }
+        }
+        rows.insert((scenario, policy), fields);
+    }
+    rows
+}
+
+/// Newest bench-kind entry per bench name.
+fn latest_per_bench(entries: &[Entry]) -> BTreeMap<String, Entry> {
+    let mut out = BTreeMap::new();
+    for e in entries.iter().filter(|e| e.kind == "bench") {
+        out.insert(e.bench.clone(), e.clone());
+    }
+    out
+}
+
+/// Compare one bench's latest run against its baseline run, appending
+/// findings: coverage (baseline rows must still be emitted), ordering
+/// (strict baseline orderings between policies must not invert) and —
+/// unless `orderings_only` — value regressions on the tracked fields.
+fn diff_one(
+    bench: &str,
+    base_entry: &Entry,
+    new_entry: &Entry,
+    opts: &DiffOptions,
+    findings: &mut Vec<Finding>,
+) {
+    let base_rows = result_rows(base_entry);
+    let new_rows = result_rows(new_entry);
+    for (scenario, policy) in base_rows.keys() {
+        if !new_rows.contains_key(&(scenario.clone(), policy.clone())) {
+            findings.push(Finding {
+                kind: "coverage",
+                message: format!("{bench}/{scenario}/{policy}: row missing from latest run"),
+            });
+        }
+    }
+    let scenarios: BTreeSet<&String> = base_rows.keys().map(|(s, _)| s).collect();
+    for scenario in scenarios {
+        let keys: Vec<&(String, String)> =
+            base_rows.keys().filter(|(s, _)| s == scenario).collect();
+        for (ai, a) in keys.iter().enumerate() {
+            for b in keys.iter().skip(ai + 1) {
+                for field in TRACKED_FIELDS {
+                    let pair = (
+                        base_rows[*a].get(field).copied(),
+                        base_rows[*b].get(field).copied(),
+                        new_rows.get(*a).and_then(|r| r.get(field)).copied(),
+                        new_rows.get(*b).and_then(|r| r.get(field)).copied(),
+                    );
+                    let (Some(ba), Some(bb), Some(na), Some(nb)) = pair else { continue };
+                    // a strict baseline ordering may weaken to a tie but
+                    // must not invert
+                    if (ba < bb && na > nb) || (ba > bb && na < nb) {
+                        findings.push(Finding {
+                            kind: "ordering",
+                            message: format!(
+                                "{bench}/{scenario}: {field} ordering inverted — baseline \
+                                 {pa}={ba} vs {pb}={bb}, latest {pa}={na} vs {pb}={nb}",
+                                pa = a.1,
+                                pb = b.1,
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    if opts.orderings_only {
+        return;
+    }
+    for (key, bfields) in &base_rows {
+        let Some(nfields) = new_rows.get(key) else { continue };
+        for field in TRACKED_FIELDS {
+            let (Some(&bv), Some(&nv)) = (bfields.get(field), nfields.get(field)) else {
+                continue;
+            };
+            let limit = bv * (1.0 + opts.tolerance) + 1e-12;
+            if nv > limit {
+                findings.push(Finding {
+                    kind: "regression",
+                    message: format!(
+                        "{bench}/{}/{}: {field} regressed {bv} -> {nv} (over {:.1}% headroom)",
+                        key.0,
+                        key.1,
+                        opts.tolerance * 100.0
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Diff the newest run of every bench in `index` against the newest run
+/// in `baseline`. Clean = empty vector; benches present only in `index`
+/// are ignored (new benches are not regressions), benches present only
+/// in `baseline` are coverage findings.
+pub fn diff(index: &BenchLog, baseline: &BenchLog, opts: &DiffOptions) -> Result<Vec<Finding>> {
+    let latest = latest_per_bench(&index.entries()?);
+    let base = latest_per_bench(&baseline.entries()?);
+    let mut findings = Vec::new();
+    for (bench, base_entry) in &base {
+        match latest.get(bench) {
+            Some(new_entry) => diff_one(bench, base_entry, new_entry, opts, &mut findings),
+            None => findings.push(Finding {
+                kind: "coverage",
+                message: format!("bench {bench}: in baseline but missing from index"),
+            }),
+        }
+    }
+    Ok(findings)
+}
+
+/// Diff the newest run of each bench against the *previous* run in the
+/// same index — the "did my last run regress?" mode used when no
+/// external baseline is given. Benches with fewer than two runs are
+/// skipped.
+pub fn diff_latest_pair(index: &BenchLog, opts: &DiffOptions) -> Result<Vec<Finding>> {
+    let entries = index.entries()?;
+    let benches: BTreeSet<String> =
+        entries.iter().filter(|e| e.kind == "bench").map(|e| e.bench.clone()).collect();
+    let mut findings = Vec::new();
+    for bench in benches {
+        let runs: Vec<&Entry> =
+            entries.iter().filter(|e| e.kind == "bench" && e.bench == bench).collect();
+        if let [.., prev, last] = runs.as_slice() {
+            diff_one(&bench, prev, last, opts, &mut findings);
+        }
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("qaci-benchlog-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn bench_doc(bench: &str, rows: &[(&str, &str, f64, f64)]) -> Json {
+        let results: Vec<Json> = rows
+            .iter()
+            .map(|(scenario, policy, cost, p99)| {
+                Json::obj()
+                    .set("scenario", *scenario)
+                    .set("policy", *policy)
+                    .set("cost", *cost)
+                    .set("p99_s", *p99)
+            })
+            .collect();
+        Json::obj().set("bench", bench).set("version", 1.0).set("results", Json::Arr(results))
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // offset basis and the classic single-byte vectors pin the exact
+        // algorithm (matches util::prop's seed-stream hash)
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        assert_eq!(digest_of(&Json::Null), format!("fnv1a:{:016x}", fnv1a64(b"null")));
+    }
+
+    #[test]
+    fn ingest_query_roundtrip_is_byte_stable() {
+        let path = tmpdir("roundtrip").join("index.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = BenchLog::open(&path);
+        let doc = bench_doc("fleet_churn", &[("burst-storm", "online-proposed", 1.25, 19.7)]);
+        log.ingest("fleet_churn", "bench", &doc).unwrap();
+        let entries = log.entries().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].payload, doc);
+        // re-serialization reproduces the stored line byte for byte
+        let stored = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(stored, format!("{}\n", entries[0].to_line()));
+        let rows = log.query(&Query { field: "p99_s".into(), ..Query::default() }).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].value, Some(19.7));
+    }
+
+    #[test]
+    fn mutated_payload_is_rejected_by_digest() {
+        let path = tmpdir("corrupt").join("index.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = BenchLog::open(&path);
+        log.ingest("b", "bench", &bench_doc("b", &[("s", "p", 2.0, 3.0)])).unwrap();
+        let line = std::fs::read_to_string(&path).unwrap();
+        // flip one payload byte ("cost":2 -> "cost":9), keep valid JSON
+        let tampered = line.replace("\"cost\":2", "\"cost\":9");
+        assert_ne!(tampered, line, "mutation must apply");
+        std::fs::write(&path, tampered).unwrap();
+        let err = log.entries().unwrap_err().to_string();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn unknown_schema_and_version_rejected_cleanly() {
+        let good = Entry {
+            seq: 0,
+            bench: "b".into(),
+            kind: "bench".into(),
+            digest: digest_of(&Json::Null),
+            payload: Json::Null,
+        }
+        .to_line();
+        let wrong_schema = good.replace("qaci.benchlog", "qaci.other");
+        let err = Entry::from_line(&wrong_schema).unwrap_err().to_string();
+        assert!(err.contains("unknown schema"), "{err}");
+        let wrong_version = good.replace("\"version\":1", "\"version\":99");
+        let err = Entry::from_line(&wrong_version).unwrap_err().to_string();
+        assert!(err.contains("unsupported schema version"), "{err}");
+        assert!(Entry::from_line("{\"schema\":").is_err(), "truncated line must be rejected");
+    }
+
+    #[test]
+    fn ingest_file_rejects_truncated_artifact() {
+        // the partial write an interrupted (pre-atomic-rename) bench run
+        // could have left behind must never hash into the index
+        let dir = tmpdir("truncated");
+        let artifact = dir.join("BENCH_partial.json");
+        std::fs::write(&artifact, "{\"bench\":\"fleet_churn\",\"version\":1,\"results\":[{\"sc")
+            .unwrap();
+        let log = BenchLog::open(dir.join("index.jsonl"));
+        assert!(log.ingest_file(&artifact).is_err());
+        assert!(log.entries().unwrap().is_empty(), "nothing may be appended on rejection");
+    }
+
+    #[test]
+    fn diff_identical_runs_is_clean_and_regression_is_caught() {
+        let dir = tmpdir("diff");
+        let path = dir.join("index.jsonl");
+        let base_path = dir.join("baseline.jsonl");
+        for p in [&path, &base_path] {
+            let _ = std::fs::remove_file(p);
+        }
+        let doc = bench_doc(
+            "fleet_churn",
+            &[
+                ("burst-storm", "online-proposed", 1.0, 20.0),
+                ("burst-storm", "static-proposed", 4.0, 220.0),
+            ],
+        );
+        let baseline = BenchLog::open(&base_path);
+        baseline.ingest("fleet_churn", "bench", &doc).unwrap();
+        let log = BenchLog::open(&path);
+        log.ingest("fleet_churn", "bench", &doc).unwrap();
+        assert!(diff(&log, &baseline, &DiffOptions::default()).unwrap().is_empty());
+
+        // inject a p99 regression on the online policy: value check
+        // fires, and once it climbs past static the ordering check too
+        let bad = bench_doc(
+            "fleet_churn",
+            &[
+                ("burst-storm", "online-proposed", 1.0, 500.0),
+                ("burst-storm", "static-proposed", 4.0, 220.0),
+            ],
+        );
+        log.ingest("fleet_churn", "bench", &bad).unwrap();
+        let findings = diff(&log, &baseline, &DiffOptions::default()).unwrap();
+        assert!(findings.iter().any(|f| f.kind == "regression"), "{findings:?}");
+        assert!(findings.iter().any(|f| f.kind == "ordering"), "{findings:?}");
+        // orderings-only mode still catches the inversion but not values
+        let oo = DiffOptions { orderings_only: true, ..DiffOptions::default() };
+        let findings = diff(&log, &baseline, &oo).unwrap();
+        assert!(findings.iter().all(|f| f.kind == "ordering"), "{findings:?}");
+        assert!(!findings.is_empty());
+        // and the in-index previous-vs-latest mode sees the same break
+        assert!(!diff_latest_pair(&log, &DiffOptions::default()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn diff_flags_missing_coverage() {
+        let dir = tmpdir("coverage");
+        let base_path = dir.join("baseline.jsonl");
+        let path = dir.join("index.jsonl");
+        for p in [&path, &base_path] {
+            let _ = std::fs::remove_file(p);
+        }
+        let baseline = BenchLog::open(&base_path);
+        baseline
+            .ingest(
+                "fleet_scale",
+                "bench",
+                &bench_doc("fleet_scale", &[("scale-4", "proposed", 1.0, 2.0)]),
+            )
+            .unwrap();
+        let log = BenchLog::open(&path);
+        // empty index: the whole bench is missing
+        let findings = diff(&log, &baseline, &DiffOptions::default()).unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].kind, "coverage");
+        // bench present but the row vanished
+        log.ingest("fleet_scale", "bench", &bench_doc("fleet_scale", &[])).unwrap();
+        let findings = diff(&log, &baseline, &DiffOptions::default()).unwrap();
+        assert!(findings.iter().any(|f| f.kind == "coverage" && f.message.contains("scale-4")));
+    }
+
+    #[test]
+    fn property_random_payloads_roundtrip_and_reject_mutation() {
+        // SNIPPETS-style manifest stability: ingest → read → re-serialize
+        // must be byte-identical, and any payload byte flip must be
+        // rejected by the digest check
+        fn gen_payload(r: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { r.below(4) } else { r.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(r.f64() < 0.5),
+                2 => Json::Num((r.normal() * 50.0 * 4.0).round() / 4.0),
+                3 => Json::Str(
+                    (0..r.below(6)).map(|_| char::from(b'a' + r.below(26) as u8)).collect(),
+                ),
+                4 => Json::Arr((0..r.below(3)).map(|_| gen_payload(r, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..r.below(3))
+                        .map(|i| (format!("k{i}"), gen_payload(r, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        forall(
+            "benchlog entry roundtrip",
+            120,
+            |r| gen_payload(r, 3),
+            |payload| {
+                let entry = Entry {
+                    seq: 3,
+                    bench: "prop".into(),
+                    kind: "bench".into(),
+                    digest: digest_of(payload),
+                    payload: payload.clone(),
+                };
+                let line = entry.to_line();
+                let back = Entry::from_line(&line).map_err(|e| format!("verify failed: {e}"))?;
+                if back.to_line() != line {
+                    return Err(format!("re-serialization drifted: {}", back.to_line()));
+                }
+                if back.payload != *payload {
+                    return Err("payload drifted through the index".into());
+                }
+                // an entry whose digest was computed against the original
+                // payload but whose stored payload was mutated must fail
+                let forged = Json::obj()
+                    .set("schema", BENCHLOG_SCHEMA)
+                    .set("version", BENCHLOG_VERSION as usize)
+                    .set("seq", 4.0)
+                    .set("bench", "prop")
+                    .set("kind", "bench")
+                    .set("digest", back.digest.as_str())
+                    .set("payload", Json::Arr(vec![payload.clone(), Json::Bool(true)]))
+                    .to_string_compact();
+                match Entry::from_line(&forged) {
+                    Err(_) => Ok(()),
+                    Ok(_) => Err("mutated payload accepted".into()),
+                }
+            },
+        );
+    }
+}

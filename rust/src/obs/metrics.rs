@@ -1,0 +1,281 @@
+//! Lightweight in-process metrics: counters, gauges and f64 histograms
+//! in a thread-local ambient registry, plus RAII spans built on
+//! [`crate::util::timer::Stopwatch`].
+//!
+//! The hot paths (`opt/fleet`, `system/queue`, `fleet/events`) record
+//! through the free functions ([`counter_add`], [`observe`],
+//! [`gauge_set`]) without any signature changes, so instrumentation
+//! cannot perturb the numerics the tests pin. The registry is
+//! thread-local: parallel test threads and parallel fleet runs never
+//! contend or cross-contaminate.
+//!
+//! Naming convention: dotted lowercase paths, grouped by subsystem —
+//! `solver.*` (allocator counters), `queue.*` (edge-queue counters +
+//! `queue.depth`/`queue.wait_s` histograms), `events.*` (replay
+//! counters + per-slot `events.queue_depth` histogram) and `span.<name>.s`
+//! (wall-clock span histograms, recorded when a [`Span`] guard drops).
+//!
+//! Snapshots export as schema-versioned JSON (`qaci.metrics` v1, see
+//! [`Metrics::to_json`]); the CLI writes one via
+//! `qaci fleet ... --metrics-out <path>` and the event replay embeds its
+//! own capture in every [`crate::fleet::EventReport`].
+
+use super::stats::Summary;
+use crate::util::json::Json;
+use crate::util::timer::{Samples, Stopwatch};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+/// Schema identifier stamped on every exported snapshot.
+pub const METRICS_SCHEMA: &str = "qaci.metrics";
+/// Snapshot layout version this build writes.
+pub const METRICS_VERSION: u32 = 1;
+
+/// A metrics registry: monotone counters, last-write gauges and f64
+/// histograms (summarized as the same p50/p95/p99 set the fleet reports
+/// use). Usually accessed through the thread-local ambient registry via
+/// the free functions; held directly when captured by [`scoped`].
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Samples>,
+}
+
+impl Metrics {
+    /// Fresh empty registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Add `by` to a counter (created at zero on first touch).
+    pub fn counter_add(&mut self, name: &str, by: u64) {
+        if let Some(c) = self.counters.get_mut(name) {
+            *c += by;
+        } else {
+            self.counters.insert(name.to_string(), by);
+        }
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge_set(&mut self, name: &str, value: f64) {
+        if let Some(g) = self.gauges.get_mut(name) {
+            *g = value;
+        } else {
+            self.gauges.insert(name.to_string(), value);
+        }
+    }
+
+    /// Record one sample into a histogram.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        if let Some(h) = self.histograms.get_mut(name) {
+            h.push(value);
+        } else {
+            let mut s = Samples::new();
+            s.push(value);
+            self.histograms.insert(name.to_string(), s);
+        }
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Latest gauge value, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Histogram samples, if any were recorded.
+    pub fn histogram(&self, name: &str) -> Option<&Samples> {
+        self.histograms.get(name)
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Fold `other` into `self`: counters add, gauges last-write-wins,
+    /// histogram samples concatenate.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            self.counter_add(k, *v);
+        }
+        for (k, v) in &other.gauges {
+            self.gauge_set(k, *v);
+        }
+        for (k, s) in &other.histograms {
+            if let Some(h) = self.histograms.get_mut(k) {
+                h.merge(s);
+            } else {
+                self.histograms.insert(k.clone(), s.clone());
+            }
+        }
+    }
+
+    /// Schema-versioned JSON snapshot (the `--metrics-out` payload):
+    /// `{schema, version, counters, gauges, histograms}` with every
+    /// histogram reduced to its [`Summary`].
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+        );
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect());
+        let histograms = Json::Obj(
+            self.histograms.iter().map(|(k, s)| (k.clone(), Summary::of(s).to_json())).collect(),
+        );
+        Json::obj()
+            .set("schema", METRICS_SCHEMA)
+            .set("version", METRICS_VERSION as usize)
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms)
+    }
+}
+
+thread_local! {
+    static AMBIENT: RefCell<Metrics> = RefCell::new(Metrics::new());
+}
+
+/// Bump a counter in the ambient (thread-local) registry.
+pub fn counter_add(name: &str, by: u64) {
+    AMBIENT.with(|m| m.borrow_mut().counter_add(name, by));
+}
+
+/// Set a gauge in the ambient registry.
+pub fn gauge_set(name: &str, value: f64) {
+    AMBIENT.with(|m| m.borrow_mut().gauge_set(name, value));
+}
+
+/// Record a histogram sample in the ambient registry.
+pub fn observe(name: &str, value: f64) {
+    AMBIENT.with(|m| m.borrow_mut().observe(name, value));
+}
+
+/// Clone the ambient registry's current contents.
+pub fn snapshot() -> Metrics {
+    AMBIENT.with(|m| m.borrow().clone())
+}
+
+/// Take the ambient contents, leaving a fresh registry behind (the CLI
+/// calls this at command start so a snapshot covers one run only).
+pub fn reset() -> Metrics {
+    AMBIENT.with(|m| m.replace(Metrics::new()))
+}
+
+/// Run `f` against a fresh ambient registry and return its result
+/// together with everything it recorded. The capture is also folded back
+/// into the surrounding registry, so outer snapshots (e.g. the CLI's
+/// `--metrics-out`) still see the full run.
+pub fn scoped<R>(f: impl FnOnce() -> R) -> (R, Metrics) {
+    let outer = AMBIENT.with(|m| m.replace(Metrics::new()));
+    let result = f();
+    let captured = AMBIENT.with(|m| m.replace(outer));
+    AMBIENT.with(|m| m.borrow_mut().merge(&captured));
+    (result, captured)
+}
+
+/// RAII span: measures wall-clock from construction to drop and lands it
+/// in the ambient histogram `span.<name>.s`.
+pub struct Span {
+    name: &'static str,
+    watch: Stopwatch,
+}
+
+/// Open a span; the elapsed time records when the guard drops.
+pub fn span(name: &'static str) -> Span {
+    Span { name, watch: Stopwatch::start() }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        observe(&format!("span.{}.s", self.name), self.watch.elapsed_s());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_accumulate() {
+        let mut m = Metrics::new();
+        m.counter_add("a.b", 2);
+        m.counter_add("a.b", 3);
+        m.gauge_set("g", 1.0);
+        m.gauge_set("g", 4.0);
+        m.observe("h", 1.0);
+        m.observe("h", 3.0);
+        assert_eq!(m.counter("a.b"), 5);
+        assert_eq!(m.counter("never"), 0);
+        assert_eq!(m.gauge("g"), Some(4.0));
+        let h = m.histogram("h").unwrap();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.mean(), 2.0);
+    }
+
+    #[test]
+    fn merge_adds_counters_and_concatenates_histograms() {
+        let mut a = Metrics::new();
+        a.counter_add("c", 1);
+        a.observe("h", 1.0);
+        a.gauge_set("g", 1.0);
+        let mut b = Metrics::new();
+        b.counter_add("c", 2);
+        b.observe("h", 5.0);
+        b.gauge_set("g", 9.0);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 3);
+        assert_eq!(a.histogram("h").unwrap().len(), 2);
+        assert_eq!(a.gauge("g"), Some(9.0), "gauge merge is last-write-wins");
+    }
+
+    #[test]
+    fn scoped_captures_and_folds_back() {
+        let before = reset(); // isolate from other tests on this thread
+        counter_add("outer", 1);
+        let ((), captured) = scoped(|| {
+            counter_add("inner", 7);
+            observe("inner.h", 2.0);
+        });
+        assert_eq!(captured.counter("inner"), 7);
+        assert_eq!(captured.counter("outer"), 0, "capture excludes outer state");
+        let ambient = snapshot();
+        assert_eq!(ambient.counter("outer"), 1);
+        assert_eq!(ambient.counter("inner"), 7, "capture folds back into ambient");
+        assert_eq!(ambient.histogram("inner.h").unwrap().len(), 1);
+        reset();
+        AMBIENT.with(|m| *m.borrow_mut() = before);
+    }
+
+    #[test]
+    fn span_records_elapsed_on_drop() {
+        let ((), captured) = scoped(|| {
+            let _guard = span("unit");
+        });
+        let h = captured.histogram("span.unit.s").expect("span histogram");
+        assert_eq!(h.len(), 1);
+        assert!(h.min() >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_is_schema_versioned() {
+        let mut m = Metrics::new();
+        m.counter_add("solver.warm_start.hit", 3);
+        m.observe("queue.wait_s", 0.25);
+        let j = m.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(METRICS_SCHEMA));
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            j.at(&["counters", "solver.warm_start.hit"]).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert_eq!(j.at(&["histograms", "queue.wait_s", "n"]).and_then(Json::as_usize), Some(1));
+        // round-trips through the crate's own JSON
+        let back = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back, j);
+    }
+}

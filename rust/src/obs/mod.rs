@@ -1,0 +1,29 @@
+//! Observability layer: in-process metrics + spans and the persistent
+//! bench-trajectory store.
+//!
+//! Three pieces:
+//!
+//! * [`stats`] — the crate's one percentile/summary implementation;
+//!   [`crate::util::timer::Samples`] delegates here, so every rollup
+//!   (coordinator telemetry, fleet sim, event replay, metrics
+//!   histograms) shares one pinned interpolation convention;
+//! * [`metrics`] — thread-local counters/gauges/histograms plus RAII
+//!   spans, threaded through the allocator (`solver.*`), the shared
+//!   edge queue (`queue.*`) and the event replay (`events.*`);
+//!   exported as a schema-versioned `qaci.metrics` snapshot
+//!   (`qaci fleet ... --metrics-out`), embedded per run in
+//!   [`crate::fleet::EventReport`];
+//! * [`benchlog`] — the append-only, content-hashed run index behind
+//!   `qaci bench-log ingest|query|diff`: every `BENCH_*.json` artifact
+//!   or metrics snapshot is stored with a schema version and an FNV-1a
+//!   digest over its canonical JSON bytes, queryable across runs and
+//!   diffable against a stored baseline (ordering-invariant checks for
+//!   CI, value-regression checks for same-machine runs).
+
+pub mod benchlog;
+pub mod metrics;
+pub mod stats;
+
+pub use benchlog::{BenchLog, DiffOptions, Entry, Finding, Query};
+pub use metrics::Metrics;
+pub use stats::Summary;

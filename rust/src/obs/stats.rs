@@ -1,0 +1,144 @@
+//! Shared summary statistics: the one percentile implementation every
+//! rollup in the crate uses.
+//!
+//! `coordinator/telemetry`, `fleet/sim` and `fleet/events` all summarize
+//! their sample collections through [`crate::util::timer::Samples`],
+//! which delegates its percentile math here — so the interpolation
+//! convention lives in exactly one place and is pinned by one unit test
+//! on a known vector.
+
+use crate::util::json::Json;
+use crate::util::timer::Samples;
+
+/// Linear-interpolated percentile over unsorted samples, `p` in [0, 100].
+///
+/// Convention (the one [`Samples`] has always used): rank = (p/100)·(n−1);
+/// value = sorted[⌊rank⌋]·(1−frac) + sorted[⌈rank⌉]·frac. Empty input
+/// yields NaN.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_of_sorted(&sorted, p)
+}
+
+/// The same percentile on already-sorted samples (callers that summarize
+/// one collection at several `p` values sort once and reuse it).
+pub fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// One collection's fixed summary — the n/mean/min/max + p50/p95/p99 set
+/// the fleet reports and the metrics snapshot share.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    /// sample count
+    pub n: usize,
+    /// arithmetic mean (NaN when empty)
+    pub mean: f64,
+    /// smallest sample (+inf when empty)
+    pub min: f64,
+    /// largest sample (−inf when empty)
+    pub max: f64,
+    /// median
+    pub p50: f64,
+    /// 95th percentile
+    pub p95: f64,
+    /// 99th percentile
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Summarize a sample collection.
+    pub fn of(s: &Samples) -> Summary {
+        Summary {
+            n: s.len(),
+            mean: s.mean(),
+            min: s.min(),
+            max: s.max(),
+            p50: s.p50(),
+            p95: s.p95(),
+            p99: s.p99(),
+        }
+    }
+
+    /// JSON form used by the metrics snapshot; non-finite values map to
+    /// `null` so the empty histogram serializes cleanly.
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        Json::obj()
+            .set("n", self.n)
+            .set("mean", num(self.mean))
+            .set("min", num(self.min))
+            .set("max", num(self.max))
+            .set("p50", num(self.p50))
+            .set("p95", num(self.p95))
+            .set("p99", num(self.p99))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolation_convention_pinned_on_known_vector() {
+        // rank = (p/100)·(n−1), linear interpolation between the two
+        // bracketing order statistics — pinned here once for every
+        // rollup in the crate (telemetry, fleet sim, event replay)
+        let xs = [40.0, 10.0, 30.0, 20.0]; // unsorted on purpose
+        for (p, want) in [
+            (0.0, 10.0),   // rank 0.00
+            (25.0, 17.5),  // rank 0.75
+            (50.0, 25.0),  // rank 1.50
+            (95.0, 38.5),  // rank 2.85
+            (99.0, 39.7),  // rank 2.97
+            (100.0, 40.0), // rank 3.00
+        ] {
+            let got = percentile(&xs, p);
+            assert!((got - want).abs() < 1e-9, "p{p}: got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn samples_delegate_to_the_shared_implementation() {
+        let mut s = Samples::new();
+        for x in [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0] {
+            s.push(x);
+        }
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), percentile(s.values(), p));
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_edges() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[7.0], 0.0), 7.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let mut s = Samples::new();
+        s.push(1.0);
+        s.push(2.0);
+        let j = Summary::of(&s).to_json();
+        assert_eq!(j.get("n").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("mean").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(j.get("p50").and_then(Json::as_f64), Some(1.5));
+        // empty histogram: every non-finite stat becomes null
+        let e = Summary::of(&Samples::new()).to_json();
+        assert_eq!(e.get("mean"), Some(&Json::Null));
+        assert_eq!(e.get("p99"), Some(&Json::Null));
+    }
+}

@@ -82,6 +82,7 @@
 use super::bisection;
 use super::feasible_random;
 use super::problem::{Design, Problem};
+use crate::obs::metrics as obs_metrics;
 use crate::system::channel::MultiAccessChannel;
 use crate::system::platform::DeviceProfile;
 use crate::system::queue::QueueModel;
@@ -519,10 +520,12 @@ impl FleetProblem {
         let fixed: Vec<f64> = act.iter().map(|&a| if a >= 0.5 { 1.0 } else { 0.0 }).collect();
         let waits = queue.waits_given(&services, &fixed, weight_of);
         if want_at(&waits) == fixed {
+            obs_metrics::counter_add("solver.fixed_point.converged", 1);
             let active = fixed.iter().map(|&a| a >= 0.5).collect();
             return Interference { waits, converged: true, active };
         }
         // no binary equilibrium: clean mean-field fallback
+        obs_metrics::counter_add("solver.fixed_point.fallback", 1);
         let waits = (0..n).map(|i| self.queue_wait(i, mu[i])).collect();
         Interference { waits, converged: false, active: vec![true; n] }
     }
@@ -635,7 +638,10 @@ fn assemble(
 pub fn evaluate(fp: &FleetProblem, mu: &[f64], alpha: &[f64]) -> FleetAllocation {
     let interference = fp.interference_waits(mu, alpha);
     let waits = interference.waits;
-    assemble(fp, mu, alpha, &waits, |i| fp.agent_design_at_wait(i, mu[i], alpha[i], waits[i]))
+    let alloc =
+        assemble(fp, mu, alpha, &waits, |i| fp.agent_design_at_wait(i, mu[i], alpha[i], waits[i]));
+    obs_metrics::counter_add("solver.admission.rejected", (fp.n() - alloc.admitted) as u64);
+    alloc
 }
 
 /// Which fleet allocator drives a run.
@@ -712,6 +718,7 @@ pub fn solve_proposed(fp: &FleetProblem) -> FleetAllocation {
 }
 
 pub fn solve_proposed_with(fp: &FleetProblem, opts: ProposedOptions) -> FleetAllocation {
+    let _span = obs_metrics::span("solver.proposed");
     let equal = MultiAccessChannel::equal_shares(fp.n());
     let mut inits = vec![(equal.clone(), equal)];
     if fp.n() > 1 {
@@ -749,6 +756,7 @@ pub fn solve_proposed_warm(
     opts: ProposedOptions,
 ) -> FleetAllocation {
     assert_eq!(prev.len(), fp.n());
+    let _span = obs_metrics::span("solver.warm");
     let n = fp.n();
     let weight_all: f64 = fp.agents.iter().map(|a| a.weight).sum();
     let mut mu: Vec<f64> = prev.iter().map(|p| p.map_or(0.0, |(m, _)| m.max(0.0))).collect();
@@ -844,6 +852,7 @@ pub fn feasible_random_mean(fp: &FleetProblem, trials: usize, seed: u64) -> f64 
 /// Smallest share s ∈ (0, 1] making `feasible(s)` true (monotone), by
 /// bisection; `None` if even s = 1 fails.
 fn min_share(feasible: impl Fn(f64) -> bool) -> Option<f64> {
+    obs_metrics::counter_add("solver.bisection.calls", 1);
     if !feasible(1.0) {
         return None;
     }
@@ -856,6 +865,7 @@ fn min_share(feasible: impl Fn(f64) -> bool) -> Option<f64> {
             lo = mid;
         }
     }
+    obs_metrics::counter_add("solver.bisection.iters", 40);
     Some(hi)
 }
 
@@ -917,6 +927,7 @@ fn improve(fp: &FleetProblem, mu: &mut [f64], alpha: &mut [f64], opts: ProposedO
     }
     let max_moves = opts.moves_per_agent * n;
     for _ in 0..opts.rounds {
+        obs_metrics::counter_add("solver.exchange.rounds", 1);
         let mut gained = 0.0;
         for divisor in opts.step_divisors {
             let step = 1.0 / (divisor * n as f64);
@@ -958,6 +969,7 @@ fn exchange(
     };
     let mut cached: Vec<(f64, f64, f64)> = (0..n).map(|i| triple(i, shares[i])).collect();
     let mut total_gain = 0.0;
+    let mut moves = 0u64;
     for _ in 0..max_moves {
         let mut best: Option<(usize, usize, f64)> = None;
         for d in 0..n {
@@ -981,6 +993,10 @@ fn exchange(
         cached[d] = triple(d, shares[d]);
         cached[r] = triple(r, shares[r]);
         total_gain += net;
+        moves += 1;
+    }
+    if moves > 0 {
+        obs_metrics::counter_add("solver.exchange.moves", moves);
     }
     total_gain
 }

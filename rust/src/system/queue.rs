@@ -28,6 +28,8 @@
 //! into a clean rejection instead of letting ±inf/NaN poison the
 //! exchange.
 
+use crate::obs::metrics as obs_metrics;
+
 /// Service order at the shared edge queue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum QueueDiscipline {
@@ -270,6 +272,8 @@ impl EdgeQueue {
         assert!(weight.is_finite(), "priority weight must be finite");
         self.waiting.push(QueuedJob { agent, tag, ready_s, service_s, weight, seq: self.seq });
         self.seq += 1;
+        obs_metrics::counter_add("queue.push", 1);
+        obs_metrics::observe("queue.depth", self.waiting.len() as f64);
     }
 
     pub fn len(&self) -> usize {
@@ -363,6 +367,9 @@ impl EdgeQueue {
         self.free_at = finish;
         self.served += 1;
         self.busy_s += job.service_s;
+        obs_metrics::counter_add("queue.pop", 1);
+        obs_metrics::observe("queue.wait_s", start - job.ready_s);
+        obs_metrics::observe("queue.depth", self.waiting.len() as f64);
         Some((job, start, finish))
     }
 
@@ -381,6 +388,8 @@ impl EdgeQueue {
                 true
             }
         });
+        obs_metrics::counter_add("queue.drain.calls", 1);
+        obs_metrics::counter_add("queue.drain.jobs", removed.len() as u64);
         removed
     }
 
@@ -392,6 +401,8 @@ impl EdgeQueue {
     /// with the slot-bounded [`Self::pop_due`], waiting jobs are always
     /// dispatched at the prices in force when their service starts.
     pub fn reprice(&mut self, mut f: impl FnMut(&QueuedJob) -> (f64, f64)) {
+        obs_metrics::counter_add("queue.reprice.calls", 1);
+        obs_metrics::counter_add("queue.reprice.jobs", self.waiting.len() as u64);
         for job in &mut self.waiting {
             let (service_s, weight) = f(job);
             assert!(service_s.is_finite() && service_s >= 0.0 && weight.is_finite());
@@ -829,6 +840,28 @@ mod tests {
         // regression: a NaN priority key used to be accepted here and
         // only panic later inside pop's comparator
         EdgeQueue::new(QueueDiscipline::WeightedPriority).push(0, 0.0, 1.0, f64::NAN);
+    }
+
+    #[test]
+    fn queue_operations_record_ambient_metrics() {
+        use crate::util::timer::Samples;
+        let ((), m) = crate::obs::metrics::scoped(|| {
+            let mut q = EdgeQueue::new(QueueDiscipline::Fifo);
+            q.push(0, 0.0, 1.0, 1.0);
+            q.push(1, 0.5, 1.0, 1.0);
+            q.pop().unwrap();
+            q.reprice(|j| (j.service_s, j.weight));
+            assert_eq!(q.drain_agent(1).len(), 1);
+        });
+        assert_eq!(m.counter("queue.push"), 2);
+        assert_eq!(m.counter("queue.pop"), 1);
+        assert_eq!(m.counter("queue.reprice.calls"), 1);
+        assert_eq!(m.counter("queue.reprice.jobs"), 1);
+        assert_eq!(m.counter("queue.drain.calls"), 1);
+        assert_eq!(m.counter("queue.drain.jobs"), 1);
+        // depth observed on both pushes and the pop; wait on the pop only
+        assert_eq!(m.histogram("queue.depth").map(Samples::len), Some(3));
+        assert_eq!(m.histogram("queue.wait_s").map(Samples::len), Some(1));
     }
 
     #[test]

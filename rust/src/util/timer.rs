@@ -48,6 +48,12 @@ impl Samples {
         &self.xs
     }
 
+    /// Concatenate another collection's samples into this one — the
+    /// per-agent → fleet rollup every report layer shares.
+    pub fn merge(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+    }
+
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             return f64::NAN;
@@ -73,18 +79,10 @@ impl Samples {
             .sqrt()
     }
 
-    /// Linear-interpolated percentile, p in [0, 100].
+    /// Linear-interpolated percentile, p in [0, 100] (delegates to the
+    /// crate's one shared implementation in [`crate::obs::stats`]).
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.xs.is_empty() {
-            return f64::NAN;
-        }
-        let mut sorted = self.xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        let frac = rank - lo as f64;
-        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        crate::obs::stats::percentile(&self.xs, p)
     }
 
     pub fn p50(&self) -> f64 {
@@ -127,6 +125,19 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_concatenates_samples() {
+        let mut a = Samples::new();
+        a.push(1.0);
+        a.push(2.0);
+        let mut b = Samples::new();
+        b.push(10.0);
+        a.merge(&b);
+        assert_eq!(a.values(), &[1.0, 2.0, 10.0]);
+        a.merge(&Samples::new());
+        assert_eq!(a.len(), 3);
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Observability integration: the `qaci bench-log` CLI surface
+//! (ingest/query/diff through a real subprocess), the `--metrics-out`
+//! snapshot of a full churn+events fleet run, and the committed CI
+//! ordering baseline (`ci/benchlog-baseline.jsonl`) — including that its
+//! Python-generated digests verify through the Rust reader.
+
+use qaci::obs::benchlog::{self, BenchLog, DiffOptions};
+use qaci::util::json::{self, Json};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("qaci-benchlog-it-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Spawn the real binary; returns (stdout, stderr, success).
+fn qaci(args: &[&str]) -> (String, String, bool) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_qaci"))
+        .args(args)
+        .output()
+        .expect("qaci binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+/// A minimal bench artifact shaped like the fleet_churn emission.
+fn storm_artifact(online_p99: f64) -> Json {
+    let row = |policy: &str, cost: f64, p99: f64| {
+        Json::obj()
+            .set("scenario", "burst-storm")
+            .set("policy", policy)
+            .set("cost", cost)
+            .set("p99_s", p99)
+    };
+    Json::obj().set("bench", "fleet_churn").set("version", 1.0).set(
+        "results",
+        Json::Arr(vec![
+            row("online-proposed", 1.0, online_p99),
+            row("static-proposed", 4.0, 220.0),
+        ]),
+    )
+}
+
+/// `qaci fleet --churn --events --metrics-out` writes a schema-versioned
+/// snapshot whose solver counters and queue histograms are populated by
+/// the run — the acceptance criterion for the instrumentation layer.
+#[test]
+fn cli_metrics_out_emits_populated_snapshot() {
+    let path = tmpdir("metrics").join("metrics.json");
+    let _ = std::fs::remove_file(&path);
+    let (stdout, stderr, ok) = qaci(&[
+        "fleet", "--churn", "--events", "--queue", "fifo", "--tiers", "orin,xavier,phone",
+        "--horizon", "240", "--seed", "0", "--metrics-out", path.to_str().unwrap(),
+    ]);
+    assert!(ok, "fleet run failed:\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("wrote metrics snapshot"), "{stdout}");
+    let j = json::parse_file(&path).expect("snapshot parses");
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("qaci.metrics"));
+    assert_eq!(j.get("version").and_then(Json::as_usize), Some(1));
+    let counter = |name: &str| j.at(&["counters", name]).and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(counter("solver.bisection.calls") > 0.0, "allocator never ran:\n{j}");
+    assert!(
+        counter("solver.warm_start.hit") + counter("solver.warm_start.miss") > 0.0,
+        "fingerprint gate never evaluated:\n{j}"
+    );
+    assert!(counter("events.arrivals") > 0.0, "event replay contributed nothing:\n{j}");
+    for hist in ["queue.depth", "queue.wait_s", "events.queue_depth", "span.events.run.s"] {
+        let n = j.at(&["histograms", hist, "n"]).and_then(Json::as_usize).unwrap_or(0);
+        assert!(n > 0, "histogram {hist} empty or missing:\n{j}");
+    }
+}
+
+/// End-to-end store lifecycle through the CLI: two identical runs diff
+/// clean; an injected p99 regression trips both the value and the
+/// ordering check and — with --fail-on-regression — a nonzero exit.
+#[test]
+fn cli_bench_log_ingest_query_diff_lifecycle() {
+    let dir = tmpdir("lifecycle");
+    let index = dir.join("index.jsonl");
+    let _ = std::fs::remove_file(&index);
+    let good = dir.join("good.json");
+    let bad = dir.join("bad.json");
+    std::fs::write(&good, storm_artifact(19.7).to_string_pretty()).unwrap();
+    std::fs::write(&bad, storm_artifact(500.0).to_string_pretty()).unwrap();
+    let idx = index.to_str().unwrap();
+
+    // two identical runs: ingest assigns sequential seqs, diff is clean
+    for seq in 0..2 {
+        let (stdout, stderr, ok) =
+            qaci(&["bench-log", "ingest", good.to_str().unwrap(), "--index", idx]);
+        assert!(ok, "ingest failed:\n{stderr}");
+        assert!(stdout.contains(&format!("seq {seq}")), "{stdout}");
+        assert!(stdout.contains("fnv1a:"), "digest missing from receipt: {stdout}");
+    }
+    let (stdout, _, ok) = qaci(&["bench-log", "diff", "--index", idx, "--fail-on-regression"]);
+    assert!(ok, "identical runs must diff clean:\n{stdout}");
+    assert!(stdout.contains("clean"), "{stdout}");
+
+    // inject the regression: latest-vs-previous diff now finds both a
+    // value regression and the p99 ordering inversion
+    let (_, stderr, ok) = qaci(&["bench-log", "ingest", bad.to_str().unwrap(), "--index", idx]);
+    assert!(ok, "{stderr}");
+    let (stdout, _, ok) = qaci(&["bench-log", "diff", "--index", idx, "--fail-on-regression"]);
+    assert!(!ok, "regression must exit nonzero:\n{stdout}");
+    assert!(stdout.contains("[regression]"), "{stdout}");
+    assert!(stdout.contains("[ordering]"), "{stdout}");
+    // CI mode ignores absolute values but still catches the inversion
+    let (stdout, _, ok) = qaci(&[
+        "bench-log", "diff", "--index", idx, "--orderings-only", "--fail-on-regression",
+    ]);
+    assert!(!ok, "ordering inversion must fail CI mode:\n{stdout}");
+    assert!(stdout.contains("[ordering]") && !stdout.contains("[regression]"), "{stdout}");
+    // without --fail-on-regression the findings report but exit 0
+    let (stdout, _, ok) = qaci(&["bench-log", "diff", "--index", idx]);
+    assert!(ok, "report-only diff must not fail:\n{stdout}");
+    assert!(stdout.contains("finding(s)"), "{stdout}");
+
+    // query: the regressed value is visible in the trajectory
+    let (stdout, _, ok) = qaci(&[
+        "bench-log", "query", "--index", idx, "--scenario", "burst-storm", "--policy",
+        "online-proposed", "--field", "p99_s",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("500"), "regressed p99 missing: {stdout}");
+    assert!(stdout.contains("3 row(s)"), "{stdout}");
+    let (stdout, _, _) = qaci(&[
+        "bench-log", "query", "--index", idx, "--field", "p99_s", "--policy",
+        "online-proposed", "--last", "1",
+    ]);
+    assert!(stdout.contains("1 row(s)"), "--last must truncate: {stdout}");
+}
+
+/// A corrupted index entry (payload byte flip after ingest) is rejected
+/// by the digest check on every subsequent read path.
+#[test]
+fn cli_bench_log_rejects_corrupted_index() {
+    let dir = tmpdir("corrupt");
+    let index = dir.join("index.jsonl");
+    let _ = std::fs::remove_file(&index);
+    let artifact = dir.join("run.json");
+    std::fs::write(&artifact, storm_artifact(19.7).to_string_pretty()).unwrap();
+    let idx = index.to_str().unwrap();
+    let (_, stderr, ok) =
+        qaci(&["bench-log", "ingest", artifact.to_str().unwrap(), "--index", idx]);
+    assert!(ok, "{stderr}");
+    // flip one payload byte, keeping the line valid JSON
+    let line = std::fs::read_to_string(&index).unwrap();
+    let tampered = line.replace("\"cost\":4", "\"cost\":8");
+    assert_ne!(tampered, line, "tamper must apply");
+    std::fs::write(&index, tampered).unwrap();
+    for sub in [vec!["query"], vec!["diff"], vec!["ingest", artifact.to_str().unwrap()]] {
+        let mut args = vec!["bench-log"];
+        args.extend(sub.iter().copied());
+        args.extend(["--index", idx]);
+        let (stdout, stderr, ok) = qaci(&args);
+        assert!(!ok, "{sub:?} must reject a corrupted index:\n{stdout}");
+        assert!(stderr.contains("digest mismatch"), "{sub:?}: {stderr}");
+    }
+}
+
+/// Substitute the `results` array of a bench payload, preserving every
+/// other key in place (Json::set appends, so a rebuild is needed).
+fn with_results(payload: &Json, rows: Vec<Json>) -> Json {
+    let Json::Obj(kv) = payload else { panic!("payload must be an object") };
+    Json::Obj(
+        kv.iter()
+            .map(|(k, v)| {
+                if k == "results" {
+                    (k.clone(), Json::Arr(rows.clone()))
+                } else {
+                    (k.clone(), v.clone())
+                }
+            })
+            .collect(),
+    )
+}
+
+/// Rewrite every numeric field of every result row through `f(key, x)`.
+fn rescale(payload: &Json, f: &dyn Fn(&str, f64) -> f64) -> Json {
+    let results = payload.get("results").and_then(Json::as_arr).expect("results array");
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let Json::Obj(kv) = r else { panic!("row must be an object") };
+            Json::Obj(
+                kv.iter()
+                    .map(|(k, v)| match v.as_f64() {
+                        Some(x) => (k.clone(), Json::Num(f(k, x))),
+                        None => (k.clone(), v.clone()),
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+    with_results(payload, rows)
+}
+
+/// The committed CI baseline is readable by this build (which also
+/// verifies its Python-generated digests match the Rust FNV-1a over the
+/// canonical payload bytes), and its orderings gate exactly as designed:
+/// any order-preserving rescale of the tracked fields diffs clean, an
+/// inverted burst-storm tail does not.
+#[test]
+fn committed_ci_baseline_verifies_and_gates_orderings() {
+    let base_path = concat!(env!("CARGO_MANIFEST_DIR"), "/ci/benchlog-baseline.jsonl");
+    let baseline = BenchLog::open(base_path);
+    let entries = baseline.entries().expect("baseline digests verify");
+    let benches: Vec<&str> = entries.iter().map(|e| e.bench.as_str()).collect();
+    assert_eq!(benches, ["fleet_churn", "fleet_scale"]);
+
+    // an order-preserving transform of every tracked field (a "healthy
+    // run on a different machine"): strictly monotone, so strict
+    // baseline orderings survive and nothing regresses
+    let dir = tmpdir("baseline");
+    let healthy = BenchLog::open(dir.join("healthy.jsonl"));
+    let _ = std::fs::remove_file(healthy.path());
+    for e in &entries {
+        let run = rescale(&e.payload, &|_, x| 0.125 * x);
+        healthy.ingest(&e.bench, "bench", &run).unwrap();
+    }
+    let ci_opts = DiffOptions { orderings_only: true, ..DiffOptions::default() };
+    let findings = benchlog::diff(&healthy, &baseline, &ci_opts).unwrap();
+    assert!(findings.is_empty(), "healthy rescale must gate clean: {findings:?}");
+    // even the full value check passes — everything improved
+    let findings = benchlog::diff(&healthy, &baseline, &DiffOptions::default()).unwrap();
+    assert!(findings.is_empty(), "improvement flagged as regression: {findings:?}");
+
+    // invert the burst-storm tail: online p99 above the statics
+    let broken = BenchLog::open(dir.join("broken.jsonl"));
+    let _ = std::fs::remove_file(broken.path());
+    for e in &entries {
+        // the baseline marks online rows with the value 1, statics 2
+        let run = rescale(&e.payload, &|k, x| if k == "p99_s" && x < 1.5 { 9.0 } else { x });
+        broken.ingest(&e.bench, "bench", &run).unwrap();
+    }
+    let findings = benchlog::diff(&broken, &baseline, &ci_opts).unwrap();
+    assert!(
+        findings.iter().any(|f| f.kind == "ordering" && f.message.contains("burst-storm")),
+        "inverted tail must be caught: {findings:?}"
+    );
+    // and dropping a bench from the index is a coverage finding
+    let partial = BenchLog::open(dir.join("partial.jsonl"));
+    let _ = std::fs::remove_file(partial.path());
+    partial.ingest("fleet_churn", "bench", &entries[0].payload).unwrap();
+    let findings = benchlog::diff(&partial, &baseline, &ci_opts).unwrap();
+    assert!(
+        findings.iter().any(|f| f.kind == "coverage" && f.message.contains("fleet_scale")),
+        "missing bench must be a coverage finding: {findings:?}"
+    );
+}
