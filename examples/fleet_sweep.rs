@@ -6,8 +6,12 @@
 //!   cargo run --release --example fleet_sweep
 
 use qaci::bench_harness::Table;
-use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem};
+use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem, SolveRequest};
 use qaci::system::Platform;
+
+fn req(algorithm: FleetAlgorithm) -> SolveRequest {
+    SolveRequest { algorithm, seed: 42, ..SolveRequest::default() }
+}
 
 fn main() {
     let base = Platform::fleet_edge();
@@ -25,8 +29,8 @@ fn main() {
     );
     for n in [1usize, 2, 4, 8, 16, 32, 64] {
         let fp = FleetProblem::new(base, AgentSpec::mixed_fleet(n));
-        let proposed = fleet::solve_proposed(&fp);
-        let equal = fleet::solve_equal_share(&fp);
+        let proposed = fp.solve(&SolveRequest::default());
+        let equal = fp.solve(&req(FleetAlgorithm::EqualShare));
         let random = fleet::feasible_random_mean(&fp, 20, 42);
         t.row(&[
             format!("{n}"),
@@ -42,8 +46,8 @@ fn main() {
     // who gets what at N = 8: the water-filling outcome per class
     let n = 8;
     let fp = FleetProblem::new(base, AgentSpec::mixed_fleet(n));
-    let proposed = fleet::solve_proposed(&fp);
-    let equal = fleet::solve_equal_share(&fp);
+    let proposed = fp.solve(&SolveRequest::default());
+    let equal = fp.solve(&req(FleetAlgorithm::EqualShare));
     let mut t = Table::new(
         "per-agent outcome at N = 8 (b̂ / server share μ)",
         &["agent", "class", "weight", "proposed b̂", "proposed μ", "equal b̂", "equal μ"],
@@ -70,7 +74,7 @@ fn main() {
     // sanity echo of the headline property
     let better = FleetAlgorithm::ALL
         .into_iter()
-        .map(|a| (a.name(), fleet::solve(&fp, a, 42).objective))
+        .map(|a| (a.name(), fp.solve(&req(a)).objective))
         .collect::<Vec<_>>();
     println!("\nobjectives at N = 8: {better:?}");
 }

@@ -6,8 +6,12 @@
 //!   cargo run --release --example hetero_fleet
 
 use qaci::bench_harness::Table;
-use qaci::opt::fleet::{self, AgentSpec, FleetProblem};
+use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem, SolveRequest};
 use qaci::system::Platform;
+
+fn equal_share() -> SolveRequest {
+    SolveRequest { algorithm: FleetAlgorithm::EqualShare, ..SolveRequest::default() }
+}
 
 fn main() {
     let base = Platform::fleet_edge();
@@ -28,7 +32,7 @@ fn main() {
                 base,
                 AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(spread)),
             );
-            fleet::solve_equal_share(&fp).objective - fleet::solve_proposed(&fp).objective
+            fp.solve(&equal_share()).objective - fp.solve(&SolveRequest::default()).objective
         };
         t.row(&[
             format!("{n}"),
@@ -43,8 +47,8 @@ fn main() {
     // outcome per class x tier, proposed vs equal
     let n = 7;
     let fp = FleetProblem::new(base, AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(2)));
-    let proposed = fleet::solve_proposed(&fp);
-    let equal = fleet::solve_equal_share(&fp);
+    let proposed = fp.solve(&SolveRequest::default());
+    let equal = fp.solve(&equal_share());
     let mut t = Table::new(
         "per-agent outcome at N = 7, full ladder (b̂ / server share μ)",
         &["agent", "class", "tier", "gain", "proposed b̂", "proposed μ", "equal b̂", "equal μ"],

@@ -19,11 +19,16 @@ use qaci::bench_harness::{emit_bench_artifact, num_or_null, scaled, Table};
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
 use qaci::fleet::{sim, FleetSimConfig};
-use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem};
+use qaci::opt::fleet::{AgentSpec, FleetAlgorithm, FleetProblem, FleetSpec, SolveRequest};
 use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
 use qaci::util::json::Json;
 use qaci::util::timer::Stopwatch;
+
+/// One-shot request for a named algorithm (default placement applies).
+fn req(algorithm: FleetAlgorithm, seed: u64) -> SolveRequest {
+    SolveRequest { algorithm, seed, ..SolveRequest::default() }
+}
 
 fn main() {
     let mut t = Table::new(
@@ -48,7 +53,7 @@ fn main() {
         let mut d_upper = [0.0f64; 3];
         for (k, algorithm) in FleetAlgorithm::ALL.into_iter().enumerate() {
             let sw = Stopwatch::start();
-            let alloc = fleet::solve(&fp, algorithm, 42);
+            let alloc = fp.solve(&req(algorithm, 42));
             let alloc_s = sw.elapsed_s().max(1e-9);
             objective[k] = alloc.objective;
             d_upper[k] = alloc.weighted_d_upper(&fp);
@@ -164,8 +169,8 @@ fn hetero_margin_ladder() {
                 Platform::fleet_edge(),
                 AgentSpec::tiered_fleet(n, &tiers),
             );
-            let proposed = fleet::solve_proposed(&fp);
-            let equal = fleet::solve_equal_share(&fp);
+            let proposed = fp.solve(&SolveRequest::default());
+            let equal = fp.solve(&req(FleetAlgorithm::EqualShare, 0));
             let margin = equal.objective - proposed.objective;
             t.row(&[
                 format!("{n}"),
@@ -178,10 +183,11 @@ fn hetero_margin_ladder() {
             ]);
             if spread == 0 {
                 // the uniform ladder is the homogeneous fleet, exactly
-                let homogeneous = fleet::solve_proposed(&FleetProblem::new(
+                let homogeneous = FleetProblem::new(
                     Platform::fleet_edge(),
                     AgentSpec::mixed_fleet(n),
-                ));
+                )
+                .solve(&SolveRequest::default());
                 assert_eq!(
                     proposed.objective, homogeneous.objective,
                     "N={n}: uniform tier ladder must reproduce the homogeneous fleet"
@@ -221,16 +227,17 @@ fn fixed_point_scenarios() {
     );
     for &(n, rps) in &[(2usize, 0.02), (2, 0.05), (4, 0.02), (4, 0.05), (6, 0.02)] {
         for spread in [0usize, 2] {
-            let fp = FleetProblem::new(
+            let mut spec = FleetSpec::new(
                 Platform::fleet_edge(),
                 AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(spread)),
-            )
-            .with_queue(QueueModel::uniform(QueueDiscipline::Fifo, n, rps));
+            );
+            spec.queue = Some(QueueModel::uniform(QueueDiscipline::Fifo, n, rps));
+            let fp = FleetProblem::from_spec(spec);
             for name in ["equal", "proposed"] {
                 let alloc = if name == "equal" {
-                    fleet::solve_equal_share(&fp)
+                    fp.solve(&req(FleetAlgorithm::EqualShare, 0))
                 } else {
-                    fleet::solve_proposed(&fp)
+                    fp.solve(&SolveRequest::default())
                 };
                 let result =
                     fp.interference_waits(&alloc.server_shares(), &alloc.airtime_shares());

@@ -17,6 +17,12 @@ derive no constraint in `obs::benchlog::diff`:
   equal-share for every contended size N >= 4; N in {1, 2} are ties.
   feasible-random rows carry no tracked fields (no ordering against a
   randomized policy is machine-invariant) but must keep being emitted.
+* fleet_placement — on the designated hot-server bank the local-search
+  placement's cost sits strictly below equal-spread (the same ordering
+  the bench asserts in-process); the uniform and single-server banks
+  are ties (local-search may land exactly on the round-robin split),
+  and nearest-server rows are coverage-only on the hot-server bank
+  (local <= nearest holds by construction but need not be strict).
 
 Entry lines replicate `obs::benchlog::Entry::to_line` byte for byte:
 compact JSON (no spaces, insertion order, whole numbers rendered
@@ -46,6 +52,8 @@ CHURN_SCENARIOS = [
 CHURN_POLICIES = ["online-proposed", "static-equal", "static-proposed"]
 SCALE_NS = [1, 2, 4, 8, 16, 32, 64]
 SCALE_POLICIES = ["proposed", "equal-share", "feasible-random"]
+PLACEMENT_SCENARIOS = ["hot-server", "uniform-2", "uniform-3", "single"]
+PLACEMENT_POLICIES = ["local-search", "equal-spread", "nearest-server"]
 
 
 def fnv1a64(data: bytes) -> int:
@@ -106,11 +114,30 @@ def scale_payload():
     return {"bench": "fleet_scale", "version": 1, "results": results}
 
 
+def placement_payload():
+    results = []
+    for scenario in PLACEMENT_SCENARIOS:
+        for policy in PLACEMENT_POLICIES:
+            row = {"scenario": scenario, "policy": policy}
+            if scenario == "hot-server":
+                if policy == "local-search":
+                    row["cost"] = 1
+                elif policy == "equal-spread":
+                    row["cost"] = 2
+                # nearest-server: coverage only (local <= nearest is not
+                # guaranteed strict)
+            else:
+                row["cost"] = 1  # tie: coverage only
+            results.append(row)
+    return {"bench": "fleet_placement", "version": 1, "results": results}
+
+
 def main():
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "benchlog-baseline.jsonl")
     lines = [
         entry_line(0, "fleet_churn", churn_payload()),
         entry_line(1, "fleet_scale", scale_payload()),
+        entry_line(2, "fleet_placement", placement_payload()),
     ]
     with open(out, "w") as f:
         f.write("\n".join(lines) + "\n")

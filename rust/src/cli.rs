@@ -13,7 +13,8 @@ use qaci::fleet::churn::{self, ChurnConfig};
 use qaci::fleet::{events, sim as fleet_sim, FleetSimConfig};
 use qaci::obs::benchlog::{self, BenchLog, DiffOptions, Query};
 use qaci::opt::fleet::{
-    self as fleet_opt, AdmissionPricing, AgentSpec, FleetAlgorithm, FleetProblem,
+    AdmissionPricing, AgentSpec, FleetAlgorithm, FleetProblem, FleetSpec, PlacementStrategy,
+    ServerSpec, SolveRequest,
 };
 use qaci::opt::{bisection, sca, Problem};
 use qaci::quant::Scheme;
@@ -25,7 +26,7 @@ use qaci::system::platform::DeviceProfile;
 use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
 use qaci::theory::expdist::ExponentialModel;
-use qaci::util::cli::Args;
+use qaci::util::cli::{Args, ParseError};
 use qaci::util::json::Json;
 use qaci::util::timer::Stopwatch;
 
@@ -36,7 +37,8 @@ pub fn main() {
         .describe("model", "blip2ish | gitish", Some("blip2ish"))
         .describe(
             "algorithm",
-            "proposed|exact|ppo|fixed-freq|random (fleet: proposed|equal|random)",
+            "proposed|exact|ppo|fixed-freq|feasible-random \
+             (fleet: proposed | equal-share | feasible-random)",
             Some("proposed"),
         )
         .describe("scheme", "uniform | pot", Some("uniform"))
@@ -51,6 +53,17 @@ pub fn main() {
             Some("orin"),
         )
         .describe("rate-mbps", "shared uplink goodput (fleet)", Some("400"))
+        .describe("servers", "fleet: number of identical edge servers S", Some("1"))
+        .describe(
+            "server-scales",
+            "fleet: per-server f̃^max scales, comma list in (0,1] (overrides --servers)",
+            None,
+        )
+        .describe(
+            "placement",
+            "fleet: agent→server placement, local-search | equal-spread | nearest-server",
+            Some("local-search"),
+        )
         .describe(
             "queue",
             "shared edge queue: fifo | priority | off (churn default fifo)",
@@ -150,16 +163,63 @@ fn platform_for(args: &Args, model: &CoModel) -> Platform {
     }
 }
 
-fn scheduler_for(args: &Args, platform: Platform, lambda: f64) -> Scheduler {
-    let algorithm = Algorithm::parse(&args.str("algorithm", "proposed"))
-        .unwrap_or(Algorithm::Proposed);
-    let scheme = Scheme::parse(&args.str("scheme", "uniform")).unwrap_or(Scheme::Uniform);
+fn scheduler_for(args: &Args, platform: Platform, lambda: f64) -> Result<Scheduler, ParseError> {
+    let algorithm = Algorithm::parse(&args.str("algorithm", "proposed"))?;
+    let scheme = Scheme::parse(&args.str("scheme", "uniform"))?;
     let mut s = Scheduler::new(platform, lambda, algorithm, scheme, args.usize("seed", 0) as u64);
     if algorithm == Algorithm::Ppo {
         eprintln!("training PPO policy (one-time)...");
         s.train_ppo(BudgetRanges::default(), PpoConfig::default());
     }
-    s
+    Ok(s)
+}
+
+/// Unwrap a CLI token parse, printing the actionable "expected one of"
+/// message on failure (callers then exit 2 — a usage error, not a crash).
+fn parsed<T>(r: Result<T, ParseError>) -> Option<T> {
+    match r {
+        Ok(v) => Some(v),
+        Err(e) => {
+            eprintln!("error: {e}");
+            None
+        }
+    }
+}
+
+/// `--queue` accepts `off` (no shared edge queue) on top of the
+/// discipline names, so the off-switch lives here, not in `system::queue`;
+/// the error choices include it.
+fn parse_queue(token: &str) -> Result<Option<QueueDiscipline>, ParseError> {
+    match token {
+        "off" | "none" => Ok(None),
+        tok => QueueDiscipline::parse(tok)
+            .map(Some)
+            .map_err(|e| ParseError { choices: &["fifo", "priority", "off"], ..e }),
+    }
+}
+
+/// The fleet's server bank: `--server-scales 1.0,0.5` (heterogeneous
+/// boxes) wins over `--servers N` (identical full-budget boxes).
+fn fleet_servers(args: &Args) -> Option<Vec<ServerSpec>> {
+    match args.opt_str("server-scales") {
+        Some(list) => {
+            let mut servers = Vec::new();
+            for tok in list.split(',') {
+                match tok.trim().parse::<f64>() {
+                    Ok(s) if s > 0.0 && s <= 1.0 => servers.push(ServerSpec::scaled(s)),
+                    _ => {
+                        eprintln!(
+                            "error: invalid --server-scales entry \"{tok}\" \
+                             (expected comma-separated numbers in (0, 1])"
+                        );
+                        return None;
+                    }
+                }
+            }
+            Some(servers)
+        }
+        None => Some(ServerSpec::identical(args.usize("servers", 1))),
+    }
 }
 
 fn cmd_info() -> i32 {
@@ -259,7 +319,9 @@ fn cmd_eval(args: &Args) -> i32 {
     let eval = EvalSet::load(&reg.dir, &reg.manifest, eval_name).unwrap();
     let vocab = Vocab::from_manifest(&reg.manifest).unwrap();
     let platform = platform_for(args, &model);
-    let scheduler = scheduler_for(args, platform, model.agent_weights.lambda);
+    let Some(scheduler) = parsed(scheduler_for(args, platform, model.agent_weights.lambda)) else {
+        return 2;
+    };
     let router = Router::new(
         QosPolicy::uniform(args.f64("t0", 3.5), args.f64("e0", 2.0)),
         scheduler,
@@ -319,7 +381,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let platform = platform_for(args, &model);
     let lambda = model.agent_weights.lambda;
     drop(model);
-    let scheduler = scheduler_for(args, platform, lambda);
+    let Some(scheduler) = parsed(scheduler_for(args, platform, lambda)) else { return 2 };
     let mut server = PipelinedServer {
         artifacts: reg.dir.clone(),
         model_name,
@@ -376,18 +438,24 @@ fn cmd_fleet(args: &Args) -> i32 {
 
 fn cmd_fleet_alloc(args: &Args) -> i32 {
     let n = args.usize("agents", 8).max(1);
-    let algorithm = FleetAlgorithm::parse(&args.str("algorithm", "proposed"))
-        .unwrap_or(FleetAlgorithm::Proposed);
+    let Some(algorithm) = parsed(FleetAlgorithm::parse(&args.str("algorithm", "proposed"))) else {
+        return 2;
+    };
+    let Some(placement) = parsed(PlacementStrategy::parse(&args.str("placement", "local-search")))
+    else {
+        return 2;
+    };
     let seed = args.usize("seed", 0) as u64;
-    let queue = QueueDiscipline::parse(&args.str("queue", "off"));
-    let Some(tiers) = DeviceProfile::parse_mix(&args.str("tiers", "orin")) else {
-        eprintln!("unknown --tiers (expected comma list of orin|xavier|phone)");
+    let Some(queue) = parsed(parse_queue(&args.str("queue", "off"))) else { return 2 };
+    let Some(tiers) = parsed(DeviceProfile::parse_mix(&args.str("tiers", "orin"))) else {
         return 2;
     };
-    let Some(pricing) = AdmissionPricing::parse(&args.str("admission-pricing", "uniform")) else {
-        eprintln!("unknown --admission-pricing (expected uniform | tiered)");
+    let Some(pricing) = parsed(AdmissionPricing::parse(&args.str("admission-pricing", "uniform")))
+    else {
         return 2;
     };
+    let Some(servers) = fleet_servers(args) else { return 2 };
+    let multi = servers != [ServerSpec::default()];
     // with the queue on, the allocator's analytic load and the simulated
     // arrivals must describe the same traffic: one rate drives both
     // (explicit --rps still wins for stress runs)
@@ -396,12 +464,14 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
     } else {
         args.f64("rps", 2.0)
     };
-    let mut fp = FleetProblem::new(Platform::fleet_edge(), AgentSpec::tiered_fleet(n, &tiers))
-        .with_link(args.f64("rate-mbps", 400.0) * 1e6, 2e-3)
-        .with_pricing(pricing);
+    let mut spec = FleetSpec::new(Platform::fleet_edge(), AgentSpec::tiered_fleet(n, &tiers));
+    spec.link_rate_bps = args.f64("rate-mbps", 400.0) * 1e6;
+    spec.pricing = pricing;
+    spec.servers = servers.clone();
     if let Some(discipline) = queue {
-        fp = fp.with_queue(QueueModel::uniform(discipline, n, arrival_rps));
+        spec.queue = Some(QueueModel::uniform(discipline, n, arrival_rps));
     }
+    let fp = FleetProblem::from_spec(spec);
     println!(
         "fleet: N={n} agents, tiers [{}], shared server f̃^max={:.1} GHz, shared uplink \
          {:.0} Mbps, algorithm={}, queue={}, pricing={}, arrivals {:.3}/s per agent",
@@ -413,9 +483,18 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
         pricing.name(),
         arrival_rps
     );
+    if multi {
+        println!(
+            "  servers: S={} (f̃^max scales [{}]), placement={}",
+            servers.len(),
+            servers.iter().map(|s| format!("{:.2}", s.freq_scale)).collect::<Vec<_>>().join(","),
+            placement.name()
+        );
+    }
 
     let sw = Stopwatch::start();
-    let alloc = fleet_opt::solve(&fp, algorithm, seed);
+    let req = SolveRequest { algorithm, placement, seed, ..SolveRequest::default() };
+    let alloc = fp.solve(&req);
     let solve_s = sw.elapsed_s();
 
     let cfg = FleetSimConfig {
@@ -427,19 +506,23 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
     };
     let report = fleet_sim::run(&fp, &alloc, &cfg);
 
-    let mut t = Table::new(
-        "per-agent allocation",
-        &[
-            "agent", "class", "tier", "w", "T0", "E0", "b̂", "μ", "α", "link ms", "e2e p50",
-            "e2e p95", "E mean", "served",
-        ],
-    );
+    // the "srv" column only appears on multi-server fleets, so the
+    // single-server table stays byte-identical to the historical output
+    let mut header = vec!["agent", "class", "tier"];
+    if multi {
+        header.push("srv");
+    }
+    header.extend_from_slice(&[
+        "w", "T0", "E0", "b̂", "μ", "α", "link ms", "e2e p50", "e2e p95", "E mean", "served",
+    ]);
+    let mut t = Table::new("per-agent allocation", &header);
     for (a, spec) in report.per_agent.iter().zip(&fp.agents) {
         let slot = &alloc.agents[a.agent];
-        t.row(&[
-            format!("{}", a.agent),
-            a.class.to_string(),
-            a.tier.to_string(),
+        let mut cells = vec![format!("{}", a.agent), a.class.to_string(), a.tier.to_string()];
+        if multi {
+            cells.push(format!("{}", alloc.placement.assignment[a.agent]));
+        }
+        cells.extend([
             format!("{:.1}", spec.weight),
             format!("{:.2}", spec.t0),
             format!("{:.2}", spec.e0),
@@ -456,6 +539,7 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
             if a.served > 0 { format!("{:.3}", a.energy_j.mean()) } else { "--".into() },
             format!("{}/{}", a.served, a.served + a.rejected as usize),
         ]);
+        t.row(&cells);
     }
     t.print();
 
@@ -505,14 +589,16 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
 /// leaves, load bursts) under the static t=0 allocations and the online
 /// warm-started re-allocation, and compare time-averaged fleet cost.
 fn cmd_fleet_churn(args: &Args) -> i32 {
-    let Some(tiers) = DeviceProfile::parse_mix(&args.str("tiers", "orin")) else {
-        eprintln!("unknown --tiers (expected comma list of orin|xavier|phone)");
+    let Some(tiers) = parsed(DeviceProfile::parse_mix(&args.str("tiers", "orin"))) else {
         return 2;
     };
-    let Some(pricing) = AdmissionPricing::parse(&args.str("admission-pricing", "uniform")) else {
-        eprintln!("unknown --admission-pricing (expected uniform | tiered)");
+    let Some(pricing) = parsed(AdmissionPricing::parse(&args.str("admission-pricing", "uniform")))
+    else {
         return 2;
     };
+    let Some(queue) = parsed(parse_queue(&args.str("queue", "fifo"))) else { return 2 };
+    let Some(servers) = fleet_servers(args) else { return 2 };
+    let multi = servers != [ServerSpec::default()];
     let cfg = ChurnConfig {
         initial_agents: args.usize("agents", 4).max(1),
         horizon_s: args.f64("horizon", 600.0),
@@ -524,11 +610,12 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         tick_s: args.f64("tick", 20.0),
         max_agents: args.usize("max-agents", 16),
         arrival_rps: args.f64("arrival-rps", 0.02),
-        queue: QueueDiscipline::parse(&args.str("queue", "fifo")),
+        queue,
         link_rate_bps: args.f64("rate-mbps", 400.0) * 1e6,
         link_base_latency_s: 2e-3,
         tiers,
         pricing,
+        servers,
         seed: args.usize("seed", 0) as u64,
     };
     let (tl, reports) = churn::compare(Platform::fleet_edge(), &cfg);
@@ -545,6 +632,15 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         cfg.queue.map_or("off", QueueDiscipline::name),
         cfg.pricing.name()
     );
+    if multi {
+        let scales: Vec<String> =
+            cfg.servers.iter().map(|s| format!("{:.2}", s.freq_scale)).collect();
+        println!(
+            "  servers: S={} (f̃^max scales [{}]), sticky placement + per-server warm re-solves",
+            cfg.servers.len(),
+            scales.join(",")
+        );
+    }
 
     let mut t = Table::new(
         "policy comparison (time-averaged fleet-weighted cost; lower is better)",

@@ -7,6 +7,7 @@ use crate::quant::Scheme;
 use crate::rl::{env::BudgetRanges, DesignEnv, Ppo, PpoConfig};
 use crate::system::dvfs::Governor;
 use crate::system::Platform;
+use crate::util::cli::ParseError;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -37,14 +38,19 @@ impl Algorithm {
         }
     }
 
-    pub fn parse(s: &str) -> Option<Algorithm> {
+    /// CLI-facing parser; the error names the token and valid choices.
+    pub fn parse(s: &str) -> Result<Algorithm, ParseError> {
         match s {
-            "proposed" | "sca" => Some(Algorithm::Proposed),
-            "exact" | "bisection" => Some(Algorithm::Exact),
-            "ppo" | "drl" => Some(Algorithm::Ppo),
-            "fixed-freq" | "fixed" => Some(Algorithm::FixedFreq),
-            "feasible-random" | "random" => Some(Algorithm::FeasibleRandom),
-            _ => None,
+            "proposed" | "sca" => Ok(Algorithm::Proposed),
+            "exact" | "bisection" => Ok(Algorithm::Exact),
+            "ppo" | "drl" => Ok(Algorithm::Ppo),
+            "fixed-freq" | "fixed" => Ok(Algorithm::FixedFreq),
+            "feasible-random" | "random" => Ok(Algorithm::FeasibleRandom),
+            _ => Err(ParseError::new(
+                "design algorithm",
+                s,
+                &["proposed", "exact", "ppo", "fixed-freq", "feasible-random"],
+            )),
         }
     }
 }

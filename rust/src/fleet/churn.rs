@@ -1,5 +1,10 @@
 //! Event-driven churn: agents join, burst and leave while contending for
-//! one edge server — and the allocation follows them online.
+//! the edge — and the allocation follows them online. With
+//! [`ChurnConfig::servers`] holding more than the single default server,
+//! the online policy additionally keeps a sticky agent→server seating
+//! (`sticky_placement`) and gates the warm re-solve **per server**
+//! ([`FleetProblem::server_fingerprint`]): an event that only touches one
+//! server's sub-problem reuses every other server's slots verbatim.
 //!
 //! The static allocator ([`crate::opt::fleet`]) answers "who gets what"
 //! for a fixed population; this module answers what the paper's
@@ -34,13 +39,15 @@
 
 use crate::obs::metrics as obs_metrics;
 use crate::opt::fleet::{
-    self, AdmissionPricing, AgentAllocation, AgentSpec, FleetAllocation, FleetProblem,
-    ProposedOptions,
+    self, AdmissionPricing, AgentAllocation, AgentSpec, FleetAlgorithm, FleetAllocation,
+    FleetProblem, FleetSpec, Placement, PlacementStrategy, ProposedOptions, ServerSpec,
+    SolveRequest,
 };
 use crate::system::platform::DeviceProfile;
 use crate::system::queue::{QueueDiscipline, QueueModel};
 use crate::system::Platform;
 use crate::theory::rate_distortion as rd;
+use crate::util::cli::ParseError;
 use crate::util::rng::Rng;
 use crate::util::timer::{Samples, Stopwatch};
 use std::collections::{HashMap, HashSet};
@@ -81,6 +88,11 @@ pub struct ChurnConfig {
     /// [`AdmissionPricing::Uniform`] reproduces the silicon-blind 2/λ
     /// scoring bit for bit)
     pub pricing: AdmissionPricing,
+    /// edge servers agents are placed across; the default single
+    /// full-budget server reproduces the single-server replay bit for
+    /// bit, while S > 1 turns on sticky seating with per-server
+    /// fingerprint-gated re-solves
+    pub servers: Vec<ServerSpec>,
     pub seed: u64,
 }
 
@@ -102,6 +114,7 @@ impl Default for ChurnConfig {
             link_base_latency_s: 2e-3,
             tiers: vec![DeviceProfile::orin()],
             pricing: AdmissionPricing::Uniform,
+            servers: vec![ServerSpec::default()],
             seed: 0,
         }
     }
@@ -248,12 +261,17 @@ impl ChurnPolicy {
         }
     }
 
-    pub fn parse(s: &str) -> Option<ChurnPolicy> {
+    /// CLI-facing parser; the error names the token and valid choices.
+    pub fn parse(s: &str) -> Result<ChurnPolicy, ParseError> {
         match s {
-            "static-equal" | "equal" => Some(ChurnPolicy::StaticEqual),
-            "static-proposed" | "static" => Some(ChurnPolicy::StaticProposed),
-            "online-proposed" | "online" => Some(ChurnPolicy::Online),
-            _ => None,
+            "static-equal" | "equal" => Ok(ChurnPolicy::StaticEqual),
+            "static-proposed" | "static" => Ok(ChurnPolicy::StaticProposed),
+            "online-proposed" | "online" => Ok(ChurnPolicy::Online),
+            _ => Err(ParseError::new(
+                "churn policy",
+                s,
+                &["static-equal", "static-proposed", "online-proposed"],
+            )),
         }
     }
 }
@@ -288,44 +306,14 @@ pub struct ChurnReport {
 
 /// Everything the fleet problem depends on, hashed — the same
 /// invalidation idiom as the coordinator scheduler's `config_stamp`.
-/// Covers each agent's device profile and channel gain: once agents
-/// differ in silicon, two fleets with identical contracts but different
-/// tiers must not alias to the same warm-start cache entry (regression-
-/// tested below).
+/// Since the [`fleet::FleetSpec`] redesign this is the spec's own
+/// `Hash` (floats by bit pattern), so the gate covers every field the
+/// solver can see — agent contracts, device profiles, channel gains,
+/// servers, link, queue rates, pricing — instead of chasing them one by
+/// one across four builder fields (regression-tested below).
 pub(crate) fn fingerprint(fp: &FleetProblem) -> u64 {
     let mut h = std::collections::hash_map::DefaultHasher::new();
-    fp.n().hash(&mut h);
-    for a in &fp.agents {
-        a.class.hash(&mut h);
-        for x in [a.lambda, a.t0, a.e0, a.weight] {
-            x.to_bits().hash(&mut h);
-        }
-        a.payload_bytes.hash(&mut h);
-        a.device.tier.hash(&mut h);
-        for x in [
-            a.device.spec.f_max,
-            a.device.spec.flops_per_cycle,
-            a.device.spec.pue,
-            a.device.spec.psi,
-            a.device.link_gain,
-            a.channel_gain,
-        ] {
-            x.to_bits().hash(&mut h);
-        }
-    }
-    fp.link_rate_bps.to_bits().hash(&mut h);
-    fp.link_base_latency_s.to_bits().hash(&mut h);
-    match &fp.queue {
-        None => 0u8.hash(&mut h),
-        Some(q) => {
-            1u8.hash(&mut h);
-            q.discipline.hash(&mut h);
-            for r in &q.arrival_rps {
-                r.to_bits().hash(&mut h);
-            }
-        }
-    }
-    fp.pricing.hash(&mut h);
+    fp.spec.hash(&mut h);
     h.finish()
 }
 
@@ -344,9 +332,11 @@ impl Population {
 
     pub(crate) fn problem(&self, base: Platform, cfg: &ChurnConfig) -> FleetProblem {
         let specs: Vec<AgentSpec> = self.live.iter().map(|&k| Self::spec(cfg, k)).collect();
-        let mut fp = FleetProblem::new(base, specs)
-            .with_link(cfg.link_rate_bps, cfg.link_base_latency_s)
-            .with_pricing(cfg.pricing);
+        let mut spec = FleetSpec::new(base, specs);
+        spec.link_rate_bps = cfg.link_rate_bps;
+        spec.link_base_latency_s = cfg.link_base_latency_s;
+        spec.pricing = cfg.pricing;
+        spec.servers = cfg.servers.clone();
         if let Some(discipline) = cfg.queue {
             let rates: Vec<f64> = self
                 .live
@@ -356,9 +346,9 @@ impl Population {
                     cfg.arrival_rps * boost
                 })
                 .collect();
-            fp = fp.with_queue(QueueModel::new(discipline, rates));
+            spec.queue = Some(QueueModel::new(discipline, rates));
         }
-        fp
+        FleetProblem::from_spec(spec)
     }
 
     pub(crate) fn apply(&mut self, event: ChurnEvent) {
@@ -391,6 +381,7 @@ fn static_rates(
     fp: &FleetProblem,
     live: &[u64],
     slots: &HashMap<u64, AgentAllocation>,
+    groups: Option<&[usize]>,
 ) -> (f64, f64) {
     let (mut cost, mut du) = (0.0, 0.0);
     let (services, activity): (Vec<f64>, Vec<f64>) = live
@@ -400,7 +391,33 @@ fn static_rates(
             _ => (f64::INFINITY, 0.0),
         })
         .unzip();
-    let waits = fp.queue_waits_given(&services, &activity);
+    // multi-server fleets queue per server: an agent's wait only sees
+    // the traffic of its own server's members (groups[i] = server of
+    // live[i], from the frozen t = 0 placement), modeled by masking the
+    // other servers' activity out of the shared analytic queue
+    let waits = match groups {
+        None => fp.queue_waits_given(&services, &activity),
+        Some(gs) => {
+            let mut waits = vec![0.0; live.len()];
+            let mut seen: Vec<usize> = gs.to_vec();
+            seen.sort_unstable();
+            seen.dedup();
+            for &g in &seen {
+                let masked: Vec<f64> = activity
+                    .iter()
+                    .zip(gs)
+                    .map(|(&a, &gg)| if gg == g { a } else { 0.0 })
+                    .collect();
+                let w = fp.queue_waits_given(&services, &masked);
+                for (i, &gg) in gs.iter().enumerate() {
+                    if gg == g {
+                        waits[i] = w[i];
+                    }
+                }
+            }
+            waits
+        }
+    };
     for (i, key) in live.iter().enumerate() {
         let spec = &fp.agents[i];
         let served_bits = slots.get(key).and_then(|slot| {
@@ -423,6 +440,82 @@ fn static_rates(
     (cost, du)
 }
 
+/// Sticky seating for the online multi-server policy: survivors keep
+/// their server, newcomers land on the least-loaded one (head-count per
+/// unit frequency budget), then a deterministic rebalance migrates the
+/// newest agent off the most overloaded server while that strictly
+/// reduces the squared capacity-normalized load imbalance — so a
+/// one-agent join never reshuffles the whole fleet, and migrations only
+/// happen when the imbalance is real. Each accepted migration counts as
+/// `placement.moves`; the event-level replay mirrors them
+/// queue-to-queue ([`EdgeQueue::drain_agent`](crate::system::queue::EdgeQueue::drain_agent)
+/// + re-queue).
+pub(crate) fn sticky_placement(
+    cfg: &ChurnConfig,
+    live: &[u64],
+    server_of: &mut HashMap<u64, usize>,
+) -> Placement {
+    let s = cfg.servers.len();
+    let mut counts = vec![0usize; s];
+    let mut assignment = vec![usize::MAX; live.len()];
+    for (i, key) in live.iter().enumerate() {
+        if let Some(&k) = server_of.get(key) {
+            assignment[i] = k;
+            counts[k] += 1;
+        }
+    }
+    for (i, key) in live.iter().enumerate() {
+        if assignment[i] == usize::MAX {
+            let k = (0..s)
+                .min_by(|&a, &b| {
+                    let la = counts[a] as f64 / cfg.servers[a].freq_scale;
+                    let lb = counts[b] as f64 / cfg.servers[b].freq_scale;
+                    la.total_cmp(&lb)
+                })
+                .expect("at least one server");
+            assignment[i] = k;
+            counts[k] += 1;
+            server_of.insert(*key, k);
+        }
+    }
+    // each migration strictly decreases Σ (count_k / freq_k)², so the
+    // rebalance terminates
+    loop {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for from in 0..s {
+            if counts[from] == 0 {
+                continue;
+            }
+            for to in 0..s {
+                if to == from {
+                    continue;
+                }
+                let (cf, ct) = (counts[from] as f64, counts[to] as f64);
+                let (ff, ft) = (cfg.servers[from].freq_scale, cfg.servers[to].freq_scale);
+                let delta = ((cf - 1.0).powi(2) - cf.powi(2)) / (ff * ff)
+                    + ((ct + 1.0).powi(2) - ct.powi(2)) / (ft * ft);
+                if delta < best.map_or(-1e-12, |(_, _, d)| d) {
+                    best = Some((from, to, delta));
+                }
+            }
+        }
+        let Some((from, to, _)) = best else { break };
+        let (i, key) = live
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| assignment[i] == from)
+            .max_by_key(|&(_, &k)| k)
+            .map(|(i, &k)| (i, k))
+            .expect("overloaded server has a member");
+        assignment[i] = to;
+        counts[from] -= 1;
+        counts[to] += 1;
+        server_of.insert(key, to);
+        obs_metrics::counter_add("placement.moves", 1);
+    }
+    Placement { assignment }
+}
+
 /// Replay `timeline` under `policy` and integrate the fleet cost.
 pub fn run_churn(
     base: Platform,
@@ -431,6 +524,7 @@ pub fn run_churn(
     cfg: &ChurnConfig,
 ) -> ChurnReport {
     let opts = ProposedOptions::default();
+    let multi = cfg.servers != [ServerSpec::default()];
     let mut pop = Population {
         live: timeline.initial.clone(),
         bursting: HashSet::new(),
@@ -442,23 +536,50 @@ pub fn run_churn(
     let mut solve_ms = Samples::new();
     let sw = Stopwatch::start();
     let mut alloc = match policy {
-        ChurnPolicy::StaticEqual => fleet::solve_equal_share(&fp),
-        ChurnPolicy::StaticProposed | ChurnPolicy::Online => fleet::solve_proposed(&fp),
+        ChurnPolicy::StaticEqual => fp.solve(&SolveRequest {
+            algorithm: FleetAlgorithm::EqualShare,
+            placement: PlacementStrategy::EqualSpread,
+            ..SolveRequest::default()
+        }),
+        ChurnPolicy::StaticProposed | ChurnPolicy::Online => fp.solve(&SolveRequest::default()),
     };
     solve_ms.push(sw.elapsed_s() * 1e3);
-    // frozen per-key slots for the static policies
+    // frozen per-key slots (and server seats) for the static policies
     let slots: HashMap<u64, AgentAllocation> = pop
         .live
         .iter()
         .zip(&alloc.agents)
         .map(|(&k, a)| (k, *a))
         .collect();
+    let static_server_of: HashMap<u64, usize> = pop
+        .live
+        .iter()
+        .zip(&alloc.placement.assignment)
+        .map(|(&k, &s)| (k, s))
+        .collect();
+    let static_groups = |live: &[u64]| -> Option<Vec<usize>> {
+        multi.then(|| {
+            live.iter().map(|k| static_server_of.get(k).copied().unwrap_or(0)).collect()
+        })
+    };
     // which key owns which row of `alloc` (online warm-start mapping)
     let mut assoc: Vec<u64> = pop.live.clone();
+    // online, multi-server: sticky key→server seating plus per-server
+    // fingerprints, so a re-solve only touches the servers an event
+    // actually changed
+    let mut server_of: HashMap<u64, usize> = HashMap::new();
+    let mut server_stamps: Vec<u64> = Vec::new();
+    if multi && policy == ChurnPolicy::Online {
+        for (key, &s) in pop.live.iter().zip(&alloc.placement.assignment) {
+            server_of.insert(*key, s);
+        }
+        server_stamps =
+            (0..cfg.servers.len()).map(|k| fp.server_fingerprint(&alloc.placement, k)).collect();
+    }
 
     let mut rates = match policy {
         ChurnPolicy::Online => (alloc.objective, alloc.weighted_d_upper(&fp)),
-        _ => static_rates(&fp, &pop.live, &slots),
+        _ => static_rates(&fp, &pop.live, &slots, static_groups(&pop.live).as_deref()),
     };
     let mut cost_trace = vec![(0.0, rates.0)];
     let (mut acc_cost, mut acc_du) = (0.0, 0.0);
@@ -480,25 +601,47 @@ pub fn run_churn(
             } else {
                 stamp = new_stamp;
                 obs_metrics::counter_add("solver.warm_start.miss", 1);
-                let prev_by_key: HashMap<u64, (f64, f64)> = assoc
+                let prev_by_key: HashMap<u64, AgentAllocation> = assoc
                     .iter()
                     .zip(&alloc.agents)
-                    .map(|(&k, a)| (k, (a.server_share, a.airtime_share)))
+                    .map(|(&k, a)| (k, *a))
                     .collect();
                 let prev: Vec<Option<(f64, f64)>> = pop
                     .live
                     .iter()
-                    .map(|k| prev_by_key.get(k).copied())
+                    .map(|k| prev_by_key.get(k).map(|a| (a.server_share, a.airtime_share)))
                     .collect();
                 let sw = Stopwatch::start();
-                alloc = fleet::solve_proposed_warm(&fp, &prev, opts);
+                alloc = if multi {
+                    // sticky seating: survivors keep their server, then
+                    // only the servers whose sub-problem fingerprint
+                    // actually moved are re-solved (warm); the rest
+                    // reuse their previous slots verbatim
+                    let placement = sticky_placement(cfg, &pop.live, &mut server_of);
+                    let fresh: Vec<u64> = (0..cfg.servers.len())
+                        .map(|k| fp.server_fingerprint(&placement, k))
+                        .collect();
+                    let dirty: Vec<bool> =
+                        fresh.iter().zip(&server_stamps).map(|(a, b)| a != b).collect();
+                    let reuse: Vec<Option<AgentAllocation>> =
+                        pop.live.iter().map(|k| prev_by_key.get(k).copied()).collect();
+                    server_stamps = fresh;
+                    let req = SolveRequest {
+                        options: opts,
+                        warm_start: Some(prev),
+                        ..SolveRequest::default()
+                    };
+                    fp.solve_with_placement_reusing(&placement, &req, &dirty, &reuse)
+                } else {
+                    fleet::solve_proposed_warm(&fp, &prev, opts)
+                };
                 solve_ms.push(sw.elapsed_s() * 1e3);
                 assoc.clone_from(&pop.live);
                 reallocations += 1;
             }
             rates = (alloc.objective, alloc.weighted_d_upper(&fp));
         } else {
-            rates = static_rates(&fp, &pop.live, &slots);
+            rates = static_rates(&fp, &pop.live, &slots, static_groups(&pop.live).as_deref());
         }
         cost_trace.push((t, rates.0));
     }
@@ -770,5 +913,57 @@ mod tests {
             (acc / cfg.horizon_s - r.time_avg_cost).abs() < 1e-9,
             "trace does not integrate to the reported average"
         );
+    }
+
+    #[test]
+    fn multi_server_churn_reuses_untouched_servers() {
+        // two identical servers with a fixed half-medium each: any one
+        // event (join, leave, burst) perturbs a single server's
+        // sub-problem, so the per-server fingerprint gate must re-solve
+        // that server and reuse the other one's slots verbatim
+        let servers = vec![
+            ServerSpec { airtime_fraction: Some(0.5), ..ServerSpec::default() },
+            ServerSpec { airtime_fraction: Some(0.5), ..ServerSpec::default() },
+        ];
+        let cfg = ChurnConfig { servers, ..ChurnConfig::default() };
+        let tl = timeline(&cfg);
+        assert!(tl.joins + tl.leaves + tl.bursts > 0);
+        let (r, m) =
+            crate::obs::metrics::scoped(|| run_churn(base(), &tl, ChurnPolicy::Online, &cfg));
+        assert!(r.reallocations > 0, "churn must trigger re-solves");
+        assert!(r.time_avg_cost.is_finite());
+        assert_eq!(m.counter("solver.warm_start.miss"), r.reallocations as u64);
+        assert!(m.counter("placement.server.resolved") > 0);
+        assert!(
+            m.counter("placement.server.reused") > 0,
+            "no server ever reused: the per-server gate is not gating"
+        );
+        // sticky seating: the final placement seats every live agent
+        assert_eq!(r.final_alloc.placement.assignment.len(), r.final_population);
+    }
+
+    #[test]
+    fn multi_server_online_still_beats_best_static() {
+        let cfg =
+            ChurnConfig { servers: ServerSpec::identical(2), ..ChurnConfig::default() };
+        let (tl, reports) = compare(base(), &cfg);
+        assert!(tl.joins + tl.leaves + tl.bursts > 0);
+        let cost = |p: ChurnPolicy| reports.iter().find(|r| r.policy == p).unwrap().time_avg_cost;
+        let online = cost(ChurnPolicy::Online);
+        let best_static = cost(ChurnPolicy::StaticEqual).min(cost(ChurnPolicy::StaticProposed));
+        assert!(online < best_static, "online {online} !< best static {best_static}");
+        for r in &reports {
+            assert!(r.time_avg_cost.is_finite(), "{:?}", r.policy);
+        }
+    }
+
+    #[test]
+    fn churn_policy_parse_errors_name_the_choices() {
+        assert_eq!(ChurnPolicy::parse("online"), Ok(ChurnPolicy::Online));
+        assert_eq!(ChurnPolicy::parse("static-equal"), Ok(ChurnPolicy::StaticEqual));
+        let err = ChurnPolicy::parse("offline").unwrap_err();
+        assert_eq!(err.token, "offline");
+        assert!(err.choices.contains(&"online-proposed"));
+        assert!(err.to_string().contains("static-proposed"));
     }
 }

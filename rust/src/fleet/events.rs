@@ -15,10 +15,13 @@
 //!   untouched and every policy sees byte-identical arrivals;
 //! * each request pays its agent-compute and nominal uplink time at the
 //!   operating point in force when it arrives, then its server stage
-//!   either serializes through the shared [`EdgeQueue`] (jobs re-priced
-//!   in place when a re-allocation swaps the share vector — the queue is
-//!   **not** reset) or runs on the agent's private server slice
-//!   ([`ChurnConfig::queue`] = `None`);
+//!   either serializes through its server's [`EdgeQueue`] — one queue
+//!   per [`ChurnConfig::servers`] entry; a re-solve that migrates an
+//!   agent moves its waiting backlog queue-to-queue
+//!   ([`EdgeQueue::drain_agent`] + re-queue, counted as
+//!   `events.migrations`) and jobs are re-priced in place when the
+//!   share vector changes (queues are **not** reset) — or runs on the
+//!   agent's private server slice ([`ChurnConfig::queue`] = `None`);
 //! * dispatch is **slot-bounded** ([`EdgeQueue::pop_due`]): nothing may
 //!   start at or after the next churn event, because that event may
 //!   re-price, retire or create lanes. The dispatch sequence is invariant
@@ -46,10 +49,13 @@
 //! (degrade, re-balance, or turn the burster away) protects the tail —
 //! the designated `burst-storm` bench scenario pins that ordering.
 
-use super::churn::{fingerprint, ChurnConfig, ChurnEvent, ChurnPolicy, Timeline};
+use super::churn::{fingerprint, sticky_placement, ChurnConfig, ChurnEvent, ChurnPolicy, Timeline};
 use crate::obs::metrics as obs_metrics;
 use crate::obs::Metrics;
-use crate::opt::fleet::{self, AgentAllocation, AgentSpec, ProposedOptions};
+use crate::opt::fleet::{
+    self, AgentAllocation, AgentSpec, FleetAlgorithm, PlacementStrategy, ProposedOptions,
+    ServerSpec, SolveRequest,
+};
 use crate::opt::Design;
 use crate::system::queue::EdgeQueue;
 use crate::system::{delay, Platform};
@@ -160,6 +166,9 @@ struct EventLane {
     rng: Rng,
     /// current arrival rate [req/s]
     rate: f64,
+    /// which server's queue this agent's requests ride (always 0 on a
+    /// single-server fleet; updated at every online re-solve)
+    server: usize,
     /// absolute time of the next arrival (∞ while the stream is off)
     next_arrival: f64,
     /// fluid mode: when this agent's private server slice frees up
@@ -182,6 +191,7 @@ impl EventLane {
                     ^ 0xE7E7_0000_0000_0000,
             ),
             rate: 0.0,
+            server: 0,
             next_arrival: f64::INFINITY,
             slice_free_at: 0.0,
             pending: VecDeque::new(),
@@ -259,7 +269,8 @@ fn complete(
     }
 }
 
-/// Generate arrivals strictly before `until` for every live lane.
+/// Generate arrivals strictly before `until` for every live lane. Each
+/// request lands in its agent's server's queue (`lane.server`).
 fn generate(
     base: Platform,
     cfg: &ChurnConfig,
@@ -267,7 +278,7 @@ fn generate(
     lanes: &mut BTreeMap<u64, EventLane>,
     stats: &mut BTreeMap<u64, EventAgentReport>,
     meta: &mut Vec<RequestMeta>,
-    queue: &mut Option<EdgeQueue>,
+    queues: &mut Option<Vec<EdgeQueue>>,
     until: f64,
 ) {
     for &key in &pop.live {
@@ -284,8 +295,10 @@ fn generate(
             let ready = arrival + pre;
             let tag = meta.len() as u64;
             meta.push(RequestMeta { key, arrival_s: arrival, t0: lane.spec.t0 });
-            match queue {
-                Some(q) => q.push_tagged(key as usize, tag, ready, t_server, lane.spec.weight),
+            match queues {
+                Some(qs) => {
+                    qs[lane.server].push_tagged(key as usize, tag, ready, t_server, lane.spec.weight)
+                }
                 None => lane.pending.push_back((tag, ready)),
             }
         }
@@ -300,13 +313,17 @@ fn dispatch_until(
     lanes: &mut BTreeMap<u64, EventLane>,
     stats: &mut BTreeMap<u64, EventAgentReport>,
     meta: &[RequestMeta],
-    queue: &mut Option<EdgeQueue>,
+    queues: &mut Option<Vec<EdgeQueue>>,
     until: f64,
 ) {
-    match queue {
-        Some(q) => {
-            while let Some((job, start, finish)) = q.pop_due(until) {
-                complete(stats, meta, job.tag, job.ready_s, start, finish);
+    match queues {
+        Some(qs) => {
+            // each server serializes independently; completion order
+            // across servers does not affect any per-request telemetry
+            for q in qs.iter_mut() {
+                while let Some((job, start, finish)) = q.pop_due(until) {
+                    complete(stats, meta, job.tag, job.ready_s, start, finish);
+                }
             }
         }
         None => {
@@ -338,13 +355,17 @@ fn dispatch_until(
 fn drop_backlog(
     lanes: &mut BTreeMap<u64, EventLane>,
     stats: &mut BTreeMap<u64, EventAgentReport>,
-    queue: &mut Option<EdgeQueue>,
+    queues: &mut Option<Vec<EdgeQueue>>,
     key: u64,
     departed: bool,
 ) {
     let mut n = 0u64;
-    if let Some(q) = queue {
-        n += q.drain_agent(key as usize).len() as u64;
+    if let Some(qs) = queues {
+        // the agent only ever queues on its own server, but draining all
+        // queues is cheap and immune to a stale lane-server mapping
+        for q in qs.iter_mut() {
+            n += q.drain_agent(key as usize).len() as u64;
+        }
     }
     if let Some(lane) = lanes.get_mut(&key) {
         n += lane.pending.len() as u64;
@@ -383,41 +404,71 @@ fn run_events_inner(
 ) -> EventReport {
     let _span = obs_metrics::span("events.run");
     let opts = ProposedOptions::default();
+    let multi = cfg.servers != [ServerSpec::default()];
     let mut pop = super::churn::Population {
         live: timeline.initial.clone(),
         bursting: HashSet::new(),
     };
     let mut fp = pop.problem(base, cfg);
     let mut stamp = fingerprint(&fp);
+    // the same t = 0 requests as the analytic replay, so the two views
+    // share placements and re-allocation schedules event for event
     let mut alloc = match policy {
-        ChurnPolicy::StaticEqual => fleet::solve_equal_share(&fp),
-        ChurnPolicy::StaticProposed | ChurnPolicy::Online => fleet::solve_proposed(&fp),
+        ChurnPolicy::StaticEqual => fp.solve(&SolveRequest {
+            algorithm: FleetAlgorithm::EqualShare,
+            placement: PlacementStrategy::EqualSpread,
+            ..SolveRequest::default()
+        }),
+        ChurnPolicy::StaticProposed | ChurnPolicy::Online => fp.solve(&SolveRequest::default()),
     };
     // frozen per-key slots for the static policies (joiners have none)
     let slots: HashMap<u64, AgentAllocation> =
         pop.live.iter().zip(&alloc.agents).map(|(&k, a)| (k, *a)).collect();
     let mut assoc: Vec<u64> = pop.live.clone();
+    // online, multi-server: sticky seating + per-server fingerprints,
+    // mirroring the analytic replay's gate
+    let mut server_of: HashMap<u64, usize> = HashMap::new();
+    let mut server_stamps: Vec<u64> = Vec::new();
+    if multi && policy == ChurnPolicy::Online {
+        for (key, &s) in pop.live.iter().zip(&alloc.placement.assignment) {
+            server_of.insert(*key, s);
+        }
+        server_stamps =
+            (0..cfg.servers.len()).map(|k| fp.server_fingerprint(&alloc.placement, k)).collect();
+    }
 
     let mut lanes: BTreeMap<u64, EventLane> = BTreeMap::new();
     let mut stats: BTreeMap<u64, EventAgentReport> = BTreeMap::new();
-    for (&k, row) in pop.live.iter().zip(&alloc.agents) {
+    for ((&k, row), &srv) in pop.live.iter().zip(&alloc.agents).zip(&alloc.placement.assignment) {
         let mut lane = EventLane::new(k, cfg, Some(row));
+        lane.server = srv;
         lane.set_rate(0.0, cfg.arrival_rps);
         stats.insert(k, EventAgentReport::new(k, lane.spec.class, lane.spec.device.tier));
         lanes.insert(k, lane);
     }
 
-    let mut queue = cfg.queue.map(EdgeQueue::new);
+    // one edge queue per server (honoring per-server discipline
+    // overrides); `None` keeps PR 1's fluid per-agent slices
+    let mut queues: Option<Vec<EdgeQueue>> = cfg.queue.map(|d| {
+        cfg.servers.iter().map(|srv| EdgeQueue::new(srv.queue.unwrap_or(d))).collect()
+    });
     let mut meta: Vec<RequestMeta> = Vec::new();
     let (mut reallocations, mut realloc_skipped) = (0usize, 0usize);
 
     for &(t, event) in &timeline.events {
-        generate(base, cfg, &pop, &mut lanes, &mut stats, &mut meta, &mut queue, t);
-        dispatch_until(base, cfg, &pop, &mut lanes, &mut stats, &meta, &mut queue, t);
+        generate(base, cfg, &pop, &mut lanes, &mut stats, &mut meta, &mut queues, t);
+        dispatch_until(base, cfg, &pop, &mut lanes, &mut stats, &meta, &mut queues, t);
         // per-slot queue-depth timeline: the backlog left at each event
         // boundary after everything dispatchable before it has started
-        if let Some(q) = &queue {
-            obs_metrics::observe("events.queue_depth", q.len() as f64);
+        // (fleet total, plus a per-server breakdown on S > 1 fleets)
+        if let Some(qs) = &queues {
+            let depth: usize = qs.iter().map(EdgeQueue::len).sum();
+            obs_metrics::observe("events.queue_depth", depth as f64);
+            if multi {
+                for (k, q) in qs.iter().enumerate() {
+                    obs_metrics::observe(&format!("events.queue_depth.s{k}"), q.len() as f64);
+                }
+            }
         }
         pop.apply(event);
         match event {
@@ -429,7 +480,7 @@ fn run_events_inner(
                 lanes.insert(k, lane);
             }
             ChurnEvent::Leave(k) => {
-                drop_backlog(&mut lanes, &mut stats, &mut queue, k, true);
+                drop_backlog(&mut lanes, &mut stats, &mut queues, k, true);
                 lanes.remove(&k);
             }
             ChurnEvent::BurstStart(k) => {
@@ -453,48 +504,93 @@ fn run_events_inner(
             } else {
                 stamp = new_stamp;
                 obs_metrics::counter_add("solver.warm_start.miss", 1);
-                let prev_by_key: HashMap<u64, (f64, f64)> = assoc
+                let prev_by_key: HashMap<u64, AgentAllocation> =
+                    assoc.iter().zip(&alloc.agents).map(|(&k, a)| (k, *a)).collect();
+                let prev: Vec<Option<(f64, f64)>> = pop
+                    .live
                     .iter()
-                    .zip(&alloc.agents)
-                    .map(|(&k, a)| (k, (a.server_share, a.airtime_share)))
+                    .map(|k| prev_by_key.get(k).map(|a| (a.server_share, a.airtime_share)))
                     .collect();
-                let prev: Vec<Option<(f64, f64)>> =
-                    pop.live.iter().map(|k| prev_by_key.get(k).copied()).collect();
-                alloc = fleet::solve_proposed_warm(&fp, &prev, opts);
+                alloc = if multi {
+                    // the analytic replay's sticky seating + per-server
+                    // gate, so both views re-solve the same servers
+                    let placement = sticky_placement(cfg, &pop.live, &mut server_of);
+                    let fresh: Vec<u64> = (0..cfg.servers.len())
+                        .map(|k| fp.server_fingerprint(&placement, k))
+                        .collect();
+                    let dirty: Vec<bool> =
+                        fresh.iter().zip(&server_stamps).map(|(a, b)| a != b).collect();
+                    let reuse: Vec<Option<AgentAllocation>> =
+                        pop.live.iter().map(|k| prev_by_key.get(k).copied()).collect();
+                    server_stamps = fresh;
+                    let req = SolveRequest {
+                        options: opts,
+                        warm_start: Some(prev),
+                        ..SolveRequest::default()
+                    };
+                    fp.solve_with_placement_reusing(&placement, &req, &dirty, &reuse)
+                } else {
+                    fleet::solve_proposed_warm(&fp, &prev, opts)
+                };
                 assoc.clone_from(&pop.live);
                 reallocations += 1;
                 let mut revoked: Vec<u64> = Vec::new();
+                let mut migrated: Vec<(u64, usize, usize)> = Vec::new();
                 for (i, &k) in pop.live.iter().enumerate() {
                     let lane = lanes.get_mut(&k).expect("live agent has a lane");
                     let had = lane.design.is_some();
                     lane.retarget(&alloc.agents[i]);
+                    let srv = alloc.placement.assignment[i];
+                    if srv != lane.server {
+                        migrated.push((k, lane.server, srv));
+                        lane.server = srv;
+                    }
                     if lane.design.is_none() && had {
                         revoked.push(k);
                     }
                 }
+                // a migrated agent's waiting backlog follows it to the
+                // new server's queue (its in-service job, if any, drains
+                // where it started); ready times stand
+                if let Some(qs) = queues.as_mut() {
+                    for &(k, from, to) in &migrated {
+                        for job in qs[from].drain_agent(k as usize) {
+                            qs[to].push_tagged(
+                                job.agent,
+                                job.tag,
+                                job.ready_s,
+                                job.service_s,
+                                job.weight,
+                            );
+                        }
+                        obs_metrics::counter_add("events.migrations", 1);
+                    }
+                }
                 // a revoked agent's backlog is turned away at admission
                 for k in revoked {
-                    drop_backlog(&mut lanes, &mut stats, &mut queue, k, false);
+                    drop_backlog(&mut lanes, &mut stats, &mut queues, k, false);
                 }
                 // waiting jobs follow the new share vector (ready times
-                // stand — those stages already ran); the queue itself is
-                // NOT reset: free_at, seq and in-service work carry over
-                if let Some(q) = queue.as_mut() {
-                    q.reprice(|job| {
-                        let lane = &lanes[&(job.agent as u64)];
-                        match lane.stage_times(base, cfg) {
-                            Some((_, t_server)) => (t_server, lane.spec.weight),
-                            None => (job.service_s, job.weight),
-                        }
-                    });
+                // stand — those stages already ran); the queues are NOT
+                // reset: free_at, seq and in-service work carry over
+                if let Some(qs) = queues.as_mut() {
+                    for q in qs.iter_mut() {
+                        q.reprice(|job| {
+                            let lane = &lanes[&(job.agent as u64)];
+                            match lane.stage_times(base, cfg) {
+                                Some((_, t_server)) => (t_server, lane.spec.weight),
+                                None => (job.service_s, job.weight),
+                            }
+                        });
+                    }
                 }
             }
         }
     }
     // the horizon bounds arrivals; residual backlog then drains fully so
     // every request reaches a terminal state (conservation)
-    generate(base, cfg, &pop, &mut lanes, &mut stats, &mut meta, &mut queue, cfg.horizon_s);
-    dispatch_until(base, cfg, &pop, &mut lanes, &mut stats, &meta, &mut queue, f64::INFINITY);
+    generate(base, cfg, &pop, &mut lanes, &mut stats, &mut meta, &mut queues, cfg.horizon_s);
+    dispatch_until(base, cfg, &pop, &mut lanes, &mut stats, &meta, &mut queues, f64::INFINITY);
 
     let per_agent: Vec<EventAgentReport> = stats.into_values().collect();
     let mut report = EventReport {
@@ -819,6 +915,33 @@ mod tests {
         let gate = s.metrics.counter("solver.warm_start.hit")
             + s.metrics.counter("solver.warm_start.miss");
         assert_eq!(gate, 0);
+    }
+
+    #[test]
+    fn multi_server_replay_conserves_requests_and_tracks_per_server_depth() {
+        // S = 2 end-to-end: per-server queues, sticky placement and
+        // queue-to-queue migration must never strand a request, the
+        // depth timeline gains a per-server breakdown, and the
+        // re-allocation schedule still matches the analytic replay
+        let cfg = ChurnConfig { servers: ServerSpec::identical(2), ..ChurnConfig::default() };
+        let tl = timeline(&cfg);
+        for policy in ChurnPolicy::ALL {
+            let r = run_events(base(), &tl, policy, &cfg);
+            assert_eq!(
+                r.arrivals,
+                r.completed + r.rejected + r.dropped_departure,
+                "{policy:?}"
+            );
+            assert!(r.arrivals > 0);
+        }
+        let online = run_events(base(), &tl, ChurnPolicy::Online, &cfg);
+        assert!(online.reallocations > 0, "churn must trigger re-solves");
+        assert!(online.metrics.histogram("events.queue_depth").is_some());
+        assert!(online.metrics.histogram("events.queue_depth.s0").is_some());
+        assert!(online.metrics.histogram("events.queue_depth.s1").is_some());
+        let analytic = super::super::churn::run_churn(base(), &tl, ChurnPolicy::Online, &cfg);
+        assert_eq!(online.reallocations, analytic.reallocations);
+        assert_eq!(online.realloc_skipped, analytic.realloc_skipped);
     }
 
     #[test]

@@ -23,12 +23,16 @@
 //! * `None` — PR 1's fluid sharing: every agent's server stage runs
 //!   concurrently on its frequency slice (optimistic; no cross-agent
 //!   interference beyond the shared medium).
-//! * `Some(discipline)` — the server-stage jobs of **all** agents
-//!   serialize through one shared [`EdgeQueue`] (FIFO or weighted
-//!   priority): a burst from one agent head-of-line blocks the rest, and
-//!   the measured per-request queue wait lands in the report — the
+//! * `Some(discipline)` — the server-stage jobs serialize through one
+//!   [`EdgeQueue`] **per server** (FIFO or weighted priority, honoring
+//!   per-server [`ServerSpec::queue`] overrides), routed by the
+//!   allocation's [`Placement`](crate::opt::fleet::Placement): a burst
+//!   from one agent head-of-line blocks its server's tenants, and the
+//!   measured per-request queue wait lands in the report — the
 //!   event-level counterpart of the allocator's analytic
-//!   [`QueueModel`](crate::system::queue::QueueModel) term.
+//!   [`QueueModel`](crate::system::queue::QueueModel) term. A
+//!   single-server fleet reproduces the historical one-shared-queue
+//!   behavior exactly.
 //!
 //! Delay/energy are the paper's models (eq. 4–9) at the planned
 //! frequencies; wall-clock execution is intentionally absent so the loop
@@ -45,7 +49,7 @@ use crate::coordinator::scheduler::Algorithm;
 use crate::coordinator::telemetry::{RequestRecord, Telemetry};
 use crate::coordinator::Scheduler;
 use crate::data::workload::{generate, Arrival};
-use crate::opt::fleet::{FleetAllocation, FleetProblem};
+use crate::opt::fleet::{FleetAllocation, FleetProblem, ServerSpec};
 use crate::opt::Design;
 use crate::quant::Scheme;
 use crate::system::channel::MultiAccessChannel;
@@ -127,6 +131,8 @@ pub struct FleetReport {
 /// One admitted agent's prepared request stream plus its runtime state.
 struct Lane {
     agent: usize,
+    /// which server's queue this lane's server stages ride
+    server: usize,
     design: Design,
     platform: Platform,
     weight: f64,
@@ -206,30 +212,43 @@ fn dispatch_fluid(lanes: &mut [Lane], medium: &mut MultiAccessChannel) {
     }
 }
 
-/// All server stages serialize through one shared [`EdgeQueue`]. The
-/// population is fixed for the whole run, so the unbounded [`EdgeQueue::pop`]
-/// is sound here; the churning variant of this loop lives in
-/// [`super::events`] and must use the slot-bounded
-/// [`EdgeQueue::pop_due`] instead (lanes appear, retire and re-price
-/// mid-flight there).
+/// Server stages serialize through one [`EdgeQueue`] per server, routed
+/// by each lane's placement. The population is fixed for the whole run,
+/// so the unbounded [`EdgeQueue::pop`] is sound here; the churning
+/// variant of this loop lives in [`super::events`] and must use the
+/// slot-bounded [`EdgeQueue::pop_due`] instead (lanes appear, retire and
+/// re-price mid-flight there).
 fn dispatch_queued(
     lanes: &mut [Lane],
     medium: &mut MultiAccessChannel,
     discipline: QueueDiscipline,
+    servers: &[ServerSpec],
 ) {
-    let mut queue = EdgeQueue::new(discipline);
+    let mut queues: Vec<EdgeQueue> =
+        servers.iter().map(|s| EdgeQueue::new(s.queue.unwrap_or(discipline))).collect();
     loop {
         let mut pushed_any = false;
         for lane in lanes.iter_mut() {
             if lane.head.is_none() {
                 if let Some((ready, _, _)) = lane.ready_head(medium) {
                     let t_server = delay::server_delay(&lane.platform, lane.design.f_tilde);
-                    queue.push(lane.agent, ready, t_server, lane.weight);
+                    queues[lane.server].push(lane.agent, ready, t_server, lane.weight);
                     pushed_any = true;
                 }
             }
         }
-        let Some((job, _, finish)) = queue.pop() else {
+        // one dispatch per round, taken from the first server with a
+        // dispatchable job — servers are independent, so the cross-server
+        // completion order carries no telemetry; a single-server fleet
+        // reproduces the historical shared-queue order exactly
+        let mut popped = None;
+        for q in queues.iter_mut() {
+            if let Some((job, _, finish)) = q.pop() {
+                popped = Some((job, finish));
+                break;
+            }
+        }
+        let Some((job, finish)) = popped else {
             debug_assert!(!pushed_any, "pushed jobs must be dispatchable");
             break;
         };
@@ -336,6 +355,7 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
 
         lanes.push(Lane {
             agent: i,
+            server: alloc.placement.assignment.get(i).copied().unwrap_or(0),
             design,
             platform,
             weight: spec.weight,
@@ -355,7 +375,7 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
     // ---- phase 2: dispatch ----
     match cfg.queue {
         None => dispatch_fluid(&mut lanes, &mut medium),
-        Some(discipline) => dispatch_queued(&mut lanes, &mut medium, discipline),
+        Some(discipline) => dispatch_queued(&mut lanes, &mut medium, discipline, &fp.servers),
     }
 
     // ---- rollup ----
@@ -579,6 +599,32 @@ mod tests {
             queued.e2e_s.max(),
             plain.e2e_s.max()
         );
+    }
+
+    #[test]
+    fn multi_server_run_routes_each_lane_to_its_servers_queue() {
+        // a 2-server fleet serves end to end under the queued model:
+        // every admitted request completes, none vanish, and the run is
+        // deterministic — the placement decides which queue each lane's
+        // server stages ride
+        use crate::opt::fleet::{ServerSpec, SolveRequest};
+        let fp = fp(6).with_servers(ServerSpec::identical(2));
+        let alloc = fp.solve(&SolveRequest::default());
+        assert_eq!(alloc.placement.assignment.len(), 6);
+        assert!(
+            alloc.placement.assignment.iter().any(|&s| s == 0)
+                && alloc.placement.assignment.iter().any(|&s| s == 1),
+            "two identical servers should both be used: {:?}",
+            alloc.placement.assignment
+        );
+        let mut c = cfg(6);
+        c.queue = Some(QueueDiscipline::Fifo);
+        let a = run(&fp, &alloc, &c);
+        assert_eq!(a.served, alloc.admitted * 6);
+        assert_eq!(a.rejected, ((fp.n() - alloc.admitted) * 6) as u64);
+        let b = run(&fp, &alloc, &c);
+        assert_eq!(a.e2e_s.mean(), b.e2e_s.mean());
+        assert_eq!(a.queue_wait_s.mean(), b.queue_wait_s.mean());
     }
 
     #[test]

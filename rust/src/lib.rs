@@ -32,14 +32,47 @@
 //! | observability | [`obs`] (metrics/spans, shared percentiles, bench-log store) |
 //!
 //! The **fleet layer** generalizes the paper's single agent–server pair to
-//! N agents contending for one edge server and one wireless medium:
-//! airtime shares and per-agent channel gains live in
-//! [`system::channel::MultiAccessChannel`], the shared edge queue
-//! (analytic M/G/1 feedback + event-level dispatch) in [`system::queue`],
-//! the joint multi-agent allocator (per-agent bisection + water-filling +
-//! admission control, queue-aware delay budgets) in [`opt::fleet`], and
-//! the fleet serving loop in [`fleet::sim`]. Entry points: `qaci fleet`,
-//! `benches/fleet_scale.rs`, `examples/fleet_sweep.rs`.
+//! N agents contending for S edge servers and one wireless medium. A
+//! fleet instance is one plain config struct,
+//! [`opt::fleet::FleetSpec`] (shared silicon, the
+//! [`opt::fleet::ServerSpec`] bank, link, queue feedback, admission
+//! pricing), validated once by
+//! [`opt::fleet::FleetProblem::from_spec`]; every solve goes through one
+//! entry point, [`opt::fleet::FleetProblem::solve`], driven by an
+//! [`opt::fleet::SolveRequest`] (algorithm + options + placement
+//! strategy + warm start + seed). Airtime shares and per-agent channel
+//! gains live in [`system::channel::MultiAccessChannel`], the edge
+//! queues (analytic M/G/1 feedback + event-level dispatch) in
+//! [`system::queue`], the joint multi-agent allocator (per-agent
+//! bisection + water-filling + admission control, queue-aware delay
+//! budgets) in [`opt::fleet`], and the fleet serving loop in
+//! [`fleet::sim`]. The old `solve_*` free functions remain as thin
+//! wrappers over `SolveRequest`s (bit-identical, regression-tested).
+//! Entry points: `qaci fleet`, `benches/fleet_scale.rs`,
+//! `examples/fleet_sweep.rs`.
+//!
+//! ## Multi-server placement
+//!
+//! With `FleetSpec::servers` holding more than one
+//! [`opt::fleet::ServerSpec`] (per-server frequency budget, optional
+//! explicit airtime slice, optional queue-discipline override), the
+//! solver composes an outer **placement** loop with the exact
+//! single-server inner allocator: an
+//! [`opt::fleet::Placement`] maps each agent to a server, each server's
+//! members are solved as an independent sub-fleet (its airtime slice
+//! split by head count unless pinned), and
+//! [`opt::fleet::PlacementStrategy`] picks the outer search —
+//! `local-search` (best-improving single-agent moves from the better of
+//! the two baselines, each accepted move counted as `placement.moves`)
+//! against the `equal-spread` and `nearest-server` baselines. An S = 1
+//! bank collapses to the legacy single-server solver bit for bit. The
+//! serving loop runs one [`system::queue::EdgeQueue`] per server routed
+//! by the allocation's placement; churn keeps survivors seated
+//! (sticky placement), re-solving only servers whose sub-fleet
+//! fingerprint changed and migrating queued work between per-server
+//! queues when an agent moves. Entry points: `qaci fleet --servers 3
+//! --placement local-search` (also `--server-scales 1.0,0.5`, and
+//! `--churn --events` on top), `benches/fleet_placement.rs`.
 //!
 //! ## Heterogeneous silicon
 //!
@@ -67,10 +100,14 @@
 //! edge resources stay fixed. [`fleet::churn`] replays a deterministic
 //! Poisson timeline of joins/leaves/load-bursts and re-runs the
 //! water-filling allocator **online** — warm-started from the previous
-//! [`opt::fleet::FleetAllocation`] and gated by a fleet config
-//! fingerprint (the same invalidation idiom the coordinator's scheduler
-//! uses for its plan cache), so an unchanged fleet never re-solves and a
-//! changed one re-converges in a few exchange moves. Static t = 0
+//! [`opt::fleet::FleetAllocation`] and gated by a fingerprint of the
+//! whole [`opt::fleet::FleetSpec`] (the same invalidation idiom the
+//! coordinator's scheduler uses for its plan cache), so an unchanged
+//! fleet never re-solves and a changed one re-converges in a few
+//! exchange moves. On a multi-server bank the gate refines per server:
+//! survivors keep their seat, newcomers go to the least-loaded box, and
+//! only servers whose sub-fleet fingerprint actually changed are
+//! re-solved (the rest reuse their previous slots). Static t = 0
 //! allocations ride the same timeline for comparison: they strand the
 //! shares of departed agents, turn joiners away, and lose their frozen
 //! designs when a burst blows the queue-aware delay budget — which is
@@ -94,7 +131,11 @@
 //! refinement), lanes are created/retired at joins/leaves (queued work
 //! of a leaver is dropped *and accounted* — every request completes, is
 //! rejected, or is dropped at departure), and online re-allocations
-//! re-price the waiting queue without resetting it. The result is tail
+//! re-price the waiting queues without resetting them. On a
+//! multi-server bank the replay runs one queue per server; when an
+//! online re-solve moves an agent, its waiting backlog is drained from
+//! the old server's queue and re-queued on the new one (counted as
+//! `events.migrations`). The result is tail
 //! telemetry the analytic path cannot see: per-agent/fleet p50/p95/p99
 //! queue wait and end-to-end delay plus deadline-violation rate. Under
 //! burst overload frozen static shares let the queue diverge while the
@@ -108,11 +149,11 @@
 //!
 //! ## Bench artifacts
 //!
-//! `benches/fleet_churn.rs` and `benches/fleet_scale.rs` emit
-//! machine-readable results next to their tables —
-//! `BENCH_fleet_churn.json` / `BENCH_fleet_scale.json` (or under
-//! `$QACI_BENCH_DIR`), uploaded by the `bench-artifacts` CI job. Schema
-//! (version 1):
+//! `benches/fleet_churn.rs`, `benches/fleet_scale.rs` and
+//! `benches/fleet_placement.rs` emit machine-readable results next to
+//! their tables — `BENCH_fleet_churn.json` / `BENCH_fleet_scale.json` /
+//! `BENCH_fleet_placement.json` (or under `$QACI_BENCH_DIR`), uploaded
+//! by the `bench-artifacts` CI job. Schema (version 1):
 //!
 //! ```json
 //! {
@@ -136,14 +177,17 @@
 //!
 //! `fleet_scale` records carry `scenario: "scale-<N>"`, `policy` (the
 //! allocator name), `cost`, `d_upper`, `admitted`, `p99_s` and
-//! `wall_clock_s` (the allocation solve time). Fields whose measurement
-//! does not exist (e.g. a p99 over zero completions) are `null`, never
-//! NaN: emission ([`bench_harness::emit_bench_artifact`]) re-parses the
-//! file and rejects any non-finite number, the benches re-check their
-//! ordering invariants (online ≤ best-static under churn, online p99
-//! under burst-storm, proposed ≤ equal at N ≥ 4) against the parsed
-//! document, and the CI job validates the files once more before
-//! uploading.
+//! `wall_clock_s` (the allocation solve time); `fleet_placement`
+//! records carry the placement-strategy name as `policy` plus `cost`,
+//! `d_upper`, `admitted` and `placement_moves` per server-bank
+//! scenario. Fields whose measurement does not exist (e.g. a p99 over
+//! zero completions) are `null`, never NaN: emission
+//! ([`bench_harness::emit_bench_artifact`]) re-parses the file and
+//! rejects any non-finite number, the benches re-check their ordering
+//! invariants (online ≤ best-static under churn, online p99 under
+//! burst-storm, proposed ≤ equal at N ≥ 4, local-search < equal-spread
+//! on the hot-server bank) against the parsed document, and the CI job
+//! validates the files once more before uploading.
 //!
 //! ## Observability
 //!
@@ -164,9 +208,14 @@
 //! * `queue.*` — `push`/`pop`/`drain.calls`/`drain.jobs`/
 //!   `reprice.calls`/`reprice.jobs` counters plus `queue.depth` and
 //!   `queue.wait_s` histograms recorded by [`system::queue::EdgeQueue`];
+//! * `placement.*` — `placement.moves` (accepted local-search /
+//!   rebalance migrations) and the per-server warm-path counters
+//!   `placement.server.resolved`/`placement.server.reused`;
 //! * `events.*` — replay counters (`arrivals`, `completed`, `dropped`,
-//!   `rejected`, `deadline_misses`, `reallocations`, `realloc_skipped`)
-//!   and the per-slot `events.queue_depth` timeline histogram;
+//!   `rejected`, `deadline_misses`, `reallocations`, `realloc_skipped`,
+//!   `events.migrations`) and the per-slot `events.queue_depth`
+//!   timeline histogram (plus `events.queue_depth.s<k>` per server on
+//!   multi-server banks);
 //! * `span.<name>.s` — wall-clock span histograms recorded when an
 //!   [`obs::metrics::Span`] guard drops (e.g. `span.solver.proposed.s`,
 //!   `span.events.run.s`).

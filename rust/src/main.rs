@@ -5,11 +5,14 @@
 //!   plan     run the joint design for a (T0, E0) budget and print the plan
 //!   eval     serve the eval set through the engine, report CIDEr/delay/energy
 //!   serve    threaded pipelined serving demo over a Poisson workload
-//!   fleet    N agents on one edge server + one medium: joint multi-agent
-//!            allocation (proposed | equal-share | feasible-random) and the
+//!   fleet    N agents on S edge servers + one medium: joint placement
+//!            (`--servers 3` / `--server-scales 1.0,0.5` with `--placement
+//!            local-search|equal-spread|nearest-server`) and per-server
+//!            allocation (proposed | equal-share | feasible-random), plus the
 //!            fleet serving loop — artifact-free; `--tiers orin,xavier,phone`
 //!            mixes heterogeneous silicon (one QoS cycle per tier),
-//!            `--queue fifo|priority` adds the shared edge queue, `--churn`
+//!            `--queue fifo|priority` adds the shared edge queue (one per
+//!            server), `--churn`
 //!            replays a churning population (Poisson joins/leaves/bursts)
 //!            and compares the static t=0 allocations against online
 //!            re-allocation, `--churn --events` adds the request-level
@@ -34,6 +37,8 @@
 //!   qaci serve --model gitish --rps 20 --requests 100
 //!   qaci fleet --agents 8 --algorithm proposed --requests 16
 //!   qaci fleet --agents 7 --tiers orin,xavier,phone
+//!   qaci fleet --agents 9 --servers 3 --placement local-search
+//!   qaci fleet --servers 3 --churn --events
 //!   qaci fleet --churn --agents 4 --horizon 600 --queue fifo
 //!   qaci fleet --churn --events --admission-pricing tiered --tiers orin,xavier,phone
 //!   qaci fleet --churn --events --metrics-out metrics.json

@@ -78,6 +78,37 @@
 //! [`solve_proposed_warm`] re-runs the water-filling exchange online from
 //! the previous allocation instead of from scratch — the entry point the
 //! event-driven loop in [`crate::fleet::churn`] drives.
+//!
+//! ## Multi-server fleets: placement × allocation
+//!
+//! [`FleetSpec::servers`] generalizes the single edge box to S servers.
+//! A [`ServerSpec`] carries a per-server frequency budget (a scale of
+//! the base server's f̃^max), an optional explicit slice of the shared
+//! medium's airtime, and an optional per-server queue discipline. The
+//! joint problem becomes an agent→server [`Placement`] (outer loop)
+//! plus the existing exact per-server share allocation (inner loop):
+//! each server's sub-fleet is solved as its own single-server problem
+//! on the frequency-scaled base and its airtime slice of the medium
+//! (shares reported back in fleet-global coordinates), and the fleet
+//! objective is the sum over servers. [`PlacementStrategy::LocalSearch`]
+//! alternates best-improving single-agent moves (each counted as
+//! `placement.moves`) with inner re-solves of the affected servers;
+//! [`PlacementStrategy::EqualSpread`] and
+//! [`PlacementStrategy::NearestServer`] are the baselines. A fleet
+//! whose `servers` is the single default server takes the legacy path
+//! and reproduces the pre-placement solver bit for bit (pinned by the
+//! S = 1 identity property test below).
+//!
+//! ## One solver entry point
+//!
+//! [`FleetProblem::solve`] with a [`SolveRequest`] (algorithm, options,
+//! placement strategy, optional warm start, seed) is the solve path;
+//! the historical free functions ([`solve`], [`solve_equal_share`],
+//! [`solve_proposed`], [`solve_proposed_with`], [`solve_proposed_warm`],
+//! [`solve_feasible_random`]) survive as thin wrappers that build the
+//! equivalent request, kept only for source compatibility — new code
+//! should construct a [`FleetSpec`], validate it once through
+//! [`FleetProblem::from_spec`], and call [`FleetProblem::solve`].
 
 use super::bisection;
 use super::feasible_random;
@@ -85,10 +116,15 @@ use super::problem::{Design, Problem};
 use crate::obs::metrics as obs_metrics;
 use crate::system::channel::MultiAccessChannel;
 use crate::system::platform::DeviceProfile;
-use crate::system::queue::QueueModel;
+use crate::system::queue::{QueueDiscipline, QueueModel};
 use crate::system::Platform;
 use crate::theory::rate_distortion as rd;
+use crate::util::cli::ParseError;
 use crate::util::rng::Rng;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::ops::{Deref, DerefMut};
 
 /// One agent's QoS contract in the fleet, plus the silicon it runs on.
 #[derive(Debug, Clone, Copy)]
@@ -233,25 +269,76 @@ impl AdmissionPricing {
         }
     }
 
-    pub fn parse(s: &str) -> Option<AdmissionPricing> {
+    /// CLI-facing parser; the error names the token and valid choices.
+    pub fn parse(s: &str) -> Result<AdmissionPricing, ParseError> {
         match s {
-            "uniform" => Some(AdmissionPricing::Uniform),
-            "tiered" | "tier" | "capability" => Some(AdmissionPricing::Tiered),
-            _ => None,
+            "uniform" => Ok(AdmissionPricing::Uniform),
+            "tiered" | "tier" | "capability" => Ok(AdmissionPricing::Tiered),
+            _ => Err(ParseError::new("admission pricing", s, &["uniform", "tiered"])),
         }
     }
 }
 
-/// Fleet instance: shared silicon + shared medium + per-agent contracts,
-/// optionally with the shared edge queue's analytic feedback.
+/// One edge server in a multi-server fleet: its frequency budget as a
+/// scale of the base server, an optional explicit slice of the shared
+/// medium's airtime, and an optional per-server queue discipline. The
+/// `Default` server (scale 1, no explicit airtime, no override) is the
+/// legacy single-box fleet — a [`FleetSpec`] whose `servers` is exactly
+/// `vec![ServerSpec::default()]` solves through the pre-placement code
+/// path bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerSpec {
+    /// this server's f̃^max as a fraction of `base.server.f_max`,
+    /// in (0, 1] (the base box is the strongest deployable unit)
+    pub freq_scale: f64,
+    /// explicit airtime fraction of the shared medium reserved for this
+    /// server's agents, in (0, 1]; `None` = split the leftover medium
+    /// across unspecified servers proportionally to their head-count
+    pub airtime_fraction: Option<f64>,
+    /// per-server queue discipline override (`None` = the fleet-wide
+    /// [`FleetSpec::queue`] discipline)
+    pub queue: Option<QueueDiscipline>,
+}
+
+impl Default for ServerSpec {
+    fn default() -> Self {
+        ServerSpec { freq_scale: 1.0, airtime_fraction: None, queue: None }
+    }
+}
+
+impl ServerSpec {
+    /// A server at a fraction of the base box's frequency budget.
+    pub fn scaled(freq_scale: f64) -> ServerSpec {
+        ServerSpec { freq_scale, ..ServerSpec::default() }
+    }
+
+    /// `s` identical full-budget servers (at least one).
+    pub fn identical(s: usize) -> Vec<ServerSpec> {
+        vec![ServerSpec::default(); s.max(1)]
+    }
+}
+
+/// Fleet instance as one plain config struct: shared silicon + servers +
+/// shared medium + per-agent contracts, optionally with the edge queue's
+/// analytic feedback. Construct it literally (or via [`FleetSpec::new`]
+/// for the defaults), then validate once through
+/// [`FleetProblem::from_spec`] — this replaces the old
+/// `FleetProblem::new(..).with_link(..).with_queue(..).with_pricing(..)`
+/// mutation chain, and gives churn's fleet fingerprint a single struct
+/// to hash ([`FleetSpec`] implements [`Hash`] over every field, floats
+/// by bit pattern).
 #[derive(Debug, Clone)]
-pub struct FleetProblem {
-    /// shared-infrastructure profile: `base.server` is the one shared
-    /// edge server (and `base` carries the workload constants); each
-    /// agent's processor comes from its own [`AgentSpec::device`] tier,
-    /// substituted per subproblem by [`Self::agent_platform`]
+pub struct FleetSpec {
+    /// shared-infrastructure profile: `base.server` is the reference
+    /// edge box every [`ServerSpec::freq_scale`] is relative to (and
+    /// `base` carries the workload constants); each agent's processor
+    /// comes from its own [`AgentSpec::device`] tier, substituted per
+    /// subproblem by [`FleetProblem::agent_platform`]
     pub base: Platform,
     pub agents: Vec<AgentSpec>,
+    /// the edge servers agents are placed across;
+    /// `vec![ServerSpec::default()]` is the legacy single-server fleet
+    pub servers: Vec<ServerSpec>,
     /// shared uplink goodput R [bits/s]
     pub link_rate_bps: f64,
     /// per-message MAC latency [s]
@@ -264,17 +351,14 @@ pub struct FleetProblem {
     pub pricing: AdmissionPricing,
 }
 
-impl FleetProblem {
-    /// Shared testbed WLAN defaults (400 Mbps, 2 ms), no queue feedback.
-    pub fn new(base: Platform, agents: Vec<AgentSpec>) -> FleetProblem {
-        assert!(!agents.is_empty());
-        assert!(
-            agents.iter().all(|a| a.channel_gain > 0.0 && a.channel_gain <= 1.0),
-            "channel gains must lie in (0, 1]"
-        );
-        FleetProblem {
+impl FleetSpec {
+    /// Shared testbed WLAN defaults: one full-budget server, 400 Mbps /
+    /// 2 ms medium, no queue feedback, uniform admission pricing.
+    pub fn new(base: Platform, agents: Vec<AgentSpec>) -> FleetSpec {
+        FleetSpec {
             base,
             agents,
+            servers: vec![ServerSpec::default()],
             link_rate_bps: 400e6,
             link_base_latency_s: 2e-3,
             queue: None,
@@ -282,24 +366,177 @@ impl FleetProblem {
         }
     }
 
+    /// The one validation gate ([`FleetProblem::from_spec`] and every
+    /// legacy builder funnel through it). Panics on a malformed spec —
+    /// construction-time failure, never NaN-poisoned allocations later.
+    fn validate(&self) {
+        assert!(!self.agents.is_empty());
+        assert!(
+            self.agents.iter().all(|a| a.channel_gain > 0.0 && a.channel_gain <= 1.0),
+            "channel gains must lie in (0, 1]"
+        );
+        assert!(!self.servers.is_empty(), "at least one server");
+        let mut airtime_reserved = 0.0;
+        for s in &self.servers {
+            assert!(
+                s.freq_scale.is_finite() && s.freq_scale > 0.0 && s.freq_scale <= 1.0,
+                "server freq_scale must lie in (0, 1]: {}",
+                s.freq_scale
+            );
+            if let Some(f) = s.airtime_fraction {
+                assert!(
+                    f.is_finite() && f > 0.0 && f <= 1.0,
+                    "server airtime_fraction must lie in (0, 1]: {f}"
+                );
+                airtime_reserved += f;
+            }
+        }
+        assert!(
+            airtime_reserved <= 1.0 + 1e-9,
+            "explicit server airtime fractions overcommit the medium: {airtime_reserved}"
+        );
+        if let Some(q) = &self.queue {
+            assert_eq!(q.arrival_rps.len(), self.agents.len(), "one rate per agent");
+        }
+    }
+}
+
+fn hash_f64<H: Hasher>(x: f64, state: &mut H) {
+    state.write_u64(x.to_bits());
+}
+
+/// Content hash over the whole spec (floats by bit pattern) — the
+/// churn/event replays fingerprint a fleet by hashing this one struct to
+/// gate warm re-solves.
+impl Hash for FleetSpec {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        for x in [
+            self.base.device.f_max,
+            self.base.device.flops_per_cycle,
+            self.base.device.pue,
+            self.base.device.psi,
+            self.base.server.f_max,
+            self.base.server.flops_per_cycle,
+            self.base.server.pue,
+            self.base.server.psi,
+        ] {
+            hash_f64(x, state);
+        }
+        hash_f64(self.base.n_flop_agent, state);
+        hash_f64(self.base.n_flop_server, state);
+        hash_f64(self.base.full_bits, state);
+        self.base.b_max.hash(state);
+        self.agents.len().hash(state);
+        for a in &self.agents {
+            a.class.hash(state);
+            hash_f64(a.lambda, state);
+            hash_f64(a.t0, state);
+            hash_f64(a.e0, state);
+            hash_f64(a.weight, state);
+            a.payload_bytes.hash(state);
+            a.device.tier.hash(state);
+            hash_f64(a.device.spec.f_max, state);
+            hash_f64(a.device.spec.flops_per_cycle, state);
+            hash_f64(a.device.spec.pue, state);
+            hash_f64(a.device.spec.psi, state);
+            hash_f64(a.device.link_gain, state);
+            hash_f64(a.channel_gain, state);
+        }
+        self.servers.len().hash(state);
+        for s in &self.servers {
+            hash_f64(s.freq_scale, state);
+            s.airtime_fraction.is_some().hash(state);
+            hash_f64(s.airtime_fraction.unwrap_or(0.0), state);
+            s.queue.hash(state);
+        }
+        hash_f64(self.link_rate_bps, state);
+        hash_f64(self.link_base_latency_s, state);
+        match &self.queue {
+            None => false.hash(state),
+            Some(q) => {
+                true.hash(state);
+                q.discipline.hash(state);
+                for &r in &q.arrival_rps {
+                    hash_f64(r, state);
+                }
+            }
+        }
+        self.pricing.hash(state);
+    }
+}
+
+/// A validated fleet instance — a [`FleetSpec`] that passed
+/// [`FleetProblem::from_spec`]. Derefs to the spec, so `fp.agents`,
+/// `fp.queue`, `fp.link_rate_bps`, ... read straight through.
+#[derive(Debug, Clone)]
+pub struct FleetProblem {
+    /// the validated spec (mutating it directly bypasses validation,
+    /// matching the old public-field behavior)
+    pub spec: FleetSpec,
+}
+
+impl Deref for FleetProblem {
+    type Target = FleetSpec;
+    fn deref(&self) -> &FleetSpec {
+        &self.spec
+    }
+}
+
+impl DerefMut for FleetProblem {
+    fn deref_mut(&mut self) -> &mut FleetSpec {
+        &mut self.spec
+    }
+}
+
+impl FleetProblem {
+    /// The one construction path: validate the spec once, then solve
+    /// against it. Panics on a malformed spec (empty fleet, channel
+    /// gains outside (0, 1], degenerate servers, overcommitted explicit
+    /// airtime, queue-rate/agent mismatch).
+    pub fn from_spec(spec: FleetSpec) -> FleetProblem {
+        spec.validate();
+        FleetProblem { spec }
+    }
+
+    /// [`FleetSpec::new`] + [`Self::from_spec`]: the defaults
+    /// (single full-budget server, testbed WLAN, no queue feedback).
+    pub fn new(base: Platform, agents: Vec<AgentSpec>) -> FleetProblem {
+        Self::from_spec(FleetSpec::new(base, agents))
+    }
+
+    /// Deprecated builder (source compatibility): prefer setting
+    /// [`FleetSpec::link_rate_bps`] / [`FleetSpec::link_base_latency_s`]
+    /// and calling [`Self::from_spec`].
     pub fn with_link(mut self, rate_bps: f64, base_latency_s: f64) -> FleetProblem {
-        self.link_rate_bps = rate_bps;
-        self.link_base_latency_s = base_latency_s;
+        self.spec.link_rate_bps = rate_bps;
+        self.spec.link_base_latency_s = base_latency_s;
+        self.spec.validate();
         self
     }
 
-    /// Enable the shared edge queue: its expected wait is carved out of
-    /// every agent's delay budget (effective-service-rate feedback).
+    /// Deprecated builder (source compatibility): prefer setting
+    /// [`FleetSpec::queue`] and calling [`Self::from_spec`]. Enables the
+    /// shared edge queue: its expected wait is carved out of every
+    /// agent's delay budget (effective-service-rate feedback).
     pub fn with_queue(mut self, queue: QueueModel) -> FleetProblem {
-        assert_eq!(queue.arrival_rps.len(), self.agents.len(), "one rate per agent");
-        self.queue = Some(queue);
+        self.spec.queue = Some(queue);
+        self.spec.validate();
         self
     }
 
-    /// Select the admission-pricing scheme (default
-    /// [`AdmissionPricing::Uniform`], the pre-tier behavior).
+    /// Deprecated builder (source compatibility): prefer setting
+    /// [`FleetSpec::pricing`] and calling [`Self::from_spec`].
     pub fn with_pricing(mut self, pricing: AdmissionPricing) -> FleetProblem {
-        self.pricing = pricing;
+        self.spec.pricing = pricing;
+        self.spec.validate();
+        self
+    }
+
+    /// Deprecated builder (source compatibility): prefer setting
+    /// [`FleetSpec::servers`] and calling [`Self::from_spec`].
+    pub fn with_servers(mut self, servers: Vec<ServerSpec>) -> FleetProblem {
+        self.spec.servers = servers;
+        self.spec.validate();
         self
     }
 
@@ -570,6 +807,9 @@ pub struct FleetAllocation {
     /// Σ_i cost_i — the fleet-weighted (P1) objective
     pub objective: f64,
     pub admitted: usize,
+    /// the agent→server map this allocation was solved at
+    /// ([`Placement::single`] on the legacy single-server path)
+    pub placement: Placement,
 }
 
 impl FleetAllocation {
@@ -628,6 +868,7 @@ fn assemble(
         objective: agents.iter().map(|a| a.cost).sum(),
         admitted: agents.iter().filter(|a| a.design.is_some()).count(),
         agents,
+        placement: Placement::single(fp.n()),
     }
 }
 
@@ -645,9 +886,10 @@ pub fn evaluate(fp: &FleetProblem, mu: &[f64], alpha: &[f64]) -> FleetAllocation
 }
 
 /// Which fleet allocator drives a run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum FleetAlgorithm {
     /// alternating per-agent bisection + water-filling share exchange
+    #[default]
     Proposed,
     /// μ_i = α_i = 1/N, per-agent bisection (the natural baseline)
     EqualShare,
@@ -670,12 +912,13 @@ impl FleetAlgorithm {
         }
     }
 
-    pub fn parse(s: &str) -> Option<FleetAlgorithm> {
+    /// CLI-facing parser; the error names the token and valid choices.
+    pub fn parse(s: &str) -> Result<FleetAlgorithm, ParseError> {
         match s {
-            "proposed" | "waterfill" => Some(FleetAlgorithm::Proposed),
-            "equal" | "equal-share" => Some(FleetAlgorithm::EqualShare),
-            "random" | "feasible-random" => Some(FleetAlgorithm::FeasibleRandom),
-            _ => None,
+            "proposed" | "waterfill" => Ok(FleetAlgorithm::Proposed),
+            "equal" | "equal-share" => Ok(FleetAlgorithm::EqualShare),
+            "random" | "feasible-random" => Ok(FleetAlgorithm::FeasibleRandom),
+            _ => Err(ParseError::new("fleet algorithm", s, &["proposed", "equal", "random"])),
         }
     }
 }
@@ -697,27 +940,305 @@ impl Default for ProposedOptions {
     }
 }
 
-/// Dispatch on algorithm. `seed` only matters for the random baseline.
-pub fn solve(fp: &FleetProblem, algorithm: FleetAlgorithm, seed: u64) -> FleetAllocation {
-    match algorithm {
-        FleetAlgorithm::Proposed => solve_proposed(fp),
-        FleetAlgorithm::EqualShare => solve_equal_share(fp),
-        FleetAlgorithm::FeasibleRandom => solve_feasible_random(fp, seed),
+/// Agent→server map for a multi-server fleet: `assignment[i]` is the
+/// index into [`FleetSpec::servers`] agent i's decoder stage runs on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Placement {
+    pub assignment: Vec<usize>,
+}
+
+impl Placement {
+    /// Everyone on server 0 — the legacy single-server fleet.
+    pub fn single(n: usize) -> Placement {
+        Placement { assignment: vec![0; n] }
+    }
+
+    /// Round-robin across the `s` servers (the equal-spread baseline).
+    pub fn equal_spread(n: usize, s: usize) -> Placement {
+        Placement { assignment: (0..n).map(|i| i % s.max(1)).collect() }
+    }
+
+    /// Everyone on one named server.
+    pub fn all_on(n: usize, server: usize) -> Placement {
+        Placement { assignment: vec![server; n] }
+    }
+
+    /// The agents placed on `server`, in agent order.
+    pub fn members(&self, server: usize) -> Vec<usize> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|&(_, &k)| k == server)
+            .map(|(i, _)| i)
+            .collect()
     }
 }
 
-/// The equal-share baseline.
+/// Outer-loop placement strategy for multi-server fleets (ignored at
+/// S = 1, where the placement is trivially [`Placement::single`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PlacementStrategy {
+    /// start from the better of equal-spread and
+    /// all-on-the-strongest-server, then accept best-improving
+    /// single-agent moves (each counted as `placement.moves`) until no
+    /// move improves the fleet objective
+    #[default]
+    LocalSearch,
+    /// round-robin agents across servers (the natural baseline)
+    EqualSpread,
+    /// every agent on the strongest server (largest frequency budget) —
+    /// the "walk to the big box" baseline
+    NearestServer,
+}
+
+impl PlacementStrategy {
+    pub const ALL: [PlacementStrategy; 3] = [
+        PlacementStrategy::LocalSearch,
+        PlacementStrategy::EqualSpread,
+        PlacementStrategy::NearestServer,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementStrategy::LocalSearch => "local-search",
+            PlacementStrategy::EqualSpread => "equal-spread",
+            PlacementStrategy::NearestServer => "nearest-server",
+        }
+    }
+
+    /// CLI-facing parser; the error names the token and valid choices.
+    pub fn parse(s: &str) -> Result<PlacementStrategy, ParseError> {
+        match s {
+            "local-search" | "local" => Ok(PlacementStrategy::LocalSearch),
+            "equal-spread" | "spread" => Ok(PlacementStrategy::EqualSpread),
+            "nearest-server" | "nearest" => Ok(PlacementStrategy::NearestServer),
+            _ => Err(ParseError::new(
+                "placement strategy",
+                s,
+                &["local-search", "equal-spread", "nearest-server"],
+            )),
+        }
+    }
+}
+
+/// The unified solver request: everything [`FleetProblem::solve`] needs
+/// to produce a [`FleetAllocation`]. `Default` is the proposed algorithm
+/// with default options, local-search placement, no warm start, seed 0 —
+/// exactly the historical `solve_proposed`.
+#[derive(Debug, Clone, Default)]
+pub struct SolveRequest {
+    pub algorithm: FleetAlgorithm,
+    /// outer-loop knobs for the proposed algorithm (ignored by baselines)
+    pub options: ProposedOptions,
+    /// agent→server placement strategy (S > 1 fleets only)
+    pub placement: PlacementStrategy,
+    /// previous shares to warm-start the proposed exchange from:
+    /// `Some(prev)` with `prev[i] = Some((μ, α))` for surviving agents
+    /// and `None` slots for newcomers (see [`solve_proposed_warm`])
+    pub warm_start: Option<Vec<Option<(f64, f64)>>>,
+    /// RNG seed (feasible-random baseline only)
+    pub seed: u64,
+}
+
+impl FleetProblem {
+    /// The one solver entry point: dispatch on `req.algorithm` (and
+    /// `req.warm_start`), through the placement layer when the spec has
+    /// real multi-server structure. A fleet whose `servers` is the
+    /// single default server takes the legacy single-server path bit for
+    /// bit — the historical `solve_*` free functions are all thin
+    /// wrappers over this method.
+    pub fn solve(&self, req: &SolveRequest) -> FleetAllocation {
+        if let Some(w) = &req.warm_start {
+            assert_eq!(w.len(), self.n(), "one warm-start slot per agent");
+        }
+        if self.servers.len() == 1 && self.servers[0] == ServerSpec::default() {
+            return solve_single(self, req);
+        }
+        let placement = self.place(req);
+        self.solve_with_placement(&placement, req)
+    }
+
+    /// Pick an agent→server [`Placement`] per `req.placement` (the outer
+    /// loop of the joint placement × allocation problem).
+    pub fn place(&self, req: &SolveRequest) -> Placement {
+        let (n, s) = (self.n(), self.servers.len());
+        match req.placement {
+            PlacementStrategy::EqualSpread => Placement::equal_spread(n, s),
+            PlacementStrategy::NearestServer => Placement::all_on(n, strongest_server(self)),
+            PlacementStrategy::LocalSearch => local_search_placement(self, req),
+        }
+    }
+
+    /// Solve at a **fixed** placement: each populated server's sub-fleet
+    /// is solved as its own single-server problem (frequency-scaled
+    /// base, its airtime slice of the medium) and the results are
+    /// reported in fleet-global coordinates. The churn replay pins
+    /// sticky placements with this.
+    pub fn solve_with_placement(
+        &self,
+        placement: &Placement,
+        req: &SolveRequest,
+    ) -> FleetAllocation {
+        assert_eq!(placement.assignment.len(), self.n(), "one server per agent");
+        assert!(
+            placement.assignment.iter().all(|&k| k < self.servers.len()),
+            "placement names an unknown server"
+        );
+        let mut cache = SubCache::new();
+        placed_allocation(self, placement, req, &mut cache)
+    }
+
+    /// Content fingerprint of one server's sub-problem under a placement
+    /// (member count + the sub-[`FleetSpec`] they would be solved
+    /// against, floats by bit pattern) — the per-server gate churn uses
+    /// to skip re-solving servers a fleet change did not touch. It is
+    /// deliberately free of fleet-global agent *indices* (only content):
+    /// a join or leave elsewhere shifts everyone's index but must not
+    /// dirty a server whose own sub-problem is unchanged.
+    pub fn server_fingerprint(&self, placement: &Placement, server: usize) -> u64 {
+        let members = placement.members(server);
+        let mut h = DefaultHasher::new();
+        members.len().hash(&mut h);
+        if !members.is_empty() {
+            let phi = airtime_fractions(self, placement);
+            sub_problem(self, &members, self.servers[server], phi[server]).spec.hash(&mut h);
+        }
+        h.finish()
+    }
+
+    /// [`solve_with_placement`](Self::solve_with_placement), but re-solve
+    /// only the servers marked `dirty`; every member of a clean server
+    /// takes its slot from `reuse` (fleet-global coordinates, by agent
+    /// index). A clean server with any missing slot is re-solved
+    /// defensively. Counts `placement.server.resolved` /
+    /// `placement.server.reused` — the churn replay drives this with its
+    /// per-server [`server_fingerprint`](Self::server_fingerprint) gate.
+    pub fn solve_with_placement_reusing(
+        &self,
+        placement: &Placement,
+        req: &SolveRequest,
+        dirty: &[bool],
+        reuse: &[Option<AgentAllocation>],
+    ) -> FleetAllocation {
+        assert_eq!(placement.assignment.len(), self.n(), "one server per agent");
+        assert_eq!(dirty.len(), self.servers.len(), "one dirty flag per server");
+        assert_eq!(reuse.len(), self.n(), "one reuse slot per agent");
+        let phi = airtime_fractions(self, placement);
+        let mut cache = SubCache::new();
+        let mut slots: Vec<Option<AgentAllocation>> = vec![None; self.n()];
+        for k in 0..self.servers.len() {
+            let members = placement.members(k);
+            if members.is_empty() {
+                continue;
+            }
+            if !dirty[k] && members.iter().all(|&i| reuse[i].is_some()) {
+                obs_metrics::counter_add("placement.server.reused", 1);
+                for &i in &members {
+                    slots[i] = reuse[i];
+                }
+            } else {
+                obs_metrics::counter_add("placement.server.resolved", 1);
+                let sub = sub_allocation(self, k, &members, phi[k], req, &mut cache);
+                for (&i, a) in members.iter().zip(&sub) {
+                    slots[i] = Some(*a);
+                }
+            }
+        }
+        let agents: Vec<AgentAllocation> =
+            slots.into_iter().map(|s| s.expect("placement covers every agent")).collect();
+        FleetAllocation {
+            objective: agents.iter().map(|a| a.cost).sum(),
+            admitted: agents.iter().filter(|a| a.design.is_some()).count(),
+            agents,
+            placement: placement.clone(),
+        }
+    }
+}
+
+/// Dispatch on algorithm (legacy free function). `seed` only matters for
+/// the random baseline. Deprecated wrapper: build a [`SolveRequest`] and
+/// call [`FleetProblem::solve`] instead.
+pub fn solve(fp: &FleetProblem, algorithm: FleetAlgorithm, seed: u64) -> FleetAllocation {
+    fp.solve(&SolveRequest { algorithm, seed, ..SolveRequest::default() })
+}
+
+/// The equal-share baseline. Deprecated wrapper over
+/// [`FleetProblem::solve`] with [`FleetAlgorithm::EqualShare`].
 pub fn solve_equal_share(fp: &FleetProblem) -> FleetAllocation {
+    fp.solve(&SolveRequest { algorithm: FleetAlgorithm::EqualShare, ..SolveRequest::default() })
+}
+
+/// The proposed joint multi-agent design (default options). Deprecated
+/// wrapper over [`FleetProblem::solve`] with the default request.
+pub fn solve_proposed(fp: &FleetProblem) -> FleetAllocation {
+    fp.solve(&SolveRequest::default())
+}
+
+/// The proposed design with explicit outer-loop options. Deprecated
+/// wrapper over [`FleetProblem::solve`].
+pub fn solve_proposed_with(fp: &FleetProblem, opts: ProposedOptions) -> FleetAllocation {
+    fp.solve(&SolveRequest { options: opts, ..SolveRequest::default() })
+}
+
+/// Warm-started online re-solve for a churning fleet (see
+/// [`SolveRequest::warm_start`] for the slot convention). Deprecated
+/// wrapper over [`FleetProblem::solve`].
+pub fn solve_proposed_warm(
+    fp: &FleetProblem,
+    prev: &[Option<(f64, f64)>],
+    opts: ProposedOptions,
+) -> FleetAllocation {
+    fp.solve(&SolveRequest {
+        options: opts,
+        warm_start: Some(prev.to_vec()),
+        ..SolveRequest::default()
+    })
+}
+
+/// The feasible-random baseline. Deprecated wrapper over
+/// [`FleetProblem::solve`] with [`FleetAlgorithm::FeasibleRandom`].
+pub fn solve_feasible_random(fp: &FleetProblem, seed: u64) -> FleetAllocation {
+    fp.solve(&SolveRequest {
+        algorithm: FleetAlgorithm::FeasibleRandom,
+        seed,
+        ..SolveRequest::default()
+    })
+}
+
+/// Mean objective of the random baseline over `trials` draws (the
+/// figure-style aggregate).
+pub fn feasible_random_mean(fp: &FleetProblem, trials: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    (0..trials.max(1))
+        .map(|_| solve_feasible_random(fp, rng.next_u64()).objective)
+        .sum::<f64>()
+        / trials.max(1) as f64
+}
+
+// ---------------------------------------------------------------------------
+// single-server solver bodies (the legacy path, bit for bit)
+// ---------------------------------------------------------------------------
+
+/// Single-server dispatch — the pre-placement solver, reached directly
+/// for default-single-server fleets and per sub-fleet by the placement
+/// layer.
+fn solve_single(fp: &FleetProblem, req: &SolveRequest) -> FleetAllocation {
+    match req.algorithm {
+        FleetAlgorithm::Proposed => match &req.warm_start {
+            Some(prev) => proposed_warm_single(fp, prev, req.options),
+            None => proposed_single(fp, req.options),
+        },
+        FleetAlgorithm::EqualShare => equal_share_single(fp),
+        FleetAlgorithm::FeasibleRandom => feasible_random_single(fp, req.seed),
+    }
+}
+
+fn equal_share_single(fp: &FleetProblem) -> FleetAllocation {
     let shares = MultiAccessChannel::equal_shares(fp.n());
     evaluate(fp, &shares, &shares)
 }
 
-/// The proposed joint multi-agent design (default options).
-pub fn solve_proposed(fp: &FleetProblem) -> FleetAllocation {
-    solve_proposed_with(fp, ProposedOptions::default())
-}
-
-pub fn solve_proposed_with(fp: &FleetProblem, opts: ProposedOptions) -> FleetAllocation {
+fn proposed_single(fp: &FleetProblem, opts: ProposedOptions) -> FleetAllocation {
     let _span = obs_metrics::span("solver.proposed");
     let equal = MultiAccessChannel::equal_shares(fp.n());
     let mut inits = vec![(equal.clone(), equal)];
@@ -730,7 +1251,7 @@ pub fn solve_proposed_with(fp: &FleetProblem, opts: ProposedOptions) -> FleetAll
     // "never worse than equal-share" guarantee must survive the final
     // fixed-point scoring even when the exchange (which probes the
     // separable mean-field costs) wanders off under queue feedback
-    let mut best = solve_equal_share(fp);
+    let mut best = equal_share_single(fp);
     for (mut mu, mut alpha) in inits {
         improve(fp, &mut mu, &mut alpha, opts);
         let alloc = evaluate(fp, &mu, &alpha);
@@ -743,14 +1264,13 @@ pub fn solve_proposed_with(fp: &FleetProblem, opts: ProposedOptions) -> FleetAll
 
 /// Warm-started online re-solve for a churning fleet: seed the
 /// water-filling exchange from a previous allocation's shares instead of
-/// the cold inits. `prev[i]` is `Some((μ, α))` for agents that survive
-/// from the previous population and `None` for newcomers; newcomers are
-/// seated at a weight-proportional slice of the pie (carved from the
-/// departed agents' freed mass first, then from incumbents), and the
-/// exchange refines from there. With an unchanged population this starts
-/// at the previous optimum, so the improvement loop terminates
-/// immediately and the result can only match or improve it.
-pub fn solve_proposed_warm(
+/// the cold inits. Newcomers (`None` slots) are seated at a
+/// weight-proportional slice of the pie (carved from the departed
+/// agents' freed mass first, then from incumbents), and the exchange
+/// refines from there. With an unchanged population this starts at the
+/// previous optimum, so the improvement loop terminates immediately and
+/// the result can only match or improve it.
+fn proposed_warm_single(
     fp: &FleetProblem,
     prev: &[Option<(f64, f64)>],
     opts: ProposedOptions,
@@ -808,7 +1328,7 @@ pub fn solve_proposed_warm(
     // the current population's equal split rides along too, so the
     // online path keeps the same structural never-worse-than-equal
     // guarantee as the cold solve
-    for cand in [seeded, raw, solve_equal_share(fp)] {
+    for cand in [seeded, raw, equal_share_single(fp)] {
         if cand.objective < best.objective {
             best = cand;
         }
@@ -819,7 +1339,7 @@ pub fn solve_proposed_warm(
 /// The feasible-random baseline: Dirichlet(1) shares on both resources
 /// and a random feasible bit-width per agent (frequencies by the
 /// energy-min oracle, as in [`feasible_random`]).
-pub fn solve_feasible_random(fp: &FleetProblem, seed: u64) -> FleetAllocation {
+fn feasible_random_single(fp: &FleetProblem, seed: u64) -> FleetAllocation {
     let mut rng = Rng::new(seed);
     let mut draw_shares = |n: usize| -> Vec<f64> {
         let gammas: Vec<f64> = (0..n).map(|_| rng.exponential(1.0)).collect();
@@ -833,16 +1353,6 @@ pub fn solve_feasible_random(fp: &FleetProblem, seed: u64) -> FleetAllocation {
         fp.agent_problem_at_wait(i, mu[i], alpha[i], waits[i])
             .and_then(|p| feasible_random::solve(&p, rng.next_u64()))
     })
-}
-
-/// Mean objective of the random baseline over `trials` draws (the
-/// figure-style aggregate).
-pub fn feasible_random_mean(fp: &FleetProblem, trials: usize, seed: u64) -> f64 {
-    let mut rng = Rng::new(seed);
-    (0..trials.max(1))
-        .map(|_| solve_feasible_random(fp, rng.next_u64()).objective)
-        .sum::<f64>()
-        / trials.max(1) as f64
 }
 
 // ---------------------------------------------------------------------------
@@ -999,6 +1509,220 @@ fn exchange(
         obs_metrics::counter_add("solver.exchange.moves", moves);
     }
     total_gain
+}
+
+// ---------------------------------------------------------------------------
+// multi-server placement internals
+// ---------------------------------------------------------------------------
+
+/// Sub-solve memo for one placement search: (server, members, airtime
+/// bits) → the server's globalized per-member allocations. Local search
+/// revisits mostly-unchanged placements, so per-server results are
+/// shared across candidate scores.
+type SubCache = HashMap<(usize, Vec<usize>, u64), Vec<AgentAllocation>>;
+
+/// The strongest server (largest frequency budget, ties to the lowest
+/// index) — where the nearest-server baseline concentrates the fleet.
+fn strongest_server(fp: &FleetProblem) -> usize {
+    let mut best = 0;
+    for (k, s) in fp.servers.iter().enumerate().skip(1) {
+        if s.freq_scale > fp.servers[best].freq_scale {
+            best = k;
+        }
+    }
+    best
+}
+
+/// Per-server airtime fraction of the shared medium under a placement:
+/// explicit [`ServerSpec::airtime_fraction`] is honored verbatim; the
+/// leftover medium is split across the *unspecified, populated* servers
+/// proportionally to head-count; an empty server gets 0. At S = 1 with
+/// the default server this is exactly 1.0 (n/n — IEEE-exact), so the
+/// sub-fleet's medium is the whole medium bit for bit.
+fn airtime_fractions(fp: &FleetProblem, placement: &Placement) -> Vec<f64> {
+    let mut counts = vec![0usize; fp.servers.len()];
+    for &k in &placement.assignment {
+        counts[k] += 1;
+    }
+    let mut explicit_sum = 0.0;
+    let mut unspecified = 0usize;
+    for (k, srv) in fp.servers.iter().enumerate() {
+        if counts[k] == 0 {
+            continue;
+        }
+        match srv.airtime_fraction {
+            Some(f) => explicit_sum += f,
+            None => unspecified += counts[k],
+        }
+    }
+    let leftover = (1.0 - explicit_sum).max(0.0);
+    fp.servers
+        .iter()
+        .enumerate()
+        .map(|(k, srv)| {
+            if counts[k] == 0 {
+                return 0.0;
+            }
+            match srv.airtime_fraction {
+                Some(f) => f,
+                None => leftover * counts[k] as f64 / unspecified as f64,
+            }
+        })
+        .collect()
+}
+
+/// One server's sub-fleet as its own single-server [`FleetProblem`]:
+/// the member agents on the frequency-scaled base, the server's airtime
+/// slice of the medium, the member slice of the queue's arrival rates
+/// (under the server's discipline override, if any). Shares solved
+/// against this are in sub-fleet coordinates; [`sub_allocation`] scales
+/// them back to fleet-global ones.
+fn sub_problem(
+    fp: &FleetProblem,
+    members: &[usize],
+    server: ServerSpec,
+    phi_air: f64,
+) -> FleetProblem {
+    let mut base = fp.base;
+    base.server.f_max *= server.freq_scale;
+    FleetProblem {
+        spec: FleetSpec {
+            base,
+            agents: members.iter().map(|&i| fp.agents[i]).collect(),
+            servers: vec![ServerSpec::default()],
+            link_rate_bps: fp.link_rate_bps * phi_air,
+            link_base_latency_s: fp.link_base_latency_s,
+            queue: fp.queue.as_ref().map(|q| {
+                QueueModel::new(
+                    server.queue.unwrap_or(q.discipline),
+                    members.iter().map(|&i| q.arrival_rps[i]).collect(),
+                )
+            }),
+            pricing: fp.pricing,
+        },
+    }
+}
+
+/// Solve one populated server's sub-fleet (memoized) and report the
+/// allocations in fleet-global coordinates: μ as a fraction of the
+/// *base* server's budget, α of the *whole* medium.
+fn sub_allocation(
+    fp: &FleetProblem,
+    k: usize,
+    members: &[usize],
+    phi_air: f64,
+    req: &SolveRequest,
+    cache: &mut SubCache,
+) -> Vec<AgentAllocation> {
+    let key = (k, members.to_vec(), phi_air.to_bits());
+    if let Some(hit) = cache.get(&key) {
+        return hit.clone();
+    }
+    let server = fp.servers[k];
+    let sub_fp = sub_problem(fp, members, server, phi_air);
+    let sub_req = SolveRequest {
+        algorithm: req.algorithm,
+        options: req.options,
+        placement: PlacementStrategy::default(),
+        // warm shares arrive in fleet-global coordinates; un-scale them
+        // into this server's sub-fleet coordinates
+        warm_start: req.warm_start.as_ref().map(|w| {
+            members
+                .iter()
+                .map(|&i| {
+                    w[i].map(|(m, a)| {
+                        (m / server.freq_scale, if phi_air > 0.0 { a / phi_air } else { 0.0 })
+                    })
+                })
+                .collect()
+        }),
+        seed: req.seed.wrapping_add(k as u64),
+    };
+    let alloc = solve_single(&sub_fp, &sub_req);
+    let globalized: Vec<AgentAllocation> = alloc
+        .agents
+        .iter()
+        .map(|a| {
+            let mut g = *a;
+            g.server_share *= server.freq_scale;
+            g.airtime_share *= phi_air;
+            g
+        })
+        .collect();
+    cache.insert(key, globalized.clone());
+    globalized
+}
+
+/// Score a full placement: per-server sub-solves stitched into one fleet
+/// allocation (every agent gets a slot, shares fleet-global, objective
+/// summed over servers).
+fn placed_allocation(
+    fp: &FleetProblem,
+    placement: &Placement,
+    req: &SolveRequest,
+    cache: &mut SubCache,
+) -> FleetAllocation {
+    let phi = airtime_fractions(fp, placement);
+    let mut slots: Vec<Option<AgentAllocation>> = vec![None; fp.n()];
+    for k in 0..fp.servers.len() {
+        let members = placement.members(k);
+        if members.is_empty() {
+            continue;
+        }
+        let sub = sub_allocation(fp, k, &members, phi[k], req, cache);
+        for (&i, a) in members.iter().zip(&sub) {
+            slots[i] = Some(*a);
+        }
+    }
+    let agents: Vec<AgentAllocation> =
+        slots.into_iter().map(|s| s.expect("placement covers every agent")).collect();
+    FleetAllocation {
+        objective: agents.iter().map(|a| a.cost).sum(),
+        admitted: agents.iter().filter(|a| a.design.is_some()).count(),
+        agents,
+        placement: placement.clone(),
+    }
+}
+
+/// Local-search placement: start from the better of equal-spread and
+/// all-on-the-strongest-server, then repeatedly apply the best
+/// single-agent move that improves the fleet objective (each accepted
+/// move counted as `placement.moves`), until no move improves or the
+/// move budget (2N) is spent. Sub-solves are memoized across candidate
+/// scores, so unchanged servers are never re-solved.
+fn local_search_placement(fp: &FleetProblem, req: &SolveRequest) -> Placement {
+    let (n, s) = (fp.n(), fp.servers.len());
+    let mut cache = SubCache::new();
+    let mut best = Placement::equal_spread(n, s);
+    let mut best_obj = placed_allocation(fp, &best, req, &mut cache).objective;
+    let concentrated = Placement::all_on(n, strongest_server(fp));
+    let conc_obj = placed_allocation(fp, &concentrated, req, &mut cache).objective;
+    if conc_obj < best_obj {
+        best = concentrated;
+        best_obj = conc_obj;
+    }
+    for _ in 0..2 * n {
+        let mut cand: Option<(Placement, f64)> = None;
+        for i in 0..n {
+            let cur = best.assignment[i];
+            for t in 0..s {
+                if t == cur {
+                    continue;
+                }
+                let mut p = best.clone();
+                p.assignment[i] = t;
+                let obj = placed_allocation(fp, &p, req, &mut cache).objective;
+                if obj < cand.as_ref().map_or(best_obj - 1e-15, |(_, b)| *b) {
+                    cand = Some((p, obj));
+                }
+            }
+        }
+        let Some((p, obj)) = cand else { break };
+        best = p;
+        best_obj = obj;
+        obs_metrics::counter_add("placement.moves", 1);
+    }
+    best
 }
 
 #[cfg(test)]
@@ -1513,10 +2237,29 @@ mod tests {
     #[test]
     fn admission_pricing_parse_roundtrip() {
         for p in [AdmissionPricing::Uniform, AdmissionPricing::Tiered] {
-            assert_eq!(AdmissionPricing::parse(p.name()), Some(p));
+            assert_eq!(AdmissionPricing::parse(p.name()), Ok(p));
         }
-        assert_eq!(AdmissionPricing::parse("capability"), Some(AdmissionPricing::Tiered));
-        assert_eq!(AdmissionPricing::parse("free"), None);
+        assert_eq!(AdmissionPricing::parse("capability"), Ok(AdmissionPricing::Tiered));
+        let err = AdmissionPricing::parse("free").unwrap_err();
+        assert_eq!(err.token, "free");
+        assert!(err.choices.contains(&"tiered"));
+        assert!(err.to_string().contains("uniform | tiered"));
+    }
+
+    #[test]
+    fn algorithm_and_placement_parse_roundtrip() {
+        for a in FleetAlgorithm::ALL {
+            assert_eq!(FleetAlgorithm::parse(a.name()), Ok(a));
+        }
+        assert_eq!(FleetAlgorithm::parse("waterfill"), Ok(FleetAlgorithm::Proposed));
+        let err = FleetAlgorithm::parse("magic").unwrap_err();
+        assert_eq!(err.token, "magic");
+        assert!(err.choices.contains(&"proposed"));
+        for p in PlacementStrategy::ALL {
+            assert_eq!(PlacementStrategy::parse(p.name()), Ok(p));
+        }
+        assert_eq!(PlacementStrategy::parse("nearest"), Ok(PlacementStrategy::NearestServer));
+        assert!(PlacementStrategy::parse("teleport").is_err());
     }
 
     #[test]
@@ -1589,5 +2332,223 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// Field-for-field bitwise equality of two allocations (shares,
+    /// designs, waits, costs, objective).
+    fn assert_bit_identical(a: &FleetAllocation, b: &FleetAllocation) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "objective");
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.agents.len(), b.agents.len());
+        for (i, (x, y)) in a.agents.iter().zip(&b.agents).enumerate() {
+            match (x.design, y.design) {
+                (Some(dx), Some(dy)) => {
+                    assert_eq!(dx.b_hat, dy.b_hat, "agent {i} b_hat");
+                    assert_eq!(dx.f.to_bits(), dy.f.to_bits(), "agent {i} f");
+                    assert_eq!(dx.f_tilde.to_bits(), dy.f_tilde.to_bits(), "agent {i} f_tilde");
+                }
+                (None, None) => {}
+                (dx, dy) => panic!("agent {i} admission differs: {dx:?} vs {dy:?}"),
+            }
+            assert_eq!(x.server_share.to_bits(), y.server_share.to_bits(), "agent {i} mu");
+            assert_eq!(x.airtime_share.to_bits(), y.airtime_share.to_bits(), "agent {i} alpha");
+            assert_eq!(x.link_s.to_bits(), y.link_s.to_bits(), "agent {i} link");
+            assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits(), "agent {i} wait");
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "agent {i} cost");
+        }
+    }
+
+    #[test]
+    fn legacy_wrappers_are_bit_identical_to_solve_requests() {
+        // satellite regression: every historical free function is a thin
+        // wrapper — its output must be bit-identical to the equivalent
+        // SolveRequest through FleetProblem::solve
+        let fp = fleet(6).with_queue(QueueModel::uniform(QueueDiscipline::Fifo, 6, 0.02));
+        assert_bit_identical(
+            &solve_equal_share(&fp),
+            &fp.solve(&SolveRequest {
+                algorithm: FleetAlgorithm::EqualShare,
+                ..SolveRequest::default()
+            }),
+        );
+        assert_bit_identical(&solve_proposed(&fp), &fp.solve(&SolveRequest::default()));
+        let opts = ProposedOptions { rounds: 2, ..ProposedOptions::default() };
+        assert_bit_identical(
+            &solve_proposed_with(&fp, opts),
+            &fp.solve(&SolveRequest { options: opts, ..SolveRequest::default() }),
+        );
+        assert_bit_identical(
+            &solve(&fp, FleetAlgorithm::FeasibleRandom, 9),
+            &fp.solve(&SolveRequest {
+                algorithm: FleetAlgorithm::FeasibleRandom,
+                seed: 9,
+                ..SolveRequest::default()
+            }),
+        );
+        let cold = solve_proposed(&fp);
+        let prev: Vec<Option<(f64, f64)>> = cold
+            .agents
+            .iter()
+            .map(|a| Some((a.server_share, a.airtime_share)))
+            .collect();
+        assert_bit_identical(
+            &solve_proposed_warm(&fp, &prev, ProposedOptions::default()),
+            &fp.solve(&SolveRequest { warm_start: Some(prev), ..SolveRequest::default() }),
+        );
+    }
+
+    #[test]
+    fn prop_s1_placement_path_matches_single_server_solver_exactly() {
+        // satellite property: at S = 1 (default server) the generic
+        // placement machinery — sub-problem construction, airtime
+        // splitting, share globalization — is the identity, so solving
+        // through an explicit Placement::single must be bit-identical to
+        // the legacy single-server path for every algorithm
+        for n in [1usize, 4, 8] {
+            for fp in [
+                fleet(n),
+                fleet(n).with_queue(QueueModel::uniform(QueueDiscipline::Fifo, n, 0.02)),
+            ] {
+                for algorithm in FleetAlgorithm::ALL {
+                    let req = SolveRequest { algorithm, seed: 5, ..SolveRequest::default() };
+                    let direct = fp.solve(&req);
+                    let placed = fp.solve_with_placement(&Placement::single(n), &req);
+                    assert_bit_identical(&direct, &placed);
+                    assert_eq!(direct.placement, placed.placement);
+                }
+                let cold = solve_proposed(&fp);
+                let prev: Vec<Option<(f64, f64)>> = cold
+                    .agents
+                    .iter()
+                    .map(|a| Some((a.server_share, a.airtime_share)))
+                    .collect();
+                let req = SolveRequest { warm_start: Some(prev), ..SolveRequest::default() };
+                assert_bit_identical(
+                    &fp.solve(&req),
+                    &fp.solve_with_placement(&Placement::single(n), &req),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn splitting_across_identical_servers_never_beats_the_pooled_server() {
+        // pooling bound (satellite property): s servers at 1/s of the
+        // budget with equal-spread placement vs the single pooled box
+        // with the same total budget. The split's fleet-global shares
+        // are injected into the pooled solve as a warm start, whose raw
+        // candidate scores exactly those shares on the pooled fleet, so
+        // the pooled objective is structurally ≤ the split one.
+        for n in [2usize, 4, 6, 9] {
+            for s in [2usize, 3] {
+                let pooled = fleet(n);
+                let split =
+                    fleet(n).with_servers(vec![ServerSpec::scaled(1.0 / s as f64); s]);
+                let split_alloc = split.solve(&SolveRequest {
+                    placement: PlacementStrategy::EqualSpread,
+                    ..SolveRequest::default()
+                });
+                let prev: Vec<Option<(f64, f64)>> = split_alloc
+                    .agents
+                    .iter()
+                    .map(|a| Some((a.server_share, a.airtime_share)))
+                    .collect();
+                let pooled_alloc = pooled
+                    .solve(&SolveRequest { warm_start: Some(prev), ..SolveRequest::default() });
+                assert!(
+                    pooled_alloc.objective <= split_alloc.objective + 1e-9,
+                    "n={n} s={s}: pooled {} > split {}",
+                    pooled_alloc.objective,
+                    split_alloc.objective
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn local_search_strictly_beats_equal_spread_on_a_hot_server_fleet() {
+        // two full-budget boxes plus one badly underpowered one (1.2 GHz
+        // against a 2.918 Gcycle server stage): round-robin strands the
+        // whole background block on the weak box, where even the full
+        // budget can't seat all three — local search moves them off it
+        let servers =
+            vec![ServerSpec::default(), ServerSpec::default(), ServerSpec::scaled(0.12)];
+        let fp = fleet(9).with_servers(servers);
+        let spread = fp.solve(&SolveRequest {
+            placement: PlacementStrategy::EqualSpread,
+            ..SolveRequest::default()
+        });
+        let local = fp.solve(&SolveRequest {
+            placement: PlacementStrategy::LocalSearch,
+            ..SolveRequest::default()
+        });
+        assert!(
+            local.objective < spread.objective - 1e-9,
+            "local-search {} not strictly below equal-spread {}",
+            local.objective,
+            spread.objective
+        );
+        assert!(local.admitted >= spread.admitted);
+        // the winning placement must not be the round-robin start
+        assert_ne!(local.placement, spread.placement);
+    }
+
+    #[test]
+    fn fleet_spec_hash_is_stable_and_field_sensitive() {
+        let h = |fp: &FleetProblem| {
+            let mut s = DefaultHasher::new();
+            fp.spec.hash(&mut s);
+            s.finish()
+        };
+        let fp = fleet(4);
+        assert_eq!(h(&fp), h(&fp.clone()), "hash must be deterministic");
+        let mut faded = fp.clone();
+        faded.agents[1].channel_gain = 0.7;
+        assert_ne!(h(&fp), h(&faded));
+        assert_ne!(h(&fp), h(&fp.clone().with_servers(vec![ServerSpec::scaled(0.5)])));
+        assert_ne!(h(&fp), h(&fp.clone().with_pricing(AdmissionPricing::Tiered)));
+        assert_ne!(h(&fp), h(&fp.clone().with_link(200e6, 2e-3)));
+        assert_ne!(
+            h(&fp),
+            h(&fp.clone().with_queue(QueueModel::uniform(QueueDiscipline::Fifo, 4, 0.02)))
+        );
+    }
+
+    #[test]
+    fn server_fingerprint_gates_only_affected_servers() {
+        // churn's per-server warm-solve gate: touching an agent on one
+        // server must change that server's fingerprint and leave the
+        // other server's fingerprint alone
+        let fp = fleet(6).with_servers(ServerSpec::identical(2));
+        let p = Placement::equal_spread(6, 2);
+        let before: Vec<u64> = (0..2).map(|k| fp.server_fingerprint(&p, k)).collect();
+        let mut changed = fp.clone();
+        changed.agents[0].t0 *= 0.9; // agent 0 lives on server 0
+        assert_ne!(changed.server_fingerprint(&p, 0), before[0]);
+        assert_eq!(changed.server_fingerprint(&p, 1), before[1]);
+        // a placement change alone re-fingerprints the servers it touches
+        let moved = Placement { assignment: vec![0, 1, 0, 1, 0, 0] };
+        assert_ne!(fp.server_fingerprint(&moved, 0), before[0]);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_server_specs() {
+        for bad in [0.0, -1.0, 1.5, f64::NAN] {
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                fleet(3).with_servers(vec![ServerSpec::scaled(bad)]);
+            }));
+            assert!(res.is_err(), "freq_scale {bad} must be rejected");
+        }
+        let overcommit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fleet(3).with_servers(vec![
+                ServerSpec { airtime_fraction: Some(0.7), ..ServerSpec::default() },
+                ServerSpec { airtime_fraction: Some(0.6), ..ServerSpec::default() },
+            ]);
+        }));
+        assert!(overcommit.is_err(), "overcommitted airtime must be rejected");
+        let empty = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fleet(3).with_servers(Vec::new());
+        }));
+        assert!(empty.is_err(), "empty server list must be rejected");
     }
 }

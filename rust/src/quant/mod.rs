@@ -15,6 +15,8 @@ pub use error::{mean_abs_distortion, total_l1_distortion};
 pub use pot::{pot_params, quantize_pot, quantize_pot_into};
 pub use uniform::{quantize_uniform, quantize_uniform_into, uniform_step};
 
+use crate::util::cli::ParseError;
+
 /// Quantization scheme selector, used across the optimizer and benches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scheme {
@@ -30,11 +32,12 @@ impl Scheme {
         }
     }
 
-    pub fn parse(s: &str) -> Option<Scheme> {
+    /// CLI-facing parser; the error names the token and valid choices.
+    pub fn parse(s: &str) -> Result<Scheme, ParseError> {
         match s {
-            "uniform" => Some(Scheme::Uniform),
-            "pot" | "nonuniform" | "pot-log" => Some(Scheme::Pot),
-            _ => None,
+            "uniform" => Ok(Scheme::Uniform),
+            "pot" | "nonuniform" | "pot-log" => Ok(Scheme::Pot),
+            _ => Err(ParseError::new("quantization scheme", s, &["uniform", "pot"])),
         }
     }
 }
@@ -182,9 +185,11 @@ mod tests {
 
     #[test]
     fn scheme_parsing() {
-        assert_eq!(Scheme::parse("uniform"), Some(Scheme::Uniform));
-        assert_eq!(Scheme::parse("pot"), Some(Scheme::Pot));
-        assert_eq!(Scheme::parse("nonuniform"), Some(Scheme::Pot));
-        assert_eq!(Scheme::parse("x"), None);
+        assert_eq!(Scheme::parse("uniform"), Ok(Scheme::Uniform));
+        assert_eq!(Scheme::parse("pot"), Ok(Scheme::Pot));
+        assert_eq!(Scheme::parse("nonuniform"), Ok(Scheme::Pot));
+        let err = Scheme::parse("x").unwrap_err();
+        assert_eq!(err.token, "x");
+        assert_eq!(err.choices, &["uniform", "pot"]);
     }
 }

@@ -2,6 +2,8 @@
 //! Jetson-AGX-Orin / Xeon+RTX3090 testbed (§VI, Table I), plus
 //! measured-FLOPs presets for the models this repo actually ships.
 
+use crate::util::cli::ParseError;
+
 /// Agent-side processor (paper notation: f, c, η, ψ, b).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceSpec {
@@ -95,21 +97,29 @@ impl DeviceProfile {
         (self.peak_flops() / DeviceProfile::orin().peak_flops()).min(1.0)
     }
 
-    pub fn parse(s: &str) -> Option<DeviceProfile> {
+    /// CLI-facing parser; the error names the token and valid choices.
+    pub fn parse(s: &str) -> Result<DeviceProfile, ParseError> {
         match s {
-            "orin" => Some(DeviceProfile::orin()),
-            "xavier" => Some(DeviceProfile::xavier()),
-            "phone" => Some(DeviceProfile::phone()),
-            _ => None,
+            "orin" => Ok(DeviceProfile::orin()),
+            "xavier" => Ok(DeviceProfile::xavier()),
+            "phone" => Ok(DeviceProfile::phone()),
+            _ => Err(ParseError::new("silicon tier", s, &["orin", "xavier", "phone"])),
         }
     }
 
-    /// Parse a CLI tier mix like `"orin,xavier,phone"`; `None` on any
-    /// unknown tier name or an empty list.
-    pub fn parse_mix(s: &str) -> Option<Vec<DeviceProfile>> {
-        let tiers: Option<Vec<DeviceProfile>> =
-            s.split(',').map(str::trim).map(DeviceProfile::parse).collect();
-        tiers.filter(|t| !t.is_empty())
+    /// Parse a CLI tier mix like `"orin,xavier,phone"`. The error
+    /// carries the first offending tier token (an empty list reports the
+    /// whole input as the offending token).
+    pub fn parse_mix(s: &str) -> Result<Vec<DeviceProfile>, ParseError> {
+        let tiers: Vec<DeviceProfile> = s
+            .split(',')
+            .map(str::trim)
+            .map(DeviceProfile::parse)
+            .collect::<Result<_, _>>()?;
+        if tiers.is_empty() {
+            return Err(ParseError::new("silicon tier mix", s, &["orin", "xavier", "phone"]));
+        }
+        Ok(tiers)
     }
 }
 
@@ -311,16 +321,19 @@ mod tests {
     #[test]
     fn tier_parse_roundtrip_and_mix() {
         for p in [DeviceProfile::orin(), DeviceProfile::xavier(), DeviceProfile::phone()] {
-            assert_eq!(DeviceProfile::parse(p.tier), Some(p));
+            assert_eq!(DeviceProfile::parse(p.tier), Ok(p));
         }
-        assert_eq!(DeviceProfile::parse("tpu"), None);
+        let err = DeviceProfile::parse("tpu").unwrap_err();
+        assert_eq!(err.token, "tpu");
+        assert_eq!(err.choices, ["orin", "xavier", "phone"]);
         let mix = DeviceProfile::parse_mix("orin, xavier,phone").unwrap();
         assert_eq!(
             mix.iter().map(|p| p.tier).collect::<Vec<_>>(),
             vec!["orin", "xavier", "phone"]
         );
-        assert!(DeviceProfile::parse_mix("orin,nope").is_none());
-        assert!(DeviceProfile::parse_mix("").is_none());
+        // the error names the offending token, not the whole list
+        assert_eq!(DeviceProfile::parse_mix("orin,nope").unwrap_err().token, "nope");
+        assert!(DeviceProfile::parse_mix("").is_err());
     }
 
     #[test]

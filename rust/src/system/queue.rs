@@ -29,6 +29,7 @@
 //! exchange.
 
 use crate::obs::metrics as obs_metrics;
+use crate::util::cli::ParseError;
 
 /// Service order at the shared edge queue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -47,11 +48,12 @@ impl QueueDiscipline {
         }
     }
 
-    pub fn parse(s: &str) -> Option<QueueDiscipline> {
+    /// CLI-facing parser; the error names the token and valid choices.
+    pub fn parse(s: &str) -> Result<QueueDiscipline, ParseError> {
         match s {
-            "fifo" => Some(QueueDiscipline::Fifo),
-            "priority" | "weighted-priority" => Some(QueueDiscipline::WeightedPriority),
-            _ => None,
+            "fifo" => Ok(QueueDiscipline::Fifo),
+            "priority" | "weighted-priority" => Ok(QueueDiscipline::WeightedPriority),
+            _ => Err(ParseError::new("queue discipline", s, &["fifo", "priority"])),
         }
     }
 }
@@ -867,12 +869,14 @@ mod tests {
     #[test]
     fn discipline_parse_roundtrip() {
         for d in [QueueDiscipline::Fifo, QueueDiscipline::WeightedPriority] {
-            assert_eq!(QueueDiscipline::parse(d.name()), Some(d));
+            assert_eq!(QueueDiscipline::parse(d.name()), Ok(d));
         }
         assert_eq!(
             QueueDiscipline::parse("weighted-priority"),
-            Some(QueueDiscipline::WeightedPriority)
+            Ok(QueueDiscipline::WeightedPriority)
         );
-        assert_eq!(QueueDiscipline::parse("lifo"), None);
+        let err = QueueDiscipline::parse("lifo").unwrap_err();
+        assert_eq!(err.token, "lifo");
+        assert_eq!(err.choices, ["fifo", "priority"]);
     }
 }

@@ -1,8 +1,43 @@
 //! Tiny CLI argument parser (clap stand-in): subcommands, `--key value`,
 //! `--key=value`, boolean flags, typed getters with defaults, and
-//! auto-generated usage text.
+//! auto-generated usage text. Also home of [`ParseError`], the shared
+//! error type for every CLI-facing enum/token parser.
 
 use std::collections::BTreeMap;
+
+/// Error from a CLI-facing token parser (`FleetAlgorithm::parse`,
+/// `DeviceProfile::parse`, `QueueDiscipline::parse`, ...): carries the
+/// offending token plus the full list of valid choices, so the CLI can
+/// print an actionable message instead of a bare "unknown value".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// What was being parsed, e.g. `"fleet algorithm"`.
+    pub what: &'static str,
+    /// The token that failed to parse, verbatim.
+    pub token: String,
+    /// The accepted spellings (canonical names; aliases may also parse).
+    pub choices: &'static [&'static str],
+}
+
+impl ParseError {
+    pub fn new(what: &'static str, token: &str, choices: &'static [&'static str]) -> Self {
+        ParseError { what, token: token.to_string(), choices }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown {} \"{}\" (expected one of: {})",
+            self.what,
+            self.token,
+            self.choices.join(" | ")
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -162,5 +197,14 @@ mod tests {
     fn unknown_key_detection() {
         let a = toks("--stpes 10").describe("steps", "step count", Some("100"));
         assert_eq!(a.unknown_keys(), vec!["stpes"]);
+    }
+
+    #[test]
+    fn parse_error_names_token_and_choices() {
+        let e = ParseError::new("fleet algorithm", "bogus", &["proposed", "equal", "random"]);
+        assert_eq!(
+            e.to_string(),
+            "unknown fleet algorithm \"bogus\" (expected one of: proposed | equal | random)"
+        );
     }
 }

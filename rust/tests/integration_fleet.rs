@@ -6,7 +6,7 @@
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
 use qaci::fleet::{sim, FleetSimConfig};
-use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem};
+use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem, SolveRequest};
 use qaci::opt::{bisection, Problem};
 use qaci::system::Platform;
 
@@ -343,12 +343,52 @@ fn algorithm_dispatch_and_parsing() {
         ("equal-share", FleetAlgorithm::EqualShare),
         ("feasible-random", FleetAlgorithm::FeasibleRandom),
     ] {
-        assert_eq!(FleetAlgorithm::parse(name), Some(algorithm));
+        assert_eq!(FleetAlgorithm::parse(name), Ok(algorithm));
         assert_eq!(algorithm.name(), name);
+        // the legacy free-fn wrapper and the request API agree exactly
         let alloc = fleet::solve(&fp, algorithm, 13);
+        let via_req = fp.solve(&SolveRequest { algorithm, seed: 13, ..SolveRequest::default() });
         assert_eq!(alloc.agents.len(), 4);
         assert!(alloc.objective.is_finite());
+        assert_eq!(alloc.objective, via_req.objective);
     }
-    assert_eq!(FleetAlgorithm::parse("equal"), Some(FleetAlgorithm::EqualShare));
-    assert_eq!(FleetAlgorithm::parse("nope"), None);
+    assert_eq!(FleetAlgorithm::parse("equal"), Ok(FleetAlgorithm::EqualShare));
+    let err = FleetAlgorithm::parse("nope").unwrap_err();
+    assert_eq!(err.token, "nope");
+    assert!(err.choices.contains(&"equal-share"), "choices must name the canonical spellings");
+}
+
+/// Acceptance: `qaci fleet --servers 3 --churn --events` exercises the
+/// whole multi-server path — sticky placement, per-server warm re-solves,
+/// per-server event queues — and completes with a verdict; the one-shot
+/// path surfaces the srv column only at S > 1, so single-server output
+/// is unchanged.
+#[test]
+fn cli_fleet_multi_server_end_to_end() {
+    let (stdout, _) = qaci(&[
+        "fleet", "--servers", "3", "--churn", "--events", "--horizon", "240", "--seed", "0",
+    ]);
+    assert!(stdout.contains("servers: S=3"), "multi-server header missing:\n{stdout}");
+    assert!(stdout.contains("event-level telemetry"), "event table missing:\n{stdout}");
+    for policy in ["static-equal", "static-proposed", "online-proposed"] {
+        assert!(stdout.contains(policy), "policy {policy} missing:\n{stdout}");
+    }
+    // exit code reflects the online-vs-static verdict; either way the
+    // replay must have finished cleanly enough to print it
+    assert!(
+        stdout.contains("online re-allocation") || stdout.contains("no churn events fired"),
+        "no verdict line:\n{stdout}"
+    );
+    let (multi, ok) = qaci(&["fleet", "--agents", "6", "--servers", "2", "--requests", "4"]);
+    assert!(ok, "S=2 one-shot run failed:\n{multi}");
+    assert!(multi.contains("srv"), "srv column missing at S=2:\n{multi}");
+    assert!(multi.contains("servers: S=2"), "{multi}");
+    let (single, ok) = qaci(&["fleet", "--agents", "6", "--requests", "4"]);
+    assert!(ok);
+    assert!(!single.contains("srv"), "srv column must not appear at S=1:\n{single}");
+    // unknown placement strategies and malformed scales are usage errors
+    let (_, ok) = qaci(&["fleet", "--placement", "telepathy"]);
+    assert!(!ok, "unknown placement must be rejected");
+    let (_, ok) = qaci(&["fleet", "--server-scales", "1.0,zero"]);
+    assert!(!ok, "bad server scales must be rejected");
 }
