@@ -15,35 +15,70 @@
 //!   `placement.moves`;
 //! * on uniform server banks local-search never loses to equal-spread;
 //! * at S = 1 every placement strategy collapses to the single-server
-//!   solver bit for bit (the legacy `solve_proposed` wrapper).
+//!   solver bit for bit (the legacy `solve_proposed` wrapper);
+//! * on the `airtime-split` bank the explicit per-server airtime pins
+//!   are honored: no server's agents ever sum past its reserved slice
+//!   of the medium (checked for every strategy on every scenario);
+//! * on the `queue-mix` bank a per-server queue-discipline override
+//!   solves cleanly alongside the fleet-wide discipline, and an
+//!   override *equal* to the global discipline is the identity — same
+//!   allocation, bit for bit.
 
 use qaci::bench_harness::{emit_bench_artifact, Table};
 use qaci::obs::metrics;
 use qaci::opt::fleet::{
     self, AgentSpec, FleetProblem, FleetSpec, PlacementStrategy, ServerSpec, SolveRequest,
 };
+use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
 use qaci::util::json::Json;
 use qaci::util::timer::Stopwatch;
 
-fn fleet(n: usize, servers: Vec<ServerSpec>) -> FleetProblem {
+fn fleet(n: usize, servers: Vec<ServerSpec>, queue: Option<QueueDiscipline>) -> FleetProblem {
     let mut spec = FleetSpec::new(Platform::fleet_edge(), AgentSpec::mixed_fleet(n));
     spec.servers = servers;
+    spec.queue = queue.map(|d| QueueModel::uniform(d, n, 0.02));
     FleetProblem::from_spec(spec)
 }
 
 fn main() {
-    let scenarios: Vec<(&str, usize, Vec<ServerSpec>)> = vec![
+    let scenarios: Vec<(&str, usize, Vec<ServerSpec>, Option<QueueDiscipline>)> = vec![
         // the hot-server burst: round-robin strands the background block
         // on the 12%-budget box, where even the full budget can't seat it
         (
             "hot-server",
             9,
             vec![ServerSpec::default(), ServerSpec::default(), ServerSpec::scaled(0.12)],
+            None,
         ),
-        ("uniform-2", 8, ServerSpec::identical(2)),
-        ("uniform-3", 12, ServerSpec::identical(3)),
-        ("single", 8, ServerSpec::identical(1)),
+        ("uniform-2", 8, ServerSpec::identical(2), None),
+        ("uniform-3", 12, ServerSpec::identical(3), None),
+        ("single", 8, ServerSpec::identical(1), None),
+        // explicit asymmetric airtime pins: one box reserves 70% of the
+        // medium, the other gets the rest — no head-count split
+        (
+            "airtime-split",
+            8,
+            vec![
+                ServerSpec { airtime_fraction: Some(0.7), ..ServerSpec::default() },
+                ServerSpec { airtime_fraction: Some(0.3), ..ServerSpec::default() },
+            ],
+            None,
+        ),
+        // per-server discipline override riding a fleet-wide FIFO queue:
+        // box 1 serves its sub-fleet weighted-priority
+        (
+            "queue-mix",
+            8,
+            vec![
+                ServerSpec {
+                    queue: Some(QueueDiscipline::WeightedPriority),
+                    ..ServerSpec::default()
+                },
+                ServerSpec::default(),
+            ],
+            Some(QueueDiscipline::Fifo),
+        ),
     ];
 
     let mut t = Table::new(
@@ -51,8 +86,8 @@ fn main() {
         &["scenario", "N", "S", "placement", "cost", "wgt D^U", "admitted", "moves", "alloc [ms]"],
     );
     let mut records: Vec<Json> = Vec::new();
-    for (name, n, servers) in &scenarios {
-        let fp = fleet(*n, servers.clone());
+    for (name, n, servers, queue) in &scenarios {
+        let fp = fleet(*n, servers.clone(), *queue);
         let mut cost = std::collections::BTreeMap::<&str, f64>::new();
         let mut moves_of = std::collections::BTreeMap::<&str, u64>::new();
         for strategy in PlacementStrategy::ALL {
@@ -69,6 +104,23 @@ fn main() {
                 alloc.placement.assignment.iter().all(|&k| k < servers.len()),
                 "{name}/{strategy:?}: agent placed on a nonexistent server"
             );
+            // explicit airtime pins are a hard cap: a server's agents
+            // can never sum past its reserved slice of the medium
+            for (k, srv) in servers.iter().enumerate() {
+                if let Some(f) = srv.airtime_fraction {
+                    let sum: f64 = alloc
+                        .agents
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| alloc.placement.assignment[*i] == k)
+                        .map(|(_, a)| a.airtime_share)
+                        .sum();
+                    assert!(
+                        sum <= f + 1e-9,
+                        "{name}/{strategy:?}: server {k} airtime {sum} exceeds pinned {f}"
+                    );
+                }
+            }
             cost.insert(strategy.name(), alloc.objective);
             moves_of.insert(strategy.name(), moves);
             t.row(&[
@@ -113,6 +165,30 @@ fn main() {
                 "{name}: local-search {local} lost to equal-spread {spread}"
             );
         }
+        if *name == "queue-mix" {
+            // a per-server override equal to the fleet-wide discipline
+            // is the identity: the sub-fleets see the same QueueModel,
+            // so the solve reproduces the no-override bank bit for bit
+            let redundant = fleet(
+                *n,
+                vec![
+                    ServerSpec {
+                        queue: Some(QueueDiscipline::Fifo),
+                        ..ServerSpec::default()
+                    };
+                    2
+                ],
+                Some(QueueDiscipline::Fifo),
+            );
+            let plain = fleet(*n, ServerSpec::identical(2), Some(QueueDiscipline::Fifo));
+            let a = redundant.solve(&SolveRequest::default());
+            let b = plain.solve(&SolveRequest::default());
+            assert_eq!(a.objective, b.objective, "redundant override must be the identity");
+            for (x, y) in a.agents.iter().zip(&b.agents) {
+                assert_eq!(x.server_share, y.server_share);
+                assert_eq!(x.airtime_share, y.airtime_share);
+            }
+        }
         if servers.len() == 1 {
             // every strategy is the single-server solver, bit for bit
             let legacy = fleet::solve_proposed(&fp);
@@ -150,6 +226,7 @@ fn main() {
     );
     println!(
         "\nOK: local-search strictly beats equal-spread on the hot-server bank and never \
-         loses on uniform banks; S=1 reproduces the single-server solver bit for bit"
+         loses on uniform banks; S=1 reproduces the single-server solver bit for bit; \
+         airtime pins are honored and a redundant queue override is the identity"
     );
 }

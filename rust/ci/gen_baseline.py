@@ -19,10 +19,18 @@ derive no constraint in `obs::benchlog::diff`:
   randomized policy is machine-invariant) but must keep being emitted.
 * fleet_placement — on the designated hot-server bank the local-search
   placement's cost sits strictly below equal-spread (the same ordering
-  the bench asserts in-process); the uniform and single-server banks
-  are ties (local-search may land exactly on the round-robin split),
-  and nearest-server rows are coverage-only on the hot-server bank
-  (local <= nearest holds by construction but need not be strict).
+  the bench asserts in-process); the uniform, single-server,
+  airtime-split and queue-mix banks are ties (local-search may land
+  exactly on the round-robin split), and nearest-server rows are
+  coverage-only on the hot-server bank (local <= nearest holds by
+  construction but need not be strict).
+* fleet_daemon — on the burst-storm scenario both daemon arms
+  (hysteresis and resolve-always) keep p99 end-to-end delay strictly
+  below both static policies (encoded 1 vs 2; the bench additionally
+  asserts the <= 50% solve-count and 1.5x tail bounds in-process and
+  the CI validator re-checks them — solve counts are not a tracked
+  diff field). Hysteresis vs resolve-always is a tie: neither
+  direction is machine-invariant.
 
 Entry lines replicate `obs::benchlog::Entry::to_line` byte for byte:
 compact JSON (no spaces, insertion order, whole numbers rendered
@@ -52,8 +60,21 @@ CHURN_SCENARIOS = [
 CHURN_POLICIES = ["online-proposed", "static-equal", "static-proposed"]
 SCALE_NS = [1, 2, 4, 8, 16, 32, 64]
 SCALE_POLICIES = ["proposed", "equal-share", "feasible-random"]
-PLACEMENT_SCENARIOS = ["hot-server", "uniform-2", "uniform-3", "single"]
+PLACEMENT_SCENARIOS = [
+    "hot-server",
+    "uniform-2",
+    "uniform-3",
+    "single",
+    "airtime-split",
+    "queue-mix",
+]
 PLACEMENT_POLICIES = ["local-search", "equal-spread", "nearest-server"]
+DAEMON_POLICIES = [
+    "daemon-hysteresis",
+    "daemon-resolve-always",
+    "static-equal",
+    "static-proposed",
+]
 
 
 def fnv1a64(data: bytes) -> int:
@@ -132,12 +153,22 @@ def placement_payload():
     return {"bench": "fleet_placement", "version": 1, "results": results}
 
 
+def daemon_payload():
+    results = []
+    for policy in DAEMON_POLICIES:
+        row = {"scenario": "burst-storm", "policy": policy}
+        row["p99_s"] = 1 if policy.startswith("daemon-") else 2
+        results.append(row)
+    return {"bench": "fleet_daemon", "version": 1, "results": results}
+
+
 def main():
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "benchlog-baseline.jsonl")
     lines = [
         entry_line(0, "fleet_churn", churn_payload()),
         entry_line(1, "fleet_scale", scale_payload()),
         entry_line(2, "fleet_placement", placement_payload()),
+        entry_line(3, "fleet_daemon", daemon_payload()),
     ]
     with open(out, "w") as f:
         f.write("\n".join(lines) + "\n")

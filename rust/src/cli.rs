@@ -10,7 +10,7 @@ use qaci::data::eval::EvalSet;
 use qaci::data::vocab::Vocab;
 use qaci::data::workload::{generate, Arrival};
 use qaci::fleet::churn::{self, ChurnConfig};
-use qaci::fleet::{events, sim as fleet_sim, FleetSimConfig};
+use qaci::fleet::{daemon, events, sim as fleet_sim, DaemonConfig, FleetSimConfig};
 use qaci::obs::benchlog::{self, BenchLog, DiffOptions, Query};
 use qaci::opt::fleet::{
     AdmissionPricing, AgentSpec, FleetAlgorithm, FleetProblem, FleetSpec, PlacementStrategy,
@@ -76,8 +76,35 @@ pub fn main() {
             None,
         )
         .describe(
+            "serve",
+            "fleet: run the closed-loop serving daemon (epochs + hysteresis) instead",
+            None,
+        )
+        .describe("epochs", "serve: number of telemetry epochs", Some("8"))
+        .describe("epoch-dur", "serve: epoch length [s]", Some("75"))
+        .describe("cooldown", "serve: minimum spacing between taken re-solves [s]", Some("60"))
+        .describe(
+            "gain-threshold",
+            "serve: skip a rate-only re-solve while the frozen-shares cost stays within \
+             this fraction of the counterfactual warm solve",
+            Some("0.05"),
+        )
+        .describe(
+            "urgent-backlog",
+            "serve: measured queue backlog [s] past which a pending change re-solves \
+             immediately, cooldown or not",
+            Some("5"),
+        )
+        .describe("resolve-always", "serve: disable hysteresis (A/B baseline)", None)
+        .describe(
+            "closed-loop",
+            "churn/serve: closed-loop (single-inflight) clients instead of open Poisson streams",
+            None,
+        )
+        .describe(
             "admission-pricing",
-            "fleet: rejection pricing, uniform | tiered (capability-scaled)",
+            "fleet: rejection pricing, uniform | tiered (capability-scaled) | measured \
+             (telemetry-scaled, fed by --serve epochs)",
             Some("uniform"),
         )
         .describe("horizon", "churn: simulated horizon [s]", Some("600"))
@@ -424,7 +451,13 @@ fn cmd_serve(args: &Args) -> i32 {
 /// `qaci.metrics` snapshot after the command finishes.
 fn cmd_fleet(args: &Args) -> i32 {
     qaci::obs::metrics::reset(); // snapshot covers this run only
-    let code = if args.has("churn") { cmd_fleet_churn(args) } else { cmd_fleet_alloc(args) };
+    let code = if args.has("serve") {
+        cmd_fleet_serve(args)
+    } else if args.has("churn") {
+        cmd_fleet_churn(args)
+    } else {
+        cmd_fleet_alloc(args)
+    };
     if let Some(path) = args.opt_str("metrics-out") {
         let body = qaci::obs::metrics::snapshot().to_json().to_string_pretty();
         if let Err(e) = std::fs::write(&path, body + "\n") {
@@ -585,21 +618,14 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
     }
 }
 
-/// `qaci fleet --churn`: replay one churn timeline (Poisson joins,
-/// leaves, load bursts) under the static t=0 allocations and the online
-/// warm-started re-allocation, and compare time-averaged fleet cost.
-fn cmd_fleet_churn(args: &Args) -> i32 {
-    let Some(tiers) = parsed(DeviceProfile::parse_mix(&args.str("tiers", "orin"))) else {
-        return 2;
-    };
-    let Some(pricing) = parsed(AdmissionPricing::parse(&args.str("admission-pricing", "uniform")))
-    else {
-        return 2;
-    };
-    let Some(queue) = parsed(parse_queue(&args.str("queue", "fifo"))) else { return 2 };
-    let Some(servers) = fleet_servers(args) else { return 2 };
-    let multi = servers != [ServerSpec::default()];
-    let cfg = ChurnConfig {
+/// The shared `--churn`/`--serve` workload config from CLI flags
+/// (`None` = a flag failed to parse; the caller exits 2).
+fn churn_config(args: &Args) -> Option<ChurnConfig> {
+    let tiers = parsed(DeviceProfile::parse_mix(&args.str("tiers", "orin")))?;
+    let pricing = parsed(AdmissionPricing::parse(&args.str("admission-pricing", "uniform")))?;
+    let queue = parsed(parse_queue(&args.str("queue", "fifo")))?;
+    let servers = fleet_servers(args)?;
+    Some(ChurnConfig {
         initial_agents: args.usize("agents", 4).max(1),
         horizon_s: args.f64("horizon", 600.0),
         join_rps: args.f64("join-rps", 0.02),
@@ -610,6 +636,7 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         tick_s: args.f64("tick", 20.0),
         max_agents: args.usize("max-agents", 16),
         arrival_rps: args.f64("arrival-rps", 0.02),
+        closed_loop: args.has("closed-loop"),
         queue,
         link_rate_bps: args.f64("rate-mbps", 400.0) * 1e6,
         link_base_latency_s: 2e-3,
@@ -617,7 +644,15 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         pricing,
         servers,
         seed: args.usize("seed", 0) as u64,
-    };
+    })
+}
+
+/// `qaci fleet --churn`: replay one churn timeline (Poisson joins,
+/// leaves, load bursts) under the static t=0 allocations and the online
+/// warm-started re-allocation, and compare time-averaged fleet cost.
+fn cmd_fleet_churn(args: &Args) -> i32 {
+    let Some(cfg) = churn_config(args) else { return 2 };
+    let multi = cfg.servers != [ServerSpec::default()];
     let (tl, reports) = churn::compare(Platform::fleet_edge(), &cfg);
     println!(
         "churn: N0={} agents, tiers [{}], horizon {:.0}s, {} events ({} joins, {} leaves, \
@@ -738,6 +773,87 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
     } else {
         println!("\nWARNING: online did not beat the best static policy");
         1
+    }
+}
+
+/// `qaci fleet --serve`: the closed-loop serving daemon — run the event
+/// engine in telemetry epochs and let measured admission pricing plus
+/// hysteresis (predicted-gain probe + measured-backlog urgency +
+/// cooldown) decide which fingerprint changes are worth a re-solve at
+/// all (see `qaci::fleet::daemon`).
+fn cmd_fleet_serve(args: &Args) -> i32 {
+    let Some(churn) = churn_config(args) else { return 2 };
+    let dcfg = DaemonConfig {
+        churn,
+        epochs: args.usize("epochs", 8).max(1),
+        epoch_s: args.f64("epoch-dur", 75.0),
+        cooldown_s: args.f64("cooldown", 60.0),
+        gain_threshold: args.f64("gain-threshold", 0.05),
+        urgent_backlog_s: args.f64("urgent-backlog", 5.0),
+        resolve_always: args.has("resolve-always"),
+        audit: false,
+    };
+    let r = daemon::run_daemon(Platform::fleet_edge(), &dcfg);
+    println!(
+        "serve: N0={} agents, {} epochs x {:.0}s, cooldown {:.0}s, gain threshold {:.0}%, \
+         urgency backlog {:.0}s, pricing={}, {} arrivals, {}",
+        dcfg.churn.initial_agents,
+        dcfg.epochs,
+        dcfg.epoch_s,
+        dcfg.cooldown_s,
+        dcfg.gain_threshold * 100.0,
+        dcfg.urgent_backlog_s,
+        dcfg.churn.pricing.name(),
+        if dcfg.churn.closed_loop { "closed-loop" } else { "open" },
+        if dcfg.resolve_always { "resolve-always" } else { "hysteresis" },
+    );
+
+    let mut t = Table::new(
+        "telemetry epochs (per-epoch deltas; p99s cumulative to date)",
+        &[
+            "epoch", "t end", "arrivals", "completed", "viol", "energy J", "p99 e2e", "p99 wait",
+            "solves",
+        ],
+    );
+    for e in &r.epochs {
+        t.row(&[
+            format!("{}", e.epoch),
+            format!("{:.0}", e.t_end_s),
+            format!("{}", e.arrivals),
+            format!("{}", e.completed),
+            format!("{}", e.violations),
+            format!("{:.2}", e.energy_j),
+            format!("{:.3}", e.p99_e2e_s),
+            format!("{:.3}", e.p99_wait_s),
+            format!("{}", e.resolves_taken),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nre-solves: taken {}  skipped {} (cooldown {}, gain {})  cancelled deferrals {}",
+        r.resolves_taken,
+        r.skipped_cooldown + r.skipped_gain,
+        r.skipped_cooldown,
+        r.skipped_gain,
+        r.cancelled
+    );
+    let rep = &r.report;
+    println!(
+        "drained: arrivals {}  completed {}  rejected {}  dropped {}  p99 e2e {:.3}s  \
+         viol {:.1}%  energy/req {:.2} J",
+        rep.arrivals,
+        rep.completed,
+        rep.rejected,
+        rep.dropped_departure,
+        rep.e2e_s.p99(),
+        rep.violation_rate() * 100.0,
+        rep.energy_per_request_j()
+    );
+    if rep.completed == 0 {
+        1
+    } else {
+        0
     }
 }
 

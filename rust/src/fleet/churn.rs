@@ -73,6 +73,14 @@ pub struct ChurnConfig {
     pub max_agents: usize,
     /// steady-state per-agent request rate (feeds the queue model)
     pub arrival_rps: f64,
+    /// event-level arrival model: `false` = open Poisson streams (the
+    /// default), `true` = closed-loop single-inflight clients mirroring
+    /// [`super::sim`]'s model — each agent keeps at most one request in
+    /// flight and draws its next exponential think-time gap from the
+    /// previous request's completion (rejected arrivals retry after a
+    /// think-time gap). Only [`super::events`] reads this; the analytic
+    /// replay and the allocator's queue model are unchanged.
+    pub closed_loop: bool,
     /// shared edge-queue discipline; `None` = PR 1's fluid sharing (load
     /// bursts are then invisible to the allocator)
     pub queue: Option<QueueDiscipline>,
@@ -109,6 +117,7 @@ impl Default for ChurnConfig {
             tick_s: 20.0,
             max_agents: 16,
             arrival_rps: 0.02,
+            closed_loop: false,
             queue: Some(QueueDiscipline::Fifo),
             link_rate_bps: 400e6,
             link_base_latency_s: 2e-3,
@@ -331,12 +340,30 @@ impl Population {
     }
 
     pub(crate) fn problem(&self, base: Platform, cfg: &ChurnConfig) -> FleetProblem {
+        self.problem_with_pressure(base, cfg, &HashMap::new())
+    }
+
+    /// [`Self::problem`] with measured violation pressure attached (the
+    /// serving daemon's telemetry feedback): keys absent from the map
+    /// carry zero pressure, and an empty map leaves the spec's pressure
+    /// vector empty — bit-identical to the plain derivation, so the
+    /// fingerprint only moves when telemetry actually exists.
+    pub(crate) fn problem_with_pressure(
+        &self,
+        base: Platform,
+        cfg: &ChurnConfig,
+        pressure: &HashMap<u64, f64>,
+    ) -> FleetProblem {
         let specs: Vec<AgentSpec> = self.live.iter().map(|&k| Self::spec(cfg, k)).collect();
         let mut spec = FleetSpec::new(base, specs);
         spec.link_rate_bps = cfg.link_rate_bps;
         spec.link_base_latency_s = cfg.link_base_latency_s;
         spec.pricing = cfg.pricing;
         spec.servers = cfg.servers.clone();
+        if !pressure.is_empty() {
+            spec.pressure =
+                self.live.iter().map(|k| pressure.get(k).copied().unwrap_or(0.0)).collect();
+        }
         if let Some(discipline) = cfg.queue {
             let rates: Vec<f64> = self
                 .live

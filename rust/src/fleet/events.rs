@@ -49,16 +49,18 @@
 //! (degrade, re-balance, or turn the burster away) protects the tail —
 //! the designated `burst-storm` bench scenario pins that ordering.
 
-use super::churn::{fingerprint, sticky_placement, ChurnConfig, ChurnEvent, ChurnPolicy, Timeline};
+use super::churn::{
+    fingerprint, sticky_placement, ChurnConfig, ChurnEvent, ChurnPolicy, Population, Timeline,
+};
 use crate::obs::metrics as obs_metrics;
 use crate::obs::Metrics;
 use crate::opt::fleet::{
-    self, AgentAllocation, AgentSpec, FleetAlgorithm, PlacementStrategy, ProposedOptions,
-    ServerSpec, SolveRequest,
+    self, AgentAllocation, AgentSpec, FleetAlgorithm, FleetAllocation, FleetProblem,
+    PlacementStrategy, ProposedOptions, ServerSpec, SolveRequest,
 };
 use crate::opt::Design;
 use crate::system::queue::EdgeQueue;
-use crate::system::{delay, Platform};
+use crate::system::{delay, energy, Platform};
 use crate::util::rng::Rng;
 use crate::util::timer::Samples;
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
@@ -79,6 +81,11 @@ pub struct EventAgentReport {
     pub dropped_departure: u64,
     /// completed requests whose end-to-end delay exceeded the class T0
     pub deadline_misses: u64,
+    /// total compute + uplink energy [J] of completed requests, each
+    /// priced at the operating point in force when it arrived
+    /// ([`crate::system::energy::total_energy`] at the lane's design and
+    /// shares — the same per-request pricing as [`super::sim`])
+    pub energy_j: f64,
     /// end-to-end delay (arrival → server finish) of completed requests
     pub e2e_s: Samples,
     /// measured server-queue wait of completed requests
@@ -96,6 +103,7 @@ impl EventAgentReport {
             rejected: 0,
             dropped_departure: 0,
             deadline_misses: 0,
+            energy_j: 0.0,
             e2e_s: Samples::new(),
             queue_wait_s: Samples::new(),
         }
@@ -123,6 +131,9 @@ pub struct EventReport {
     pub rejected: u64,
     pub dropped_departure: u64,
     pub deadline_misses: u64,
+    /// fleet total compute + uplink energy [J] over completed requests
+    /// (see [`EventAgentReport::energy_j`])
+    pub energy_j: f64,
     /// e2e percentiles across every completed request in the fleet
     pub e2e_s: Samples,
     /// measured queue-wait percentiles across every completed request
@@ -151,6 +162,15 @@ impl EventReport {
         (self.deadline_misses + self.rejected + self.dropped_departure) as f64
             / self.arrivals as f64
     }
+
+    /// Mean per-request energy [J] over completed requests (0 when
+    /// nothing completed).
+    pub fn energy_per_request_j(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.energy_j / self.completed as f64
+    }
 }
 
 /// One live agent's serving state.
@@ -171,6 +191,9 @@ struct EventLane {
     server: usize,
     /// absolute time of the next arrival (∞ while the stream is off)
     next_arrival: f64,
+    /// closed-loop mode: a request is in flight, so the arrival stream
+    /// is paused until [`Self::release`] observes its completion/drop
+    inflight: bool,
     /// fluid mode: when this agent's private server slice frees up
     slice_free_at: f64,
     /// fluid mode: (tag, ready) backlog awaiting the private slice
@@ -193,6 +216,7 @@ impl EventLane {
             rate: 0.0,
             server: 0,
             next_arrival: f64::INFINITY,
+            inflight: false,
             slice_free_at: 0.0,
             pending: VecDeque::new(),
         };
@@ -220,12 +244,43 @@ impl EventLane {
         }
         let old = self.rate;
         self.rate = rate;
+        if self.inflight {
+            // closed loop, request outstanding: nothing to retime now —
+            // the pending release draws its think gap at the new rate
+            return;
+        }
         if rate <= 0.0 {
             self.next_arrival = f64::INFINITY;
         } else if old <= 0.0 || !self.next_arrival.is_finite() {
             self.next_arrival = now + self.rng.exponential(rate);
         } else {
             self.next_arrival = now + (self.next_arrival - now) * old / rate;
+        }
+    }
+
+    /// Closed-loop release: the client observed its request terminate
+    /// (complete or drop) at `t`; draw the next exponential think gap
+    /// from there. No-op in open-loop mode (`inflight` never set).
+    fn release(&mut self, t: f64) {
+        if !self.inflight {
+            return;
+        }
+        self.inflight = false;
+        self.next_arrival =
+            if self.rate > 0.0 { t + self.rng.exponential(self.rate) } else { f64::INFINITY };
+    }
+
+    /// Compute + uplink energy of one request at the current operating
+    /// point — the per-request pricing [`super::sim`] applies, reused
+    /// verbatim so the event replay's totals are comparable.
+    fn request_energy(&self, base: Platform) -> f64 {
+        let Some(d) = self.design else { return 0.0 };
+        let platform = self.spec.platform_at(base, self.mu);
+        let e = energy::total_energy(&platform, d.b_hat as f64, d.f, d.f_tilde);
+        if e.is_finite() {
+            e
+        } else {
+            0.0
         }
     }
 
@@ -247,6 +302,8 @@ struct RequestMeta {
     key: u64,
     arrival_s: f64,
     t0: f64,
+    /// compute + uplink energy [J] priced at the arrival operating point
+    energy_j: f64,
 }
 
 /// A popped job lands in its agent's report.
@@ -261,6 +318,7 @@ fn complete(
     let m = &meta[tag as usize];
     let st = stats.get_mut(&m.key).expect("completed job has stats");
     st.completed += 1;
+    st.energy_j += m.energy_j;
     let e2e = finish - m.arrival_s;
     st.e2e_s.push(e2e);
     st.queue_wait_s.push((start - ready).max(0.0));
@@ -270,7 +328,11 @@ fn complete(
 }
 
 /// Generate arrivals strictly before `until` for every live lane. Each
-/// request lands in its agent's server's queue (`lane.server`).
+/// request lands in its agent's server's queue (`lane.server`). In
+/// closed-loop mode ([`ChurnConfig::closed_loop`]) a successful
+/// submission pauses the lane until [`EventLane::release`] observes the
+/// request terminate; a rejected arrival retries after a think gap (the
+/// same draw the open stream would have made).
 fn generate(
     base: Platform,
     cfg: &ChurnConfig,
@@ -285,16 +347,27 @@ fn generate(
         let lane = lanes.get_mut(&key).expect("live agent has a lane");
         while lane.next_arrival < until {
             let arrival = lane.next_arrival;
-            lane.next_arrival = arrival + lane.rng.exponential(lane.rate);
             let st = stats.get_mut(&key).expect("live agent has stats");
             st.arrivals += 1;
             let Some((pre, t_server)) = lane.stage_times(base, cfg) else {
                 st.rejected += 1;
+                lane.next_arrival = arrival + lane.rng.exponential(lane.rate);
                 continue;
             };
+            if cfg.closed_loop {
+                lane.inflight = true;
+                lane.next_arrival = f64::INFINITY;
+            } else {
+                lane.next_arrival = arrival + lane.rng.exponential(lane.rate);
+            }
             let ready = arrival + pre;
             let tag = meta.len() as u64;
-            meta.push(RequestMeta { key, arrival_s: arrival, t0: lane.spec.t0 });
+            meta.push(RequestMeta {
+                key,
+                arrival_s: arrival,
+                t0: lane.spec.t0,
+                energy_j: lane.request_energy(base),
+            });
             match queues {
                 Some(qs) => {
                     qs[lane.server].push_tagged(key as usize, tag, ready, t_server, lane.spec.weight)
@@ -323,6 +396,13 @@ fn dispatch_until(
             for q in qs.iter_mut() {
                 while let Some((job, start, finish)) = q.pop_due(until) {
                     complete(stats, meta, job.tag, job.ready_s, start, finish);
+                    if cfg.closed_loop {
+                        // the lane may already be gone (departure drains
+                        // its in-service job after the Leave)
+                        if let Some(lane) = lanes.get_mut(&meta[job.tag as usize].key) {
+                            lane.release(finish);
+                        }
+                    }
                 }
             }
         }
@@ -343,6 +423,7 @@ fn dispatch_until(
                     lane.slice_free_at = finish;
                     complete(stats, meta, tag, ready, start, finish);
                     lane.pending.pop_front();
+                    lane.release(finish);
                 }
             }
         }
@@ -351,13 +432,17 @@ fn dispatch_until(
 
 /// Drop an agent's waiting backlog into the given accounting bucket
 /// (`departed` = dropped-at-departure, otherwise admission-revoked →
-/// rejected).
+/// rejected). In closed-loop mode a *surviving* agent whose waiting
+/// request was just dropped re-arms its stream at `now` — its client
+/// observed the drop; a departing agent's lane is removed by the caller,
+/// so nothing re-arms there.
 fn drop_backlog(
     lanes: &mut BTreeMap<u64, EventLane>,
     stats: &mut BTreeMap<u64, EventAgentReport>,
     queues: &mut Option<Vec<EdgeQueue>>,
     key: u64,
     departed: bool,
+    now: f64,
 ) {
     let mut n = 0u64;
     if let Some(qs) = queues {
@@ -370,6 +455,9 @@ fn drop_backlog(
     if let Some(lane) = lanes.get_mut(&key) {
         n += lane.pending.len() as u64;
         lane.pending.clear();
+        if n > 0 && !departed {
+            lane.release(now);
+        }
     }
     let st = stats.get_mut(&key).expect("agent has stats");
     if departed {
@@ -403,228 +491,439 @@ fn run_events_inner(
     cfg: &ChurnConfig,
 ) -> EventReport {
     let _span = obs_metrics::span("events.run");
-    let opts = ProposedOptions::default();
-    let multi = cfg.servers != [ServerSpec::default()];
-    let mut pop = super::churn::Population {
-        live: timeline.initial.clone(),
-        bursting: HashSet::new(),
-    };
-    let mut fp = pop.problem(base, cfg);
-    let mut stamp = fingerprint(&fp);
-    // the same t = 0 requests as the analytic replay, so the two views
-    // share placements and re-allocation schedules event for event
-    let mut alloc = match policy {
-        ChurnPolicy::StaticEqual => fp.solve(&SolveRequest {
-            algorithm: FleetAlgorithm::EqualShare,
-            placement: PlacementStrategy::EqualSpread,
-            ..SolveRequest::default()
-        }),
-        ChurnPolicy::StaticProposed | ChurnPolicy::Online => fp.solve(&SolveRequest::default()),
-    };
-    // frozen per-key slots for the static policies (joiners have none)
-    let slots: HashMap<u64, AgentAllocation> =
-        pop.live.iter().zip(&alloc.agents).map(|(&k, a)| (k, *a)).collect();
-    let mut assoc: Vec<u64> = pop.live.clone();
-    // online, multi-server: sticky seating + per-server fingerprints,
-    // mirroring the analytic replay's gate
-    let mut server_of: HashMap<u64, usize> = HashMap::new();
-    let mut server_stamps: Vec<u64> = Vec::new();
-    if multi && policy == ChurnPolicy::Online {
-        for (key, &s) in pop.live.iter().zip(&alloc.placement.assignment) {
-            server_of.insert(*key, s);
-        }
-        server_stamps =
-            (0..cfg.servers.len()).map(|k| fp.server_fingerprint(&alloc.placement, k)).collect();
-    }
-
-    let mut lanes: BTreeMap<u64, EventLane> = BTreeMap::new();
-    let mut stats: BTreeMap<u64, EventAgentReport> = BTreeMap::new();
-    for ((&k, row), &srv) in pop.live.iter().zip(&alloc.agents).zip(&alloc.placement.assignment) {
-        let mut lane = EventLane::new(k, cfg, Some(row));
-        lane.server = srv;
-        lane.set_rate(0.0, cfg.arrival_rps);
-        stats.insert(k, EventAgentReport::new(k, lane.spec.class, lane.spec.device.tier));
-        lanes.insert(k, lane);
-    }
-
-    // one edge queue per server (honoring per-server discipline
-    // overrides); `None` keeps PR 1's fluid per-agent slices
-    let mut queues: Option<Vec<EdgeQueue>> = cfg.queue.map(|d| {
-        cfg.servers.iter().map(|srv| EdgeQueue::new(srv.queue.unwrap_or(d))).collect()
-    });
-    let mut meta: Vec<RequestMeta> = Vec::new();
-    let (mut reallocations, mut realloc_skipped) = (0usize, 0usize);
-
+    let mut engine = EventEngine::new(base, &timeline.initial, policy, cfg);
+    let no_pressure = HashMap::new();
     for &(t, event) in &timeline.events {
-        generate(base, cfg, &pop, &mut lanes, &mut stats, &mut meta, &mut queues, t);
-        dispatch_until(base, cfg, &pop, &mut lanes, &mut stats, &meta, &mut queues, t);
-        // per-slot queue-depth timeline: the backlog left at each event
-        // boundary after everything dispatchable before it has started
-        // (fleet total, plus a per-server breakdown on S > 1 fleets)
-        if let Some(qs) = &queues {
+        engine.advance_to(t);
+        engine.apply_event(t, event);
+        if policy == ChurnPolicy::Online {
+            // resolve-always: every fingerprint change is taken — the
+            // daemon layers its hysteresis on the same gate instead
+            if engine.gate(&no_pressure) {
+                engine.resolve(t);
+            } else {
+                engine.note_skip();
+            }
+        }
+    }
+    engine.finish()
+}
+
+/// The event-level serving machinery behind [`run_events`], factored out
+/// so the closed-loop daemon ([`super::daemon`]) can drive it epoch by
+/// epoch: advance the clock, apply churn events, and decide *itself*
+/// whether a fingerprint change is worth taking (cooldown + predicted
+/// gain) instead of the resolve-always gate [`run_events`] applies for
+/// [`ChurnPolicy::Online`]. Method order mirrors a replay: [`Self::new`],
+/// then per event [`Self::advance_to`] → [`Self::apply_event`] →
+/// [`Self::gate`] → [`Self::resolve`] or [`Self::note_skip`], then
+/// [`Self::finish`].
+pub(crate) struct EventEngine {
+    base: Platform,
+    cfg: ChurnConfig,
+    policy: ChurnPolicy,
+    opts: ProposedOptions,
+    multi: bool,
+    /// live agent set as of the last applied event
+    pub(crate) pop: Population,
+    /// the fleet problem [`Self::gate`] last built (what a taken
+    /// re-solve solves; what the frozen-shares probe prices)
+    pub(crate) fp: FleetProblem,
+    /// fingerprint of the problem the current allocation was solved for
+    stamp: u64,
+    /// current allocation; rows are keyed by `assoc`
+    pub(crate) alloc: FleetAllocation,
+    /// frozen per-key slots for the static policies (joiners have none)
+    slots: HashMap<u64, AgentAllocation>,
+    /// keys the current `alloc` rows belong to, in row order
+    assoc: Vec<u64>,
+    server_of: HashMap<u64, usize>,
+    server_stamps: Vec<u64>,
+    lanes: BTreeMap<u64, EventLane>,
+    /// cumulative per-agent rollups (the daemon snapshots these at epoch
+    /// boundaries and differences them into violation pressure)
+    pub(crate) stats: BTreeMap<u64, EventAgentReport>,
+    queues: Option<Vec<EdgeQueue>>,
+    meta: Vec<RequestMeta>,
+    reallocations: usize,
+    realloc_skipped: usize,
+}
+
+impl EventEngine {
+    pub(crate) fn new(
+        base: Platform,
+        initial: &[u64],
+        policy: ChurnPolicy,
+        cfg: &ChurnConfig,
+    ) -> EventEngine {
+        let opts = ProposedOptions::default();
+        let multi = cfg.servers != [ServerSpec::default()];
+        let pop = Population { live: initial.to_vec(), bursting: HashSet::new() };
+        let fp = pop.problem(base, cfg);
+        let stamp = fingerprint(&fp);
+        // the same t = 0 requests as the analytic replay, so the two
+        // views share placements and re-allocation schedules event for
+        // event
+        let alloc = match policy {
+            ChurnPolicy::StaticEqual => fp.solve(&SolveRequest {
+                algorithm: FleetAlgorithm::EqualShare,
+                placement: PlacementStrategy::EqualSpread,
+                ..SolveRequest::default()
+            }),
+            ChurnPolicy::StaticProposed | ChurnPolicy::Online => fp.solve(&SolveRequest::default()),
+        };
+        let slots: HashMap<u64, AgentAllocation> =
+            pop.live.iter().zip(&alloc.agents).map(|(&k, a)| (k, *a)).collect();
+        let assoc: Vec<u64> = pop.live.clone();
+        // online, multi-server: sticky seating + per-server fingerprints,
+        // mirroring the analytic replay's gate
+        let mut server_of: HashMap<u64, usize> = HashMap::new();
+        let mut server_stamps: Vec<u64> = Vec::new();
+        if multi && policy == ChurnPolicy::Online {
+            for (key, &s) in pop.live.iter().zip(&alloc.placement.assignment) {
+                server_of.insert(*key, s);
+            }
+            server_stamps = (0..cfg.servers.len())
+                .map(|k| fp.server_fingerprint(&alloc.placement, k))
+                .collect();
+        }
+
+        let mut lanes: BTreeMap<u64, EventLane> = BTreeMap::new();
+        let mut stats: BTreeMap<u64, EventAgentReport> = BTreeMap::new();
+        for ((&k, row), &srv) in pop.live.iter().zip(&alloc.agents).zip(&alloc.placement.assignment)
+        {
+            let mut lane = EventLane::new(k, cfg, Some(row));
+            lane.server = srv;
+            lane.set_rate(0.0, cfg.arrival_rps);
+            stats.insert(k, EventAgentReport::new(k, lane.spec.class, lane.spec.device.tier));
+            lanes.insert(k, lane);
+        }
+
+        // one edge queue per server (honoring per-server discipline
+        // overrides); `None` keeps PR 1's fluid per-agent slices
+        let queues: Option<Vec<EdgeQueue>> = cfg
+            .queue
+            .map(|d| cfg.servers.iter().map(|srv| EdgeQueue::new(srv.queue.unwrap_or(d))).collect());
+
+        EventEngine {
+            base,
+            cfg: cfg.clone(),
+            policy,
+            opts,
+            multi,
+            pop,
+            fp,
+            stamp,
+            alloc,
+            slots,
+            assoc,
+            server_of,
+            server_stamps,
+            lanes,
+            stats,
+            queues,
+            meta: Vec::new(),
+            reallocations: 0,
+            realloc_skipped: 0,
+        }
+    }
+
+    /// generate + dispatch, iterated to a fixpoint in closed-loop mode:
+    /// a completion before `run_until` re-arms its client, whose next
+    /// arrival may itself land (and need serving) before the boundary.
+    /// Each extra pass admits at least one new request and every re-arm
+    /// pushes the stream strictly forward, so the loop terminates; in
+    /// open mode no pass is added at all — the sample path and rng state
+    /// stay byte-identical to the pre-daemon engine.
+    fn step(&mut self, gen_until: f64, run_until: f64) {
+        generate(
+            self.base,
+            &self.cfg,
+            &self.pop,
+            &mut self.lanes,
+            &mut self.stats,
+            &mut self.meta,
+            &mut self.queues,
+            gen_until,
+        );
+        dispatch_until(
+            self.base,
+            &self.cfg,
+            &self.pop,
+            &mut self.lanes,
+            &mut self.stats,
+            &self.meta,
+            &mut self.queues,
+            run_until,
+        );
+        if self.cfg.closed_loop {
+            loop {
+                let admitted = self.meta.len();
+                generate(
+                    self.base,
+                    &self.cfg,
+                    &self.pop,
+                    &mut self.lanes,
+                    &mut self.stats,
+                    &mut self.meta,
+                    &mut self.queues,
+                    gen_until,
+                );
+                if self.meta.len() == admitted {
+                    break;
+                }
+                dispatch_until(
+                    self.base,
+                    &self.cfg,
+                    &self.pop,
+                    &mut self.lanes,
+                    &mut self.stats,
+                    &self.meta,
+                    &mut self.queues,
+                    run_until,
+                );
+            }
+        }
+    }
+
+    /// Advance the clock to `until`: generate arrivals strictly before
+    /// it, dispatch everything that can start before it, and record the
+    /// per-slot queue-depth observation at the boundary (fleet total,
+    /// plus a per-server breakdown on S > 1 fleets).
+    pub(crate) fn advance_to(&mut self, until: f64) {
+        self.step(until, until);
+        if let Some(qs) = &self.queues {
             let depth: usize = qs.iter().map(EdgeQueue::len).sum();
             obs_metrics::observe("events.queue_depth", depth as f64);
-            if multi {
+            if self.multi {
                 for (k, q) in qs.iter().enumerate() {
                     obs_metrics::observe(&format!("events.queue_depth.s{k}"), q.len() as f64);
                 }
             }
+            // closed loop: a single-inflight client can never have more
+            // than one request waiting, on any server
+            if self.cfg.closed_loop && cfg!(debug_assertions) {
+                for &k in &self.pop.live {
+                    let waiting: usize = qs.iter().map(|q| q.backlog_of(k as usize)).sum();
+                    debug_assert!(waiting <= 1, "agent {k} has {waiting} waiting requests");
+                }
+            }
         }
-        pop.apply(event);
+    }
+
+    /// Apply one churn event at `t` (the caller has already advanced the
+    /// clock to `t`): update the live set and create/retire/retime lanes.
+    pub(crate) fn apply_event(&mut self, t: f64, event: ChurnEvent) {
+        self.pop.apply(event);
         match event {
             ChurnEvent::Join(k) => {
-                let mut lane = EventLane::new(k, cfg, slots.get(&k));
-                lane.set_rate(t, cfg.arrival_rps);
+                let mut lane = EventLane::new(k, &self.cfg, self.slots.get(&k));
+                lane.set_rate(t, self.cfg.arrival_rps);
                 let (class, tier) = (lane.spec.class, lane.spec.device.tier);
-                stats.entry(k).or_insert_with(|| EventAgentReport::new(k, class, tier));
-                lanes.insert(k, lane);
+                self.stats.entry(k).or_insert_with(|| EventAgentReport::new(k, class, tier));
+                self.lanes.insert(k, lane);
             }
             ChurnEvent::Leave(k) => {
-                drop_backlog(&mut lanes, &mut stats, &mut queues, k, true);
-                lanes.remove(&k);
+                drop_backlog(&mut self.lanes, &mut self.stats, &mut self.queues, k, true, t);
+                self.lanes.remove(&k);
             }
             ChurnEvent::BurstStart(k) => {
-                if let Some(lane) = lanes.get_mut(&k) {
-                    lane.set_rate(t, cfg.arrival_rps * cfg.burst_factor);
+                if let Some(lane) = self.lanes.get_mut(&k) {
+                    lane.set_rate(t, self.cfg.arrival_rps * self.cfg.burst_factor);
                 }
             }
             ChurnEvent::BurstEnd(k) => {
-                if let Some(lane) = lanes.get_mut(&k) {
-                    lane.set_rate(t, cfg.arrival_rps);
+                if let Some(lane) = self.lanes.get_mut(&k) {
+                    lane.set_rate(t, self.cfg.arrival_rps);
                 }
             }
             ChurnEvent::Tick => {}
         }
-        if policy == ChurnPolicy::Online {
-            fp = pop.problem(base, cfg);
-            let new_stamp = fingerprint(&fp);
-            if new_stamp == stamp {
-                realloc_skipped += 1;
-                obs_metrics::counter_add("solver.warm_start.hit", 1);
-            } else {
-                stamp = new_stamp;
-                obs_metrics::counter_add("solver.warm_start.miss", 1);
-                let prev_by_key: HashMap<u64, AgentAllocation> =
-                    assoc.iter().zip(&alloc.agents).map(|(&k, a)| (k, *a)).collect();
-                let prev: Vec<Option<(f64, f64)>> = pop
-                    .live
-                    .iter()
-                    .map(|k| prev_by_key.get(k).map(|a| (a.server_share, a.airtime_share)))
-                    .collect();
-                alloc = if multi {
-                    // the analytic replay's sticky seating + per-server
-                    // gate, so both views re-solve the same servers
-                    let placement = sticky_placement(cfg, &pop.live, &mut server_of);
-                    let fresh: Vec<u64> = (0..cfg.servers.len())
-                        .map(|k| fp.server_fingerprint(&placement, k))
-                        .collect();
-                    let dirty: Vec<bool> =
-                        fresh.iter().zip(&server_stamps).map(|(a, b)| a != b).collect();
-                    let reuse: Vec<Option<AgentAllocation>> =
-                        pop.live.iter().map(|k| prev_by_key.get(k).copied()).collect();
-                    server_stamps = fresh;
-                    let req = SolveRequest {
-                        options: opts,
-                        warm_start: Some(prev),
-                        ..SolveRequest::default()
-                    };
-                    fp.solve_with_placement_reusing(&placement, &req, &dirty, &reuse)
-                } else {
-                    fleet::solve_proposed_warm(&fp, &prev, opts)
-                };
-                assoc.clone_from(&pop.live);
-                reallocations += 1;
-                let mut revoked: Vec<u64> = Vec::new();
-                let mut migrated: Vec<(u64, usize, usize)> = Vec::new();
-                for (i, &k) in pop.live.iter().enumerate() {
-                    let lane = lanes.get_mut(&k).expect("live agent has a lane");
-                    let had = lane.design.is_some();
-                    lane.retarget(&alloc.agents[i]);
-                    let srv = alloc.placement.assignment[i];
-                    if srv != lane.server {
-                        migrated.push((k, lane.server, srv));
-                        lane.server = srv;
-                    }
-                    if lane.design.is_none() && had {
-                        revoked.push(k);
-                    }
-                }
-                // a migrated agent's waiting backlog follows it to the
-                // new server's queue (its in-service job, if any, drains
-                // where it started); ready times stand
-                if let Some(qs) = queues.as_mut() {
-                    for &(k, from, to) in &migrated {
-                        for job in qs[from].drain_agent(k as usize) {
-                            qs[to].push_tagged(
-                                job.agent,
-                                job.tag,
-                                job.ready_s,
-                                job.service_s,
-                                job.weight,
-                            );
-                        }
-                        obs_metrics::counter_add("events.migrations", 1);
-                    }
-                }
-                // a revoked agent's backlog is turned away at admission
-                for k in revoked {
-                    drop_backlog(&mut lanes, &mut stats, &mut queues, k, false);
-                }
-                // waiting jobs follow the new share vector (ready times
-                // stand — those stages already ran); the queues are NOT
-                // reset: free_at, seq and in-service work carry over
-                if let Some(qs) = queues.as_mut() {
-                    for q in qs.iter_mut() {
-                        q.reprice(|job| {
-                            let lane = &lanes[&(job.agent as u64)];
-                            match lane.stage_times(base, cfg) {
-                                Some((_, t_server)) => (t_server, lane.spec.weight),
-                                None => (job.service_s, job.weight),
-                            }
-                        });
-                    }
-                }
+    }
+
+    /// Rebuild the fleet problem for the current population (carrying
+    /// the supplied measured violation pressure, keyed by churn key) and
+    /// report whether its fingerprint moved since the last taken
+    /// re-solve. Pure probe: neither the stamp nor the gate counters
+    /// move — commit the decision with [`Self::resolve`] or
+    /// [`Self::note_skip`].
+    pub(crate) fn gate(&mut self, pressure: &HashMap<u64, f64>) -> bool {
+        self.fp = self.pop.problem_with_pressure(self.base, &self.cfg, pressure);
+        fingerprint(&self.fp) != self.stamp
+    }
+
+    /// Record a gate check that led to no re-solve (unchanged
+    /// fingerprint, or a hysteresis skip).
+    pub(crate) fn note_skip(&mut self) {
+        self.realloc_skipped += 1;
+        obs_metrics::counter_add("solver.warm_start.hit", 1);
+    }
+
+    /// Whether the pending problem's agent set differs from the one the
+    /// current allocation was solved for (join/leave churn, as opposed
+    /// to rate-only or pressure-only drift).
+    pub(crate) fn population_changed(&self) -> bool {
+        self.pop.live != self.assoc
+    }
+
+    /// Previous `(server_share, airtime_share)` per current live agent
+    /// (`None` for joiners): the warm-start seed, and the input
+    /// [`fleet::probe_frozen`] prices to predict the cost of *not*
+    /// re-solving.
+    pub(crate) fn frozen_shares(&self) -> Vec<Option<(f64, f64)>> {
+        let prev_by_key: HashMap<u64, AgentAllocation> =
+            self.assoc.iter().zip(&self.alloc.agents).map(|(&k, a)| (k, *a)).collect();
+        self.pop
+            .live
+            .iter()
+            .map(|k| prev_by_key.get(k).map(|a| (a.server_share, a.airtime_share)))
+            .collect()
+    }
+
+    /// Measured queue backlog at `t` [s]: summed over every server, the
+    /// residual in-flight service plus all waiting jobs' priced service
+    /// times — the expected drain time were arrivals to stop. Zero in
+    /// fluid (queue-less) mode. The daemon's hysteresis gate treats a
+    /// backlog past the loosest class deadline as urgent: the frozen
+    /// design is already missing deadlines no matter how flat the cost
+    /// probe looks.
+    pub(crate) fn backlog_s(&self, t: f64) -> f64 {
+        self.queues
+            .as_ref()
+            .map(|qs| qs.iter().map(|q| q.backlog_s(t)).sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Take the re-solve for the problem [`Self::gate`] last built: warm
+    /// solve, retarget lanes, migrate waiting backlogs queue-to-queue,
+    /// reject revoked backlogs (at `t`) and re-price waiting jobs.
+    /// Returns the new fleet-cost objective.
+    pub(crate) fn resolve(&mut self, t: f64) -> f64 {
+        self.stamp = fingerprint(&self.fp);
+        obs_metrics::counter_add("solver.warm_start.miss", 1);
+        let prev_by_key: HashMap<u64, AgentAllocation> =
+            self.assoc.iter().zip(&self.alloc.agents).map(|(&k, a)| (k, *a)).collect();
+        let prev: Vec<Option<(f64, f64)>> = self
+            .pop
+            .live
+            .iter()
+            .map(|k| prev_by_key.get(k).map(|a| (a.server_share, a.airtime_share)))
+            .collect();
+        self.alloc = if self.multi {
+            // the analytic replay's sticky seating + per-server gate, so
+            // both views re-solve the same servers
+            let placement = sticky_placement(&self.cfg, &self.pop.live, &mut self.server_of);
+            let fresh: Vec<u64> = (0..self.cfg.servers.len())
+                .map(|k| self.fp.server_fingerprint(&placement, k))
+                .collect();
+            let dirty: Vec<bool> =
+                fresh.iter().zip(&self.server_stamps).map(|(a, b)| a != b).collect();
+            let reuse: Vec<Option<AgentAllocation>> =
+                self.pop.live.iter().map(|k| prev_by_key.get(k).copied()).collect();
+            self.server_stamps = fresh;
+            let req = SolveRequest {
+                options: self.opts,
+                warm_start: Some(prev),
+                ..SolveRequest::default()
+            };
+            self.fp.solve_with_placement_reusing(&placement, &req, &dirty, &reuse)
+        } else {
+            fleet::solve_proposed_warm(&self.fp, &prev, self.opts)
+        };
+        self.assoc.clone_from(&self.pop.live);
+        self.reallocations += 1;
+        let mut revoked: Vec<u64> = Vec::new();
+        let mut migrated: Vec<(u64, usize, usize)> = Vec::new();
+        for (i, &k) in self.pop.live.iter().enumerate() {
+            let lane = self.lanes.get_mut(&k).expect("live agent has a lane");
+            let had = lane.design.is_some();
+            lane.retarget(&self.alloc.agents[i]);
+            let srv = self.alloc.placement.assignment[i];
+            if srv != lane.server {
+                migrated.push((k, lane.server, srv));
+                lane.server = srv;
+            }
+            if lane.design.is_none() && had {
+                revoked.push(k);
             }
         }
+        // a migrated agent's waiting backlog follows it to the new
+        // server's queue (its in-service job, if any, drains where it
+        // started); ready times stand
+        if let Some(qs) = self.queues.as_mut() {
+            for &(k, from, to) in &migrated {
+                for job in qs[from].drain_agent(k as usize) {
+                    qs[to].push_tagged(job.agent, job.tag, job.ready_s, job.service_s, job.weight);
+                }
+                obs_metrics::counter_add("events.migrations", 1);
+            }
+        }
+        // a revoked agent's backlog is turned away at admission
+        for k in revoked {
+            drop_backlog(&mut self.lanes, &mut self.stats, &mut self.queues, k, false, t);
+        }
+        // waiting jobs follow the new share vector (ready times stand —
+        // those stages already ran); the queues are NOT reset: free_at,
+        // seq and in-service work carry over
+        let (base, cfg, lanes) = (self.base, &self.cfg, &self.lanes);
+        if let Some(qs) = self.queues.as_mut() {
+            for q in qs.iter_mut() {
+                q.reprice(|job| {
+                    let lane = &lanes[&(job.agent as u64)];
+                    match lane.stage_times(base, cfg) {
+                        Some((_, t_server)) => (t_server, lane.spec.weight),
+                        None => (job.service_s, job.weight),
+                    }
+                });
+            }
+        }
+        self.alloc.objective
     }
-    // the horizon bounds arrivals; residual backlog then drains fully so
-    // every request reaches a terminal state (conservation)
-    generate(base, cfg, &pop, &mut lanes, &mut stats, &mut meta, &mut queues, cfg.horizon_s);
-    dispatch_until(base, cfg, &pop, &mut lanes, &mut stats, &meta, &mut queues, f64::INFINITY);
 
-    let per_agent: Vec<EventAgentReport> = stats.into_values().collect();
-    let mut report = EventReport {
-        policy,
-        horizon_s: cfg.horizon_s,
-        arrivals: per_agent.iter().map(|a| a.arrivals).sum(),
-        completed: per_agent.iter().map(|a| a.completed).sum(),
-        rejected: per_agent.iter().map(|a| a.rejected).sum(),
-        dropped_departure: per_agent.iter().map(|a| a.dropped_departure).sum(),
-        deadline_misses: per_agent.iter().map(|a| a.deadline_misses).sum(),
-        e2e_s: Samples::new(),
-        queue_wait_s: Samples::new(),
-        reallocations,
-        realloc_skipped,
-        per_agent,
-        metrics: Metrics::new(),
-    };
-    for a in &report.per_agent {
-        report.e2e_s.merge(&a.e2e_s);
-        report.queue_wait_s.merge(&a.queue_wait_s);
+    /// Drain the run to termination and build the report: arrivals are
+    /// bounded by the config horizon, the residual backlog then drains
+    /// fully so every request reaches a terminal state (the conservation
+    /// invariant is asserted here), and the replay counters land in the
+    /// ambient metrics registry.
+    pub(crate) fn finish(mut self) -> EventReport {
+        let horizon = self.cfg.horizon_s;
+        self.step(horizon, f64::INFINITY);
+
+        let per_agent: Vec<EventAgentReport> = self.stats.into_values().collect();
+        let mut report = EventReport {
+            policy: self.policy,
+            horizon_s: horizon,
+            arrivals: per_agent.iter().map(|a| a.arrivals).sum(),
+            completed: per_agent.iter().map(|a| a.completed).sum(),
+            rejected: per_agent.iter().map(|a| a.rejected).sum(),
+            dropped_departure: per_agent.iter().map(|a| a.dropped_departure).sum(),
+            deadline_misses: per_agent.iter().map(|a| a.deadline_misses).sum(),
+            energy_j: per_agent.iter().map(|a| a.energy_j).sum(),
+            e2e_s: Samples::new(),
+            queue_wait_s: Samples::new(),
+            reallocations: self.reallocations,
+            realloc_skipped: self.realloc_skipped,
+            per_agent,
+            metrics: Metrics::new(),
+        };
+        for a in &report.per_agent {
+            report.e2e_s.merge(&a.e2e_s);
+            report.queue_wait_s.merge(&a.queue_wait_s);
+        }
+        assert_eq!(
+            report.arrivals,
+            report.completed + report.rejected + report.dropped_departure,
+            "request conservation violated"
+        );
+        obs_metrics::counter_add("events.arrivals", report.arrivals);
+        obs_metrics::counter_add("events.completed", report.completed);
+        obs_metrics::counter_add("events.rejected", report.rejected);
+        obs_metrics::counter_add("events.dropped", report.dropped_departure);
+        obs_metrics::counter_add("events.deadline_misses", report.deadline_misses);
+        obs_metrics::counter_add("events.reallocations", report.reallocations as u64);
+        obs_metrics::counter_add("events.realloc_skipped", report.realloc_skipped as u64);
+        report
     }
-    assert_eq!(
-        report.arrivals,
-        report.completed + report.rejected + report.dropped_departure,
-        "request conservation violated"
-    );
-    obs_metrics::counter_add("events.arrivals", report.arrivals);
-    obs_metrics::counter_add("events.completed", report.completed);
-    obs_metrics::counter_add("events.rejected", report.rejected);
-    obs_metrics::counter_add("events.dropped", report.dropped_departure);
-    obs_metrics::counter_add("events.deadline_misses", report.deadline_misses);
-    obs_metrics::counter_add("events.reallocations", report.reallocations as u64);
-    obs_metrics::counter_add("events.realloc_skipped", report.realloc_skipped as u64);
-    report
 }
 
 /// Run all three policies over one shared timeline at the event level
@@ -942,6 +1241,99 @@ mod tests {
         let analytic = super::super::churn::run_churn(base(), &tl, ChurnPolicy::Online, &cfg);
         assert_eq!(online.reallocations, analytic.reallocations);
         assert_eq!(online.realloc_skipped, analytic.realloc_skipped);
+    }
+
+    #[test]
+    fn closed_loop_arrivals_conserve_requests_and_bound_the_backlog() {
+        // satellite: the single-inflight arrival model must preserve the
+        // terminal-state invariant under full churn (joins, leaves,
+        // bursts, revocations) for every policy and both server models —
+        // and, with a shared queue, at most one request per live agent
+        // can ever be waiting, so the per-slot depth is bounded by the
+        // fleet size cap (open mode has no such bound: bursts pile up)
+        for queue in [Some(QueueDiscipline::Fifo), None] {
+            let open = ChurnConfig { queue, ..ChurnConfig::default() };
+            let closed = ChurnConfig { closed_loop: true, ..open.clone() };
+            // the timeline is arrival-model independent (its rng never
+            // touches the lanes'), so both models replay the same churn
+            let tl = timeline(&open);
+            assert_eq!(tl.events, timeline(&closed).events);
+            for policy in ChurnPolicy::ALL {
+                let c = run_events(base(), &tl, policy, &closed);
+                assert_eq!(
+                    c.arrivals,
+                    c.completed + c.rejected + c.dropped_departure,
+                    "closed loop {policy:?} {queue:?}"
+                );
+                assert!(c.arrivals > 0, "closed loop must generate traffic");
+                for a in &c.per_agent {
+                    assert_eq!(
+                        a.arrivals,
+                        a.completed + a.rejected + a.dropped_departure,
+                        "agent {} under {policy:?}",
+                        a.key
+                    );
+                }
+                if queue.is_some() {
+                    let depth = c.metrics.histogram("events.queue_depth").unwrap();
+                    let max = depth.values().iter().copied().fold(0.0, f64::max);
+                    assert!(
+                        max <= closed.max_agents as f64,
+                        "{policy:?}: closed-loop backlog {max} exceeds the live-agent bound"
+                    );
+                }
+                // the open replay of the same timeline stays conserved
+                // too (it shares lanes-rng seeds but draws differently)
+                let o = run_events(base(), &tl, policy, &open);
+                assert_eq!(o.arrivals, o.completed + o.rejected + o.dropped_departure);
+            }
+        }
+        // determinism: same seed + config ⇒ identical closed-loop runs
+        let cfg = ChurnConfig { closed_loop: true, ..ChurnConfig::default() };
+        let tl = timeline(&cfg);
+        let a = run_events(base(), &tl, ChurnPolicy::Online, &cfg);
+        let b = run_events(base(), &tl, ChurnPolicy::Online, &cfg);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.e2e_s.values(), b.e2e_s.values());
+        assert_eq!(a.queue_wait_s.values(), b.queue_wait_s.values());
+    }
+
+    #[test]
+    fn per_request_energy_rolls_up_and_matches_the_arrival_operating_point() {
+        // satellite: stationary no-churn run — every request is priced
+        // at the one static operating point, so each agent's total must
+        // equal completions × the analytic per-request energy, and the
+        // fleet total must be the per-agent sum
+        let cfg = ChurnConfig::default().without_churn();
+        let tl = timeline(&cfg);
+        let r = run_events(base(), &tl, ChurnPolicy::StaticProposed, &cfg);
+        assert!(r.energy_j > 0.0, "completed requests must carry energy");
+        assert!(r.energy_per_request_j() > 0.0);
+        let total: f64 = r.per_agent.iter().map(|a| a.energy_j).sum();
+        assert!((r.energy_j - total).abs() <= 1e-9 * total.max(1.0));
+        let pop = Population { live: tl.initial.clone(), bursting: Default::default() };
+        let fp = pop.problem(base(), &cfg);
+        let alloc = fleet::solve_proposed(&fp);
+        for (i, a) in r.per_agent.iter().enumerate() {
+            let row = &alloc.agents[i];
+            let d = row.design.expect("stationary fleet admitted");
+            let p = fp.agent_platform(i, row.server_share);
+            let per_req = crate::system::energy::total_energy(&p, d.b_hat as f64, d.f, d.f_tilde);
+            let expect = per_req * a.completed as f64;
+            assert!(
+                (a.energy_j - expect).abs() <= 1e-9 * expect.max(1.0),
+                "agent {i}: rolled-up {} vs analytic {expect}",
+                a.energy_j
+            );
+        }
+        // under churn the totals still roll up (operating points move,
+        // so each request keeps its own arrival-time price)
+        let churned = ChurnConfig::default();
+        let tl2 = timeline(&churned);
+        let rc = run_events(base(), &tl2, ChurnPolicy::Online, &churned);
+        assert!(rc.energy_j > 0.0);
+        let sum: f64 = rc.per_agent.iter().map(|a| a.energy_j).sum();
+        assert!((rc.energy_j - sum).abs() <= 1e-9 * sum.max(1.0));
     }
 
     #[test]

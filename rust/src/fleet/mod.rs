@@ -29,18 +29,28 @@
 //!   join/leave, queued work dropped (and accounted) at departure,
 //!   re-allocations swapping the share vector without resetting the
 //!   shared queue — producing the tail telemetry (p50/p95/p99 queue wait
-//!   and end-to-end delay, deadline-violation rate) the analytic scoring
-//!   cannot see.
+//!   and end-to-end delay, deadline-violation rate, per-request energy)
+//!   the analytic scoring cannot see;
+//! * the **closed-loop serving daemon** ([`daemon`]) promotes the event
+//!   replay into a supervising control plane: bounded telemetry epochs,
+//!   measured-pressure admission pricing, and hysteresis (predicted-gain
+//!   probe + measured-backlog urgency + cooldown) deciding which
+//!   fingerprint changes are worth a re-solve at all — with deferred
+//!   re-solves scheduled, superseded and cancelled on one deterministic
+//!   job queue.
 //!
-//! Entry points: `qaci fleet [--churn [--events]]` (CLI),
+//! Entry points: `qaci fleet [--churn [--events]] [--serve]` (CLI),
 //! `benches/fleet_scale.rs` (N-sweep), `benches/fleet_churn.rs` (policy
-//! comparison under churn), `examples/fleet_sweep.rs`,
+//! comparison under churn), `benches/fleet_daemon.rs` (hysteresis vs
+//! resolve-always A/B), `examples/fleet_sweep.rs`,
 //! `examples/fleet_churn.rs`.
 
 pub mod churn;
+pub mod daemon;
 pub mod events;
 pub mod sim;
 
 pub use churn::{ChurnConfig, ChurnPolicy, ChurnReport, Timeline};
+pub use daemon::{Daemon, DaemonConfig, DaemonReport, EpochSnapshot};
 pub use events::{EventAgentReport, EventReport};
 pub use sim::{AgentReport, FleetReport, FleetSimConfig};

@@ -27,7 +27,7 @@
 //! | quantizers (§II-C) | [`quant`] |
 //! | system model (§II-D) | [`system`] (incl. multi-access contention + [`system::queue`]) |
 //! | joint design (§V) | [`opt`] (incl. [`opt::fleet`]), [`rl`] |
-//! | serving | [`runtime`], [`coordinator`], [`fleet`] (incl. [`fleet::churn`] + [`fleet::events`]) |
+//! | serving | [`runtime`], [`coordinator`], [`fleet`] (incl. [`fleet::churn`] + [`fleet::events`] + [`fleet::daemon`]) |
 //! | evaluation | [`bench_harness`], `rust/benches/*` |
 //! | observability | [`obs`] (metrics/spans, shared percentiles, bench-log store) |
 //!
@@ -146,14 +146,64 @@
 //! orin throughput — visibly, in the same traces. A stationary-load
 //! property test pins the event engine to the analytic M/G/1
 //! [`system::queue::QueueModel`] per-agent waits for both disciplines.
+//! Every completed request also pays **compute + uplink energy at its
+//! arrival operating point** (priced once at admission via
+//! [`system::energy`], so a later re-solve never re-bills in-flight
+//! work), rolled up per agent and fleet-wide in
+//! [`fleet::EventAgentReport::energy_j`] /
+//! [`fleet::EventReport::energy_j`]; and `ChurnConfig::closed_loop`
+//! switches arrivals from open Poisson streams to one-outstanding-
+//! request clients (think time re-drawn at each completion, mirroring
+//! [`fleet::sim`]'s client model) — the backlog is then bounded by the
+//! population instead of the load.
+//!
+//! ## Closed-loop serving
+//!
+//! The event replay re-solves on *every* fingerprint change; a real
+//! control plane cannot afford that. [`fleet::daemon`] promotes the
+//! replay into a supervising serving daemon (`qaci fleet --serve`,
+//! library entry [`fleet::Daemon`]): one deterministic job queue holds
+//! churn events, epoch boundaries and deferred re-solves; the engine
+//! runs in **bounded telemetry epochs** whose tail deltas (per-agent
+//! p99 wait/e2e, violation rate, per-request energy) feed the next
+//! solve two ways —
+//!
+//! * **measured admission pricing**
+//!   ([`opt::fleet::AdmissionPricing::Measured`]): per-agent observed
+//!   violation pressure (⅛-quantized for fingerprint stability)
+//!   discounts that agent's rejection penalty, so the allocator stops
+//!   defending demand the telemetry says is already being dropped;
+//! * **re-allocation hysteresis**: a change whose predicted fleet-cost
+//!   gain — frozen shares probed via [`opt::fleet::probe_frozen`]
+//!   against the counterfactual warm re-solve — falls under
+//!   `gain_threshold` while the measured queue backlog stays under
+//!   `urgent_backlog_s` is skipped outright; a material gain inside the
+//!   `cooldown_s` window is deferred to the window's edge (the deferral
+//!   cancelled if a newer decision supersedes it); an urgent backlog
+//!   bypasses the cooldown — near the optimum the design cost is flat
+//!   in shares while queue service rates are not, so the backlog probe
+//!   is what catches a burst the cost probe cannot see.
+//!
+//! Shutdown drains the queues (the engine runs to the horizon, every
+//! request completes / is rejected / is dropped) and emits a final
+//! metrics snapshot plus a byte-stable transcript
+//! ([`fleet::DaemonReport::transcript`]) — same seed + config ⇒
+//! identical bytes, which the determinism test pins. On the
+//! burst-storm scenario the hysteresis daemon takes ≤ half of
+//! resolve-always's solves while keeping fleet p99 e2e within 1.5× of
+//! it and still beating every static policy
+//! (`benches/fleet_daemon.rs`, gated in CI via the bench-log ordering
+//! diff).
 //!
 //! ## Bench artifacts
 //!
-//! `benches/fleet_churn.rs`, `benches/fleet_scale.rs` and
-//! `benches/fleet_placement.rs` emit machine-readable results next to
-//! their tables — `BENCH_fleet_churn.json` / `BENCH_fleet_scale.json` /
-//! `BENCH_fleet_placement.json` (or under `$QACI_BENCH_DIR`), uploaded
-//! by the `bench-artifacts` CI job. Schema (version 1):
+//! `benches/fleet_churn.rs`, `benches/fleet_scale.rs`,
+//! `benches/fleet_placement.rs` and `benches/fleet_daemon.rs` emit
+//! machine-readable results next to their tables —
+//! `BENCH_fleet_churn.json` / `BENCH_fleet_scale.json` /
+//! `BENCH_fleet_placement.json` / `BENCH_fleet_daemon.json` (or under
+//! `$QACI_BENCH_DIR`), uploaded by the `bench-artifacts` CI job.
+//! Schema (version 1):
 //!
 //! ```json
 //! {
@@ -180,7 +230,11 @@
 //! `wall_clock_s` (the allocation solve time); `fleet_placement`
 //! records carry the placement-strategy name as `policy` plus `cost`,
 //! `d_upper`, `admitted` and `placement_moves` per server-bank
-//! scenario. Fields whose measurement does not exist (e.g. a p99 over
+//! scenario; `fleet_daemon` records carry one `burst-storm` row per
+//! control policy (`daemon-hysteresis`, `daemon-resolve-always`, the
+//! statics) with `resolves_taken`, `resolves_skipped`, `p99_s`,
+//! `queue_wait_p99_s`, `deadline_violation_rate` and
+//! `energy_per_request_j`. Fields whose measurement does not exist (e.g. a p99 over
 //! zero completions) are `null`, never NaN: emission
 //! ([`bench_harness::emit_bench_artifact`]) re-parses the file and
 //! rejects any non-finite number, the benches re-check their ordering
@@ -216,6 +270,11 @@
 //!   `events.migrations`) and the per-slot `events.queue_depth`
 //!   timeline histogram (plus `events.queue_depth.s<k>` per server on
 //!   multi-server banks);
+//! * `daemon.*` — control-plane counters recorded by [`fleet::daemon`]:
+//!   `daemon.epochs` (telemetry epochs ingested), `daemon.resolve.taken`
+//!   and `daemon.resolve.skipped.cooldown`/`daemon.resolve.skipped.gain`
+//!   (hysteresis decisions), plus `solver.probe.frozen` for each
+//!   predicted-gain probe;
 //! * `span.<name>.s` — wall-clock span histograms recorded when an
 //!   [`obs::metrics::Span`] guard drops (e.g. `span.solver.proposed.s`,
 //!   `span.events.run.s`).

@@ -19,6 +19,12 @@
 //!            replay (p50/p95/p99 wait + e2e, deadline-violation rate),
 //!            `--admission-pricing tiered` scales rejection penalties by
 //!            silicon capability (phone coverage vs orin throughput),
+//!            `--serve` runs the closed-loop serving daemon instead:
+//!            `--epochs K --epoch-dur S` bounded telemetry epochs feeding
+//!            `--admission-pricing measured` re-solves, rate-limited by
+//!            `--cooldown` and a `--gain-threshold` predicted-gain probe
+//!            (`--resolve-always` disables hysteresis, `--closed-loop`
+//!            switches arrivals to one-outstanding-request clients),
 //!            `--metrics-out m.json` writes the ambient solver/queue/replay
 //!            metrics snapshot (schema `qaci.metrics` v1, see `qaci::obs`)
 //!   fit      fit the exponential magnitude model to a weight blob
@@ -42,6 +48,7 @@
 //!   qaci fleet --churn --agents 4 --horizon 600 --queue fifo
 //!   qaci fleet --churn --events --admission-pricing tiered --tiers orin,xavier,phone
 //!   qaci fleet --churn --events --metrics-out metrics.json
+//!   qaci fleet --serve --epochs 8 --epoch-dur 75 --admission-pricing measured
 //!   qaci bench-log ingest BENCH_fleet_churn.json --index benchlog.jsonl
 //!   qaci bench-log query --index benchlog.jsonl --scenario burst-storm --field p99_s --last 5
 //!   qaci bench-log diff --index benchlog.jsonl --baseline rust/ci/benchlog-baseline.jsonl \

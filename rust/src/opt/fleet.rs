@@ -259,13 +259,30 @@ pub enum AdmissionPricing {
     /// trade: phone coverage vs. orin throughput, visible directly in
     /// the event-level tail traces.
     Tiered,
+    /// The uniform penalty scaled by **measured** violation pressure
+    /// ([`FleetSpec::pressure`], per agent in [0, 1]): an agent whose
+    /// observed tail keeps violating its deadline becomes progressively
+    /// cheaper to turn away (down to the phone-class capability floor at
+    /// pressure 1), so the re-solve sheds the agents the telemetry says
+    /// it cannot serve instead of the agents a static capability ladder
+    /// guesses at. With an empty/zero pressure vector this is
+    /// [`AdmissionPricing::Uniform`] bit for bit — the closed-loop
+    /// serving daemon ([`crate::fleet::daemon`]) is what feeds real
+    /// pressure in, epoch by epoch.
+    Measured,
 }
+
+/// Penalty multiplier at full measured pressure — the same floor as the
+/// phone-class [`DeviceProfile::capability`], so a maximally-violating
+/// agent is never priced below the weakest silicon tier.
+pub(crate) const MEASURED_PRESSURE_FLOOR: f64 = 0.125;
 
 impl AdmissionPricing {
     pub fn name(self) -> &'static str {
         match self {
             AdmissionPricing::Uniform => "uniform",
             AdmissionPricing::Tiered => "tiered",
+            AdmissionPricing::Measured => "measured",
         }
     }
 
@@ -274,7 +291,8 @@ impl AdmissionPricing {
         match s {
             "uniform" => Ok(AdmissionPricing::Uniform),
             "tiered" | "tier" | "capability" => Ok(AdmissionPricing::Tiered),
-            _ => Err(ParseError::new("admission pricing", s, &["uniform", "tiered"])),
+            "measured" | "p99" => Ok(AdmissionPricing::Measured),
+            _ => Err(ParseError::new("admission pricing", s, &["uniform", "tiered", "measured"])),
         }
     }
 }
@@ -349,6 +367,13 @@ pub struct FleetSpec {
     /// how rejections are priced ([`AdmissionPricing::Uniform`] keeps the
     /// silicon-blind 2/λ behavior bit for bit)
     pub pricing: AdmissionPricing,
+    /// measured per-agent violation pressure in [0, 1] (one entry per
+    /// agent, or empty = no telemetry). Only
+    /// [`AdmissionPricing::Measured`] reads it; the serving daemon
+    /// quantizes observed violation rates into this vector so that a
+    /// pressure change re-fingerprints the fleet like any other spec
+    /// change. Empty is bit-identical to all-zeros.
+    pub pressure: Vec<f64>,
 }
 
 impl FleetSpec {
@@ -363,6 +388,7 @@ impl FleetSpec {
             link_base_latency_s: 2e-3,
             queue: None,
             pricing: AdmissionPricing::default(),
+            pressure: Vec::new(),
         }
     }
 
@@ -397,6 +423,13 @@ impl FleetSpec {
         );
         if let Some(q) = &self.queue {
             assert_eq!(q.arrival_rps.len(), self.agents.len(), "one rate per agent");
+        }
+        if !self.pressure.is_empty() {
+            assert_eq!(self.pressure.len(), self.agents.len(), "one pressure per agent");
+            assert!(
+                self.pressure.iter().all(|p| p.is_finite() && (0.0..=1.0).contains(p)),
+                "violation pressure must lie in [0, 1]"
+            );
         }
     }
 }
@@ -462,6 +495,10 @@ impl Hash for FleetSpec {
             }
         }
         self.pricing.hash(state);
+        self.pressure.len().hash(state);
+        for &p in &self.pressure {
+            hash_f64(p, state);
+        }
     }
 }
 
@@ -536,6 +573,15 @@ impl FleetProblem {
     /// [`FleetSpec::servers`] and calling [`Self::from_spec`].
     pub fn with_servers(mut self, servers: Vec<ServerSpec>) -> FleetProblem {
         self.spec.servers = servers;
+        self.spec.validate();
+        self
+    }
+
+    /// Builder for the measured-telemetry pressure vector (see
+    /// [`FleetSpec::pressure`]); pairs with
+    /// [`AdmissionPricing::Measured`].
+    pub fn with_pressure(mut self, pressure: Vec<f64>) -> FleetProblem {
+        self.spec.pressure = pressure;
         self.spec.validate();
         self
     }
@@ -658,12 +704,18 @@ impl FleetProblem {
     /// gap, so serving an agent (at any bit-width) always improves the
     /// objective. Tiered pricing scales that by the agent's silicon
     /// capability (see [`AdmissionPricing::Tiered`] for the deliberate
-    /// consequences).
+    /// consequences); measured pricing interpolates from the uniform
+    /// penalty down to the same capability floor as the observed
+    /// violation pressure rises — zero pressure is Uniform bit for bit.
     pub fn rejection_cost(&self, i: usize) -> f64 {
         let base = self.agents[i].weight * 2.0 / self.agents[i].lambda;
         match self.pricing {
             AdmissionPricing::Uniform => base,
             AdmissionPricing::Tiered => base * self.agents[i].device.capability(),
+            AdmissionPricing::Measured => {
+                let p = self.spec.pressure.get(i).copied().unwrap_or(0.0);
+                base * (1.0 - (1.0 - MEASURED_PRESSURE_FLOOR) * p)
+            }
         }
     }
 
@@ -883,6 +935,22 @@ pub fn evaluate(fp: &FleetProblem, mu: &[f64], alpha: &[f64]) -> FleetAllocation
         assemble(fp, mu, alpha, &waits, |i| fp.agent_design_at_wait(i, mu[i], alpha[i], waits[i]));
     obs_metrics::counter_add("solver.admission.rejected", (fp.n() - alloc.admitted) as u64);
     alloc
+}
+
+/// Predicted-gain probe for re-solve hysteresis: the fleet objective of
+/// **frozen** shares re-scored under a (possibly changed) problem —
+/// without running the exchange. Agents with no previous slot (`None`)
+/// get zero shares, i.e. they are priced as rejections. The serving
+/// daemon compares this against the counterfactual warm re-solve's
+/// objective to decide whether a fingerprint change is worth *applying*
+/// at all; the probe itself costs one [`evaluate`] (fixed-point waits +
+/// per-agent bisection), not a full exchange.
+pub fn probe_frozen(fp: &FleetProblem, shares: &[Option<(f64, f64)>]) -> f64 {
+    assert_eq!(shares.len(), fp.n(), "one previous share pair per agent");
+    let mu: Vec<f64> = shares.iter().map(|s| s.map_or(0.0, |(m, _)| m)).collect();
+    let alpha: Vec<f64> = shares.iter().map(|s| s.map_or(0.0, |(_, a)| a)).collect();
+    obs_metrics::counter_add("solver.probe.frozen", 1);
+    evaluate(fp, &mu, &alpha).objective
 }
 
 /// Which fleet allocator drives a run.
@@ -1599,6 +1667,11 @@ fn sub_problem(
                 )
             }),
             pricing: fp.pricing,
+            pressure: if fp.pressure.is_empty() {
+                Vec::new()
+            } else {
+                members.iter().map(|&i| fp.pressure[i]).collect()
+            },
         },
     }
 }
@@ -2236,14 +2309,85 @@ mod tests {
 
     #[test]
     fn admission_pricing_parse_roundtrip() {
-        for p in [AdmissionPricing::Uniform, AdmissionPricing::Tiered] {
+        for p in
+            [AdmissionPricing::Uniform, AdmissionPricing::Tiered, AdmissionPricing::Measured]
+        {
             assert_eq!(AdmissionPricing::parse(p.name()), Ok(p));
         }
         assert_eq!(AdmissionPricing::parse("capability"), Ok(AdmissionPricing::Tiered));
+        assert_eq!(AdmissionPricing::parse("p99"), Ok(AdmissionPricing::Measured));
         let err = AdmissionPricing::parse("free").unwrap_err();
         assert_eq!(err.token, "free");
         assert!(err.choices.contains(&"tiered"));
-        assert!(err.to_string().contains("uniform | tiered"));
+        assert!(err.to_string().contains("uniform | tiered | measured"));
+    }
+
+    #[test]
+    fn measured_pricing_without_pressure_is_uniform_bit_for_bit() {
+        // no telemetry yet = no opinion: the measured penalty must fall
+        // back to the silicon-blind uniform penalty exactly, so flipping
+        // a fleet to Measured before its first epoch changes nothing
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(9, &AgentSpec::tier_mix(2)),
+        );
+        let measured = fp.clone().with_pricing(AdmissionPricing::Measured);
+        for i in 0..fp.n() {
+            assert_eq!(measured.rejection_cost(i), fp.rejection_cost(i));
+        }
+        let a = solve_proposed(&fp);
+        let b = solve_proposed(&measured);
+        assert_eq!(a.objective, b.objective);
+        // all-zero explicit pressure is the same thing
+        let zeroed = measured.clone().with_pressure(vec![0.0; 9]);
+        for i in 0..fp.n() {
+            assert_eq!(zeroed.rejection_cost(i), fp.rejection_cost(i));
+        }
+    }
+
+    #[test]
+    fn measured_pricing_interpolates_penalty_down_to_the_floor() {
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(3, &AgentSpec::tier_mix(0)),
+        )
+        .with_pricing(AdmissionPricing::Measured)
+        .with_pressure(vec![0.0, 0.5, 1.0]);
+        let base = |i: usize| fp.agents[i].weight * 2.0 / fp.agents[i].lambda;
+        assert_eq!(fp.rejection_cost(0), base(0));
+        let mid = base(1) * (1.0 - (1.0 - MEASURED_PRESSURE_FLOOR) * 0.5);
+        assert!((fp.rejection_cost(1) - mid).abs() < 1e-15);
+        assert!((fp.rejection_cost(2) - base(2) * MEASURED_PRESSURE_FLOOR).abs() < 1e-15);
+        // monotone: more pressure, cheaper to shed
+        assert!(fp.rejection_cost(2) < fp.rejection_cost(1));
+        assert!(fp.rejection_cost(1) < fp.rejection_cost(0));
+        // pressure on an agent the solver wants to reject lowers the
+        // objective relative to the uniform fallback (never raises it)
+        let uniform = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(3, &AgentSpec::tier_mix(0)),
+        );
+        let none: Vec<Option<(f64, f64)>> = vec![None; 3];
+        assert!(probe_frozen(&fp, &none) < probe_frozen(&uniform, &none));
+    }
+
+    #[test]
+    fn probe_frozen_prices_missing_slots_as_rejections() {
+        let fp = fleet(5);
+        // no previous allocation at all: everyone is priced as rejected
+        let none: Vec<Option<(f64, f64)>> = vec![None; 5];
+        let all_rejected: f64 = (0..5).map(|i| fp.rejection_cost(i)).sum();
+        assert!((probe_frozen(&fp, &none) - all_rejected).abs() < 1e-12);
+        // frozen solved shares score no worse than rejecting the fleet,
+        // and a warm re-solve from those shares can only improve on the
+        // probe (the frozen point itself is a warm-solve candidate)
+        let alloc = solve_proposed(&fp);
+        let shares: Vec<Option<(f64, f64)>> =
+            alloc.agents.iter().map(|a| Some((a.server_share, a.airtime_share))).collect();
+        let frozen = probe_frozen(&fp, &shares);
+        assert!(frozen <= all_rejected + 1e-12);
+        let warm = solve_proposed_warm(&fp, &shares, ProposedOptions::default());
+        assert!(warm.objective <= frozen + 1e-12, "{} > {}", warm.objective, frozen);
     }
 
     #[test]
@@ -2507,6 +2651,13 @@ mod tests {
         assert_ne!(h(&fp), h(&faded));
         assert_ne!(h(&fp), h(&fp.clone().with_servers(vec![ServerSpec::scaled(0.5)])));
         assert_ne!(h(&fp), h(&fp.clone().with_pricing(AdmissionPricing::Tiered)));
+        // measured pressure is spec state too: the daemon's epoch-to-epoch
+        // pressure updates must re-fingerprint the fleet
+        assert_ne!(h(&fp), h(&fp.clone().with_pressure(vec![0.25, 0.0, 0.0, 0.0])));
+        assert_ne!(
+            h(&fp.clone().with_pressure(vec![0.25, 0.0, 0.0, 0.0])),
+            h(&fp.clone().with_pressure(vec![0.5, 0.0, 0.0, 0.0]))
+        );
         assert_ne!(h(&fp), h(&fp.clone().with_link(200e6, 2e-3)));
         assert_ne!(
             h(&fp),

@@ -282,6 +282,13 @@ impl EdgeQueue {
         self.waiting.len()
     }
 
+    /// Waiting jobs belonging to one agent — the per-agent slice of
+    /// [`Self::len`]. The event replay's closed-loop invariant (at most
+    /// one outstanding request per client) is checked against this.
+    pub fn backlog_of(&self, agent: usize) -> usize {
+        self.waiting.iter().filter(|j| j.agent == agent).count()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.waiting.is_empty()
     }
@@ -289,6 +296,14 @@ impl EdgeQueue {
     /// When the server next becomes idle.
     pub fn free_at(&self) -> f64 {
         self.free_at
+    }
+
+    /// Outstanding work at `now`, in seconds of service: the residual of
+    /// the job in flight plus every waiting job's priced service time —
+    /// the expected drain time were arrivals to stop. The serving
+    /// daemon's hysteresis gate reads this as its urgency signal.
+    pub fn backlog_s(&self, now: f64) -> f64 {
+        (self.free_at - now).max(0.0) + self.waiting.iter().map(|j| j.service_s).sum::<f64>()
     }
 
     /// Dispatch the next job: among jobs ready by the instant the server
@@ -434,6 +449,22 @@ mod tests {
         q.push(2, 0.2, 1.0, 9.0);
         let order: Vec<usize> = drain(&mut q).iter().map(|&(a, _, _)| a).collect();
         assert_eq!(order, vec![1, 2, 0], "weights must not matter under FIFO");
+    }
+
+    #[test]
+    fn backlog_of_counts_only_the_agents_waiting_jobs() {
+        let mut q = EdgeQueue::new(QueueDiscipline::Fifo);
+        q.push(0, 0.0, 1.0, 1.0);
+        q.push(1, 0.1, 1.0, 1.0);
+        q.push(0, 0.2, 1.0, 1.0);
+        assert_eq!(q.backlog_of(0), 2);
+        assert_eq!(q.backlog_of(1), 1);
+        assert_eq!(q.backlog_of(2), 0);
+        assert_eq!(q.backlog_of(0) + q.backlog_of(1), q.len());
+        q.pop(); // agent 0's first job starts: it is no longer waiting
+        assert_eq!(q.backlog_of(0), 1);
+        q.drain_agent(0);
+        assert_eq!(q.backlog_of(0), 0);
     }
 
     #[test]

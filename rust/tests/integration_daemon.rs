@@ -1,0 +1,255 @@
+//! Daemon integration: the closed-loop serving control plane — bounded
+//! telemetry epochs, measured admission pricing, re-solve hysteresis,
+//! deferred re-solves — plus the satellite surfaces it rides on
+//! (closed-loop arrivals, per-request energy accounting, per-server
+//! airtime pins and queue-discipline overrides) exercised through the
+//! public API, artifact-free.
+
+use qaci::fleet::churn::{self, ChurnConfig, ChurnPolicy};
+use qaci::fleet::daemon::run_daemon;
+use qaci::fleet::{events, DaemonConfig};
+use qaci::opt::fleet::{AdmissionPricing, AgentSpec, FleetProblem, FleetSpec, ServerSpec, SolveRequest};
+use qaci::system::queue::{QueueDiscipline, QueueModel};
+use qaci::system::Platform;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+fn base() -> Platform {
+    Platform::fleet_edge()
+}
+
+/// The designated burst-storm workload (shared with the churn and
+/// daemon benches): pure burst churn against a loaded queue.
+fn storm(seed: u64) -> ChurnConfig {
+    ChurnConfig {
+        initial_agents: 5,
+        join_rps: 0.0,
+        leave_rps_per_agent: 0.0,
+        burst_rps: 0.04,
+        burst_factor: 6.0,
+        burst_duration_s: 60.0,
+        arrival_rps: 0.04,
+        seed,
+        ..ChurnConfig::default()
+    }
+}
+
+fn spec_hash(spec: &FleetSpec) -> u64 {
+    let mut h = DefaultHasher::new();
+    spec.hash(&mut h);
+    h.finish()
+}
+
+/// Acceptance: same seed + config ⇒ byte-identical transcript, and the
+/// epoch snapshots tile the horizon exactly (every arrival lands in one
+/// epoch; the graceful drain admits nothing new).
+#[test]
+fn daemon_replays_byte_identically_and_tiles_the_horizon() {
+    let cfg = DaemonConfig {
+        churn: ChurnConfig { pricing: AdmissionPricing::Measured, ..storm(7) },
+        ..DaemonConfig::default()
+    };
+    let a = run_daemon(base(), &cfg);
+    let b = run_daemon(base(), &cfg);
+    assert_eq!(a.transcript, b.transcript, "daemon transcript must be deterministic");
+    assert_eq!(a.epochs.len(), cfg.epochs);
+    let epoch_arrivals: u64 = a.epochs.iter().map(|e| e.arrivals).sum();
+    assert_eq!(epoch_arrivals, a.report.arrivals);
+    // graceful shutdown drained everything to a terminal state
+    assert_eq!(
+        a.report.arrivals,
+        a.report.completed + a.report.rejected + a.report.dropped_departure
+    );
+    assert!(a.report.arrivals > 100, "storm must generate real traffic");
+}
+
+/// Acceptance (the tentpole ordering, through the public API): on the
+/// burst storm the hysteresis daemon takes at most half of the
+/// resolve-always daemon's solves while its fleet p99 end-to-end delay
+/// stays within 1.5× — skipped solves are the cheap ones.
+#[test]
+fn hysteresis_halves_the_solve_count_at_bounded_tail_cost() {
+    let hyst = DaemonConfig {
+        churn: ChurnConfig { pricing: AdmissionPricing::Measured, ..storm(7) },
+        ..DaemonConfig::default()
+    };
+    let always = DaemonConfig { resolve_always: true, ..hyst.clone() };
+    let h = run_daemon(base(), &hyst);
+    let a = run_daemon(base(), &always);
+    assert!(a.resolves_taken > 0, "storm must force re-solves");
+    assert!(
+        2 * h.resolves_taken <= a.resolves_taken,
+        "hysteresis took {} of {}",
+        h.resolves_taken,
+        a.resolves_taken
+    );
+    assert!(h.skipped_cooldown + h.skipped_gain > 0);
+    assert!(
+        h.report.e2e_s.p99() <= a.report.e2e_s.p99() * 1.5,
+        "hysteresis p99 {} blew past 1.5x of {}",
+        h.report.e2e_s.p99(),
+        a.report.e2e_s.p99()
+    );
+}
+
+/// The control-plane decisions surface in the metrics capture: epoch
+/// and resolve counters mirror the report, and every gain-skip ran the
+/// frozen-shares probe.
+#[test]
+fn daemon_metrics_mirror_the_decisions() {
+    let cfg = DaemonConfig {
+        churn: ChurnConfig { pricing: AdmissionPricing::Measured, ..storm(7) },
+        ..DaemonConfig::default()
+    };
+    let r = run_daemon(base(), &cfg);
+    assert_eq!(r.metrics.counter("daemon.epochs"), cfg.epochs as u64);
+    assert_eq!(r.metrics.counter("daemon.resolve.taken"), r.resolves_taken as u64);
+    assert_eq!(
+        r.metrics.counter("daemon.resolve.skipped.cooldown"),
+        r.skipped_cooldown as u64
+    );
+    assert_eq!(r.metrics.counter("daemon.resolve.skipped.gain"), r.skipped_gain as u64);
+    if r.skipped_gain > 0 {
+        assert!(
+            r.metrics.counter("solver.probe.frozen") >= r.skipped_gain as u64,
+            "every gain-skip prices the frozen shares"
+        );
+    }
+    assert!(r.transcript.contains("epoch 1 "), "epochs must be logged");
+    assert!(r.transcript.contains("shutdown "), "shutdown must be logged");
+}
+
+/// Closed-loop clients ride the daemon end to end: one outstanding
+/// request per agent, re-armed at completion, still conserving every
+/// request through epochs, re-solves and the graceful drain.
+#[test]
+fn daemon_serves_closed_loop_clients() {
+    let cfg = DaemonConfig {
+        churn: ChurnConfig {
+            closed_loop: true,
+            pricing: AdmissionPricing::Measured,
+            ..storm(7)
+        },
+        ..DaemonConfig::default()
+    };
+    let r = run_daemon(base(), &cfg);
+    assert!(r.report.arrivals > 0, "closed-loop clients must generate traffic");
+    assert_eq!(
+        r.report.arrivals,
+        r.report.completed + r.report.rejected + r.report.dropped_departure
+    );
+    let epoch_arrivals: u64 = r.epochs.iter().map(|e| e.arrivals).sum();
+    assert_eq!(epoch_arrivals, r.report.arrivals);
+}
+
+/// Open vs closed arrivals on the same seed: the churn timeline is
+/// identical (arrival modelling never perturbs the event structure) and
+/// both modes conserve requests, but the closed loop admits no agent's
+/// second request before its first completes.
+#[test]
+fn open_and_closed_arrivals_share_the_timeline_and_conserve() {
+    let open = storm(11);
+    let closed = ChurnConfig { closed_loop: true, ..open.clone() };
+    assert_eq!(churn::timeline(&open).events, churn::timeline(&closed).events);
+    for cfg in [&open, &closed] {
+        let tl = churn::timeline(cfg);
+        let r = events::run_events(base(), &tl, ChurnPolicy::Online, cfg);
+        assert!(r.arrivals > 0);
+        assert_eq!(r.arrivals, r.completed + r.rejected + r.dropped_departure);
+    }
+}
+
+/// Per-request energy accounting rides the daemon: fleet totals roll up
+/// from the per-agent rollups, and the epoch deltas never overshoot the
+/// drained total (the post-horizon drain still completes work).
+#[test]
+fn energy_accounting_rolls_up_through_the_daemon() {
+    let cfg = DaemonConfig {
+        churn: ChurnConfig { pricing: AdmissionPricing::Measured, ..storm(7) },
+        ..DaemonConfig::default()
+    };
+    let r = run_daemon(base(), &cfg);
+    assert!(r.report.energy_j > 0.0, "completed requests must cost energy");
+    let per_agent: f64 = r.report.per_agent.iter().map(|a| a.energy_j).sum();
+    assert!(
+        (r.report.energy_j - per_agent).abs() <= 1e-9 * r.report.energy_j.max(1.0),
+        "fleet energy {} vs per-agent sum {per_agent}",
+        r.report.energy_j
+    );
+    let epoch_energy: f64 = r.epochs.iter().map(|e| e.energy_j).sum();
+    assert!(
+        epoch_energy <= r.report.energy_j + 1e-9,
+        "epoch deltas {epoch_energy} overshoot the drained total {}",
+        r.report.energy_j
+    );
+    assert!(r.report.energy_per_request_j() > 0.0);
+}
+
+/// Per-server airtime pins through the public API: each pinned server's
+/// agents never sum past its reserved slice, and the pins participate
+/// in the spec fingerprint (so churn's gate sees them move).
+#[test]
+fn airtime_pins_cap_the_medium_and_move_the_fingerprint() {
+    let mut spec = FleetSpec::new(base(), AgentSpec::mixed_fleet(8));
+    spec.servers = vec![
+        ServerSpec { airtime_fraction: Some(0.6), ..ServerSpec::default() },
+        ServerSpec { airtime_fraction: Some(0.4), ..ServerSpec::default() },
+    ];
+    let fp = FleetProblem::from_spec(spec.clone());
+    let alloc = fp.solve(&SolveRequest::default());
+    assert!(alloc.objective.is_finite());
+    for (k, srv) in fp.servers.iter().enumerate() {
+        let pin = srv.airtime_fraction.unwrap();
+        let sum: f64 = alloc
+            .agents
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| alloc.placement.assignment[*i] == k)
+            .map(|(_, a)| a.airtime_share)
+            .sum();
+        assert!(sum <= pin + 1e-9, "server {k}: airtime {sum} exceeds pin {pin}");
+    }
+    // pins are fingerprinted: moving one, or dropping it, re-hashes
+    let mut moved = spec.clone();
+    moved.servers[0].airtime_fraction = Some(0.5);
+    let mut dropped = spec.clone();
+    dropped.servers[0].airtime_fraction = None;
+    assert_ne!(spec_hash(&spec), spec_hash(&moved));
+    assert_ne!(spec_hash(&spec), spec_hash(&dropped));
+}
+
+/// Per-server queue overrides through the public API: an override equal
+/// to the fleet-wide discipline is the identity (bit for bit), a
+/// different one solves cleanly, and both participate in the spec
+/// fingerprint.
+#[test]
+fn queue_overrides_are_identity_when_redundant_and_fingerprinted() {
+    let queued = |servers: Vec<ServerSpec>| {
+        let mut spec = FleetSpec::new(base(), AgentSpec::mixed_fleet(8));
+        spec.servers = servers;
+        spec.queue = Some(QueueModel::uniform(QueueDiscipline::Fifo, 8, 0.02));
+        spec
+    };
+    let plain = queued(ServerSpec::identical(2));
+    let redundant = queued(vec![
+        ServerSpec { queue: Some(QueueDiscipline::Fifo), ..ServerSpec::default() };
+        2
+    ]);
+    let a = FleetProblem::from_spec(plain.clone()).solve(&SolveRequest::default());
+    let b = FleetProblem::from_spec(redundant.clone()).solve(&SolveRequest::default());
+    assert_eq!(a.objective, b.objective, "redundant override must be the identity");
+    for (x, y) in a.agents.iter().zip(&b.agents) {
+        assert_eq!(x.server_share, y.server_share);
+        assert_eq!(x.airtime_share, y.airtime_share);
+    }
+    // a genuinely different discipline on one box still solves...
+    let mixed = queued(vec![
+        ServerSpec { queue: Some(QueueDiscipline::WeightedPriority), ..ServerSpec::default() },
+        ServerSpec::default(),
+    ]);
+    let m = FleetProblem::from_spec(mixed.clone()).solve(&SolveRequest::default());
+    assert!(m.objective.is_finite());
+    // ...and the override (redundant or not) moves the fingerprint
+    assert_ne!(spec_hash(&plain), spec_hash(&redundant));
+    assert_ne!(spec_hash(&plain), spec_hash(&mixed));
+}
