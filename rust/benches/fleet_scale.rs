@@ -13,13 +13,18 @@
 //!   fleet bit for bit;
 //! * the fixed-point interference pass converges (no mean-field
 //!   fallback) on every queued scenario in the table below, and its
-//!   waits never leave the mean-field bracket.
+//!   waits never leave the mean-field bracket;
+//! * the class-collapsed solver reproduces the per-agent allocation bit
+//!   for bit at every shared ladder rung and is >= 10x faster at
+//!   N = 10^4 on the 3-tier mix (the `solve-scale-*` records).
 
-use qaci::bench_harness::{emit_bench_artifact, num_or_null, scaled, Table};
+use qaci::bench_harness::{emit_bench_artifact, fast_mode, num_or_null, scaled, Table};
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
-use qaci::fleet::{sim, FleetSimConfig};
-use qaci::opt::fleet::{AgentSpec, FleetAlgorithm, FleetProblem, FleetSpec, SolveRequest};
+use qaci::fleet::{sim, FleetSimConfig, LaneSeedMix};
+use qaci::opt::fleet::{
+    AgentSpec, Classing, FleetAlgorithm, FleetProblem, FleetSpec, SolveRequest,
+};
 use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
 use qaci::util::json::Json;
@@ -66,6 +71,7 @@ fn main() {
                     seed: 1,
                     batcher: BatcherConfig::default(),
                     queue: None,
+                    lane_mix: LaneSeedMix::default(),
                 },
             );
             let (p50, p95, epr) = if report.served > 0 {
@@ -125,6 +131,7 @@ fn main() {
 
     hetero_margin_ladder();
     fixed_point_scenarios();
+    solve_scale_ladder(&mut records);
 
     // machine-readable artifact (schema in the crate root under "Bench
     // artifacts"); the ordering invariant is re-checked against the
@@ -149,6 +156,138 @@ fn main() {
             proposed < equal,
             "artifact: {scenario} proposed {proposed} !< equal-share {equal}"
         );
+    }
+}
+
+/// Solve time vs fleet size for the per-agent and class-collapsed
+/// solvers on the no-queue 3-tier mix (a handful of equivalence
+/// classes regardless of N). The classed solver must reproduce the
+/// per-agent allocation **bit for bit** at every rung both run, and be
+/// at least 10x faster at the largest shared rung; solve time must
+/// grow with N within each solver (the emitted `solve-scale-*` records
+/// carry the curves, `cost_bits_equal` and `speedup`, re-checked by
+/// the CI artifact validator).
+fn solve_scale_ladder(records: &mut Vec<Json>) {
+    let mut t = Table::new(
+        "solve scale: class-collapsed vs per-agent allocator (3-tier mix, no queue)",
+        &["N", "solver", "classes", "solve [ms]", "cost", "admitted", "speedup"],
+    );
+    let full = !fast_mode();
+    // the rungs both solvers run (bit-identity + speedup measured here)
+    let shared: &[usize] = if full { &[100, 1_000, 10_000] } else { &[100, 1_000] };
+    // the classed solver alone continues up the ladder
+    let top: usize = if full { 100_000 } else { 10_000 };
+    let mut per_agent_curve: Vec<f64> = Vec::new();
+    let mut classed_curve: Vec<f64> = Vec::new();
+    let mut top_speedup = 0.0f64;
+    for &n in shared.iter().chain(std::iter::once(&top)) {
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(2)),
+        );
+        let classes = fp.class_index(Classing::Exact).classes();
+        let solve = |classing: Classing| {
+            let sw = Stopwatch::start();
+            let alloc = fp.solve(&SolveRequest { classing, ..SolveRequest::default() });
+            (sw.elapsed_s().max(1e-9), alloc)
+        };
+        let (classed_s, classed) = solve(Classing::Exact);
+        classed_curve.push(classed_s);
+        assert!(classed.objective.is_finite(), "solve-scale-{n}: non-finite classed cost");
+        let mut classed_rec = Json::obj()
+            .set("scenario", format!("solve-scale-{n}"))
+            .set("policy", "classed")
+            .set("cost", classed.objective)
+            .set("admitted", classed.admitted)
+            .set("classes", classes)
+            .set("wall_clock_s", classed_s);
+        let mut speedup_cell = "--".to_string();
+        if shared.contains(&n) {
+            let (pa_s, pa) = solve(Classing::PerAgent);
+            per_agent_curve.push(pa_s);
+            assert_eq!(
+                pa.objective.to_bits(),
+                classed.objective.to_bits(),
+                "solve-scale-{n}: classed cost {} != per-agent {}",
+                classed.objective,
+                pa.objective
+            );
+            assert_eq!(pa.admitted, classed.admitted, "solve-scale-{n}: admitted set diverged");
+            for (i, (a, b)) in pa.agents.iter().zip(&classed.agents).enumerate() {
+                assert_eq!(
+                    a.server_share.to_bits(),
+                    b.server_share.to_bits(),
+                    "solve-scale-{n} agent {i}: mu diverged"
+                );
+                assert_eq!(
+                    a.airtime_share.to_bits(),
+                    b.airtime_share.to_bits(),
+                    "solve-scale-{n} agent {i}: alpha diverged"
+                );
+                assert_eq!(
+                    a.cost.to_bits(),
+                    b.cost.to_bits(),
+                    "solve-scale-{n} agent {i}: cost diverged"
+                );
+            }
+            let speedup = pa_s / classed_s;
+            if n == *shared.last().unwrap() {
+                top_speedup = speedup;
+            }
+            speedup_cell = format!("{speedup:.1}x");
+            classed_rec = classed_rec.set("cost_bits_equal", true).set("speedup", speedup);
+            t.row(&[
+                format!("{n}"),
+                "per-agent".into(),
+                format!("{n}"),
+                format!("{:.2}", pa_s * 1e3),
+                format!("{:.6e}", pa.objective),
+                format!("{}/{n}", pa.admitted),
+                "1.0x".into(),
+            ]);
+            records.push(
+                Json::obj()
+                    .set("scenario", format!("solve-scale-{n}"))
+                    .set("policy", "per-agent")
+                    .set("cost", pa.objective)
+                    .set("admitted", pa.admitted)
+                    .set("classes", n)
+                    .set("wall_clock_s", pa_s),
+            );
+        }
+        t.row(&[
+            format!("{n}"),
+            "classed".into(),
+            format!("{classes}"),
+            format!("{:.2}", classed_s * 1e3),
+            format!("{:.6e}", classed.objective),
+            format!("{}/{n}", classed.admitted),
+            speedup_cell,
+        ]);
+        records.push(classed_rec);
+    }
+    t.print();
+    // solve time grows up the ladder for each solver (decade rungs, so
+    // timer noise cannot plausibly invert an ordering of 10x the work)
+    assert!(
+        per_agent_curve.windows(2).all(|w| w[0] < w[1]),
+        "per-agent solve curve not increasing: {per_agent_curve:?}"
+    );
+    assert!(
+        classed_curve.windows(2).all(|w| w[0] < w[1]),
+        "classed solve curve not increasing: {classed_curve:?}"
+    );
+    if full {
+        assert!(
+            top_speedup >= 10.0,
+            "classed solver only {top_speedup:.1}x faster than per-agent at N=10^4"
+        );
+        println!(
+            "\nOK: classed == per-agent bit for bit on every shared rung, {top_speedup:.0}x \
+             faster at N=10^4"
+        );
+    } else {
+        println!("\nOK: classed == per-agent bit for bit on every shared rung (fast mode)");
     }
 }
 

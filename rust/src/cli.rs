@@ -10,11 +10,11 @@ use qaci::data::eval::EvalSet;
 use qaci::data::vocab::Vocab;
 use qaci::data::workload::{generate, Arrival};
 use qaci::fleet::churn::{self, ChurnConfig};
-use qaci::fleet::{daemon, events, sim as fleet_sim, DaemonConfig, FleetSimConfig};
+use qaci::fleet::{daemon, events, sim as fleet_sim, DaemonConfig, FleetSimConfig, LaneSeedMix};
 use qaci::obs::benchlog::{self, BenchLog, DiffOptions, Query};
 use qaci::opt::fleet::{
-    AdmissionPricing, AgentSpec, FleetAlgorithm, FleetProblem, FleetSpec, PlacementStrategy,
-    ServerSpec, SolveRequest,
+    AdmissionPricing, AgentSpec, Classing, FleetAlgorithm, FleetProblem, FleetSpec,
+    PlacementStrategy, ServerSpec, SolveRequest,
 };
 use qaci::opt::{bisection, sca, Problem};
 use qaci::quant::Scheme;
@@ -107,6 +107,17 @@ pub fn main() {
              (telemetry-scaled, fed by --serve epochs)",
             Some("uniform"),
         )
+        .describe(
+            "classing",
+            "fleet: allocator equivalence classing, per-agent | exact | bucketed[:decimals]",
+            Some("per-agent"),
+        )
+        .describe(
+            "class-reuse",
+            "churn: reuse departed same-class agents' allocations across re-solves",
+            None,
+        )
+        .describe("lane-mix", "fleet sim: per-lane seed mix, additive | splitmix", Some("additive"))
         .describe("horizon", "churn: simulated horizon [s]", Some("600"))
         .describe("join-rps", "churn: Poisson join rate [1/s]", Some("0.02"))
         .describe("leave-rps", "churn: per-agent leave rate [1/s]", Some("0.003"))
@@ -525,8 +536,19 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
         );
     }
 
+    let Some(classing) = parsed(Classing::parse(&args.str("classing", "per-agent"))) else {
+        return 2;
+    };
+    let lane_mix = match args.str("lane-mix", "additive").as_str() {
+        "additive" => LaneSeedMix::Additive,
+        "splitmix" => LaneSeedMix::Splitmix,
+        other => {
+            eprintln!("error: unknown lane mix {other:?} (expected additive | splitmix)");
+            return 2;
+        }
+    };
     let sw = Stopwatch::start();
-    let req = SolveRequest { algorithm, placement, seed, ..SolveRequest::default() };
+    let req = SolveRequest { algorithm, placement, seed, classing, ..SolveRequest::default() };
     let alloc = fp.solve(&req);
     let solve_s = sw.elapsed_s();
 
@@ -536,6 +558,7 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
         seed,
         batcher: BatcherConfig::default(),
         queue,
+        lane_mix,
     };
     let report = fleet_sim::run(&fp, &alloc, &cfg);
 
@@ -643,6 +666,8 @@ fn churn_config(args: &Args) -> Option<ChurnConfig> {
         tiers,
         pricing,
         servers,
+        classing: parsed(Classing::parse(&args.str("classing", "per-agent")))?,
+        class_reuse: args.has("class-reuse"),
         seed: args.usize("seed", 0) as u64,
     })
 }

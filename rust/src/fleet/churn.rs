@@ -39,9 +39,9 @@
 
 use crate::obs::metrics as obs_metrics;
 use crate::opt::fleet::{
-    self, AdmissionPricing, AgentAllocation, AgentSpec, FleetAlgorithm, FleetAllocation,
-    FleetProblem, FleetSpec, Placement, PlacementStrategy, ProposedOptions, ServerSpec,
-    SolveRequest,
+    self, AdmissionPricing, AgentAllocation, AgentSpec, Classing, FleetAlgorithm,
+    FleetAllocation, FleetProblem, FleetSpec, Placement, PlacementStrategy, ProposedOptions,
+    ServerSpec, SolveRequest,
 };
 use crate::system::platform::DeviceProfile;
 use crate::system::queue::{QueueDiscipline, QueueModel};
@@ -101,6 +101,20 @@ pub struct ChurnConfig {
     /// bit, while S > 1 turns on sticky seating with per-server
     /// fingerprint-gated re-solves
     pub servers: Vec<ServerSpec>,
+    /// equivalence-class collapsing forwarded to every solve the replay
+    /// takes (the default [`Classing::PerAgent`] keeps the historical
+    /// per-agent path bit for bit)
+    pub classing: Classing,
+    /// class-level incremental re-solves (single-server online path):
+    /// at a fingerprint-changed event, diff per-agent class hashes
+    /// ([`FleetProblem::agent_class_hashes`]) against the previous
+    /// population — an unchanged class multiset is a pure relabel whose
+    /// slots are remapped class-wise with **no** solve, and otherwise
+    /// newcomers inherit the slots departed same-class agents freed, so
+    /// the warm exchange starts at the previous optimum and only
+    /// classes whose membership actually changed have work left. The
+    /// default `false` keeps the historical warm path byte for byte.
+    pub class_reuse: bool,
     pub seed: u64,
 }
 
@@ -124,6 +138,8 @@ impl Default for ChurnConfig {
             tiers: vec![DeviceProfile::orin()],
             pricing: AdmissionPricing::Uniform,
             servers: vec![ServerSpec::default()],
+            classing: Classing::PerAgent,
+            class_reuse: false,
             seed: 0,
         }
     }
@@ -543,6 +559,115 @@ pub(crate) fn sticky_placement(
     Placement { assignment }
 }
 
+/// Class-aware warm slots for a single-server online re-solve
+/// ([`ChurnConfig::class_reuse`]): a surviving key keeps its previous
+/// slot verbatim; a newcomer inherits a full slot freed by a departed
+/// agent of the same equivalence class (content hash per
+/// [`FleetProblem::agent_class_hashes`] — an agent of the same class is
+/// float-for-float the same subproblem, so the freed slot is exactly as
+/// valid for the newcomer). Returns the per-live-agent slots plus
+/// whether the class multiset is unchanged — a pure relabel, in which
+/// case every slot is guaranteed filled and no solve is needed at all.
+pub(crate) fn class_warm_slots(
+    prev_hashes: &[u64],
+    prev_assoc: &[u64],
+    prev_agents: &[AgentAllocation],
+    live: &[u64],
+    fresh_hashes: &[u64],
+    prev_by_key: &HashMap<u64, AgentAllocation>,
+) -> (Vec<Option<AgentAllocation>>, bool) {
+    let live_set: HashSet<u64> = live.iter().copied().collect();
+    let mut freed: HashMap<u64, Vec<AgentAllocation>> = HashMap::new();
+    for ((&k, &h), a) in prev_assoc.iter().zip(prev_hashes).zip(prev_agents) {
+        if !live_set.contains(&k) {
+            freed.entry(h).or_default().push(*a);
+        }
+    }
+    let slots: Vec<Option<AgentAllocation>> = live
+        .iter()
+        .zip(fresh_hashes)
+        .map(|(k, h)| match prev_by_key.get(k) {
+            Some(a) => Some(*a),
+            None => freed.get_mut(h).and_then(|v| {
+                if v.is_empty() {
+                    None
+                } else {
+                    Some(v.remove(0))
+                }
+            }),
+        })
+        .collect();
+    let mut a = prev_hashes.to_vec();
+    let mut b = fresh_hashes.to_vec();
+    a.sort_unstable();
+    b.sort_unstable();
+    (slots, a == b)
+}
+
+/// Re-solve (or class-remap) the single-server online allocation after a
+/// fingerprint change, honoring [`ChurnConfig::class_reuse`] and
+/// [`ChurnConfig::classing`]. `prev` is the plain key-matched warm
+/// vector; `class_hashes` holds the previous population's per-agent
+/// class hashes and is updated in place.
+pub(crate) fn resolve_single(
+    fp: &FleetProblem,
+    cfg: &ChurnConfig,
+    opts: ProposedOptions,
+    prev: Vec<Option<(f64, f64)>>,
+    prev_by_key: &HashMap<u64, AgentAllocation>,
+    prev_assoc: &[u64],
+    prev_agents: &[AgentAllocation],
+    live: &[u64],
+    class_hashes: &mut Vec<u64>,
+) -> FleetAllocation {
+    if !cfg.class_reuse {
+        return fp.solve(&SolveRequest {
+            options: opts,
+            warm_start: Some(prev),
+            classing: cfg.classing,
+            ..SolveRequest::default()
+        });
+    }
+    let fresh_hashes = fp.agent_class_hashes();
+    let (slots, relabel) = class_warm_slots(
+        class_hashes,
+        prev_assoc,
+        prev_agents,
+        live,
+        &fresh_hashes,
+        prev_by_key,
+    );
+    *class_hashes = fresh_hashes;
+    if relabel && slots.iter().all(|s| s.is_some()) {
+        // no class's membership changed: remap slots class-wise, skip
+        // the solve entirely
+        obs_metrics::counter_add("solver.class.relabel", 1);
+        let agents: Vec<AgentAllocation> = slots.into_iter().flatten().collect();
+        return FleetAllocation {
+            objective: agents.iter().map(|a| a.cost).sum(),
+            admitted: agents.iter().filter(|a| a.design.is_some()).count(),
+            placement: Placement::single(agents.len()),
+            agents,
+        };
+    }
+    let inherited = live
+        .iter()
+        .zip(&slots)
+        .filter(|(k, s)| s.is_some() && !prev_by_key.contains_key(k))
+        .count();
+    if inherited > 0 {
+        obs_metrics::counter_add("solver.class.warm_inherit", inherited as u64);
+    }
+    let warm: Vec<Option<(f64, f64)>> =
+        slots.iter().map(|s| s.map(|a| (a.server_share, a.airtime_share))).collect();
+    fp.solve(&SolveRequest {
+        options: opts,
+        warm_start: Some(warm),
+        classing: cfg.classing,
+        ..SolveRequest::default()
+    })
+}
+
 /// Replay `timeline` under `policy` and integrate the fleet cost.
 pub fn run_churn(
     base: Platform,
@@ -566,9 +691,13 @@ pub fn run_churn(
         ChurnPolicy::StaticEqual => fp.solve(&SolveRequest {
             algorithm: FleetAlgorithm::EqualShare,
             placement: PlacementStrategy::EqualSpread,
+            classing: cfg.classing,
             ..SolveRequest::default()
         }),
-        ChurnPolicy::StaticProposed | ChurnPolicy::Online => fp.solve(&SolveRequest::default()),
+        ChurnPolicy::StaticProposed | ChurnPolicy::Online => fp.solve(&SolveRequest {
+            classing: cfg.classing,
+            ..SolveRequest::default()
+        }),
     };
     solve_ms.push(sw.elapsed_s() * 1e3);
     // frozen per-key slots (and server seats) for the static policies
@@ -603,6 +732,15 @@ pub fn run_churn(
         server_stamps =
             (0..cfg.servers.len()).map(|k| fp.server_fingerprint(&alloc.placement, k)).collect();
     }
+
+    // class-level fingerprints of the population the current allocation
+    // was solved for (single-server class_reuse path only)
+    let mut class_hashes: Vec<u64> = if policy == ChurnPolicy::Online && cfg.class_reuse && !multi
+    {
+        fp.agent_class_hashes()
+    } else {
+        Vec::new()
+    };
 
     let mut rates = match policy {
         ChurnPolicy::Online => (alloc.objective, alloc.weighted_d_upper(&fp)),
@@ -656,11 +794,22 @@ pub fn run_churn(
                     let req = SolveRequest {
                         options: opts,
                         warm_start: Some(prev),
+                        classing: cfg.classing,
                         ..SolveRequest::default()
                     };
                     fp.solve_with_placement_reusing(&placement, &req, &dirty, &reuse)
                 } else {
-                    fleet::solve_proposed_warm(&fp, &prev, opts)
+                    resolve_single(
+                        &fp,
+                        cfg,
+                        opts,
+                        prev,
+                        &prev_by_key,
+                        &assoc,
+                        &alloc.agents,
+                        &pop.live,
+                        &mut class_hashes,
+                    )
                 };
                 solve_ms.push(sw.elapsed_s() * 1e3);
                 assoc.clone_from(&pop.live);
@@ -993,4 +1142,103 @@ mod tests {
         assert!(err.choices.contains(&"online-proposed"));
         assert!(err.to_string().contains("static-proposed"));
     }
+    // -- PR 9: class-aware warm reuse --
+
+    fn slot(cost: f64) -> AgentAllocation {
+        AgentAllocation {
+            design: None,
+            server_share: 0.1,
+            airtime_share: 0.1,
+            link_s: 0.0,
+            queue_wait_s: 0.0,
+            cost,
+        }
+    }
+
+    #[test]
+    fn class_warm_slots_inherits_departed_same_class_slot() {
+        // keys 1,2,3 were live; key 2 (class hash 10) departs and key 9
+        // of the *same class* joins: the newcomer inherits 2's slot
+        // verbatim and the class multiset is an exact relabel
+        let prev_hashes = [10u64, 10, 20];
+        let prev_assoc = [1u64, 2, 3];
+        let prev_agents = [slot(1.0), slot(2.0), slot(3.0)];
+        let mut prev_by_key = HashMap::new();
+        prev_by_key.insert(1u64, slot(1.0));
+        prev_by_key.insert(3u64, slot(3.0));
+        let live = [1u64, 3, 9];
+        let fresh_hashes = [10u64, 20, 10];
+        let (slots, relabel) = class_warm_slots(
+            &prev_hashes,
+            &prev_assoc,
+            &prev_agents,
+            &live,
+            &fresh_hashes,
+            &prev_by_key,
+        );
+        assert!(relabel, "class multiset unchanged => relabel");
+        let costs: Vec<f64> = slots.iter().map(|s| s.unwrap().cost).collect();
+        assert_eq!(costs, vec![1.0, 3.0, 2.0], "newcomer 9 must inherit key 2's slot");
+    }
+
+    #[test]
+    fn class_warm_slots_newcomer_of_new_class_starts_cold() {
+        // the joining key's class (hash 30) has no freed slot: its entry
+        // stays None and the multiset change disables the relabel path
+        let prev_hashes = [10u64, 20];
+        let prev_assoc = [1u64, 2];
+        let prev_agents = [slot(1.0), slot(2.0)];
+        let mut prev_by_key = HashMap::new();
+        prev_by_key.insert(1u64, slot(1.0));
+        prev_by_key.insert(2u64, slot(2.0));
+        let live = [1u64, 2, 9];
+        let fresh_hashes = [10u64, 20, 30];
+        let (slots, relabel) = class_warm_slots(
+            &prev_hashes,
+            &prev_assoc,
+            &prev_agents,
+            &live,
+            &fresh_hashes,
+            &prev_by_key,
+        );
+        assert!(!relabel);
+        assert!(slots[0].is_some() && slots[1].is_some());
+        assert!(slots[2].is_none(), "no same-class donor => cold slot");
+        // two departures of one class free two slots, consumed in order
+        let (slots, _) = class_warm_slots(
+            &[10u64, 10],
+            &[1u64, 2],
+            &[slot(1.0), slot(2.0)],
+            &[8u64, 9],
+            &[10u64, 10],
+            &HashMap::new(),
+        );
+        assert_eq!(slots.iter().filter(|s| s.is_some()).count(), 2);
+    }
+
+    #[test]
+    fn class_reuse_churn_stays_finite_and_defaults_off() {
+        // defaults keep the historical path (no classing, no reuse)
+        let cfg = ChurnConfig::default();
+        assert_eq!(cfg.classing, Classing::PerAgent);
+        assert!(!cfg.class_reuse);
+        // the class-reuse online run completes with a finite integrated
+        // cost on the default timeline and never loses to static-equal
+        let reuse_cfg = ChurnConfig {
+            classing: Classing::Exact,
+            class_reuse: true,
+            ..ChurnConfig::default()
+        };
+        let tl = timeline(&reuse_cfg);
+        let online = run_churn(base(), &tl, ChurnPolicy::Online, &reuse_cfg);
+        let equal = run_churn(base(), &tl, ChurnPolicy::StaticEqual, &reuse_cfg);
+        assert!(online.time_avg_cost.is_finite());
+        assert!(
+            online.time_avg_cost <= equal.time_avg_cost + 1e-9,
+            "class-reuse online {} lost to static equal {}",
+            online.time_avg_cost,
+            equal.time_avg_cost
+        );
+    }
 }
+

@@ -54,7 +54,7 @@ use super::churn::{timeline, ChurnConfig, ChurnPolicy, Timeline};
 use super::events::{EventEngine, EventReport};
 use crate::obs::metrics as obs_metrics;
 use crate::obs::Metrics;
-use crate::opt::fleet::{self, AdmissionPricing, ProposedOptions};
+use crate::opt::fleet::{self, AdmissionPricing, FleetAllocation, ProposedOptions, SolveRequest};
 use crate::system::Platform;
 use crate::util::timer::Samples;
 use std::collections::{BinaryHeap, HashMap};
@@ -369,9 +369,7 @@ impl Daemon {
             // sees a burst piling up work under a still-cheap design.
             let shares = self.engine.frozen_shares();
             let frozen = fleet::probe_frozen(&self.engine.fp, &shares);
-            let trial =
-                fleet::solve_proposed_warm(&self.engine.fp, &shares, ProposedOptions::default())
-                    .objective;
+            let trial = self.counterfactual_warm(shares).objective;
             let material = frozen > trial * (1.0 + self.cfg.gain_threshold);
             let backlog = self.engine.backlog_s(t);
             let urgent = backlog > self.cfg.urgent_backlog_s;
@@ -418,14 +416,25 @@ impl Daemon {
         self.log(format_args!("t={t:.3} take cause={cause} objective={objective:.6}"));
     }
 
+    /// The counterfactual warm solve the hysteresis gate prices, with
+    /// the churn config's classing forwarded so the probe runs exactly
+    /// what a taken re-solve would (class-collapsed fleets price the
+    /// probe per class too).
+    fn counterfactual_warm(&self, shares: Vec<Option<(f64, f64)>>) -> FleetAllocation {
+        self.engine.fp.solve(&SolveRequest {
+            options: ProposedOptions::default(),
+            warm_start: Some(shares),
+            classing: self.cfg.churn.classing,
+            ..SolveRequest::default()
+        })
+    }
+
     /// Audit mode: run the counterfactual warm solve the gain gate just
     /// skipped (single-server path — what the soundness property tests
     /// drive) without applying it, and track the realized-cost excess.
     fn audit_skip(&mut self, frozen: f64) {
         let shares = self.engine.frozen_shares();
-        let counterfactual =
-            fleet::solve_proposed_warm(&self.engine.fp, &shares, ProposedOptions::default())
-                .objective;
+        let counterfactual = self.counterfactual_warm(shares).objective;
         if counterfactual > 0.0 {
             let excess = (frozen - counterfactual) / counterfactual;
             if excess > self.audit_excess {

@@ -50,7 +50,8 @@
 //! the designated `burst-storm` bench scenario pins that ordering.
 
 use super::churn::{
-    fingerprint, sticky_placement, ChurnConfig, ChurnEvent, ChurnPolicy, Population, Timeline,
+    fingerprint, resolve_single, sticky_placement, ChurnConfig, ChurnEvent, ChurnPolicy,
+    Population, Timeline,
 };
 use crate::obs::metrics as obs_metrics;
 use crate::obs::Metrics;
@@ -539,6 +540,9 @@ pub(crate) struct EventEngine {
     assoc: Vec<u64>,
     server_of: HashMap<u64, usize>,
     server_stamps: Vec<u64>,
+    /// class-level fingerprints of the population the current allocation
+    /// was solved for ([`ChurnConfig::class_reuse`], single-server only)
+    class_hashes: Vec<u64>,
     lanes: BTreeMap<u64, EventLane>,
     /// cumulative per-agent rollups (the daemon snapshots these at epoch
     /// boundaries and differences them into violation pressure)
@@ -568,9 +572,13 @@ impl EventEngine {
             ChurnPolicy::StaticEqual => fp.solve(&SolveRequest {
                 algorithm: FleetAlgorithm::EqualShare,
                 placement: PlacementStrategy::EqualSpread,
+                classing: cfg.classing,
                 ..SolveRequest::default()
             }),
-            ChurnPolicy::StaticProposed | ChurnPolicy::Online => fp.solve(&SolveRequest::default()),
+            ChurnPolicy::StaticProposed | ChurnPolicy::Online => fp.solve(&SolveRequest {
+                classing: cfg.classing,
+                ..SolveRequest::default()
+            }),
         };
         let slots: HashMap<u64, AgentAllocation> =
             pop.live.iter().zip(&alloc.agents).map(|(&k, a)| (k, *a)).collect();
@@ -587,6 +595,11 @@ impl EventEngine {
                 .map(|k| fp.server_fingerprint(&alloc.placement, k))
                 .collect();
         }
+        let class_hashes = if policy == ChurnPolicy::Online && cfg.class_reuse && !multi {
+            fp.agent_class_hashes()
+        } else {
+            Vec::new()
+        };
 
         let mut lanes: BTreeMap<u64, EventLane> = BTreeMap::new();
         let mut stats: BTreeMap<u64, EventAgentReport> = BTreeMap::new();
@@ -619,6 +632,7 @@ impl EventEngine {
             assoc,
             server_of,
             server_stamps,
+            class_hashes,
             lanes,
             stats,
             queues,
@@ -824,11 +838,22 @@ impl EventEngine {
             let req = SolveRequest {
                 options: self.opts,
                 warm_start: Some(prev),
+                classing: self.cfg.classing,
                 ..SolveRequest::default()
             };
             self.fp.solve_with_placement_reusing(&placement, &req, &dirty, &reuse)
         } else {
-            fleet::solve_proposed_warm(&self.fp, &prev, self.opts)
+            resolve_single(
+                &self.fp,
+                &self.cfg,
+                self.opts,
+                prev,
+                &prev_by_key,
+                &self.assoc,
+                &self.alloc.agents,
+                &self.pop.live,
+                &mut self.class_hashes,
+            )
         };
         self.assoc.clone_from(&self.pop.live);
         self.reallocations += 1;

@@ -53,4 +53,4 @@ pub mod sim;
 pub use churn::{ChurnConfig, ChurnPolicy, ChurnReport, Timeline};
 pub use daemon::{Daemon, DaemonConfig, DaemonReport, EpochSnapshot};
 pub use events::{EventAgentReport, EventReport};
-pub use sim::{AgentReport, FleetReport, FleetSimConfig};
+pub use sim::{AgentReport, FleetReport, FleetSimConfig, LaneSeedMix};

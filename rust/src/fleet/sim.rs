@@ -57,6 +57,34 @@ use crate::system::queue::{EdgeQueue, QueueDiscipline};
 use crate::system::{delay, energy, Platform};
 use crate::util::timer::Samples;
 
+/// How per-lane RNG streams are derived from the run seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LaneSeedMix {
+    /// the historical additive offsets (`seed + i`, `seed + 0x9E37·(i+1)`)
+    /// — kept as the default so pinned-telemetry transcripts stay byte
+    /// for byte. Adjacent run seeds overlap lane streams: run seed `s`,
+    /// lane `i+1` draws the same scheduler stream as run seed `s+1`,
+    /// lane `i`
+    #[default]
+    Additive,
+    /// a full splitmix64 finalizer over (seed, stream, lane): the mix is
+    /// a bijection of the combined input, so no pair of adjacent run
+    /// seeds can reproduce each other's lane streams (cross-seed
+    /// non-collision is tested below)
+    Splitmix,
+}
+
+/// splitmix64-finalized lane seed: `stream` separates generator families
+/// (arrival vs scheduler) so one lane's streams are independent too.
+pub fn splitmix_lane(seed: u64, stream: u64, lane: u64) -> u64 {
+    let mut z = seed
+        ^ stream.wrapping_mul(0xA076_1D64_78BD_642F)
+        ^ lane.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Knobs for one fleet serving run.
 #[derive(Debug, Clone, Copy)]
 pub struct FleetSimConfig {
@@ -67,6 +95,9 @@ pub struct FleetSimConfig {
     /// `Some(discipline)` serializes all server stages through one
     /// shared edge queue; `None` keeps PR 1's concurrent slices
     pub queue: Option<QueueDiscipline>,
+    /// per-lane RNG stream derivation; the [`LaneSeedMix::Additive`]
+    /// default reproduces the historical streams byte for byte
+    pub lane_mix: LaneSeedMix,
 }
 
 impl Default for FleetSimConfig {
@@ -77,6 +108,7 @@ impl Default for FleetSimConfig {
             seed: 0,
             batcher: BatcherConfig::default(),
             queue: None,
+            lane_mix: LaneSeedMix::default(),
         }
     }
 }
@@ -278,12 +310,11 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
     // ---- phase 1: per-agent routing + batching (order-preserving) ----
     for (i, slot) in alloc.agents.iter().enumerate() {
         let spec = &fp.agents[i];
-        let mut requests = generate(
-            cfg.requests_per_agent,
-            1,
-            cfg.arrival,
-            cfg.seed.wrapping_add(0x9E37 * (i as u64 + 1)),
-        );
+        let arrival_seed = match cfg.lane_mix {
+            LaneSeedMix::Additive => cfg.seed.wrapping_add(0x9E37 * (i as u64 + 1)),
+            LaneSeedMix::Splitmix => splitmix_lane(cfg.seed, 1, i as u64),
+        };
+        let mut requests = generate(cfg.requests_per_agent, 1, cfg.arrival, arrival_seed);
         for r in &mut requests {
             r.class = spec.class;
         }
@@ -315,12 +346,19 @@ pub fn run(fp: &FleetProblem, alloc: &FleetAllocation, cfg: &FleetSimConfig) -> 
         // was scored at (fixed-point when it converged)
         let platform = fp.agent_platform(i, slot.server_share);
         let t0_compute = spec.t0 - fp.link_time(i, slot.airtime_share) - slot.queue_wait_s;
+        // the historical additive offset collides across adjacent runs
+        // (seed s, lane i+1 == seed s+1, lane i); Splitmix derives
+        // collision-free streams instead
+        let scheduler_seed = match cfg.lane_mix {
+            LaneSeedMix::Additive => cfg.seed.wrapping_add(i as u64),
+            LaneSeedMix::Splitmix => splitmix_lane(cfg.seed, 2, i as u64),
+        };
         let scheduler = Scheduler::new(
             platform,
             spec.lambda,
             Algorithm::Exact,
             Scheme::Uniform,
-            cfg.seed.wrapping_add(i as u64),
+            scheduler_seed,
         );
         let mut router = Router::new(
             QosPolicy::new(&[(spec.class, t0_compute, spec.e0)]),
@@ -448,6 +486,7 @@ mod tests {
             seed: 7,
             batcher: BatcherConfig::default(),
             queue: None,
+            lane_mix: LaneSeedMix::default(),
         }
     }
 
@@ -540,6 +579,7 @@ mod tests {
                 seed: 3,
                 batcher: BatcherConfig::default(),
                 queue: None,
+                lane_mix: LaneSeedMix::default(),
             },
         );
         assert!(report.served > 0);
@@ -579,6 +619,7 @@ mod tests {
             seed: 11,
             batcher: BatcherConfig::default(),
             queue: None,
+            lane_mix: LaneSeedMix::default(),
         };
         let plain = run(&fp, &alloc, &base);
         let queued = run(
@@ -640,6 +681,7 @@ mod tests {
             seed: 4,
             batcher: BatcherConfig::default(),
             queue: Some(QueueDiscipline::Fifo),
+            lane_mix: LaneSeedMix::default(),
         };
         let class_wait = |r: &FleetReport, class: &str| -> f64 {
             let mut s = Samples::new();
@@ -664,4 +706,63 @@ mod tests {
             "interactive must wait less than background under priority: {pi} vs {pb}"
         );
     }
+    // -- PR 9: per-lane RNG stream derivation --
+
+    #[test]
+    fn additive_default_keeps_historical_lane_streams() {
+        assert_eq!(LaneSeedMix::default(), LaneSeedMix::Additive);
+        assert_eq!(FleetSimConfig::default().lane_mix, LaneSeedMix::Additive);
+    }
+
+    #[test]
+    fn splitmix_lane_streams_do_not_collide_across_adjacent_seeds() {
+        // the historical additive scheme collides across adjacent run
+        // seeds: seed s, lane i+1 drew the same scheduler stream as
+        // seed s+1, lane i —
+        let (s0, lane) = (7u64, 3u64);
+        assert_eq!(s0.wrapping_add(lane + 1), (s0 + 1).wrapping_add(lane));
+        // — the splitmix mix must not, for either generator family, and
+        // must keep every (seed, stream, lane) triple in a broad window
+        // on a distinct stream
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..64u64 {
+            for stream in [1u64, 2] {
+                for lane in 0..128u64 {
+                    assert!(
+                        seen.insert(splitmix_lane(seed, stream, lane)),
+                        "stream collision at seed {seed} stream {stream} lane {lane}"
+                    );
+                }
+            }
+        }
+        for seed in 0..512u64 {
+            for lane in 0..64u64 {
+                for stream in [1u64, 2] {
+                    assert_ne!(
+                        splitmix_lane(seed, stream, lane + 1),
+                        splitmix_lane(seed + 1, stream, lane),
+                        "adjacent-seed collision at seed {seed} stream {stream} lane {lane}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn splitmix_mix_rederives_lane_streams_in_the_run() {
+        // flipping the mix changes the per-lane draws (different
+        // arrival jitter), not the population or the request count
+        let fp = fp(3);
+        let alloc = fleet::solve_proposed(&fp);
+        let base = cfg(8);
+        let mixed = FleetSimConfig { lane_mix: LaneSeedMix::Splitmix, ..base };
+        let a = run(&fp, &alloc, &base);
+        let b = run(&fp, &alloc, &mixed);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.rejected, b.rejected);
+        let pa: Vec<u64> = a.per_agent.iter().map(|r| r.e2e_s.p50().to_bits()).collect();
+        let pb: Vec<u64> = b.per_agent.iter().map(|r| r.e2e_s.p50().to_bits()).collect();
+        assert_ne!(pa, pb, "splitmix must re-derive the lane streams");
+    }
 }
+

@@ -48,8 +48,21 @@
 //! budgets) in [`opt::fleet`], and the fleet serving loop in
 //! [`fleet::sim`]. The old `solve_*` free functions remain as thin
 //! wrappers over `SolveRequest`s (bit-identical, regression-tested).
-//! Entry points: `qaci fleet`, `benches/fleet_scale.rs`,
-//! `examples/fleet_sweep.rs`.
+//! For large fleets, [`opt::fleet::SolveRequest::classing`] collapses
+//! agents into (tier × QoS class × arrival × gain) **equivalence
+//! classes** and solves one representative subproblem per class —
+//! [`opt::fleet::Classing::Exact`] is *not* an approximation: every
+//! per-agent number the direct solver would compute is memoized per
+//! class and broadcast, so the allocation is bit-identical
+//! (property-tested) while the per-agent bisections collapse to one
+//! per class, run in parallel on [`util::pool::ThreadPool`]. A few
+//! distinct hardware/QoS profiles mean a million-agent fleet solves at
+//! the cost of a handful of agents plus O(N) bookkeeping
+//! ([`opt::fleet::Classing::Bucketed`] additionally buckets continuous
+//! channel gains at a configurable decimal, trading exactness for
+//! fewer classes on heterogeneous-gain fleets). Entry points:
+//! `qaci fleet [--classing exact]`, `benches/fleet_scale.rs` (the
+//! `solve-scale-*` ladder), `examples/fleet_sweep.rs`.
 //!
 //! ## Multi-server placement
 //!
@@ -227,7 +240,13 @@
 //!
 //! `fleet_scale` records carry `scenario: "scale-<N>"`, `policy` (the
 //! allocator name), `cost`, `d_upper`, `admitted`, `p99_s` and
-//! `wall_clock_s` (the allocation solve time); `fleet_placement`
+//! `wall_clock_s` (the allocation solve time), plus one
+//! `solve-scale-<N>` row per allocator ladder rung (`policy`
+//! `"per-agent"` or `"classed"`) carrying `cost`, `admitted`,
+//! `classes`, `wall_clock_s` and — on rungs both solvers run —
+//! `cost_bits_equal` and `speedup` on the classed row (the CI
+//! validator asserts bit-equal costs, ≥ 10× at N = 10⁴ and monotone
+//! solve-time growth in N); `fleet_placement`
 //! records carry the placement-strategy name as `policy` plus `cost`,
 //! `d_upper`, `admitted` and `placement_moves` per server-bank
 //! scenario; `fleet_daemon` records carry one `burst-storm` row per

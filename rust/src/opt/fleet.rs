@@ -99,6 +99,36 @@
 //! and reproduces the pre-placement solver bit for bit (pinned by the
 //! S = 1 identity property test below).
 //!
+//! ## Equivalence classes: the million-agent path
+//!
+//! Real fleets are population-structured: N = 10⁴–10⁶ agents drawn from
+//! a handful of (tier × QoS-class × channel-gain) combinations. The
+//! per-agent solver prices every bisection and every exchange probe per
+//! *agent*; [`Classing::Exact`] (a [`SolveRequest`] field) collapses
+//! content-identical agents into equivalence classes and evaluates one
+//! representative subproblem per class, memoized by (class, μ-bits,
+//! α-bits). The classed path runs the *same* algorithm over the same
+//! per-agent share vector — identical floats are simply computed once —
+//! so it is **bit-identical** to [`Classing::PerAgent`] whenever class
+//! members really are identical, and trivially so when every class is a
+//! singleton (property-tested below on duplicated and all-singleton
+//! fleets). Two refinements keep exactness under queue feedback: the
+//! damped fixed-point pass computes one wait per (class, weight) — row
+//! `i` of [`QueueModel::waits_given`] depends on the observer only
+//! through its priority weight — and the *mean-field* probe, whose
+//! accumulation order depends on the observer's index, falls back to
+//! per-agent memoization when a queue is attached. Per-class admission
+//! floors (two bisections per class) run in parallel through
+//! [`crate::util::pool::ThreadPool::map`]. [`Classing::Bucketed`]
+//! additionally rounds channel gains when forming classes — a
+//! deliberately **approximate** mode for continuous gain distributions,
+//! where every member is priced at its class representative's gain.
+//! `benches/fleet_scale.rs` publishes the solve-time-vs-N ladder
+//! (`solve-scale-*` records in `BENCH_fleet_scale.json`: per-agent and
+//! classed wall-clock, class counts, and bit-equality of the two costs)
+//! and CI gates the classed path at ≥ 10× the per-agent solver at
+//! N = 10⁴ on the tier-mix scenario.
+//!
 //! ## One solver entry point
 //!
 //! [`FleetProblem::solve`] with a [`SolveRequest`] (algorithm, options,
@@ -109,6 +139,11 @@
 //! equivalent request, kept only for source compatibility — new code
 //! should construct a [`FleetSpec`], validate it once through
 //! [`FleetProblem::from_spec`], and call [`FleetProblem::solve`].
+//! Malformed *runtime* inputs (a placement that does not cover the
+//! fleet, names an unknown server, or mismatched warm-start/dirty/reuse
+//! lengths) surface as structured [`FleetError`]s through the
+//! [`FleetProblem::try_solve`] family; the infallible entry points are
+//! thin wrappers that panic with the same diagnostics.
 
 use super::bisection;
 use super::feasible_random;
@@ -120,11 +155,15 @@ use crate::system::queue::{QueueDiscipline, QueueModel};
 use crate::system::Platform;
 use crate::theory::rate_distortion as rd;
 use crate::util::cli::ParseError;
+use crate::util::pool::{self, ThreadPool};
 use crate::util::rng::Rng;
+use std::cell::RefCell;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::fmt;
 use std::hash::{Hash, Hasher};
 use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
 
 /// One agent's QoS contract in the fleet, plus the silicon it runs on.
 #[derive(Debug, Clone, Copy)]
@@ -400,6 +439,13 @@ impl FleetSpec {
         assert!(
             self.agents.iter().all(|a| a.channel_gain > 0.0 && a.channel_gain <= 1.0),
             "channel gains must lie in (0, 1]"
+        );
+        // mirrors EdgeQueue::push's NaN-priority guard: a NaN weight
+        // would silently mis-order the admission seating and poison the
+        // weight-proportional leftover split
+        assert!(
+            self.agents.iter().all(|a| a.weight.is_finite()),
+            "agent weights must be finite"
         );
         assert!(!self.servers.is_empty(), "at least one server");
         let mut airtime_reserved = 0.0;
@@ -774,50 +820,64 @@ impl FleetProblem {
     /// agents keep the wait that rejected them) or the mean-field vector
     /// on fallback; `converged` distinguishes the two.
     pub fn interference_waits(&self, mu: &[f64], alpha: &[f64]) -> Interference {
-        let n = self.n();
-        assert_eq!(mu.len(), n);
-        assert_eq!(alpha.len(), n);
-        let Some(queue) = &self.queue else {
-            return Interference { waits: vec![0.0; n], converged: true, active: vec![true; n] };
-        };
-        let weight_of = |j: usize| self.agents[j].weight;
-        let services: Vec<f64> = mu.iter().map(|&m| self.own_service(m)).collect();
-        let want_at = |waits: &[f64]| -> Vec<f64> {
-            (0..n)
-                .map(|i| {
-                    let ok = services[i].is_finite()
-                        && self.servable_at_wait(i, mu[i], alpha[i], waits[i]);
-                    if ok { 1.0 } else { 0.0 }
-                })
-                .collect()
-        };
-        let mut act: Vec<f64> =
-            services.iter().map(|s| if s.is_finite() { 1.0 } else { 0.0 }).collect();
-        for _ in 0..48 {
-            let waits = queue.waits_given(&services, &act, weight_of);
-            let want = want_at(&waits);
-            let mut delta = 0.0f64;
-            for (a, w) in act.iter_mut().zip(&want) {
-                let next = 0.5 * *a + 0.5 * w;
-                delta = delta.max((next - *a).abs());
-                *a = next;
-            }
-            if delta < 1e-9 {
-                break;
-            }
-        }
-        let fixed: Vec<f64> = act.iter().map(|&a| if a >= 0.5 { 1.0 } else { 0.0 }).collect();
-        let waits = queue.waits_given(&services, &fixed, weight_of);
-        if want_at(&waits) == fixed {
-            obs_metrics::counter_add("solver.fixed_point.converged", 1);
-            let active = fixed.iter().map(|&a| a >= 0.5).collect();
-            return Interference { waits, converged: true, active };
-        }
-        // no binary equilibrium: clean mean-field fallback
-        obs_metrics::counter_add("solver.fixed_point.fallback", 1);
-        let waits = (0..n).map(|i| self.queue_wait(i, mu[i])).collect();
-        Interference { waits, converged: false, active: vec![true; n] }
+        interference_waits_with(self, &CostOracle::direct(self), mu, alpha)
     }
+}
+
+/// [`FleetProblem::interference_waits`] parameterized by the cost
+/// oracle: the direct oracle reproduces the historical pass bit for bit;
+/// the classed oracle computes one wait per (class, weight) row — row
+/// `i` of [`QueueModel::waits_given`] depends on the observer only
+/// through its priority weight and its own-service finiteness guard, so
+/// the broadcast is exact even when class members hold different shares.
+fn interference_waits_with(
+    fp: &FleetProblem,
+    oracle: &CostOracle<'_>,
+    mu: &[f64],
+    alpha: &[f64],
+) -> Interference {
+    let n = fp.n();
+    assert_eq!(mu.len(), n);
+    assert_eq!(alpha.len(), n);
+    if fp.queue.is_none() {
+        return Interference { waits: vec![0.0; n], converged: true, active: vec![true; n] };
+    }
+    let services: Vec<f64> = mu.iter().map(|&m| fp.own_service(m)).collect();
+    let want_at = |waits: &[f64]| -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let ok = services[i].is_finite()
+                    && oracle.servable_at_wait(i, mu[i], alpha[i], waits[i]);
+                if ok { 1.0 } else { 0.0 }
+            })
+            .collect()
+    };
+    let mut act: Vec<f64> =
+        services.iter().map(|s| if s.is_finite() { 1.0 } else { 0.0 }).collect();
+    for _ in 0..48 {
+        let waits = oracle.waits_given(&services, &act);
+        let want = want_at(&waits);
+        let mut delta = 0.0f64;
+        for (a, w) in act.iter_mut().zip(&want) {
+            let next = 0.5 * *a + 0.5 * w;
+            delta = delta.max((next - *a).abs());
+            *a = next;
+        }
+        if delta < 1e-9 {
+            break;
+        }
+    }
+    let fixed: Vec<f64> = act.iter().map(|&a| if a >= 0.5 { 1.0 } else { 0.0 }).collect();
+    let waits = oracle.waits_given(&services, &fixed);
+    if want_at(&waits) == fixed {
+        obs_metrics::counter_add("solver.fixed_point.converged", 1);
+        let active = fixed.iter().map(|&a| a >= 0.5).collect();
+        return Interference { waits, converged: true, active };
+    }
+    // no binary equilibrium: clean mean-field fallback
+    obs_metrics::counter_add("solver.fixed_point.fallback", 1);
+    let waits = (0..n).map(|i| oracle.queue_wait(i, mu[i])).collect();
+    Interference { waits, converged: false, active: vec![true; n] }
 }
 
 /// Result of [`FleetProblem::interference_waits`].
@@ -929,10 +989,24 @@ fn assemble(
 /// costs at those waits. Without a queue the waits are zero and this is
 /// the plain (P1)-per-agent scoring, bit for bit.
 pub fn evaluate(fp: &FleetProblem, mu: &[f64], alpha: &[f64]) -> FleetAllocation {
-    let interference = fp.interference_waits(mu, alpha);
+    evaluate_with(fp, &CostOracle::direct(fp), mu, alpha)
+}
+
+/// [`evaluate`] parameterized by the cost oracle. The per-agent design
+/// probe `agent_design_at_wait` depends only on the agent's *content*
+/// (spec, device, gain) and the probe arguments, never on its position
+/// in the fleet, so the classed oracle may answer it from the class
+/// representative; `design_cost` is still priced per member.
+fn evaluate_with(
+    fp: &FleetProblem,
+    oracle: &CostOracle<'_>,
+    mu: &[f64],
+    alpha: &[f64],
+) -> FleetAllocation {
+    let interference = interference_waits_with(fp, oracle, mu, alpha);
     let waits = interference.waits;
     let alloc =
-        assemble(fp, mu, alpha, &waits, |i| fp.agent_design_at_wait(i, mu[i], alpha[i], waits[i]));
+        assemble(fp, mu, alpha, &waits, |i| oracle.design_at_wait(i, mu[i], alpha[i], waits[i]));
     obs_metrics::counter_add("solver.admission.rejected", (fp.n() - alloc.admitted) as u64);
     alloc
 }
@@ -1008,6 +1082,62 @@ impl Default for ProposedOptions {
     }
 }
 
+/// Structured solve-time failure: malformed runtime inputs (placements,
+/// warm starts, reuse vectors) surface as errors through the
+/// [`FleetProblem::try_solve`] family instead of panicking mid-solve —
+/// the serving loops can refuse a bad request and keep serving. Spec
+/// malformation is still a construction-time panic
+/// ([`FleetProblem::from_spec`]): a validated spec never NaN-poisons an
+/// allocation later, but a *placement* arrives per solve call and may
+/// come from a remote controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetError {
+    /// `placement.assignment.len()` != fleet size
+    PlacementLength { expected: usize, got: usize },
+    /// `assignment[agent]` names a server outside the spec's list
+    UnknownServer { agent: usize, server: usize, servers: usize },
+    /// per-server stitching left agents without a slot (unreachable
+    /// through a validated placement; kept structured so callers see a
+    /// diagnosis, never a mid-solve panic)
+    UncoveredAgents { missing: usize },
+    /// `warm_start.len()` != fleet size
+    WarmStartLength { expected: usize, got: usize },
+    /// `dirty.len()` != server count
+    DirtyLength { expected: usize, got: usize },
+    /// `reuse.len()` != fleet size
+    ReuseLength { expected: usize, got: usize },
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            FleetError::PlacementLength { expected, got } => {
+                write!(f, "one server per agent: placement has {got} slots for {expected} agents")
+            }
+            FleetError::UnknownServer { agent, server, servers } => {
+                write!(
+                    f,
+                    "placement names an unknown server: agent {agent} on server {server} of {servers}"
+                )
+            }
+            FleetError::UncoveredAgents { missing } => {
+                write!(f, "placement covers every agent: {missing} agents left without a slot")
+            }
+            FleetError::WarmStartLength { expected, got } => {
+                write!(f, "one warm-start slot per agent: got {got}, fleet has {expected}")
+            }
+            FleetError::DirtyLength { expected, got } => {
+                write!(f, "one dirty flag per server: got {got}, spec has {expected}")
+            }
+            FleetError::ReuseLength { expected, got } => {
+                write!(f, "one reuse slot per agent: got {got}, fleet has {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
 /// Agent→server map for a multi-server fleet: `assignment[i]` is the
 /// index into [`FleetSpec::servers`] agent i's decoder stage runs on.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
@@ -1039,6 +1169,23 @@ impl Placement {
             .filter(|&(_, &k)| k == server)
             .map(|(i, _)| i)
             .collect()
+    }
+
+    /// Coverage validation against a fleet of `agents` agents on
+    /// `servers` servers: exactly one slot per agent, every named server
+    /// known. The [`FleetProblem::try_solve`] family runs this before
+    /// touching any solver state, so a partial or dangling placement is
+    /// a clean [`FleetError`], never a mid-solve panic.
+    pub fn validate(&self, agents: usize, servers: usize) -> Result<(), FleetError> {
+        if self.assignment.len() != agents {
+            return Err(FleetError::PlacementLength { expected: agents, got: self.assignment.len() });
+        }
+        for (agent, &server) in self.assignment.iter().enumerate() {
+            if server >= servers {
+                return Err(FleetError::UnknownServer { agent, server, servers });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1089,10 +1236,57 @@ impl PlacementStrategy {
     }
 }
 
+/// How the solver treats content-identical agents (the
+/// tier × QoS-class × gain equivalence structure of large fleets) — see
+/// the "Equivalence classes" section of the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Classing {
+    /// every agent is its own subproblem — the legacy path, bit for bit
+    #[default]
+    PerAgent,
+    /// collapse bit-identical agents into equivalence classes and
+    /// memoize one representative evaluation per (class, μ, α) point.
+    /// **Exact**: the algorithm and its float trajectory are unchanged —
+    /// identical values are computed once instead of N times — so the
+    /// allocation is bit-identical to [`Classing::PerAgent`]
+    /// (property-tested on duplicated and all-singleton fleets)
+    Exact,
+    /// like [`Classing::Exact`], but channel gains are rounded to
+    /// `gain_decimals` decimal digits when forming classes and every
+    /// member is priced at its class representative's gain.
+    /// **Approximate** — for fleets with continuous gain distributions
+    /// where exact classes would all be singletons; reported shares are
+    /// still per-agent and the share simplex is still respected
+    Bucketed {
+        /// decimal digits of channel gain kept when keying classes
+        gain_decimals: u32,
+    },
+}
+
+impl Classing {
+    pub fn name(self) -> &'static str {
+        match self {
+            Classing::PerAgent => "per-agent",
+            Classing::Exact => "exact",
+            Classing::Bucketed { .. } => "bucketed",
+        }
+    }
+
+    /// CLI-facing parser; `bucketed` keys gains at 3 decimal digits.
+    pub fn parse(s: &str) -> Result<Classing, ParseError> {
+        match s {
+            "per-agent" | "agent" => Ok(Classing::PerAgent),
+            "exact" | "classed" => Ok(Classing::Exact),
+            "bucketed" => Ok(Classing::Bucketed { gain_decimals: 3 }),
+            _ => Err(ParseError::new("classing mode", s, &["per-agent", "exact", "bucketed"])),
+        }
+    }
+}
+
 /// The unified solver request: everything [`FleetProblem::solve`] needs
 /// to produce a [`FleetAllocation`]. `Default` is the proposed algorithm
-/// with default options, local-search placement, no warm start, seed 0 —
-/// exactly the historical `solve_proposed`.
+/// with default options, local-search placement, no warm start, seed 0,
+/// per-agent classing — exactly the historical `solve_proposed`.
 #[derive(Debug, Clone, Default)]
 pub struct SolveRequest {
     pub algorithm: FleetAlgorithm,
@@ -1106,6 +1300,9 @@ pub struct SolveRequest {
     pub warm_start: Option<Vec<Option<(f64, f64)>>>,
     /// RNG seed (feasible-random baseline only)
     pub seed: u64,
+    /// equivalence-class collapsing for large structured fleets
+    /// ([`Classing::PerAgent`] = the legacy per-agent path, bit for bit)
+    pub classing: Classing,
 }
 
 impl FleetProblem {
@@ -1116,14 +1313,24 @@ impl FleetProblem {
     /// bit — the historical `solve_*` free functions are all thin
     /// wrappers over this method.
     pub fn solve(&self, req: &SolveRequest) -> FleetAllocation {
+        self.try_solve(req).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Self::solve`] with structured failure: malformed runtime inputs
+    /// (warm-start length, placement coverage) come back as
+    /// [`FleetError`]s instead of panics, so a serving loop can refuse a
+    /// bad request and keep its current allocation.
+    pub fn try_solve(&self, req: &SolveRequest) -> Result<FleetAllocation, FleetError> {
         if let Some(w) = &req.warm_start {
-            assert_eq!(w.len(), self.n(), "one warm-start slot per agent");
+            if w.len() != self.n() {
+                return Err(FleetError::WarmStartLength { expected: self.n(), got: w.len() });
+            }
         }
         if self.servers.len() == 1 && self.servers[0] == ServerSpec::default() {
-            return solve_single(self, req);
+            return Ok(solve_single(self, req));
         }
         let placement = self.place(req);
-        self.solve_with_placement(&placement, req)
+        self.try_solve_with_placement(&placement, req)
     }
 
     /// Pick an agent→server [`Placement`] per `req.placement` (the outer
@@ -1147,11 +1354,18 @@ impl FleetProblem {
         placement: &Placement,
         req: &SolveRequest,
     ) -> FleetAllocation {
-        assert_eq!(placement.assignment.len(), self.n(), "one server per agent");
-        assert!(
-            placement.assignment.iter().all(|&k| k < self.servers.len()),
-            "placement names an unknown server"
-        );
+        self.try_solve_with_placement(placement, req).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Self::solve_with_placement`] with structured failure: a partial
+    /// placement or one naming an unknown server is a [`FleetError`],
+    /// never a mid-solve panic.
+    pub fn try_solve_with_placement(
+        &self,
+        placement: &Placement,
+        req: &SolveRequest,
+    ) -> Result<FleetAllocation, FleetError> {
+        placement.validate(self.n(), self.servers.len())?;
         let mut cache = SubCache::new();
         placed_allocation(self, placement, req, &mut cache)
     }
@@ -1188,9 +1402,27 @@ impl FleetProblem {
         dirty: &[bool],
         reuse: &[Option<AgentAllocation>],
     ) -> FleetAllocation {
-        assert_eq!(placement.assignment.len(), self.n(), "one server per agent");
-        assert_eq!(dirty.len(), self.servers.len(), "one dirty flag per server");
-        assert_eq!(reuse.len(), self.n(), "one reuse slot per agent");
+        self.try_solve_with_placement_reusing(placement, req, dirty, reuse)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Self::solve_with_placement_reusing`] with structured failure —
+    /// every runtime-input malformation (placement coverage, dirty/reuse
+    /// lengths) is a [`FleetError`] instead of a panic.
+    pub fn try_solve_with_placement_reusing(
+        &self,
+        placement: &Placement,
+        req: &SolveRequest,
+        dirty: &[bool],
+        reuse: &[Option<AgentAllocation>],
+    ) -> Result<FleetAllocation, FleetError> {
+        placement.validate(self.n(), self.servers.len())?;
+        if dirty.len() != self.servers.len() {
+            return Err(FleetError::DirtyLength { expected: self.servers.len(), got: dirty.len() });
+        }
+        if reuse.len() != self.n() {
+            return Err(FleetError::ReuseLength { expected: self.n(), got: reuse.len() });
+        }
         let phi = airtime_fractions(self, placement);
         let mut cache = SubCache::new();
         let mut slots: Vec<Option<AgentAllocation>> = vec![None; self.n()];
@@ -1212,15 +1444,34 @@ impl FleetProblem {
                 }
             }
         }
-        let agents: Vec<AgentAllocation> =
-            slots.into_iter().map(|s| s.expect("placement covers every agent")).collect();
-        FleetAllocation {
-            objective: agents.iter().map(|a| a.cost).sum(),
-            admitted: agents.iter().filter(|a| a.design.is_some()).count(),
-            agents,
-            placement: placement.clone(),
+        stitch(slots, placement)
+    }
+}
+
+/// Collect per-agent slots into one fleet allocation; any uncovered slot
+/// is the structured [`FleetError::UncoveredAgents`] (unreachable through
+/// a validated placement, but never a panic).
+fn stitch(
+    slots: Vec<Option<AgentAllocation>>,
+    placement: &Placement,
+) -> Result<FleetAllocation, FleetError> {
+    let mut agents = Vec::with_capacity(slots.len());
+    let mut missing = 0usize;
+    for slot in slots {
+        match slot {
+            Some(a) => agents.push(a),
+            None => missing += 1,
         }
     }
+    if missing > 0 {
+        return Err(FleetError::UncoveredAgents { missing });
+    }
+    Ok(FleetAllocation {
+        objective: agents.iter().map(|a| a.cost).sum(),
+        admitted: agents.iter().filter(|a| a.design.is_some()).count(),
+        agents,
+        placement: placement.clone(),
+    })
 }
 
 /// Dispatch on algorithm (legacy free function). `seed` only matters for
@@ -1291,27 +1542,34 @@ pub fn feasible_random_mean(fp: &FleetProblem, trials: usize, seed: u64) -> f64 
 /// for default-single-server fleets and per sub-fleet by the placement
 /// layer.
 fn solve_single(fp: &FleetProblem, req: &SolveRequest) -> FleetAllocation {
+    let oracle = CostOracle::new(fp, req.classing);
     match req.algorithm {
         FleetAlgorithm::Proposed => match &req.warm_start {
-            Some(prev) => proposed_warm_single(fp, prev, req.options),
-            None => proposed_single(fp, req.options),
+            Some(prev) => proposed_warm_single(fp, &oracle, prev, req.options),
+            None => proposed_single(fp, &oracle, req.options),
         },
-        FleetAlgorithm::EqualShare => equal_share_single(fp),
+        FleetAlgorithm::EqualShare => equal_share_single(fp, &oracle),
+        // the random baseline draws per-agent shares anyway; classing
+        // would buy nothing, so it always runs the direct path
         FleetAlgorithm::FeasibleRandom => feasible_random_single(fp, req.seed),
     }
 }
 
-fn equal_share_single(fp: &FleetProblem) -> FleetAllocation {
+fn equal_share_single(fp: &FleetProblem, oracle: &CostOracle<'_>) -> FleetAllocation {
     let shares = MultiAccessChannel::equal_shares(fp.n());
-    evaluate(fp, &shares, &shares)
+    evaluate_with(fp, oracle, &shares, &shares)
 }
 
-fn proposed_single(fp: &FleetProblem, opts: ProposedOptions) -> FleetAllocation {
+fn proposed_single(
+    fp: &FleetProblem,
+    oracle: &CostOracle<'_>,
+    opts: ProposedOptions,
+) -> FleetAllocation {
     let _span = obs_metrics::span("solver.proposed");
     let equal = MultiAccessChannel::equal_shares(fp.n());
     let mut inits = vec![(equal.clone(), equal)];
     if fp.n() > 1 {
-        if let Some((mu0, alpha0)) = admission_init(fp) {
+        if let Some((mu0, alpha0)) = admission_init(fp, oracle) {
             inits.push((mu0, alpha0));
         }
     }
@@ -1319,10 +1577,10 @@ fn proposed_single(fp: &FleetProblem, opts: ProposedOptions) -> FleetAllocation 
     // "never worse than equal-share" guarantee must survive the final
     // fixed-point scoring even when the exchange (which probes the
     // separable mean-field costs) wanders off under queue feedback
-    let mut best = equal_share_single(fp);
+    let mut best = equal_share_single(fp, oracle);
     for (mut mu, mut alpha) in inits {
-        improve(fp, &mut mu, &mut alpha, opts);
-        let alloc = evaluate(fp, &mu, &alpha);
+        improve(fp, oracle, &mut mu, &mut alpha, opts);
+        let alloc = evaluate_with(fp, oracle, &mu, &alpha);
         if alloc.objective < best.objective {
             best = alloc;
         }
@@ -1340,6 +1598,7 @@ fn proposed_single(fp: &FleetProblem, opts: ProposedOptions) -> FleetAllocation 
 /// the result can only match or improve it.
 fn proposed_warm_single(
     fp: &FleetProblem,
+    oracle: &CostOracle<'_>,
     prev: &[Option<(f64, f64)>],
     opts: ProposedOptions,
 ) -> FleetAllocation {
@@ -1363,7 +1622,7 @@ fn proposed_warm_single(
     // it under the final fixed-point scoring, even though reseating
     // treats zero-share survivors like newcomers and the exchange probes
     // the mean-field surrogate
-    let raw = evaluate(fp, &mu, &alpha);
+    let raw = evaluate_with(fp, oracle, &mu, &alpha);
     for shares in [&mut mu, &mut alpha] {
         let used: f64 = shares.iter().sum::<f64>().min(1.0);
         let newcomers: Vec<usize> = (0..n).filter(|&i| shares[i] <= 0.0).collect();
@@ -1390,13 +1649,13 @@ fn proposed_warm_single(
             shares[i] = free * fp.agents[i].weight / weight_new;
         }
     }
-    let seeded = evaluate(fp, &mu, &alpha);
-    improve(fp, &mut mu, &mut alpha, opts);
-    let mut best = evaluate(fp, &mu, &alpha);
+    let seeded = evaluate_with(fp, oracle, &mu, &alpha);
+    improve(fp, oracle, &mut mu, &mut alpha, opts);
+    let mut best = evaluate_with(fp, oracle, &mu, &alpha);
     // the current population's equal split rides along too, so the
     // online path keeps the same structural never-worse-than-equal
     // guarantee as the cold solve
-    for cand in [seeded, raw, equal_share_single(fp)] {
+    for cand in [seeded, raw, equal_share_single(fp, oracle)] {
         if cand.objective < best.objective {
             best = cand;
         }
@@ -1421,6 +1680,346 @@ fn feasible_random_single(fp: &FleetProblem, seed: u64) -> FleetAllocation {
         fp.agent_problem_at_wait(i, mu[i], alpha[i], waits[i])
             .and_then(|p| feasible_random::solve(&p, rng.next_u64()))
     })
+}
+
+// ---------------------------------------------------------------------------
+// equivalence-class internals (the classed fast path)
+// ---------------------------------------------------------------------------
+
+/// Content-keyed partition of the fleet: agents whose subproblems are
+/// float-for-float identical (same QoS contract, silicon tier, channel
+/// gain bits, arrival rate and pressure) share a class. Classes are
+/// numbered in first-appearance order, so the partition itself is
+/// deterministic across runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClassIndex {
+    /// class id per agent
+    pub class_of: Vec<usize>,
+    /// the representative (first member) of each class
+    pub rep: Vec<usize>,
+    /// multiplicity of each class
+    pub count: Vec<usize>,
+}
+
+impl ClassIndex {
+    pub fn classes(&self) -> usize {
+        self.rep.len()
+    }
+
+    /// True when classing cannot help: every agent is alone in its class.
+    pub fn all_singletons(&self) -> bool {
+        self.count.iter().all(|&c| c == 1)
+    }
+}
+
+impl FleetProblem {
+    /// Everything a per-agent subproblem reads about agent `i`, as exact
+    /// bit patterns (gains optionally rounded to `gain_decimals` digits
+    /// for [`Classing::Bucketed`]). Two agents with equal keys produce
+    /// identical floats from every probe the solver makes about them.
+    fn class_key(&self, i: usize, gain_decimals: Option<u32>) -> (&'static str, &'static str, Vec<u64>) {
+        let a = &self.agents[i];
+        let gain = match gain_decimals {
+            None => a.channel_gain.to_bits(),
+            Some(d) => {
+                let scale = 10f64.powi(d.min(12) as i32);
+                (a.channel_gain * scale).round().to_bits()
+            }
+        };
+        let mut bits = vec![
+            a.lambda.to_bits(),
+            a.t0.to_bits(),
+            a.e0.to_bits(),
+            a.weight.to_bits(),
+            a.payload_bytes as u64,
+            a.device.spec.f_max.to_bits(),
+            a.device.spec.flops_per_cycle.to_bits(),
+            a.device.spec.pue.to_bits(),
+            a.device.spec.psi.to_bits(),
+            a.device.link_gain.to_bits(),
+            gain,
+        ];
+        if let Some(q) = &self.queue {
+            bits.push(1);
+            bits.push(q.arrival_rps[i].to_bits());
+        }
+        if !self.pressure.is_empty() {
+            bits.push(2);
+            bits.push(self.pressure[i].to_bits());
+        }
+        (a.class, a.device.tier, bits)
+    }
+
+    /// Partition the fleet under a classing mode.
+    /// [`Classing::PerAgent`] yields all singletons.
+    pub fn class_index(&self, classing: Classing) -> ClassIndex {
+        let n = self.n();
+        match classing {
+            Classing::PerAgent => ClassIndex {
+                class_of: (0..n).collect(),
+                rep: (0..n).collect(),
+                count: vec![1; n],
+            },
+            Classing::Exact | Classing::Bucketed { .. } => {
+                let decimals = match classing {
+                    Classing::Bucketed { gain_decimals } => Some(gain_decimals),
+                    _ => None,
+                };
+                let mut ids: HashMap<(&'static str, &'static str, Vec<u64>), usize> =
+                    HashMap::new();
+                let mut class_of = Vec::with_capacity(n);
+                let mut rep = Vec::new();
+                let mut count = Vec::new();
+                for i in 0..n {
+                    let key = self.class_key(i, decimals);
+                    let next = rep.len();
+                    let c = *ids.entry(key).or_insert(next);
+                    if c == next {
+                        rep.push(i);
+                        count.push(1);
+                    } else {
+                        count[c] += 1;
+                    }
+                    class_of.push(c);
+                }
+                ClassIndex { class_of, rep, count }
+            }
+        }
+    }
+
+    /// One stable content hash per agent over its exact class key — the
+    /// class-level fingerprint the churn/daemon layer diffs to decide
+    /// which classes a population event actually touched.
+    pub fn agent_class_hashes(&self) -> Vec<u64> {
+        (0..self.n())
+            .map(|i| {
+                let mut h = DefaultHasher::new();
+                self.class_key(i, None).hash(&mut h);
+                h.finish()
+            })
+            .collect()
+    }
+}
+
+/// Memoized per-class evaluation state for [`CostOracle::Classed`].
+///
+/// `collapse_mean` governs the *mean-field* probes (`agent_cost`,
+/// `queue_wait` and the admission floors): they collapse to one memo
+/// slot per class only when the probe's float path is
+/// observer-position-independent — i.e. no queue attached (waits are
+/// zero) or [`Classing::Bucketed`] (documented approximate). With a
+/// queue, [`QueueModel::expected_wait_s`] accumulates the observer's
+/// own term *in place*, so two members of one class can round
+/// differently; those probes then memoize per agent (still saving
+/// repeat probes at the same share point). The wait-*explicit* probes
+/// (`design_at_wait`, `servable_at_wait`) and the fixed-point rows
+/// (`waits_given`) are position-independent and always collapse.
+struct ClassedOracle<'a> {
+    fp: &'a FleetProblem,
+    idx: ClassIndex,
+    collapse_mean: bool,
+    cost: RefCell<HashMap<(usize, u64, u64), f64>>,
+    design_at: RefCell<HashMap<(usize, u64, u64, u64), Option<Design>>>,
+    servable_at: RefCell<HashMap<(usize, u64, u64, u64), bool>>,
+    wait_mean: RefCell<HashMap<(usize, u64), f64>>,
+}
+
+impl ClassedOracle<'_> {
+    /// (memo slot, evaluation index) for a mean-field probe about `i`.
+    fn mean_slot(&self, i: usize) -> (usize, usize) {
+        if self.collapse_mean {
+            let c = self.idx.class_of[i];
+            (c, self.idx.rep[c])
+        } else {
+            (i, i)
+        }
+    }
+}
+
+/// How the solver bodies ask per-agent questions: `Direct` delegates
+/// straight to [`FleetProblem`] (the legacy path, zero overhead),
+/// `Classed` memoizes per equivalence class. Every memoized value is
+/// the very float the direct path would have computed for some fleet
+/// member, which is what makes [`Classing::Exact`] bit-identical.
+enum CostOracle<'a> {
+    Direct(&'a FleetProblem),
+    Classed(Box<ClassedOracle<'a>>),
+}
+
+impl<'a> CostOracle<'a> {
+    fn direct(fp: &'a FleetProblem) -> CostOracle<'a> {
+        CostOracle::Direct(fp)
+    }
+
+    fn new(fp: &'a FleetProblem, classing: Classing) -> CostOracle<'a> {
+        match classing {
+            Classing::PerAgent => CostOracle::Direct(fp),
+            _ => {
+                let idx = fp.class_index(classing);
+                obs_metrics::counter_add("solver.classed.solves", 1);
+                obs_metrics::counter_add("solver.classed.classes", idx.classes() as u64);
+                let collapse_mean =
+                    fp.queue.is_none() || matches!(classing, Classing::Bucketed { .. });
+                CostOracle::Classed(Box::new(ClassedOracle {
+                    fp,
+                    idx,
+                    collapse_mean,
+                    cost: RefCell::new(HashMap::new()),
+                    design_at: RefCell::new(HashMap::new()),
+                    servable_at: RefCell::new(HashMap::new()),
+                    wait_mean: RefCell::new(HashMap::new()),
+                }))
+            }
+        }
+    }
+
+    /// Mean-field cost of agent `i` at shares (μ, α) — the exchange
+    /// loop's probe.
+    fn agent_cost(&self, i: usize, mu: f64, alpha: f64) -> f64 {
+        match self {
+            CostOracle::Direct(fp) => fp.agent_cost(i, mu, alpha),
+            CostOracle::Classed(cx) => {
+                let (slot, at) = cx.mean_slot(i);
+                let key = (slot, mu.to_bits(), alpha.to_bits());
+                if let Some(&v) = cx.cost.borrow().get(&key) {
+                    return v;
+                }
+                let v = cx.fp.agent_cost(at, mu, alpha);
+                cx.cost.borrow_mut().insert(key, v);
+                v
+            }
+        }
+    }
+
+    /// Exact per-agent design at an explicit wait — position-independent,
+    /// so always answered from the class representative.
+    fn design_at_wait(&self, i: usize, mu: f64, alpha: f64, wait: f64) -> Option<Design> {
+        match self {
+            CostOracle::Direct(fp) => fp.agent_design_at_wait(i, mu, alpha, wait),
+            CostOracle::Classed(cx) => {
+                let c = cx.idx.class_of[i];
+                let key = (c, mu.to_bits(), alpha.to_bits(), wait.to_bits());
+                if let Some(v) = cx.design_at.borrow().get(&key) {
+                    return *v;
+                }
+                let v = cx.fp.agent_design_at_wait(cx.idx.rep[c], mu, alpha, wait);
+                cx.design_at.borrow_mut().insert(key, v);
+                v
+            }
+        }
+    }
+
+    /// Feasibility at an explicit wait — the fixed-point pass's probe.
+    fn servable_at_wait(&self, i: usize, mu: f64, alpha: f64, wait: f64) -> bool {
+        match self {
+            CostOracle::Direct(fp) => fp.servable_at_wait(i, mu, alpha, wait),
+            CostOracle::Classed(cx) => {
+                let c = cx.idx.class_of[i];
+                let key = (c, mu.to_bits(), alpha.to_bits(), wait.to_bits());
+                if let Some(&v) = cx.servable_at.borrow().get(&key) {
+                    return v;
+                }
+                let v = cx.fp.servable_at_wait(cx.idx.rep[c], mu, alpha, wait);
+                cx.servable_at.borrow_mut().insert(key, v);
+                v
+            }
+        }
+    }
+
+    /// Mean-field queue wait (the fallback scoring path).
+    fn queue_wait(&self, i: usize, mu: f64) -> f64 {
+        match self {
+            CostOracle::Direct(fp) => fp.queue_wait(i, mu),
+            CostOracle::Classed(cx) => {
+                let (slot, at) = cx.mean_slot(i);
+                let key = (slot, mu.to_bits());
+                if let Some(&v) = cx.wait_mean.borrow().get(&key) {
+                    return v;
+                }
+                let v = cx.fp.queue_wait(at, mu);
+                cx.wait_mean.borrow_mut().insert(key, v);
+                v
+            }
+        }
+    }
+
+    /// One fixed-point iteration's wait vector. Row `i` of
+    /// [`QueueModel::waits_given`] depends on the observer only through
+    /// its priority weight (class-keyed) and its own-service finiteness
+    /// guard (checked per agent below), so the classed path computes one
+    /// row per class and broadcasts it — exact even when members hold
+    /// different shares mid-exchange.
+    fn waits_given(&self, services: &[f64], activity: &[f64]) -> Vec<f64> {
+        match self {
+            CostOracle::Direct(fp) => fp.queue_waits_given(services, activity),
+            CostOracle::Classed(cx) => {
+                let Some(q) = &cx.fp.queue else {
+                    return vec![0.0; cx.fp.n()];
+                };
+                let weight_of = |j: usize| cx.fp.agents[j].weight;
+                let mut per_class: Vec<Option<f64>> = vec![None; cx.idx.classes()];
+                (0..cx.fp.n())
+                    .map(|i| {
+                        let s_i = services[i];
+                        if !(s_i.is_finite() && s_i >= 0.0) {
+                            return f64::INFINITY;
+                        }
+                        let c = cx.idx.class_of[i];
+                        if let Some(w) = per_class[c] {
+                            return w;
+                        }
+                        let w = q.wait_given_one(i, services, activity, weight_of);
+                        per_class[c] = Some(w);
+                        w
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// The admission loop's two bisected floors (min server share, min
+    /// airtime) per agent, in index order. The direct path runs them
+    /// inline; the classed path bisects one probe per class (or per
+    /// agent when the mean-field probe cannot collapse — still memoized
+    /// work worth parallelizing) across
+    /// [`crate::util::pool::ThreadPool::map`] workers and broadcasts.
+    fn admission_floors(&self) -> Vec<(Option<f64>, Option<f64>)> {
+        match self {
+            CostOracle::Direct(fp) => (0..fp.n())
+                .map(|i| {
+                    let servable = |m: f64, a: f64| {
+                        fp.agent_problem(i, m, a).is_some_and(|p| p.plan_frequencies(1.0).is_some())
+                    };
+                    (min_share(|m| servable(m, 1.0)), min_share(|a| servable(1.0, a)))
+                })
+                .collect(),
+            CostOracle::Classed(cx) => {
+                let probes: Vec<usize> = if cx.collapse_mean {
+                    cx.idx.rep.clone()
+                } else {
+                    (0..cx.fp.n()).collect()
+                };
+                let shared = Arc::new(cx.fp.clone());
+                let workers = pool::default_parallelism().min(probes.len()).max(1);
+                let floors = ThreadPool::new(workers).map(probes, move |i| {
+                    let servable = |m: f64, a: f64| {
+                        shared
+                            .agent_problem(i, m, a)
+                            .is_some_and(|p| p.plan_frequencies(1.0).is_some())
+                    };
+                    (min_share(|m| servable(m, 1.0)), min_share(|a| servable(1.0, a)))
+                });
+                // worker threads drop their thread-local metrics; account
+                // for the bisections on the solver thread instead
+                obs_metrics::counter_add("solver.class.bisections", 2 * floors.len() as u64);
+                if cx.collapse_mean {
+                    cx.idx.class_of.iter().map(|&c| floors[c]).collect()
+                } else {
+                    floors
+                }
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1452,28 +2051,26 @@ fn min_share(feasible: impl Fn(f64) -> bool) -> Option<f64> {
 /// probed with the full server — each resource's true floor), then hand
 /// the leftovers out weight-proportionally. Returns `None` when nobody
 /// can be seated (the equal init is then the only candidate).
-fn admission_init(fp: &FleetProblem) -> Option<(Vec<f64>, Vec<f64>)> {
+///
+/// The two bisected floors per agent come from
+/// [`CostOracle::admission_floors`] — index order, independent of the
+/// seating order, so the sorted loop below consumes the exact values the
+/// historical in-loop bisections produced. The weight sort uses
+/// `total_cmp`: agent weights are validated finite, and unlike the old
+/// `partial_cmp(..).unwrap_or(Equal)` it cannot silently mis-order if a
+/// NaN ever slipped past validation (mirrors the `EdgeQueue::push`
+/// NaN-priority fix).
+fn admission_init(fp: &FleetProblem, oracle: &CostOracle<'_>) -> Option<(Vec<f64>, Vec<f64>)> {
     let n = fp.n();
-    let servable = |i: usize, mu: f64, alpha: f64| -> bool {
-        fp.agent_problem(i, mu, alpha)
-            .is_some_and(|p| p.plan_frequencies(1.0).is_some())
-    };
+    let floors = oracle.admission_floors();
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| {
-        fp.agents[b]
-            .weight
-            .partial_cmp(&fp.agents[a].weight)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| fp.agents[b].weight.total_cmp(&fp.agents[a].weight).then(a.cmp(&b)));
     let mut mu = vec![0.0; n];
     let mut alpha = vec![0.0; n];
     let (mut mu_used, mut alpha_used) = (0.0f64, 0.0f64);
     let mut admitted: Vec<usize> = Vec::new();
     for i in order {
-        let need_mu = min_share(|m| servable(i, m, 1.0));
-        let need_alpha = min_share(|a| servable(i, 1.0, a));
-        if let (Some(m), Some(a)) = (need_mu, need_alpha) {
+        if let (Some(m), Some(a)) = floors[i] {
             if mu_used + m <= 1.0 && alpha_used + a <= 1.0 {
                 mu[i] = m;
                 alpha[i] = a;
@@ -1498,7 +2095,13 @@ fn admission_init(fp: &FleetProblem) -> Option<(Vec<f64>, Vec<f64>)> {
 /// Alternating water-filling: improve the server-share vector at fixed
 /// airtime, then the airtime vector at fixed server shares, until a full
 /// round yields nothing.
-fn improve(fp: &FleetProblem, mu: &mut [f64], alpha: &mut [f64], opts: ProposedOptions) {
+fn improve(
+    fp: &FleetProblem,
+    oracle: &CostOracle<'_>,
+    mu: &mut [f64],
+    alpha: &mut [f64],
+    opts: ProposedOptions,
+) {
     let n = fp.n();
     if n < 2 {
         return;
@@ -1509,8 +2112,8 @@ fn improve(fp: &FleetProblem, mu: &mut [f64], alpha: &mut [f64], opts: ProposedO
         let mut gained = 0.0;
         for divisor in opts.step_divisors {
             let step = 1.0 / (divisor * n as f64);
-            gained += exchange(mu, step, max_moves, |i, s| fp.agent_cost(i, s, alpha[i]));
-            gained += exchange(alpha, step, max_moves, |i, s| fp.agent_cost(i, mu[i], s));
+            gained += exchange(mu, step, max_moves, |i, s| oracle.agent_cost(i, s, alpha[i]));
+            gained += exchange(alpha, step, max_moves, |i, s| oracle.agent_cost(i, mu[i], s));
         }
         if gained <= 1e-15 {
             break;
@@ -1549,23 +2152,7 @@ fn exchange(
     let mut total_gain = 0.0;
     let mut moves = 0u64;
     for _ in 0..max_moves {
-        let mut best: Option<(usize, usize, f64)> = None;
-        for d in 0..n {
-            let loss = cached[d].1;
-            if !loss.is_finite() {
-                continue;
-            }
-            for r in 0..n {
-                if r == d {
-                    continue;
-                }
-                let net = cached[r].2 - loss;
-                if net > best.map_or(1e-15, |(_, _, b)| b) {
-                    best = Some((d, r, net));
-                }
-            }
-        }
-        let Some((d, r, net)) = best else { break };
+        let Some((d, r, net)) = select_move(&cached) else { break };
         shares[d] = (shares[d] - step).max(0.0);
         shares[r] += step;
         cached[d] = triple(d, shares[d]);
@@ -1577,6 +2164,104 @@ fn exchange(
         obs_metrics::counter_add("solver.exchange.moves", moves);
     }
     total_gain
+}
+
+/// Pick the donor/receiver pair of the next exchange move in O(n),
+/// bit-identical to the historical O(n²) scan (kept as
+/// [`select_move_reference`] and property-tested against this).
+///
+/// Why the shortcut is exact: for a fixed donor `d`, IEEE subtraction is
+/// monotone in its first operand, so the row maximum of
+/// `fl(gain[r] - loss[d])` over `r ≠ d` is attained at the largest
+/// eligible gain — the global top gain, or the runner-up when `d` itself
+/// uniquely holds the top. The historical scan kept the *first* strict
+/// improvement row-major, i.e. the first donor row attaining the global
+/// maximum net and, within it, the first receiver attaining that row's
+/// maximum — which is exactly what the strict `>` donor loop and the
+/// first-match receiver scan below reproduce.
+fn select_move(cached: &[(f64, f64, f64)]) -> Option<(usize, usize, f64)> {
+    let n = cached.len();
+    // pass 0: top gain (value, first holder, multiplicity) + runner-up
+    let mut g1 = f64::NEG_INFINITY;
+    let mut r1 = 0usize;
+    let mut cnt1 = 0usize;
+    let mut g2 = f64::NEG_INFINITY;
+    let mut has2 = false;
+    for (i, c) in cached.iter().enumerate() {
+        let g = c.2;
+        if g.is_nan() {
+            continue; // NaN nets never beat the threshold in the old scan
+        }
+        if cnt1 == 0 || g > g1 {
+            if cnt1 > 0 {
+                g2 = g1;
+                has2 = true;
+            }
+            g1 = g;
+            r1 = i;
+            cnt1 = 1;
+        } else {
+            if g == g1 {
+                cnt1 += 1;
+            }
+            if !has2 || g > g2 {
+                g2 = g;
+                has2 = true;
+            }
+        }
+    }
+    if cnt1 == 0 {
+        return None;
+    }
+    // pass 1: best donor under the strict-improvement threshold
+    let mut best: Option<(usize, f64)> = None;
+    for (d, c) in cached.iter().enumerate() {
+        let loss = c.1;
+        if !loss.is_finite() {
+            continue;
+        }
+        let top = if d == r1 && cnt1 == 1 {
+            if !has2 {
+                continue; // no receiver other than the donor itself
+            }
+            g2
+        } else {
+            g1
+        };
+        let net = top - loss;
+        if net > best.map_or(1e-15, |(_, b)| b) {
+            best = Some((d, net));
+        }
+    }
+    let (d, net) = best?;
+    // pass 2: first receiver attaining the winning row's maximum net
+    let loss = cached[d].1;
+    let r = (0..n).find(|&r| r != d && cached[r].2 - loss == net)?;
+    Some((d, r, net))
+}
+
+/// The historical O(n²) row-major selection scan, kept verbatim as the
+/// property-test reference for [`select_move`].
+#[cfg(test)]
+fn select_move_reference(cached: &[(f64, f64, f64)]) -> Option<(usize, usize, f64)> {
+    let n = cached.len();
+    let mut best: Option<(usize, usize, f64)> = None;
+    for d in 0..n {
+        let loss = cached[d].1;
+        if !loss.is_finite() {
+            continue;
+        }
+        for r in 0..n {
+            if r == d {
+                continue;
+            }
+            let net = cached[r].2 - loss;
+            if net > best.map_or(1e-15, |(_, _, b)| b) {
+                best = Some((d, r, net));
+            }
+        }
+    }
+    best
 }
 
 // ---------------------------------------------------------------------------
@@ -1710,6 +2395,7 @@ fn sub_allocation(
                 .collect()
         }),
         seed: req.seed.wrapping_add(k as u64),
+        classing: req.classing,
     };
     let alloc = solve_single(&sub_fp, &sub_req);
     let globalized: Vec<AgentAllocation> = alloc
@@ -1734,7 +2420,7 @@ fn placed_allocation(
     placement: &Placement,
     req: &SolveRequest,
     cache: &mut SubCache,
-) -> FleetAllocation {
+) -> Result<FleetAllocation, FleetError> {
     let phi = airtime_fractions(fp, placement);
     let mut slots: Vec<Option<AgentAllocation>> = vec![None; fp.n()];
     for k in 0..fp.servers.len() {
@@ -1747,14 +2433,20 @@ fn placed_allocation(
             slots[i] = Some(*a);
         }
     }
-    let agents: Vec<AgentAllocation> =
-        slots.into_iter().map(|s| s.expect("placement covers every agent")).collect();
-    FleetAllocation {
-        objective: agents.iter().map(|a| a.cost).sum(),
-        admitted: agents.iter().filter(|a| a.design.is_some()).count(),
-        agents,
-        placement: placement.clone(),
-    }
+    stitch(slots, placement)
+}
+
+/// A candidate placement's objective for the local search: an
+/// unstitchable candidate scores +inf (never chosen) instead of aborting
+/// the search — the search only constructs complete placements, so this
+/// is purely defensive.
+fn placed_objective(
+    fp: &FleetProblem,
+    placement: &Placement,
+    req: &SolveRequest,
+    cache: &mut SubCache,
+) -> f64 {
+    placed_allocation(fp, placement, req, cache).map_or(f64::INFINITY, |a| a.objective)
 }
 
 /// Local-search placement: start from the better of equal-spread and
@@ -1767,9 +2459,9 @@ fn local_search_placement(fp: &FleetProblem, req: &SolveRequest) -> Placement {
     let (n, s) = (fp.n(), fp.servers.len());
     let mut cache = SubCache::new();
     let mut best = Placement::equal_spread(n, s);
-    let mut best_obj = placed_allocation(fp, &best, req, &mut cache).objective;
+    let mut best_obj = placed_objective(fp, &best, req, &mut cache);
     let concentrated = Placement::all_on(n, strongest_server(fp));
-    let conc_obj = placed_allocation(fp, &concentrated, req, &mut cache).objective;
+    let conc_obj = placed_objective(fp, &concentrated, req, &mut cache);
     if conc_obj < best_obj {
         best = concentrated;
         best_obj = conc_obj;
@@ -1784,7 +2476,7 @@ fn local_search_placement(fp: &FleetProblem, req: &SolveRequest) -> Placement {
                 }
                 let mut p = best.clone();
                 p.assignment[i] = t;
-                let obj = placed_allocation(fp, &p, req, &mut cache).objective;
+                let obj = placed_objective(fp, &p, req, &mut cache);
                 if obj < cand.as_ref().map_or(best_obj - 1e-15, |(_, b)| *b) {
                     cand = Some((p, obj));
                 }
@@ -2702,4 +3394,333 @@ mod tests {
         }));
         assert!(empty.is_err(), "empty server list must be rejected");
     }
+    // -- PR 9: structured errors, total-order admission, classed solver --
+
+    #[test]
+    fn malformed_placements_are_structured_errors_not_panics() {
+        // regression: a partial placement used to reach the "placement
+        // covers every agent" expect deep in per-server stitching and
+        // take the serving loop down; now every runtime-input
+        // malformation surfaces as a FleetError before any solving
+        let fp = fleet(4).with_servers(ServerSpec::identical(2));
+        let req = SolveRequest::default();
+        let short = Placement { assignment: vec![0, 1] };
+        assert_eq!(
+            fp.try_solve_with_placement(&short, &req).unwrap_err(),
+            FleetError::PlacementLength { expected: 4, got: 2 }
+        );
+        let rogue = Placement { assignment: vec![0, 1, 0, 5] };
+        assert_eq!(
+            fp.try_solve_with_placement(&rogue, &req).unwrap_err(),
+            FleetError::UnknownServer { agent: 3, server: 5, servers: 2 }
+        );
+        let good = Placement::equal_spread(4, 2);
+        assert_eq!(
+            fp.try_solve_with_placement_reusing(&good, &req, &[true], &vec![None; 4])
+                .unwrap_err(),
+            FleetError::DirtyLength { expected: 2, got: 1 }
+        );
+        assert_eq!(
+            fp.try_solve_with_placement_reusing(&good, &req, &[true, true], &[]).unwrap_err(),
+            FleetError::ReuseLength { expected: 4, got: 0 }
+        );
+        let msg = FleetError::PlacementLength { expected: 4, got: 2 }.to_string();
+        assert!(msg.contains('4') && msg.contains('2'), "{msg}");
+        // a warm start of the wrong length is an error through try_solve
+        let warm = SolveRequest { warm_start: Some(vec![None; 3]), ..SolveRequest::default() };
+        assert_eq!(
+            fp.try_solve(&warm).unwrap_err(),
+            FleetError::WarmStartLength { expected: 4, got: 3 }
+        );
+        // and a valid placement still solves
+        assert!(fp.try_solve_with_placement(&good, &req).is_ok());
+    }
+
+    #[test]
+    fn non_finite_agent_weights_rejected_at_validation() {
+        // regression: a NaN weight used to sail through validation and
+        // silently scramble admission's partial_cmp sort (NaN compares
+        // Equal under unwrap_or, so ordering depended on input order);
+        // the sort is now a total order and non-finite weights fail
+        // fast at construction
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut specs = AgentSpec::mixed_fleet(3);
+            specs[1].weight = bad;
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                FleetProblem::new(Platform::fleet_edge(), specs.clone());
+            }));
+            assert!(res.is_err(), "weight {bad} must be rejected");
+        }
+    }
+
+    /// Tie-heavy triple entry for the selection property: infinities,
+    /// NaNs, exact zeros, repeats of earlier draws, and magnitudes down
+    /// to the 1e-15 improvement threshold.
+    fn tie_heavy(r: &mut crate::util::rng::Rng, pool: &mut Vec<f64>) -> f64 {
+        let k = r.f64();
+        if k < 0.25 && !pool.is_empty() {
+            pool[r.below(pool.len())]
+        } else if k < 0.30 {
+            f64::INFINITY
+        } else if k < 0.35 {
+            f64::NEG_INFINITY
+        } else if k < 0.40 {
+            f64::NAN
+        } else if k < 0.45 {
+            0.0
+        } else {
+            let v = r.range(-2.0, 2.0) * 10f64.powi(r.below(19) as i32 - 16);
+            pool.push(v);
+            v
+        }
+    }
+
+    #[test]
+    fn fast_move_selection_matches_reference_scan() {
+        // the O(n) selection must reproduce the historical O(n^2)
+        // row-major scan exactly: same donor, same receiver, and the
+        // same net down to the bit
+        forall(
+            "select_move == reference scan",
+            4000,
+            |r| {
+                let n = 2 + r.below(11);
+                let mut pool: Vec<f64> = Vec::new();
+                (0..n)
+                    .map(|_| (0.0, tie_heavy(r, &mut pool), tie_heavy(r, &mut pool)))
+                    .collect::<Vec<(f64, f64, f64)>>()
+            },
+            |cached| {
+                let fast = select_move(cached);
+                let slow = select_move_reference(cached);
+                let same = match (fast, slow) {
+                    (None, None) => true,
+                    (Some((d1, r1, n1)), Some((d2, r2, n2))) => {
+                        d1 == d2 && r1 == r2 && n1.to_bits() == n2.to_bits()
+                    }
+                    _ => false,
+                };
+                if same {
+                    Ok(())
+                } else {
+                    Err(format!("fast {fast:?} != reference {slow:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn class_index_groups_identical_agents() {
+        // 18 agents cycling 3 QoS classes x 3 tiers: 9 exact classes of
+        // multiplicity 2, partition covering the fleet
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(18, &AgentSpec::tier_mix(2)),
+        );
+        let idx = fp.class_index(Classing::Exact);
+        assert_eq!(idx.classes(), 9);
+        assert_eq!(idx.count.iter().sum::<usize>(), 18);
+        assert!(idx.count.iter().all(|&c| c == 2));
+        for (i, &c) in idx.class_of.iter().enumerate() {
+            let rep = &fp.agents[idx.rep[c]];
+            assert_eq!(rep.device.tier, fp.agents[i].device.tier);
+            assert_eq!(rep.class, fp.agents[i].class);
+        }
+        assert!(fp.class_index(Classing::PerAgent).all_singletons());
+        // class hashes agree with the partition: equal hash <=> equal class
+        let hashes = fp.agent_class_hashes();
+        for i in 0..18 {
+            for j in 0..18 {
+                assert_eq!(
+                    hashes[i] == hashes[j],
+                    idx.class_of[i] == idx.class_of[j],
+                    "hash/class disagreement at ({i}, {j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn classed_solver_bit_identical_on_duplicated_fleet() {
+        // the tiered fleet repeats 9 distinct (tier, QoS) profiles, so
+        // Exact classing collapses hard — and must still reproduce the
+        // per-agent solver bit for bit, for both algorithms
+        for n in [9usize, 18, 36] {
+            let fp = FleetProblem::new(
+                Platform::fleet_edge(),
+                AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(2)),
+            );
+            let idx = fp.class_index(Classing::Exact);
+            assert!(idx.classes() < n, "n={n}: expected collapse, got {} classes", idx.classes());
+            for algorithm in [FleetAlgorithm::Proposed, FleetAlgorithm::EqualShare] {
+                let direct = fp.solve(&SolveRequest { algorithm, ..SolveRequest::default() });
+                let classed = fp.solve(&SolveRequest {
+                    algorithm,
+                    classing: Classing::Exact,
+                    ..SolveRequest::default()
+                });
+                assert_bit_identical(&direct, &classed);
+            }
+        }
+    }
+
+    #[test]
+    fn classed_solver_bit_identical_on_random_duplicated_fleets() {
+        // property (tentpole): duplicated-agent fleets across seeds —
+        // k distinct jittered contracts, each repeated m times, shuffled
+        forall(
+            "classed == per-agent on duplicated fleets",
+            12,
+            |r| {
+                let k = 1 + r.below(4);
+                let m = 2 + r.below(3);
+                let mut specs = Vec::new();
+                for c in 0..k {
+                    let mut spec = AgentSpec::class_spec(c);
+                    spec.t0 *= r.range(0.8, 1.2);
+                    spec.e0 *= r.range(0.8, 1.2);
+                    spec.weight *= r.range(0.5, 2.0);
+                    for _ in 0..m {
+                        specs.push(spec);
+                    }
+                }
+                r.shuffle(&mut specs);
+                specs
+            },
+            |specs| {
+                let fp = FleetProblem::new(Platform::fleet_edge(), specs.clone());
+                assert!(!fp.class_index(Classing::Exact).all_singletons());
+                let direct = fp.solve(&SolveRequest::default());
+                let classed = fp
+                    .solve(&SolveRequest { classing: Classing::Exact, ..SolveRequest::default() });
+                assert_bit_identical(&direct, &classed);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn classed_solver_on_all_singleton_fleet_reduces_bit_for_bit() {
+        // property (tentpole): when every class is a singleton the
+        // classed path must reduce to the per-agent path exactly
+        forall(
+            "classed == per-agent on singleton fleets",
+            10,
+            |r| {
+                let n = 3 + r.below(5);
+                (0..n)
+                    .map(|i| {
+                        let mut spec = AgentSpec::class_spec(i);
+                        spec.t0 *= r.range(0.7, 1.3);
+                        spec.weight *= r.range(0.5, 2.0);
+                        spec
+                    })
+                    .collect::<Vec<AgentSpec>>()
+            },
+            |specs| {
+                let fp = FleetProblem::new(Platform::fleet_edge(), specs.clone());
+                if !fp.class_index(Classing::Exact).all_singletons() {
+                    return Err("jitter failed to separate classes".into());
+                }
+                let direct = fp.solve(&SolveRequest::default());
+                let classed = fp
+                    .solve(&SolveRequest { classing: Classing::Exact, ..SolveRequest::default() });
+                assert_bit_identical(&direct, &classed);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn classed_solver_bit_identical_under_queue_feedback() {
+        // with a queue attached, Exact classing keeps the mean-field
+        // probes per-agent (the M/G/1 accumulation is observer-position-
+        // dependent) but still collapses the wait-explicit rows — the
+        // allocation must stay bit-identical to the per-agent path
+        for (n, discipline) in
+            [(4usize, QueueDiscipline::Fifo), (6, QueueDiscipline::Fifo), (9, QueueDiscipline::WeightedPriority)]
+        {
+            let fp = FleetProblem::new(
+                Platform::fleet_edge(),
+                AgentSpec::tiered_fleet(n, &AgentSpec::tier_mix(2)),
+            )
+            .with_queue(QueueModel::uniform(discipline, n, 0.05));
+            let direct = fp.solve(&SolveRequest::default());
+            let classed =
+                fp.solve(&SolveRequest { classing: Classing::Exact, ..SolveRequest::default() });
+            assert_bit_identical(&direct, &classed);
+        }
+    }
+
+    #[test]
+    fn classed_warm_solve_bit_identical() {
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(12, &AgentSpec::tier_mix(2)),
+        );
+        let cold = fp.solve(&SolveRequest::default());
+        let prev: Vec<Option<(f64, f64)>> =
+            cold.agents.iter().map(|a| Some((a.server_share, a.airtime_share))).collect();
+        let direct =
+            fp.solve(&SolveRequest { warm_start: Some(prev.clone()), ..SolveRequest::default() });
+        let classed = fp.solve(&SolveRequest {
+            warm_start: Some(prev),
+            classing: Classing::Exact,
+            ..SolveRequest::default()
+        });
+        assert_bit_identical(&direct, &classed);
+    }
+
+    #[test]
+    fn classed_multi_server_pass_through_bit_identical() {
+        // the placement search forwards classing into every per-server
+        // sub-solve; the outer search is untouched, so the full
+        // multi-server allocation stays bit-identical too
+        let fp = FleetProblem::new(
+            Platform::fleet_edge(),
+            AgentSpec::tiered_fleet(12, &AgentSpec::tier_mix(2)),
+        )
+        .with_servers(ServerSpec::identical(2));
+        for placement in [PlacementStrategy::EqualSpread, PlacementStrategy::LocalSearch] {
+            let direct = fp.solve(&SolveRequest { placement, ..SolveRequest::default() });
+            let classed = fp.solve(&SolveRequest {
+                placement,
+                classing: Classing::Exact,
+                ..SolveRequest::default()
+            });
+            assert_bit_identical(&direct, &classed);
+        }
+    }
+
+    #[test]
+    fn bucketed_classing_collapses_jittered_gains() {
+        // gains differing in the 5th decimal are distinct to Exact but
+        // collapse at 3 bucket decimals; the bucketed solve is the
+        // documented approximation — finite and admitting agents
+        let mut specs = AgentSpec::mixed_fleet(9);
+        for (i, spec) in specs.iter_mut().enumerate() {
+            spec.channel_gain = 0.9 + (i as f64) * 1e-5;
+        }
+        let fp = FleetProblem::new(Platform::fleet_edge(), specs);
+        assert_eq!(fp.class_index(Classing::Exact).classes(), 9);
+        assert_eq!(fp.class_index(Classing::Bucketed { gain_decimals: 3 }).classes(), 3);
+        let alloc = fp.solve(&SolveRequest {
+            classing: Classing::Bucketed { gain_decimals: 3 },
+            ..SolveRequest::default()
+        });
+        assert!(alloc.objective.is_finite());
+        assert!(alloc.admitted > 0);
+    }
+
+    #[test]
+    fn classing_parse_round_trips() {
+        assert_eq!(Classing::parse("per-agent").unwrap(), Classing::PerAgent);
+        assert_eq!(Classing::parse("agent").unwrap(), Classing::PerAgent);
+        assert_eq!(Classing::parse("exact").unwrap(), Classing::Exact);
+        assert_eq!(Classing::parse("classed").unwrap(), Classing::Exact);
+        assert_eq!(Classing::parse("bucketed").unwrap(), Classing::Bucketed { gain_decimals: 3 });
+        assert!(Classing::parse("fancy").is_err());
+        assert_eq!(Classing::default(), Classing::PerAgent);
+    }
 }
+

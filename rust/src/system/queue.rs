@@ -200,20 +200,30 @@ impl QueueModel {
         let n = self.arrival_rps.len();
         assert_eq!(service_s.len(), n);
         assert_eq!(activity.len(), n);
-        (0..n)
-            .map(|i| {
-                let s_i = service_s[i];
-                if !(s_i.is_finite() && s_i >= 0.0) {
-                    return f64::INFINITY;
-                }
-                self.accumulate_wait(
-                    i,
-                    |j| service_s[j],
-                    |j| self.arrival_rps[j] * activity[j],
-                    &weight_of,
-                )
-            })
-            .collect()
+        (0..n).map(|i| self.wait_given_one(i, service_s, activity, &weight_of)).collect()
+    }
+
+    /// Row `i` of [`Self::waits_given`], exposed on its own so the
+    /// classed fleet solver can compute one row per equivalence class
+    /// and broadcast it (the row depends on the observer only through
+    /// its priority weight and the finiteness guard on its own service).
+    pub fn wait_given_one(
+        &self,
+        i: usize,
+        service_s: &[f64],
+        activity: &[f64],
+        weight_of: impl Fn(usize) -> f64,
+    ) -> f64 {
+        let s_i = service_s[i];
+        if !(s_i.is_finite() && s_i >= 0.0) {
+            return f64::INFINITY;
+        }
+        self.accumulate_wait(
+            i,
+            |j| service_s[j],
+            |j| self.arrival_rps[j] * activity[j],
+            &weight_of,
+        )
     }
 }
 

@@ -6,7 +6,7 @@
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
 use qaci::fleet::churn::{self, ChurnConfig, ChurnEvent, ChurnPolicy};
-use qaci::fleet::{events, sim, FleetSimConfig};
+use qaci::fleet::{events, sim, FleetSimConfig, LaneSeedMix};
 use qaci::opt::fleet::{self, AdmissionPricing, AgentSpec, FleetProblem, ProposedOptions};
 use qaci::system::queue::{QueueDiscipline, QueueModel};
 use qaci::system::Platform;
@@ -147,6 +147,7 @@ fn shared_queue_serving_loop_end_to_end() {
         seed: 9,
         batcher: BatcherConfig::default(),
         queue: None,
+        lane_mix: LaneSeedMix::default(),
     };
     let plain = sim::run(&fp, &alloc, &base);
     let queued = sim::run(

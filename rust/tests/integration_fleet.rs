@@ -5,7 +5,7 @@
 
 use qaci::coordinator::batcher::BatcherConfig;
 use qaci::data::workload::Arrival;
-use qaci::fleet::{sim, FleetSimConfig};
+use qaci::fleet::{sim, FleetSimConfig, LaneSeedMix};
 use qaci::opt::fleet::{self, AgentSpec, FleetAlgorithm, FleetProblem, SolveRequest};
 use qaci::opt::{bisection, Problem};
 use qaci::system::Platform;
@@ -92,6 +92,7 @@ fn fleet_serving_loop_end_to_end() {
             seed: 5,
             batcher: BatcherConfig::default(),
             queue: None,
+            lane_mix: LaneSeedMix::default(),
         },
     );
     assert_eq!(report.served + report.rejected as usize, 8 * 12);
@@ -140,6 +141,7 @@ fn admission_control_under_overload() {
             seed: 2,
             batcher: BatcherConfig::default(),
             queue: None,
+            lane_mix: LaneSeedMix::default(),
         },
     );
     assert_eq!(report.rejected, ((32 - proposed.admitted) * 4) as u64);
