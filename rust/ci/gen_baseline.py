@@ -36,6 +36,13 @@ derive no constraint in `obs::benchlog::diff`:
   the CI validator re-checks them — solve counts are not a tracked
   diff field). Hysteresis vs resolve-always is a tie: neither
   direction is machine-invariant.
+* fleet_quant — on the drifting-load scenario the adaptive per-agent
+  policy's time-averaged fleet D^U sits strictly below every static
+  pin b in 1..=16 (encoded 1 vs 2); adaptive vs the legacy "static"
+  row is a tie (they are bit-identical by construction, checked
+  exactly in-bench and by the CI validator). On every rate-R budget
+  the per-group mixed allocation's predicted D^U sits strictly below
+  the uniform static at the same average rate.
 
 Entry lines replicate `obs::benchlog::Entry::to_line` byte for byte:
 compact JSON (no spaces, insertion order, whole numbers rendered
@@ -82,6 +89,8 @@ DAEMON_POLICIES = [
     "static-equal",
     "static-proposed",
 ]
+QUANT_STATIC_BITS = range(1, 17)
+QUANT_RATE_BUDGETS = [2, 4, 6, 8, 10, 12]
 
 
 def fnv1a64(data: bytes) -> int:
@@ -175,6 +184,21 @@ def daemon_payload():
     return {"bench": "fleet_daemon", "version": 1, "results": results}
 
 
+def quant_payload():
+    results = []
+    # adaptive and the legacy solver pick are bit-identical, so both sit
+    # at rank 1 (a tie derives no ordering between them) while every
+    # static pin sits above at rank 2
+    results.append({"scenario": "drifting-load", "policy": "adaptive:1-16", "d_upper": 1})
+    results.append({"scenario": "drifting-load", "policy": "static", "d_upper": 1})
+    for b in QUANT_STATIC_BITS:
+        results.append({"scenario": "drifting-load", "policy": f"static:{b}", "d_upper": 2})
+    for r in QUANT_RATE_BUDGETS:
+        results.append({"scenario": f"rate-{r}", "policy": "mixed", "d_upper": 1})
+        results.append({"scenario": f"rate-{r}", "policy": "uniform", "d_upper": 2})
+    return {"bench": "fleet_quant", "version": 1, "results": results}
+
+
 def main():
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "benchlog-baseline.jsonl")
     lines = [
@@ -182,6 +206,7 @@ def main():
         entry_line(1, "fleet_scale", scale_payload()),
         entry_line(2, "fleet_placement", placement_payload()),
         entry_line(3, "fleet_daemon", daemon_payload()),
+        entry_line(4, "fleet_quant", quant_payload()),
     ]
     with open(out, "w") as f:
         f.write("\n".join(lines) + "\n")

@@ -17,7 +17,7 @@ use qaci::opt::fleet::{
     PlacementStrategy, ServerSpec, SolveRequest,
 };
 use qaci::opt::{bisection, sca, Problem};
-use qaci::quant::Scheme;
+use qaci::quant::{QuantPolicy, Scheme};
 use qaci::rl::env::BudgetRanges;
 use qaci::rl::PpoConfig;
 use qaci::runtime::executor::CoModel;
@@ -118,6 +118,12 @@ pub fn main() {
             None,
         )
         .describe("lane-mix", "fleet sim: per-lane seed mix, additive | splitmix", Some("additive"))
+        .describe(
+            "quant-policy",
+            "fleet/churn/serve: per-agent quantization policy, static | static:<bits> | \
+             adaptive | adaptive:<min>-<max>[:<backoff>]",
+            Some("static"),
+        )
         .describe("horizon", "churn: simulated horizon [s]", Some("600"))
         .describe("join-rps", "churn: Poisson join rate [1/s]", Some("0.02"))
         .describe("leave-rps", "churn: per-agent leave rate [1/s]", Some("0.003"))
@@ -499,6 +505,9 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
         return 2;
     };
     let Some(servers) = fleet_servers(args) else { return 2 };
+    let Some(quant) = parsed(QuantPolicy::parse(&args.str("quant-policy", "static"))) else {
+        return 2;
+    };
     let multi = servers != [ServerSpec::default()];
     // with the queue on, the allocator's analytic load and the simulated
     // arrivals must describe the same traffic: one rate drives both
@@ -508,7 +517,11 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
     } else {
         args.f64("rps", 2.0)
     };
-    let mut spec = FleetSpec::new(Platform::fleet_edge(), AgentSpec::tiered_fleet(n, &tiers));
+    let mut agents = AgentSpec::tiered_fleet(n, &tiers);
+    for a in &mut agents {
+        a.quant = quant;
+    }
+    let mut spec = FleetSpec::new(Platform::fleet_edge(), agents);
     spec.link_rate_bps = args.f64("rate-mbps", 400.0) * 1e6;
     spec.pricing = pricing;
     spec.servers = servers.clone();
@@ -539,13 +552,8 @@ fn cmd_fleet_alloc(args: &Args) -> i32 {
     let Some(classing) = parsed(Classing::parse(&args.str("classing", "per-agent"))) else {
         return 2;
     };
-    let lane_mix = match args.str("lane-mix", "additive").as_str() {
-        "additive" => LaneSeedMix::Additive,
-        "splitmix" => LaneSeedMix::Splitmix,
-        other => {
-            eprintln!("error: unknown lane mix {other:?} (expected additive | splitmix)");
-            return 2;
-        }
+    let Some(lane_mix) = parsed(LaneSeedMix::parse(&args.str("lane-mix", "additive"))) else {
+        return 2;
     };
     let sw = Stopwatch::start();
     let req = SolveRequest { algorithm, placement, seed, classing, ..SolveRequest::default() };
@@ -668,6 +676,7 @@ fn churn_config(args: &Args) -> Option<ChurnConfig> {
         servers,
         classing: parsed(Classing::parse(&args.str("classing", "per-agent")))?,
         class_reuse: args.has("class-reuse"),
+        quant: parsed(QuantPolicy::parse(&args.str("quant-policy", "static")))?,
         seed: args.usize("seed", 0) as u64,
     })
 }
@@ -681,7 +690,7 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
     let (tl, reports) = churn::compare(Platform::fleet_edge(), &cfg);
     println!(
         "churn: N0={} agents, tiers [{}], horizon {:.0}s, {} events ({} joins, {} leaves, \
-         {} bursts), queue={}, pricing={}",
+         {} bursts), queue={}, pricing={}, quant={}",
         cfg.initial_agents,
         cfg.tiers.iter().map(|t| t.tier).collect::<Vec<_>>().join(","),
         cfg.horizon_s,
@@ -690,7 +699,8 @@ fn cmd_fleet_churn(args: &Args) -> i32 {
         tl.leaves,
         tl.bursts,
         cfg.queue.map_or("off", QueueDiscipline::name),
-        cfg.pricing.name()
+        cfg.pricing.name(),
+        cfg.quant.label()
     );
     if multi {
         let scales: Vec<String> =

@@ -43,6 +43,7 @@ use crate::opt::fleet::{
     FleetAllocation, FleetProblem, FleetSpec, Placement, PlacementStrategy, ProposedOptions,
     ServerSpec, SolveRequest,
 };
+use crate::quant::mixed::QuantPolicy;
 use crate::system::platform::DeviceProfile;
 use crate::system::queue::{QueueDiscipline, QueueModel};
 use crate::system::Platform;
@@ -115,6 +116,12 @@ pub struct ChurnConfig {
     /// classes whose membership actually changed have work left. The
     /// default `false` keeps the historical warm path byte for byte.
     pub class_reuse: bool,
+    /// quantization policy every agent in the fleet runs under
+    /// ([`QuantPolicy`]): the default `Static(None)` keeps the legacy
+    /// exact-bisection pick bit for bit; `Adaptive` lets each re-solve
+    /// re-pick bit-widths inside a pressure-damped window — the online
+    /// temporal adaptation the drifting-load bench measures
+    pub quant: QuantPolicy,
     pub seed: u64,
 }
 
@@ -140,6 +147,7 @@ impl Default for ChurnConfig {
             servers: vec![ServerSpec::default()],
             classing: Classing::PerAgent,
             class_reuse: false,
+            quant: QuantPolicy::default(),
             seed: 0,
         }
     }
@@ -352,7 +360,9 @@ pub(crate) struct Population {
 
 impl Population {
     pub(crate) fn spec(cfg: &ChurnConfig, key: u64) -> AgentSpec {
-        AgentSpec::tiered_spec(key as usize, &cfg.tiers)
+        let mut s = AgentSpec::tiered_spec(key as usize, &cfg.tiers);
+        s.quant = cfg.quant;
+        s
     }
 
     pub(crate) fn problem(&self, base: Platform, cfg: &ChurnConfig) -> FleetProblem {
@@ -1239,6 +1249,67 @@ mod tests {
             online.time_avg_cost,
             equal.time_avg_cost
         );
+    }
+
+    // ---- quantization-policy temporal adaptation ---------------------
+
+    fn assert_report_bit_identical(a: &ChurnReport, b: &ChurnReport) {
+        assert_eq!(a.time_avg_cost.to_bits(), b.time_avg_cost.to_bits(), "time_avg_cost");
+        assert_eq!(a.time_avg_d_upper.to_bits(), b.time_avg_d_upper.to_bits(), "time_avg_d_upper");
+        assert_eq!(a.reallocations, b.reallocations);
+        assert_eq!(a.realloc_skipped, b.realloc_skipped);
+        assert_eq!(a.final_alloc.objective.to_bits(), b.final_alloc.objective.to_bits());
+        assert_eq!(a.final_alloc.admitted, b.final_alloc.admitted);
+        for (x, y) in a.final_alloc.agents.iter().zip(&b.final_alloc.agents) {
+            assert_eq!(x.design.map(|d| d.b_hat), y.design.map(|d| d.b_hat));
+            assert_eq!(x.server_share.to_bits(), y.server_share.to_bits());
+            assert_eq!(x.airtime_share.to_bits(), y.airtime_share.to_bits());
+        }
+    }
+
+    #[test]
+    fn adaptive_full_window_replay_is_bit_identical_to_legacy() {
+        // acceptance: the full-window Adaptive policy never clamps, so
+        // every replay — the churning default timeline included, which
+        // subsumes the constant-population case — reproduces the legacy
+        // Static(None) run bit for bit, for every policy
+        for legacy_cfg in [ChurnConfig::default(), ChurnConfig::default().without_churn()] {
+            let adaptive_cfg = ChurnConfig {
+                quant: QuantPolicy::Adaptive(crate::quant::mixed::AdaptConfig::default()),
+                ..legacy_cfg.clone()
+            };
+            let tl = timeline(&legacy_cfg);
+            for policy in [ChurnPolicy::StaticProposed, ChurnPolicy::Online] {
+                let a = run_churn(base(), &tl, policy, &legacy_cfg);
+                let b = run_churn(base(), &tl, policy, &adaptive_cfg);
+                assert_report_bit_identical(&a, &b);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_pinned_window_matches_explicit_static_pin() {
+        // Adaptive clamped to a one-width window [b, b] is the same
+        // policy as Static(Some(b)): same designs, same rejections,
+        // same integrated cost
+        let tl = timeline(&ChurnConfig::default());
+        for b in [2u32, 4, 6] {
+            let pinned = ChurnConfig {
+                quant: QuantPolicy::Static(Some(b)),
+                ..ChurnConfig::default()
+            };
+            let windowed = ChurnConfig {
+                quant: QuantPolicy::Adaptive(crate::quant::mixed::AdaptConfig {
+                    min_bits: b,
+                    max_bits: b,
+                    pressure_backoff: 0.0,
+                }),
+                ..ChurnConfig::default()
+            };
+            let x = run_churn(base(), &tl, ChurnPolicy::Online, &pinned);
+            let y = run_churn(base(), &tl, ChurnPolicy::Online, &windowed);
+            assert_report_bit_identical(&x, &y);
+        }
     }
 }
 

@@ -155,6 +155,10 @@ pub struct EpochSnapshot {
     pub p99_e2e_s: f64,
     /// fleet p99 queue wait over all completions to date [s]
     pub p99_wait_s: f64,
+    /// worst per-agent violation pressure after this epoch's refresh —
+    /// what Measured pricing and a pressure-backed adaptive quant
+    /// policy both react to at the next re-solve
+    pub max_pressure: f64,
     /// taken re-solves to date
     pub resolves_taken: usize,
 }
@@ -300,9 +304,13 @@ impl Daemon {
     }
 
     /// Whether measured pressure participates in the fingerprint (only
-    /// then may an epoch boundary itself warrant a re-solve).
+    /// then may an epoch boundary itself warrant a re-solve): either
+    /// Measured admission pricing re-prices rejections from it, or a
+    /// pressure-backed adaptive quantization policy re-picks bit-widths
+    /// from it at the same warm re-solve boundaries.
     fn measured(&self) -> bool {
         self.churn.pricing == AdmissionPricing::Measured
+            || self.churn.quant.pressure_sensitive()
     }
 
     /// Run the loop to completion: drain the job queue, then shut down
@@ -477,13 +485,14 @@ impl Daemon {
             energy_j: energy,
             p99_e2e_s: e2e.p99(),
             p99_wait_s: wait.p99(),
+            max_pressure: self.pressure.values().copied().fold(0.0, f64::max),
             resolves_taken: self.resolves_taken,
         };
         self.log(format_args!(
             "epoch {k} t={t:.3} arrivals={arrivals} completed={completed} \
              violations={violations} energy_j={energy:.3} p99_e2e={:.6} p99_wait={:.6} \
-             solves={}",
-            snap.p99_e2e_s, snap.p99_wait_s, snap.resolves_taken
+             pressure={:.3} solves={}",
+            snap.p99_e2e_s, snap.p99_wait_s, snap.max_pressure, snap.resolves_taken
         ));
         self.snapshots.push(snap);
     }
@@ -684,5 +693,47 @@ mod tests {
         }
         // bookkeeping: every deferral was either consumed or cancelled
         assert!(r.cancelled <= r.skipped_cooldown);
+    }
+
+    #[test]
+    fn pressure_backed_quant_policy_opens_the_epoch_telemetry_gate() {
+        // tentpole: a pressure-backed adaptive policy reads epoch
+        // telemetry exactly where Measured pricing does — pressure joins
+        // the fingerprint, so epoch boundaries themselves can trigger
+        // warm re-solves even under Uniform admission pricing. A
+        // backoff-free policy must leave the epoch gate closed.
+        use crate::quant::mixed::{AdaptConfig, QuantPolicy};
+        let storm = |quant: QuantPolicy| DaemonConfig {
+            churn: ChurnConfig { quant, ..burst_storm() },
+            resolve_always: true, // isolate the gate: no hysteresis
+            ..DaemonConfig::default()
+        };
+        let backed = storm(QuantPolicy::Adaptive(AdaptConfig {
+            min_bits: 1,
+            max_bits: 16,
+            pressure_backoff: 4.0,
+        }));
+        let free = storm(QuantPolicy::Adaptive(AdaptConfig::default()));
+        let b = run_daemon(base(), &backed);
+        let f = run_daemon(base(), &free);
+        // the storm generates violations, so pressure becomes non-zero
+        // and the epoch boundary decisions appear in the transcript
+        assert!(
+            b.epochs.iter().any(|e| e.max_pressure > 0.0),
+            "storm must register violation pressure"
+        );
+        assert!(
+            b.transcript.contains("cause=epoch"),
+            "pressure-backed policy must open the epoch gate"
+        );
+        assert!(
+            !f.transcript.contains("cause=epoch"),
+            "backoff-free policy must keep the epoch gate closed"
+        );
+        // conservation still holds under the adaptive re-picks
+        assert_eq!(
+            b.report.arrivals,
+            b.report.completed + b.report.rejected + b.report.dropped_departure
+        );
     }
 }

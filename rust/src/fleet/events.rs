@@ -60,8 +60,10 @@ use crate::opt::fleet::{
     PlacementStrategy, ProposedOptions, ServerSpec, SolveRequest,
 };
 use crate::opt::Design;
+use crate::quant::mixed::QuantPolicy;
 use crate::system::queue::EdgeQueue;
 use crate::system::{delay, energy, Platform};
+use crate::theory::rate_distortion as rd;
 use crate::util::rng::Rng;
 use crate::util::timer::Samples;
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
@@ -87,6 +89,12 @@ pub struct EventAgentReport {
     /// ([`crate::system::energy::total_energy`] at the lane's design and
     /// shares — the same per-request pricing as [`super::sim`])
     pub energy_j: f64,
+    /// total distortion D^U of completed requests, each priced at the
+    /// operating point in force when it arrived: the request-level
+    /// mirror of the analytic replay's weighted-D^U integrand (a mixed
+    /// allocation prices its own per-group bit vector, every other
+    /// policy the served width)
+    pub distortion: f64,
     /// end-to-end delay (arrival → server finish) of completed requests
     pub e2e_s: Samples,
     /// measured server-queue wait of completed requests
@@ -105,6 +113,7 @@ impl EventAgentReport {
             dropped_departure: 0,
             deadline_misses: 0,
             energy_j: 0.0,
+            distortion: 0.0,
             e2e_s: Samples::new(),
             queue_wait_s: Samples::new(),
         }
@@ -135,6 +144,9 @@ pub struct EventReport {
     /// fleet total compute + uplink energy [J] over completed requests
     /// (see [`EventAgentReport::energy_j`])
     pub energy_j: f64,
+    /// fleet total per-request distortion over completed requests (see
+    /// [`EventAgentReport::distortion`])
+    pub distortion: f64,
     /// e2e percentiles across every completed request in the fleet
     pub e2e_s: Samples,
     /// measured queue-wait percentiles across every completed request
@@ -171,6 +183,15 @@ impl EventReport {
             return 0.0;
         }
         self.energy_j / self.completed as f64
+    }
+
+    /// Mean per-request distortion D^U over completed requests (0 when
+    /// nothing completed).
+    pub fn distortion_per_request(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.distortion / self.completed as f64
     }
 }
 
@@ -285,6 +306,17 @@ impl EventLane {
         }
     }
 
+    /// Policy-aware distortion D^U of one request at the current
+    /// operating point — a mixed allocation prices its own per-group
+    /// bit vector, every other policy the served width.
+    fn request_distortion(&self) -> f64 {
+        let Some(d) = self.design else { return 0.0 };
+        match self.spec.quant {
+            QuantPolicy::Mixed(alloc) => alloc.d_upper_total(),
+            _ => rd::d_upper(d.b_hat as f64 - 1.0, self.spec.lambda),
+        }
+    }
+
     /// `(agent + uplink time, server service time)` at the current
     /// operating point; `None` when not admitted or degenerate.
     fn stage_times(&self, base: Platform, cfg: &ChurnConfig) -> Option<(f64, f64)> {
@@ -305,6 +337,8 @@ struct RequestMeta {
     t0: f64,
     /// compute + uplink energy [J] priced at the arrival operating point
     energy_j: f64,
+    /// distortion D^U priced at the arrival operating point
+    distortion: f64,
 }
 
 /// A popped job lands in its agent's report.
@@ -320,6 +354,7 @@ fn complete(
     let st = stats.get_mut(&m.key).expect("completed job has stats");
     st.completed += 1;
     st.energy_j += m.energy_j;
+    st.distortion += m.distortion;
     let e2e = finish - m.arrival_s;
     st.e2e_s.push(e2e);
     st.queue_wait_s.push((start - ready).max(0.0));
@@ -368,6 +403,7 @@ fn generate(
                 arrival_s: arrival,
                 t0: lane.spec.t0,
                 energy_j: lane.request_energy(base),
+                distortion: lane.request_distortion(),
             });
             match queues {
                 Some(qs) => {
@@ -924,6 +960,7 @@ impl EventEngine {
             dropped_departure: per_agent.iter().map(|a| a.dropped_departure).sum(),
             deadline_misses: per_agent.iter().map(|a| a.deadline_misses).sum(),
             energy_j: per_agent.iter().map(|a| a.energy_j).sum(),
+            distortion: per_agent.iter().map(|a| a.distortion).sum(),
             e2e_s: Samples::new(),
             queue_wait_s: Samples::new(),
             reallocations: self.reallocations,
@@ -1359,6 +1396,45 @@ mod tests {
         assert!(rc.energy_j > 0.0);
         let sum: f64 = rc.per_agent.iter().map(|a| a.energy_j).sum();
         assert!((rc.energy_j - sum).abs() <= 1e-9 * sum.max(1.0));
+    }
+
+    #[test]
+    fn per_request_distortion_rolls_up_and_coarse_pins_price_higher() {
+        // stationary run: each completed request carries the arrival
+        // operating point's D^U, so the agent totals are completions ×
+        // the analytic bound and the fleet total is the per-agent sum
+        let cfg = ChurnConfig::default().without_churn();
+        let tl = timeline(&cfg);
+        let r = run_events(base(), &tl, ChurnPolicy::StaticProposed, &cfg);
+        assert!(r.distortion > 0.0 && r.distortion_per_request() > 0.0);
+        let total: f64 = r.per_agent.iter().map(|a| a.distortion).sum();
+        assert!((r.distortion - total).abs() <= 1e-9 * total.max(1.0));
+        let pop = Population { live: tl.initial.clone(), bursting: Default::default() };
+        let fp = pop.problem(base(), &cfg);
+        let alloc = fleet::solve_proposed(&fp);
+        for (i, a) in r.per_agent.iter().enumerate() {
+            let d = alloc.agents[i].design.expect("stationary fleet admitted");
+            let expect =
+                rd::d_upper(d.b_hat as f64 - 1.0, fp.agents[i].lambda) * a.completed as f64;
+            assert!(
+                (a.distortion - expect).abs() <= 1e-9 * expect.max(1.0),
+                "agent {i}: rolled-up {} vs analytic {expect}",
+                a.distortion
+            );
+            assert!(d.b_hat > 2, "premise: the free pick leaves width headroom");
+        }
+        // a coarser pinned fleet completes its requests at strictly
+        // higher distortion per request — the telemetry the daemon's
+        // policy re-pick gets to see
+        let coarse = ChurnConfig { quant: QuantPolicy::Static(Some(2)), ..cfg.clone() };
+        let rc = run_events(base(), &timeline(&coarse), ChurnPolicy::StaticProposed, &coarse);
+        assert!(rc.completed > 0, "pinned width below the free pick must stay feasible");
+        assert!(
+            rc.distortion_per_request() > r.distortion_per_request(),
+            "coarse {} vs free {}",
+            rc.distortion_per_request(),
+            r.distortion_per_request()
+        );
     }
 
     #[test]

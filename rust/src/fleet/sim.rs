@@ -55,6 +55,7 @@ use crate::quant::Scheme;
 use crate::system::channel::MultiAccessChannel;
 use crate::system::queue::{EdgeQueue, QueueDiscipline};
 use crate::system::{delay, energy, Platform};
+use crate::util::cli::ParseError;
 use crate::util::timer::Samples;
 
 /// How per-lane RNG streams are derived from the run seed.
@@ -72,6 +73,18 @@ pub enum LaneSeedMix {
     /// seeds can reproduce each other's lane streams (cross-seed
     /// non-collision is tested below)
     Splitmix,
+}
+
+impl LaneSeedMix {
+    /// CLI spelling — rejects unknown tokens via [`ParseError`] instead
+    /// of silently falling back to the default mix.
+    pub fn parse(s: &str) -> Result<LaneSeedMix, ParseError> {
+        match s {
+            "additive" => Ok(LaneSeedMix::Additive),
+            "splitmix" | "splitmix64" => Ok(LaneSeedMix::Splitmix),
+            _ => Err(ParseError::new("lane mix", s, &["additive", "splitmix"])),
+        }
+    }
 }
 
 /// splitmix64-finalized lane seed: `stream` separates generator families
@@ -763,6 +776,18 @@ mod tests {
         let pa: Vec<u64> = a.per_agent.iter().map(|r| r.e2e_s.p50().to_bits()).collect();
         let pb: Vec<u64> = b.per_agent.iter().map(|r| r.e2e_s.p50().to_bits()).collect();
         assert_ne!(pa, pb, "splitmix must re-derive the lane streams");
+    }
+
+    #[test]
+    fn lane_mix_parse_rejects_unknown_tokens() {
+        assert_eq!(LaneSeedMix::parse("additive").unwrap(), LaneSeedMix::Additive);
+        assert_eq!(LaneSeedMix::parse("splitmix").unwrap(), LaneSeedMix::Splitmix);
+        assert_eq!(LaneSeedMix::parse("splitmix64").unwrap(), LaneSeedMix::Splitmix);
+        for bad in ["", "Additive", "xor", "splitmix-64"] {
+            let err = LaneSeedMix::parse(bad).unwrap_err();
+            assert_eq!(err.what, "lane mix");
+            assert_eq!(err.token, bad);
+        }
     }
 }
 

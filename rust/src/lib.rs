@@ -208,13 +208,59 @@
 //! (`benches/fleet_daemon.rs`, gated in CI via the bench-log ordering
 //! diff).
 //!
+//! ## Quantization
+//!
+//! All weight quantization goes through one front door:
+//! [`quant::Quantizer::new`] validates a [`quant::QuantConfig`] (scheme
+//! × bit depth × optional channel grouping) once and
+//! [`quant::Quantizer::quantize`] /
+//! [`quant::Quantizer::quantize_into`] apply the exact f32 kernels the
+//! L1 Pallas layer mirrors ([`quant::quantize_magnitudes`] remains as a
+//! thin wrapper, bit-identical, regression-tested). Distortion
+//! prediction is behind the [`theory::distortion::DistortionModel`]
+//! trait — the analytic §III rate bound
+//! ([`theory::rate_distortion::RateBoundModel`]), the measured-grid
+//! empirical model ([`quant::error::EmpiricalUniformModel`]), and the
+//! layer-matrix surrogates ([`theory::distortion::SurrogateModel`],
+//! [`theory::distortion::OutputBoundModel`]) all answer the same
+//! "predicted D at this allocation" question, so the allocator is
+//! model-agnostic.
+//!
+//! **Mixed precision** ([`quant::mixed`]): a
+//! [`quant::mixed::BitAllocation`] carries per-channel-group bit widths
+//! with fitted Exp(λ) tails and weights;
+//! [`quant::mixed::allocate_bits`] greedily water-fills bits across
+//! groups under an average-rate budget R̄, minimizing the predicted
+//! distortion of whichever `DistortionModel` is plugged in, and keeps
+//! the uniform allocation as a candidate so mixed ≤ uniform at matched
+//! rate is structural. **Per-agent policy**
+//! ([`quant::mixed::QuantPolicy`], carried by
+//! [`opt::fleet::AgentSpec::quant`] and threaded through every fleet
+//! solve): `Static(None)` is the legacy exact bisection pick (the
+//! default — bit-identical to the pre-policy solver), `Static(Some(b̂))`
+//! pins a width, `Mixed(BitAllocation)` solves at the allocation's
+//! pinned average width while scoring its per-group distortion, and
+//! `Adaptive(AdaptConfig)` clamps the solver pick into a
+//! `[min_bits, max_bits]` window whose ceiling tightens with observed
+//! violation pressure ([`quant::mixed::AdaptConfig::effective_max`]) —
+//! under churn the window re-picks at every warm re-solve boundary, and
+//! under the serving daemon the same telemetry that drives
+//! [`opt::fleet::AdmissionPricing::Measured`] re-prices it per epoch.
+//! On the drifting-load scenario the adaptive policy's time-averaged
+//! fleet D^U sits strictly below every static pin b̂ ∈ {1..16}
+//! (`benches/fleet_quant.rs`, gated in CI via the bench-log ordering
+//! diff). Entry points: `qaci fleet --quant-policy
+//! static|static:8|adaptive|adaptive:2-12`, `benches/fleet_quant.rs`.
+//!
 //! ## Bench artifacts
 //!
 //! `benches/fleet_churn.rs`, `benches/fleet_scale.rs`,
-//! `benches/fleet_placement.rs` and `benches/fleet_daemon.rs` emit
+//! `benches/fleet_placement.rs`, `benches/fleet_daemon.rs` and
+//! `benches/fleet_quant.rs` emit
 //! machine-readable results next to their tables —
 //! `BENCH_fleet_churn.json` / `BENCH_fleet_scale.json` /
-//! `BENCH_fleet_placement.json` / `BENCH_fleet_daemon.json` (or under
+//! `BENCH_fleet_placement.json` / `BENCH_fleet_daemon.json` /
+//! `BENCH_fleet_quant.json` (or under
 //! `$QACI_BENCH_DIR`), uploaded by the `bench-artifacts` CI job.
 //! Schema (version 1):
 //!
@@ -253,7 +299,13 @@
 //! control policy (`daemon-hysteresis`, `daemon-resolve-always`, the
 //! statics) with `resolves_taken`, `resolves_skipped`, `p99_s`,
 //! `queue_wait_p99_s`, `deadline_violation_rate` and
-//! `energy_per_request_j`. Fields whose measurement does not exist (e.g. a p99 over
+//! `energy_per_request_j`; `fleet_quant` records carry one
+//! `drifting-load` row per quantization policy label (`adaptive:1-16`,
+//! the legacy `static`, every `static:<b>` pin) with `d_upper`, `cost`,
+//! `reallocations`, `realloc_skipped`, `admitted` and `wall_clock_s`,
+//! plus `rate-<R̄>` rows (`policy` `"mixed"` or `"uniform"`) with the
+//! allocator's predicted `d_upper`, `avg_bits` and the `bits` string.
+//! Fields whose measurement does not exist (e.g. a p99 over
 //! zero completions) are `null`, never NaN: emission
 //! ([`bench_harness::emit_bench_artifact`]) re-parses the file and
 //! rejects any non-finite number, the benches re-check their ordering

@@ -151,6 +151,7 @@ use super::problem::{Design, Problem};
 use crate::obs::metrics as obs_metrics;
 use crate::system::channel::MultiAccessChannel;
 use crate::system::platform::DeviceProfile;
+use crate::quant::mixed::QuantPolicy;
 use crate::system::queue::{QueueDiscipline, QueueModel};
 use crate::system::Platform;
 use crate::theory::rate_distortion as rd;
@@ -185,6 +186,11 @@ pub struct AgentSpec {
     pub device: DeviceProfile,
     /// uplink channel gain g_i ∈ (0, 1]: effective goodput is α_i·g_i·R
     pub channel_gain: f64,
+    /// per-agent quantization policy: `QuantPolicy::Static(None)` (the
+    /// default) keeps the solver's static bisection pick bit for bit;
+    /// pinned/mixed/adaptive policies re-route
+    /// [`FleetProblem::agent_design_at_wait`] and the objective
+    pub quant: QuantPolicy,
 }
 
 impl AgentSpec {
@@ -216,6 +222,7 @@ impl AgentSpec {
             payload_bytes: Self::PAYLOAD_BLIP2,
             device: DeviceProfile::orin(),
             channel_gain: 1.0,
+            quant: QuantPolicy::Static(None),
         }
     }
 
@@ -447,6 +454,11 @@ impl FleetSpec {
             self.agents.iter().all(|a| a.weight.is_finite()),
             "agent weights must be finite"
         );
+        for (i, a) in self.agents.iter().enumerate() {
+            if let Err(e) = a.quant.validate(self.base.b_max) {
+                panic!("agent {i}: invalid quant policy: {e}");
+            }
+        }
         assert!(!self.servers.is_empty(), "at least one server");
         let mut airtime_reserved = 0.0;
         for s in &self.servers {
@@ -520,6 +532,7 @@ impl Hash for FleetSpec {
             hash_f64(a.device.spec.psi, state);
             hash_f64(a.device.link_gain, state);
             hash_f64(a.channel_gain, state);
+            a.quant.hash_content(state);
         }
         self.servers.len().hash(state);
         for s in &self.servers {
@@ -733,17 +746,47 @@ impl FleetProblem {
         self.agent_problem_at_wait(i, mu, alpha, self.queue_wait(i, mu))
     }
 
-    /// Best per-agent design (exact bisection) under shares and an
-    /// explicit wait, or `None` when the agent is unservable there.
+    /// Agent i's design at an already-built (P1) instance, routed
+    /// through its [`QuantPolicy`]:
+    ///
+    /// - `Static(None)` — the legacy exact-bisection pick, bit for bit.
+    /// - `Static(Some(b))` / `Mixed` — the delay/energy plan at the
+    ///   pinned (average) bit-width; infeasible ⇒ rejection.
+    /// - `Adaptive` — the bisection pick clamped into
+    ///   `[min_bits, effective_max(pressure)]`; a pick below `min_bits`
+    ///   clamps up and (being above the max feasible width) rejects.
+    ///   The default window (1, 16, no backoff) reproduces the solver
+    ///   pick exactly.
+    fn design_for_policy(&self, i: usize, problem: &Problem) -> Option<Design> {
+        match self.agents[i].quant {
+            QuantPolicy::Static(None) => bisection::solve(problem).map(|r| r.design),
+            QuantPolicy::Static(Some(b)) => problem.plan_design(b),
+            QuantPolicy::Mixed(alloc) => problem.plan_design(alloc.pinned_bits()),
+            QuantPolicy::Adaptive(cfg) => {
+                let picked = bisection::solve(problem)?.design;
+                let pressure = self.spec.pressure.get(i).copied().unwrap_or(0.0);
+                let b = picked.b_hat.clamp(cfg.min_bits, cfg.effective_max(pressure));
+                if b == picked.b_hat {
+                    Some(picked)
+                } else {
+                    problem.plan_design(b)
+                }
+            }
+        }
+    }
+
+    /// Best per-agent design under shares and an explicit wait, or
+    /// `None` when the agent is unservable there (policy-routed via
+    /// [`Self::design_for_policy`]).
     pub fn agent_design_at_wait(&self, i: usize, mu: f64, alpha: f64, wait: f64) -> Option<Design> {
         let problem = self.agent_problem_at_wait(i, mu, alpha, wait)?;
-        bisection::solve(&problem).map(|r| r.design)
+        self.design_for_policy(i, &problem)
     }
 
     /// Best per-agent design under the mean-field queue estimate.
     pub fn agent_design(&self, i: usize, mu: f64, alpha: f64) -> Option<Design> {
         let problem = self.agent_problem(i, mu, alpha)?;
-        bisection::solve(&problem).map(|r| r.design)
+        self.design_for_policy(i, &problem)
     }
 
     /// Rejection penalty. Uniform pricing: 4× the worst feasible bound
@@ -754,7 +797,14 @@ impl FleetProblem {
     /// penalty down to the same capability floor as the observed
     /// violation pressure rises — zero pressure is Uniform bit for bit.
     pub fn rejection_cost(&self, i: usize) -> f64 {
-        let base = self.agents[i].weight * 2.0 / self.agents[i].lambda;
+        // a mixed allocation misses group-decomposed mass Σ w_g/λ_g
+        // instead of the single-λ mean 1/λ; the 2× margin (serving at
+        // any width beats rejection) is preserved either way
+        let miss = match self.agents[i].quant {
+            QuantPolicy::Mixed(alloc) => alloc.miss_distortion(),
+            _ => 1.0 / self.agents[i].lambda,
+        };
+        let base = self.agents[i].weight * 2.0 * miss;
         match self.pricing {
             AdmissionPricing::Uniform => base,
             AdmissionPricing::Tiered => base * self.agents[i].device.capability(),
@@ -771,10 +821,19 @@ impl FleetProblem {
     /// water-filling exchange can never be poisoned by inf/NaN costs.
     pub fn design_cost(&self, i: usize, design: &Option<Design>) -> f64 {
         let cost = match design {
-            Some(d) => {
-                self.agents[i].weight
-                    * rd::bound_gap(d.b_hat as f64, self.agents[i].lambda)
-            }
+            Some(d) => match self.agents[i].quant {
+                // group-decomposed (P1) objective: the allocation's own
+                // per-group bit vector prices the distortion, the design
+                // only certifies delay/energy feasibility at the pinned
+                // average width
+                QuantPolicy::Mixed(alloc) => {
+                    self.agents[i].weight * alloc.bound_gap_total()
+                }
+                _ => {
+                    self.agents[i].weight
+                        * rd::bound_gap(d.b_hat as f64, self.agents[i].lambda)
+                }
+            },
             None => self.rejection_cost(i),
         };
         if cost.is_finite() {
@@ -792,11 +851,16 @@ impl FleetProblem {
         self.design_cost(i, &self.agent_design(i, mu, alpha))
     }
 
-    /// Can agent i be served at all (b̂ = 1 feasible) at these shares
-    /// and this queue wait?
+    /// Can agent i be served at all at these shares and this queue
+    /// wait? Probed at the policy's minimum servable width
+    /// ([`QuantPolicy::probe_bits`]): b̂ = 1 for the legacy default
+    /// (bit-identical), the pinned width for pinning policies — an
+    /// agent whose pinned width is infeasible cannot be served at all,
+    /// so admission floors must not seat it.
     fn servable_at_wait(&self, i: usize, mu: f64, alpha: f64, wait: f64) -> bool {
+        let probe = self.agents[i].quant.probe_bits();
         self.agent_problem_at_wait(i, mu, alpha, wait)
-            .is_some_and(|p| p.plan_frequencies(1.0).is_some())
+            .is_some_and(|p| p.plan_frequencies(probe).is_some())
     }
 
     /// Damped fixed-point interference pass over the **actual** share
@@ -926,12 +990,22 @@ pub struct FleetAllocation {
 
 impl FleetAllocation {
     /// Fleet-weighted distortion upper bound Σ w_i D^U(b̂_i−1); rejected
-    /// agents contribute the zero-rate distortion D^U(0) = 1/λ.
+    /// agents contribute the zero-rate distortion D^U(0) = 1/λ. Agents
+    /// on a [`QuantPolicy::Mixed`] allocation contribute the
+    /// group-decomposed bound Σ_g w_g D^U(b_g−1, λ_g) when served and
+    /// its zero-rate mass Σ_g w_g/λ_g when rejected.
     pub fn weighted_d_upper(&self, fp: &FleetProblem) -> f64 {
         self.agents
             .iter()
             .zip(&fp.agents)
             .map(|(a, spec)| {
+                if let QuantPolicy::Mixed(alloc) = spec.quant {
+                    let du = match &a.design {
+                        Some(_) => alloc.d_upper_total(),
+                        None => alloc.miss_distortion(),
+                    };
+                    return spec.weight * du;
+                }
                 let rate = match &a.design {
                     Some(d) => d.b_hat as f64 - 1.0,
                     None => 0.0,
@@ -1747,6 +1821,15 @@ impl FleetProblem {
             bits.push(2);
             bits.push(self.pressure[i].to_bits());
         }
+        // non-default quant policies re-route the design dispatch, so
+        // they are part of the class identity; the default contributes
+        // nothing, keeping legacy keys byte-identical
+        if !a.quant.is_default() {
+            bits.push(3);
+            let mut h = DefaultHasher::new();
+            a.quant.hash_content(&mut h);
+            bits.push(h.finish());
+        }
         (a.class, a.device.tier, bits)
     }
 
@@ -1987,8 +2070,10 @@ impl<'a> CostOracle<'a> {
         match self {
             CostOracle::Direct(fp) => (0..fp.n())
                 .map(|i| {
+                    let probe = fp.agents[i].quant.probe_bits();
                     let servable = |m: f64, a: f64| {
-                        fp.agent_problem(i, m, a).is_some_and(|p| p.plan_frequencies(1.0).is_some())
+                        fp.agent_problem(i, m, a)
+                            .is_some_and(|p| p.plan_frequencies(probe).is_some())
                     };
                     (min_share(|m| servable(m, 1.0)), min_share(|a| servable(1.0, a)))
                 })
@@ -2002,10 +2087,11 @@ impl<'a> CostOracle<'a> {
                 let shared = Arc::new(cx.fp.clone());
                 let workers = pool::default_parallelism().min(probes.len()).max(1);
                 let floors = ThreadPool::new(workers).map(probes, move |i| {
+                    let probe = shared.agents[i].quant.probe_bits();
                     let servable = |m: f64, a: f64| {
                         shared
                             .agent_problem(i, m, a)
-                            .is_some_and(|p| p.plan_frequencies(1.0).is_some())
+                            .is_some_and(|p| p.plan_frequencies(probe).is_some())
                     };
                     (min_share(|m| servable(m, 1.0)), min_share(|a| servable(1.0, a)))
                 });
@@ -3721,6 +3807,107 @@ mod tests {
         assert_eq!(Classing::parse("bucketed").unwrap(), Classing::Bucketed { gain_decimals: 3 });
         assert!(Classing::parse("fancy").is_err());
         assert_eq!(Classing::default(), Classing::PerAgent);
+    }
+
+    // ---- quantization-policy dispatch --------------------------------
+
+    #[test]
+    fn default_adaptive_window_is_bit_identical_to_legacy_solve() {
+        // Adaptive with the full (1, b_max, no-backoff) window clamps
+        // nothing, so the policy-routed solve must reproduce the legacy
+        // Static(None) allocation bit for bit — the static-path
+        // acceptance gate of the mixed-precision redesign
+        use crate::quant::mixed::AdaptConfig;
+        for n in [1usize, 4, 6] {
+            let legacy = solve_proposed(&fleet(n));
+            let mut specs = AgentSpec::mixed_fleet(n);
+            for s in &mut specs {
+                s.quant = QuantPolicy::Adaptive(AdaptConfig::default());
+            }
+            let adaptive = solve_proposed(&FleetProblem::new(Platform::fleet_edge(), specs));
+            assert_bit_identical(&legacy, &adaptive);
+        }
+    }
+
+    #[test]
+    fn pinned_static_policy_serves_at_its_width_or_not_at_all() {
+        // every admitted agent carries exactly the pinned width; a pin
+        // above the max feasible width rejects instead of downgrading
+        let mut specs = AgentSpec::mixed_fleet(4);
+        for s in &mut specs {
+            s.quant = QuantPolicy::Static(Some(3));
+        }
+        let fp = FleetProblem::new(Platform::fleet_edge(), specs);
+        let alloc = solve_proposed(&fp);
+        assert!(alloc.admitted >= 1, "pinned fleet seated nobody");
+        for (i, a) in alloc.agents.iter().enumerate() {
+            if let Some(d) = a.design {
+                assert_eq!(d.b_hat, 3, "agent {i} served off its pinned width");
+            }
+        }
+        let b_star = fleet(4)
+            .agent_design(0, 0.25, 0.25)
+            .expect("legacy pick feasible at equal shares")
+            .b_hat;
+        assert!(b_star < 16, "premise: legacy pick leaves headroom");
+        let mut specs = AgentSpec::mixed_fleet(4);
+        specs[0].quant = QuantPolicy::Static(Some(b_star + 1));
+        let over = FleetProblem::new(Platform::fleet_edge(), specs);
+        assert!(
+            over.agent_design(0, 0.25, 0.25).is_none(),
+            "width above the max feasible must reject, not degrade"
+        );
+    }
+
+    #[test]
+    fn mixed_policy_prices_the_group_decomposed_objective() {
+        use crate::quant::mixed::allocate_bits;
+        use crate::theory::rate_distortion::RateBoundModel;
+        let ba = allocate_bits(&[4.0, 15.0, 60.0], &[1.0, 1.0, 1.0], 6.0, 16, &RateBoundModel)
+            .expect("allocator feasible");
+        let mut specs = AgentSpec::mixed_fleet(3);
+        specs[0].quant = QuantPolicy::Mixed(ba);
+        let fp = FleetProblem::new(Platform::fleet_edge(), specs);
+        // rejection prices the group-decomposed miss mass Σ w_g / λ_g
+        assert_eq!(fp.rejection_cost(0), specs[0].weight * 2.0 * ba.miss_distortion());
+        // served: the design certifies feasibility at the pinned average
+        // width, the cost is the allocation's own bound-gap total
+        let d = fp.agent_design(0, 0.4, 0.4).expect("pinned width feasible");
+        assert_eq!(d.b_hat, ba.pinned_bits());
+        assert_eq!(fp.design_cost(0, &Some(d)), specs[0].weight * ba.bound_gap_total());
+        // mixed pricing at the same average rate never exceeds uniform:
+        // the solved objective must reflect that (agent 0's contribution
+        // can only shrink vs. its uniform-width twin)
+        let sol = solve_proposed(&fp);
+        assert!(sol.objective.is_finite());
+        assert!(sol.weighted_d_upper(&fp).is_finite());
+    }
+
+    #[test]
+    fn adaptive_policy_backs_off_under_measured_pressure() {
+        use crate::quant::mixed::AdaptConfig;
+        let mut specs = AgentSpec::mixed_fleet(1);
+        specs[0].quant = QuantPolicy::Adaptive(AdaptConfig {
+            min_bits: 1,
+            max_bits: 16,
+            pressure_backoff: 14.0,
+        });
+        let calm = FleetProblem::new(Platform::fleet_edge(), specs.clone()).ideal_link();
+        let b_calm = calm.agent_design(0, 1.0, 1.0).expect("sole agent feasible").b_hat;
+        assert!(b_calm > 2, "premise: unpressured pick has headroom, got {b_calm}");
+        let hot = FleetProblem::new(Platform::fleet_edge(), specs)
+            .ideal_link()
+            .with_pressure(vec![1.0]);
+        let b_hot = hot.agent_design(0, 1.0, 1.0).expect("clamped width stays feasible").b_hat;
+        assert_eq!(b_hot, 2, "full pressure must clamp to max_bits - backoff");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid quant policy")]
+    fn fleet_validation_rejects_overwide_pinned_policy() {
+        let mut specs = AgentSpec::mixed_fleet(2);
+        specs[0].quant = QuantPolicy::Static(Some(17)); // fleet_edge b_max = 16
+        FleetProblem::new(Platform::fleet_edge(), specs);
     }
 }
 

@@ -37,10 +37,44 @@ pub fn expected_uniform_distortion(lambda: f64, step: f64, theta_max: f64) -> f6
     acc + tail_mass * (1.0 / lambda) // E[X - θmax | X > θmax] = 1/λ
 }
 
+/// [`DistortionModel`](crate::theory::distortion::DistortionModel) over
+/// the *measured* uniform quantizer: per group, the numerically
+/// integrated E|Θ - Q(Θ)| for Θ ~ Exp(λ_g) on the grid
+/// `uniform_step(θ_max_g, b_g)`, weighted by the allocation's w_g. The
+/// empirical cross-check of the analytic `RateBoundModel`.
+#[derive(Debug, Clone)]
+pub struct EmpiricalUniformModel {
+    theta_max: Vec<f64>,
+}
+
+impl EmpiricalUniformModel {
+    /// One θ_max (magnitude clip) per allocation group.
+    pub fn new(theta_max: Vec<f64>) -> EmpiricalUniformModel {
+        assert!(!theta_max.is_empty() && theta_max.iter().all(|t| *t > 0.0));
+        EmpiricalUniformModel { theta_max }
+    }
+}
+
+impl crate::theory::distortion::DistortionModel for EmpiricalUniformModel {
+    fn predict(&self, alloc: &crate::quant::mixed::BitAllocation) -> f64 {
+        assert_eq!(alloc.len(), self.theta_max.len(), "allocation/theta_max count mismatch");
+        alloc
+            .groups()
+            .zip(&self.theta_max)
+            .map(|((bits, lambda, weight), &tmax)| {
+                let step = crate::quant::uniform::uniform_step(tmax as f32, bits) as f64;
+                weight * expected_uniform_distortion(lambda, step, tmax)
+            })
+            .sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::mixed::BitAllocation;
     use crate::quant::{quantize_magnitudes, Scheme};
+    use crate::theory::distortion::DistortionModel;
     use crate::theory::rate_distortion::{d_lower, d_upper};
     use crate::util::rng::Rng;
 
@@ -78,6 +112,34 @@ mod tests {
             assert!(
                 d <= hi * 4.0,
                 "bits={bits}: measured {d} far above upper bound {hi}"
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_model_tracks_analytic_bounds_per_group() {
+        // the measured-quantizer model stays within the §IV sandwich on
+        // every group, so allocating against it agrees with the analytic
+        // model to within the bound gap
+        let lambdas = [4.0, 15.0, 60.0];
+        let theta_max: Vec<f64> = lambdas.iter().map(|l| 8.0 / l).collect();
+        let model = EmpiricalUniformModel::new(theta_max);
+        for bits in 4..=8u32 {
+            let alloc = BitAllocation::new(
+                &[bits; 3],
+                &lambdas,
+                &[1.0, 1.0, 1.0],
+            )
+            .unwrap();
+            let measured = model.predict(&alloc);
+            let rate = (bits - 1) as f64;
+            let lo: f64 =
+                lambdas.iter().map(|l| d_lower(rate, *l) / 3.0).sum();
+            let hi: f64 =
+                lambdas.iter().map(|l| d_upper(rate, *l) / 3.0).sum();
+            assert!(
+                measured >= lo * 0.95 && measured <= hi * 4.0,
+                "bits {bits}: {measured} outside [{lo}, {hi}]-ish"
             );
         }
     }

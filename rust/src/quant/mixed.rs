@@ -1,0 +1,634 @@
+//! Mixed-precision bit allocation (ROADMAP item 3; QVLA / DyQ-VLA).
+//!
+//! The paper's joint design (§IV) picks one static bit-width per agent,
+//! but the §III distortion machinery is group-decomposable: channels are
+//! not equally sensitive (QVLA), so spending more bits on heavy-tailed
+//! channel groups and fewer on sharply-peaked ones strictly lowers the
+//! distortion upper bound at the *same average rate*. This module owns
+//! that machinery:
+//!
+//! - [`BitAllocation`] — a per-group bit vector over contiguous channel
+//!   groups of a layer stack, each group carrying its fitted Exp(λ_g)
+//!   magnitude model and its parameter-mass weight w_g (Σ w_g = 1). The
+//!   group-decomposed §IV bounds are exact sums:
+//!   D^U(alloc) = Σ_g w_g D^U(b_g - 1, λ_g).
+//! - [`allocate_bits`] — greedy marginal-gain water-filling over integer
+//!   bits minimizing any [`DistortionModel`] subject to the average-rate
+//!   budget Σ w_g b_g <= R̄. The uniform-b̂ allocation is kept as an
+//!   explicit candidate, so mixed <= best-static is structural, not
+//!   empirical.
+//! - [`QuantPolicy`] — the per-agent knob the fleet layer threads through
+//!   [`crate::opt::fleet::AgentSpec`]: keep the solver's static pick,
+//!   pin a bit-width, pin a mixed allocation, or adapt online
+//!   ([`AdaptConfig`]) by re-picking the max-feasible bit-width at every
+//!   warm re-solve boundary — the DyQ-VLA move, landing exactly where
+//!   `AdmissionPricing::Measured` already re-prices admission from epoch
+//!   telemetry.
+//!
+//! Distortion prediction is behind [`DistortionModel`]
+//! (`theory::distortion`), so the allocator runs identically against the
+//! analytic rate bound, the empirical uniform-quantizer integral, the
+//! eq. 15 surrogate, or the Prop. 3.1 output bound.
+
+use crate::theory::distortion::DistortionModel;
+use crate::theory::expdist::ExponentialModel;
+use crate::theory::rate_distortion as rd;
+use crate::util::cli::ParseError;
+
+/// Fixed capacity of a [`BitAllocation`] (keeps the type `Copy`, like
+/// every other spec type the fleet hashes and replays).
+pub const MAX_GROUPS: usize = 16;
+
+/// A per-group bit vector over contiguous channel groups, plus each
+/// group's fitted exponential magnitude model λ_g and parameter-mass
+/// weight w_g. Weights are normalized to sum to 1 at construction, so
+/// `avg_bits` is the average rate in bits/parameter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BitAllocation {
+    len: usize,
+    bits: [u8; MAX_GROUPS],
+    lambda: [f64; MAX_GROUPS],
+    weight: [f64; MAX_GROUPS],
+}
+
+impl BitAllocation {
+    /// Build and validate an allocation. Group count must be in
+    /// `1..=MAX_GROUPS`, slices equal-length, bits in `1..=32`, every
+    /// λ_g finite and positive, every weight finite and positive
+    /// (weights are normalized to sum to 1).
+    pub fn new(bits: &[u32], lambdas: &[f64], weights: &[f64]) -> Result<BitAllocation, String> {
+        let n = bits.len();
+        if n == 0 || n > MAX_GROUPS {
+            return Err(format!("group count {n} outside 1..={MAX_GROUPS}"));
+        }
+        if lambdas.len() != n || weights.len() != n {
+            return Err(format!(
+                "mismatched group slices: {} bits, {} lambdas, {} weights",
+                n,
+                lambdas.len(),
+                weights.len()
+            ));
+        }
+        let mut alloc = BitAllocation {
+            len: n,
+            bits: [0; MAX_GROUPS],
+            lambda: [0.0; MAX_GROUPS],
+            weight: [0.0; MAX_GROUPS],
+        };
+        let mut wsum = 0.0;
+        for g in 0..n {
+            if !(1..=32).contains(&bits[g]) {
+                return Err(format!("group {g}: bit-width {} outside 1..=32", bits[g]));
+            }
+            if !(lambdas[g].is_finite() && lambdas[g] > 0.0) {
+                return Err(format!("group {g}: lambda {} not finite positive", lambdas[g]));
+            }
+            if !(weights[g].is_finite() && weights[g] > 0.0) {
+                return Err(format!("group {g}: weight {} not finite positive", weights[g]));
+            }
+            alloc.bits[g] = bits[g] as u8;
+            alloc.lambda[g] = lambdas[g];
+            alloc.weight[g] = weights[g];
+            wsum += weights[g];
+        }
+        for g in 0..n {
+            alloc.weight[g] /= wsum;
+        }
+        Ok(alloc)
+    }
+
+    /// The uniform allocation at bit-width `bits` over the same groups —
+    /// the static baseline mixed precision must match or beat.
+    pub fn uniform_like(&self, bits: u32) -> BitAllocation {
+        let mut u = *self;
+        for g in 0..u.len {
+            u.bits[g] = bits.clamp(1, 32) as u8;
+        }
+        u
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// `(bits, lambda, weight)` per group, in channel order.
+    pub fn groups(&self) -> impl Iterator<Item = (u32, f64, f64)> + '_ {
+        (0..self.len).map(move |g| (self.bits[g] as u32, self.lambda[g], self.weight[g]))
+    }
+
+    pub fn bits(&self) -> Vec<u32> {
+        (0..self.len).map(|g| self.bits[g] as u32).collect()
+    }
+
+    /// Average rate Σ w_g b_g in bits/parameter (the budget quantity).
+    pub fn avg_bits(&self) -> f64 {
+        self.groups().map(|(b, _, w)| w * b as f64).sum()
+    }
+
+    /// Integer bit-width the fleet's delay/energy design is planned at:
+    /// compute cycles scale with the *average* rate (§II-D), so the
+    /// pinned design bit-width is round(Σ w_g b_g), at least 1.
+    pub fn pinned_bits(&self) -> u32 {
+        (self.avg_bits().round() as u32).max(1)
+    }
+
+    /// Group-decomposed Prop. 4.2 bound: Σ w_g D^U(b_g - 1, λ_g).
+    pub fn d_upper_total(&self) -> f64 {
+        self.groups().map(|(b, l, w)| w * rd::d_upper(b as f64 - 1.0, l)).sum()
+    }
+
+    /// Group-decomposed (P1) objective: Σ w_g (D^U - D^L)(b_g - 1, λ_g).
+    pub fn bound_gap_total(&self) -> f64 {
+        self.groups().map(|(b, l, w)| w * rd::bound_gap(b as f64, l)).sum()
+    }
+
+    /// Distortion of not serving at all (every group reconstructed as 0):
+    /// Σ w_g E[Θ_g] = Σ w_g / λ_g — the mixed-precision analog of the
+    /// single-λ rejection distortion 1/λ.
+    pub fn miss_distortion(&self) -> f64 {
+        self.groups().map(|(_, l, w)| w / l).sum()
+    }
+
+    /// Content hash (order-sensitive, f64s by bit pattern) — feeds
+    /// `FleetSpec`'s hash so warm caches and churn fingerprints see
+    /// allocation changes like any other re-solve input.
+    pub fn hash_content<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_usize(self.len);
+        for (b, l, w) in self.groups() {
+            state.write_u32(b);
+            state.write_u64(l.to_bits());
+            state.write_u64(w.to_bits());
+        }
+    }
+}
+
+/// Split a flat weight blob into `n_groups` contiguous channel groups and
+/// MLE-fit each group's Exp(λ_g) magnitude model; returns per-group
+/// (λ_g, w_g) with w_g the group's fraction of parameters. This is the
+/// calibration front half of [`allocate_bits`].
+pub fn fit_groups(weights: &[f32], n_groups: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n_groups >= 1 && n_groups <= MAX_GROUPS, "n_groups {n_groups}");
+    assert!(weights.len() >= n_groups, "fewer weights than groups");
+    let models = ExponentialModel::fit_channel_groups(weights, n_groups);
+    let n = weights.len();
+    let lambdas = models.iter().map(|m| m.lambda).collect();
+    let fracs = (0..n_groups)
+        .map(|g| {
+            let lo = g * n / n_groups;
+            let hi = (g + 1) * n / n_groups;
+            (hi - lo) as f64 / n as f64
+        })
+        .collect();
+    (lambdas, fracs)
+}
+
+/// Greedy marginal-gain water-filling: starting from 1 bit everywhere,
+/// repeatedly grant +1 bit to the group with the largest distortion
+/// decrease per unit of average-rate spend (Δ`model.predict` / w_g),
+/// subject to Σ w_g b_g <= `avg_rate` and b_g <= `b_max`. The uniform
+/// allocation at b̂ = ⌊R̄⌋ is evaluated as an explicit candidate and
+/// returned instead whenever it predicts strictly lower distortion, so
+/// the result is never worse than the best uniform static at the same
+/// average rate — by construction, for *any* monotone distortion model.
+pub fn allocate_bits(
+    lambdas: &[f64],
+    weights: &[f64],
+    avg_rate: f64,
+    b_max: u32,
+    model: &dyn DistortionModel,
+) -> Result<BitAllocation, String> {
+    if !(avg_rate.is_finite() && avg_rate >= 1.0) {
+        return Err(format!("average rate {avg_rate} must be finite and >= 1"));
+    }
+    if !(1..=32).contains(&b_max) {
+        return Err(format!("b_max {b_max} outside 1..=32"));
+    }
+    let ones = vec![1u32; lambdas.len()];
+    let mut cur = BitAllocation::new(&ones, lambdas, weights)?;
+    let mut cur_pred = model.predict(&cur);
+    loop {
+        let avg = cur.avg_bits();
+        let mut best: Option<(usize, f64, f64)> = None; // (group, gain/w, pred)
+        for g in 0..cur.len {
+            if cur.bits[g] as u32 >= b_max {
+                continue;
+            }
+            if avg + cur.weight[g] > avg_rate + 1e-12 {
+                continue;
+            }
+            let mut cand = cur;
+            cand.bits[g] += 1;
+            let pred = model.predict(&cand);
+            let rate = (cur_pred - pred) / cur.weight[g];
+            let better = match best {
+                None => true,
+                Some((_, r, _)) => rate > r,
+            };
+            if better {
+                best = Some((g, rate, pred));
+            }
+        }
+        match best {
+            Some((g, rate, pred)) if rate > 0.0 => {
+                cur.bits[g] += 1;
+                cur_pred = pred;
+            }
+            _ => break,
+        }
+    }
+    let uniform = cur.uniform_like((avg_rate.floor() as u32).clamp(1, b_max));
+    if model.predict(&uniform) < cur_pred {
+        Ok(uniform)
+    } else {
+        Ok(cur)
+    }
+}
+
+/// Online adaptation bounds for [`QuantPolicy::Adaptive`]: at every
+/// (re-)solve the agent takes the solver's max-feasible bit-width,
+/// clamped into `[min_bits, max_bits - round(pressure * pressure_backoff)]`
+/// where `pressure` is the agent's measured deadline-violation pressure
+/// from the previous telemetry epoch (`FleetSpec::pressure`, the same
+/// signal `AdmissionPricing::Measured` prices admission with). The
+/// default (1, 16, 0.0) reproduces the unconstrained solver pick
+/// bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptConfig {
+    /// Never serve below this bit-width (clamping up may turn an
+    /// otherwise-servable agent into a rejection — that is the point).
+    pub min_bits: u32,
+    /// Never serve above this bit-width.
+    pub max_bits: u32,
+    /// Bits of headroom shed per unit of measured violation pressure
+    /// (pressure in [0, 1]; backoff bits = round(pressure * this)).
+    pub pressure_backoff: f64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> AdaptConfig {
+        AdaptConfig { min_bits: 1, max_bits: 16, pressure_backoff: 0.0 }
+    }
+}
+
+impl AdaptConfig {
+    /// Upper clamp after shedding `round(pressure * pressure_backoff)`
+    /// bits, never below `min_bits`.
+    pub fn effective_max(&self, pressure: f64) -> u32 {
+        let shed = (pressure.clamp(0.0, 1.0) * self.pressure_backoff).round() as u32;
+        self.max_bits.saturating_sub(shed).max(self.min_bits)
+    }
+
+    pub fn validate(&self, b_max: u32) -> Result<(), String> {
+        if self.min_bits < 1 || self.min_bits > self.max_bits {
+            return Err(format!(
+                "adaptive bit range [{}, {}] invalid",
+                self.min_bits, self.max_bits
+            ));
+        }
+        if self.max_bits > b_max {
+            return Err(format!("adaptive max_bits {} above b_max {b_max}", self.max_bits));
+        }
+        if !(self.pressure_backoff.is_finite() && self.pressure_backoff >= 0.0) {
+            return Err(format!(
+                "pressure_backoff {} not finite non-negative",
+                self.pressure_backoff
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-agent quantization policy, threaded through
+/// [`crate::opt::fleet::AgentSpec`] (and from there through churn,
+/// events, and the daemon). The default, `Static(None)`, is the
+/// pre-mixed-precision behavior bit-for-bit: the solver's bisection
+/// picks the max-feasible bit-width and the objective prices it with the
+/// single-λ bound gap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QuantPolicy {
+    /// `None`: solver picks (legacy). `Some(b)`: pin bit-width b — the
+    /// agent serves at exactly b or is rejected.
+    Static(Option<u32>),
+    /// Pin a per-group mixed-precision allocation; the delay/energy
+    /// design is planned at `BitAllocation::pinned_bits()` and the
+    /// objective prices the group-decomposed bounds.
+    Mixed(BitAllocation),
+    /// Re-pick the max-feasible bit-width at every (warm) re-solve,
+    /// clamped by [`AdaptConfig`] and backed off under measured
+    /// pressure.
+    Adaptive(AdaptConfig),
+}
+
+impl Default for QuantPolicy {
+    fn default() -> QuantPolicy {
+        QuantPolicy::Static(None)
+    }
+}
+
+impl QuantPolicy {
+    /// True for the legacy solver-picks default (used to keep hashes and
+    /// class keys byte-identical for pre-existing specs).
+    pub fn is_default(&self) -> bool {
+        matches!(self, QuantPolicy::Static(None))
+    }
+
+    /// Report/CLI label.
+    pub fn label(&self) -> String {
+        match self {
+            QuantPolicy::Static(None) => "static".into(),
+            QuantPolicy::Static(Some(b)) => format!("static:{b}"),
+            QuantPolicy::Mixed(a) => format!("mixed:{}g@{:.2}", a.len(), a.avg_bits()),
+            QuantPolicy::Adaptive(c) => {
+                if c.pressure_backoff > 0.0 {
+                    format!("adaptive:{}-{}:{}", c.min_bits, c.max_bits, c.pressure_backoff)
+                } else {
+                    format!("adaptive:{}-{}", c.min_bits, c.max_bits)
+                }
+            }
+        }
+    }
+
+    /// True when the policy *reads* measured violation pressure (an
+    /// adaptive window with a non-zero backoff): telemetry must then
+    /// participate in the fleet fingerprint so epoch boundaries can
+    /// re-pick bit-widths, exactly like
+    /// [`AdmissionPricing::Measured`](crate::opt::fleet::AdmissionPricing)
+    /// re-prices admission.
+    pub fn pressure_sensitive(&self) -> bool {
+        matches!(self, QuantPolicy::Adaptive(c) if c.pressure_backoff > 0.0)
+    }
+
+    /// Pinned design bit-width, if this policy pins one.
+    pub fn pinned_bits(&self) -> Option<u32> {
+        match self {
+            QuantPolicy::Static(Some(b)) => Some(*b),
+            QuantPolicy::Mixed(a) => Some(a.pinned_bits()),
+            _ => None,
+        }
+    }
+
+    /// Bit-width at which servability/admission floors probe feasibility:
+    /// the pinned width for pinning policies (serving below it is not an
+    /// option), `min_bits` for adaptive, 1 for the legacy default.
+    pub fn probe_bits(&self) -> f64 {
+        match self {
+            QuantPolicy::Static(None) => 1.0,
+            QuantPolicy::Static(Some(b)) => *b as f64,
+            QuantPolicy::Mixed(a) => a.pinned_bits() as f64,
+            QuantPolicy::Adaptive(c) => c.min_bits as f64,
+        }
+    }
+
+    pub fn validate(&self, b_max: u32) -> Result<(), String> {
+        match self {
+            QuantPolicy::Static(None) => Ok(()),
+            QuantPolicy::Static(Some(b)) => {
+                if *b < 1 || *b > b_max {
+                    Err(format!("static bit-width {b} outside 1..={b_max}"))
+                } else {
+                    Ok(())
+                }
+            }
+            QuantPolicy::Mixed(a) => {
+                if a.len() == 0 {
+                    return Err("mixed allocation has no groups".into());
+                }
+                for (g, (b, l, w)) in a.groups().enumerate() {
+                    if b < 1 || b > b_max {
+                        return Err(format!("mixed group {g}: bit-width {b} outside 1..={b_max}"));
+                    }
+                    if !(l.is_finite() && l > 0.0) || !(w.is_finite() && w > 0.0) {
+                        return Err(format!("mixed group {g}: invalid (lambda, weight)"));
+                    }
+                }
+                Ok(())
+            }
+            QuantPolicy::Adaptive(c) => c.validate(b_max),
+        }
+    }
+
+    /// Content hash; the default policy hashes to the same single `0`
+    /// tag on every spec, and non-default policies mix in their full
+    /// payload (f64s by bit pattern).
+    pub fn hash_content<H: std::hash::Hasher>(&self, state: &mut H) {
+        match self {
+            QuantPolicy::Static(None) => state.write_u8(0),
+            QuantPolicy::Static(Some(b)) => {
+                state.write_u8(1);
+                state.write_u32(*b);
+            }
+            QuantPolicy::Mixed(a) => {
+                state.write_u8(2);
+                a.hash_content(state);
+            }
+            QuantPolicy::Adaptive(c) => {
+                state.write_u8(3);
+                state.write_u32(c.min_bits);
+                state.write_u32(c.max_bits);
+                state.write_u64(c.pressure_backoff.to_bits());
+            }
+        }
+    }
+
+    /// CLI-facing parser. Accepted spellings:
+    /// `static` | `static:<bits>` | `adaptive` |
+    /// `adaptive:<min>-<max>` | `adaptive:<min>-<max>:<backoff>`.
+    /// (`Mixed` carries a fitted allocation and is constructed
+    /// programmatically, not from a CLI token.)
+    pub fn parse(s: &str) -> Result<QuantPolicy, ParseError> {
+        const CHOICES: &[&str] =
+            &["static", "static:<bits>", "adaptive", "adaptive:<min>-<max>[:<backoff>]"];
+        let err = || ParseError::new("quant policy", s, CHOICES);
+        match s {
+            "static" => return Ok(QuantPolicy::Static(None)),
+            "adaptive" => return Ok(QuantPolicy::Adaptive(AdaptConfig::default())),
+            _ => {}
+        }
+        if let Some(bits) = s.strip_prefix("static:") {
+            let b: u32 = bits.parse().map_err(|_| err())?;
+            if b < 1 {
+                return Err(err());
+            }
+            return Ok(QuantPolicy::Static(Some(b)));
+        }
+        if let Some(body) = s.strip_prefix("adaptive:") {
+            let (range, backoff) = match body.split_once(':') {
+                Some((r, b)) => (r, Some(b)),
+                None => (body, None),
+            };
+            let (lo, hi) = range.split_once('-').ok_or_else(err)?;
+            let min_bits: u32 = lo.parse().map_err(|_| err())?;
+            let max_bits: u32 = hi.parse().map_err(|_| err())?;
+            let pressure_backoff: f64 = match backoff {
+                Some(b) => b.parse().map_err(|_| err())?,
+                None => 0.0,
+            };
+            if min_bits < 1 || max_bits < min_bits || !pressure_backoff.is_finite() {
+                return Err(err());
+            }
+            return Ok(QuantPolicy::Adaptive(AdaptConfig { min_bits, max_bits, pressure_backoff }));
+        }
+        Err(err())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::rate_distortion::RateBoundModel;
+
+    const GOLDEN_LAMBDAS: [f64; 3] = [4.0, 15.0, 60.0];
+
+    fn golden_alloc(avg_rate: f64) -> BitAllocation {
+        allocate_bits(&GOLDEN_LAMBDAS, &[1.0, 1.0, 1.0], avg_rate, 16, &RateBoundModel).unwrap()
+    }
+
+    /// Golden pin of the greedy allocator on the fixed 3-group λ-spread
+    /// stack (λ = [4, 15, 60], equal weights, R̄ = 6): the heavy-tailed
+    /// group earns two extra bits, the sharp group gives two up.
+    #[test]
+    fn golden_three_group_allocation() {
+        let a = golden_alloc(6.0);
+        assert_eq!(a.bits(), vec![8, 6, 4]);
+        assert!(a.avg_bits() <= 6.0 + 1e-12, "{}", a.avg_bits());
+        // and it strictly beats the uniform 6-bit allocation
+        let u = a.uniform_like(6);
+        assert!(a.d_upper_total() < u.d_upper_total());
+    }
+
+    #[test]
+    fn mixed_never_worse_than_uniform_at_equal_rate() {
+        let spreads: [&[f64]; 4] = [
+            &[4.0, 15.0, 60.0],
+            &[15.0, 15.0, 15.0],
+            &[1.0, 10.0, 100.0, 1000.0],
+            &[8.0, 9.0, 10.0, 11.0, 12.0],
+        ];
+        for lambdas in spreads {
+            let w = vec![1.0; lambdas.len()];
+            for rbar in 2..=8u32 {
+                let a = allocate_bits(lambdas, &w, rbar as f64, 16, &RateBoundModel).unwrap();
+                let u = a.uniform_like(rbar);
+                assert!(
+                    a.d_upper_total() <= u.d_upper_total() + 1e-15,
+                    "lambdas {lambdas:?} rbar {rbar}: {} > {}",
+                    a.d_upper_total(),
+                    u.d_upper_total()
+                );
+                assert!(a.avg_bits() <= rbar as f64 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_spread_reduces_to_uniform() {
+        let a =
+            allocate_bits(&[20.0, 20.0, 20.0], &[1.0, 1.0, 1.0], 5.0, 16, &RateBoundModel).unwrap();
+        assert_eq!(a.bits(), vec![5, 5, 5]);
+    }
+
+    #[test]
+    fn budget_monotone() {
+        let mut prev = f64::INFINITY;
+        for rbar in 1..=10 {
+            let a = golden_alloc(rbar as f64);
+            let d = a.d_upper_total();
+            assert!(d <= prev + 1e-18, "rbar {rbar}: {d} > {prev}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn allocation_validation_rejects_bad_groups() {
+        assert!(BitAllocation::new(&[], &[], &[]).is_err());
+        assert!(BitAllocation::new(&[0], &[1.0], &[1.0]).is_err());
+        assert!(BitAllocation::new(&[33], &[1.0], &[1.0]).is_err());
+        assert!(BitAllocation::new(&[4], &[0.0], &[1.0]).is_err());
+        assert!(BitAllocation::new(&[4], &[1.0], &[-1.0]).is_err());
+        assert!(BitAllocation::new(&[4, 4], &[1.0], &[1.0, 1.0]).is_err());
+        let a = BitAllocation::new(&[4, 8], &[10.0, 2.0], &[3.0, 1.0]).unwrap();
+        assert!((a.avg_bits() - 5.0).abs() < 1e-12); // weights normalized: 0.75/0.25
+        assert_eq!(a.pinned_bits(), 5);
+    }
+
+    #[test]
+    fn fit_groups_recovers_spread() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut blob = Vec::new();
+        for lam in GOLDEN_LAMBDAS {
+            for _ in 0..30_000 {
+                let sign = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+                blob.push((sign * rng.exponential(lam)) as f32);
+            }
+        }
+        let (lambdas, fracs) = fit_groups(&blob, 3);
+        for (fit, truth) in lambdas.iter().zip(GOLDEN_LAMBDAS) {
+            assert!((fit - truth).abs() / truth < 0.05, "{fit} vs {truth}");
+        }
+        assert!(fracs.iter().all(|f| (f - 1.0 / 3.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn policy_parse_roundtrip_and_rejection() {
+        assert_eq!(QuantPolicy::parse("static"), Ok(QuantPolicy::Static(None)));
+        assert_eq!(QuantPolicy::parse("static:6"), Ok(QuantPolicy::Static(Some(6))));
+        assert_eq!(QuantPolicy::parse("adaptive"), Ok(QuantPolicy::Adaptive(AdaptConfig::default())));
+        assert_eq!(
+            QuantPolicy::parse("adaptive:2-8"),
+            Ok(QuantPolicy::Adaptive(AdaptConfig { min_bits: 2, max_bits: 8, pressure_backoff: 0.0 }))
+        );
+        assert_eq!(
+            QuantPolicy::parse("adaptive:2-8:3.5"),
+            Ok(QuantPolicy::Adaptive(AdaptConfig { min_bits: 2, max_bits: 8, pressure_backoff: 3.5 }))
+        );
+        for bad in ["", "dynamic", "static:", "static:0", "static:x", "adaptive:8-2", "adaptive:0-4", "adaptive:1..4", "mixed"] {
+            let err = QuantPolicy::parse(bad).unwrap_err();
+            assert_eq!(err.token, bad);
+            assert_eq!(err.what, "quant policy");
+            assert!(err.choices.contains(&"static"), "{:?}", err.choices);
+        }
+    }
+
+    #[test]
+    fn policy_validation_against_b_max() {
+        assert!(QuantPolicy::Static(None).validate(16).is_ok());
+        assert!(QuantPolicy::Static(Some(16)).validate(16).is_ok());
+        assert!(QuantPolicy::Static(Some(17)).validate(16).is_err());
+        assert!(QuantPolicy::Adaptive(AdaptConfig::default()).validate(16).is_ok());
+        assert!(QuantPolicy::Adaptive(AdaptConfig { max_bits: 17, ..Default::default() })
+            .validate(16)
+            .is_err());
+        let a = BitAllocation::new(&[4, 8], &[10.0, 2.0], &[1.0, 1.0]).unwrap();
+        assert!(QuantPolicy::Mixed(a).validate(16).is_ok());
+        assert!(QuantPolicy::Mixed(a).validate(6).is_err());
+    }
+
+    #[test]
+    fn adaptive_effective_max_backs_off_under_pressure() {
+        let c = AdaptConfig { min_bits: 2, max_bits: 10, pressure_backoff: 4.0 };
+        assert_eq!(c.effective_max(0.0), 10);
+        assert_eq!(c.effective_max(0.5), 8);
+        assert_eq!(c.effective_max(1.0), 6);
+        assert_eq!(c.effective_max(5.0), 6); // pressure clamps to 1
+        let deep = AdaptConfig { min_bits: 4, max_bits: 5, pressure_backoff: 8.0 };
+        assert_eq!(deep.effective_max(1.0), 4); // never below min_bits
+    }
+
+    #[test]
+    fn default_policy_hash_is_stable_tag() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::Hasher;
+        let mut h1 = DefaultHasher::new();
+        QuantPolicy::default().hash_content(&mut h1);
+        let mut h2 = DefaultHasher::new();
+        QuantPolicy::Static(None).hash_content(&mut h2);
+        assert_eq!(h1.finish(), h2.finish());
+        let mut h3 = DefaultHasher::new();
+        QuantPolicy::Static(Some(6)).hash_content(&mut h3);
+        assert_ne!(h1.finish(), h3.finish());
+    }
+}

@@ -6,12 +6,21 @@
 //! `fake_quant_*` kernels — the runtime hot path quantizes weight blobs
 //! here (no python), and integration tests cross-check the two
 //! implementations through PJRT on golden buffers.
+//!
+//! The one entry point is [`Quantizer`]: a [`QuantConfig`] (scheme +
+//! bit depth, uniform or per-group mixed precision) validated at
+//! construction, then applied to blobs via [`Quantizer::quantize`] /
+//! [`Quantizer::quantize_into`]. The scheme-specific free functions
+//! remain as thin wrappers for existing call sites; regression tests pin
+//! them bit-identical to their `Quantizer` forms.
 
 pub mod error;
+pub mod mixed;
 pub mod pot;
 pub mod uniform;
 
 pub use error::{mean_abs_distortion, total_l1_distortion};
+pub use mixed::{allocate_bits, AdaptConfig, BitAllocation, QuantPolicy};
 pub use pot::{pot_params, quantize_pot, quantize_pot_into};
 pub use uniform::{quantize_uniform, quantize_uniform_into, uniform_step};
 
@@ -42,9 +51,124 @@ impl Scheme {
     }
 }
 
+/// Bit-depth half of a [`QuantConfig`]: one width for the whole blob, or
+/// a per-group [`BitAllocation`] over contiguous channel groups (each
+/// group gets its own grid scaled to the group's θ_max).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BitDepth {
+    Uniform(u32),
+    PerGroup(BitAllocation),
+}
+
+/// Scheme + bit depth, validated once by [`Quantizer::new`] (the
+/// `FleetSpec` construction pattern: invalid configs are unrepresentable
+/// past the constructor, so the hot path carries no checks).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantConfig {
+    pub scheme: Scheme,
+    pub bits: BitDepth,
+}
+
+/// The unified quantization entry point. Construction validates the
+/// config; [`Quantizer::quantize`]/[`Quantizer::quantize_into`] then
+/// dispatch scheme × depth without further checks. The uniform-depth
+/// paths are bit-identical to the legacy free functions
+/// ([`quantize_magnitudes`], [`quantize_uniform`], [`quantize_pot`] and
+/// their `_into` variants), which regression tests pin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    cfg: QuantConfig,
+}
+
+impl Quantizer {
+    pub fn new(cfg: QuantConfig) -> Result<Quantizer, String> {
+        match cfg.bits {
+            BitDepth::Uniform(b) => {
+                if !(1..=32).contains(&b) {
+                    return Err(format!("bit-width {b} outside 1..=32"));
+                }
+            }
+            // a BitAllocation is validated at its own construction; its
+            // invariants (1..=32 bits, positive weights) are exactly
+            // what the per-group path needs
+            BitDepth::PerGroup(_) => {}
+        }
+        Ok(Quantizer { cfg })
+    }
+
+    pub fn config(&self) -> QuantConfig {
+        self.cfg
+    }
+
+    /// Contiguous index spans of the per-group path: group g covers the
+    /// slice between the cumulative-weight boundaries rounded to indices
+    /// (the same contiguous-channel-group convention as
+    /// [`mixed::fit_groups`]).
+    fn group_spans(alloc: &BitAllocation, n: usize) -> Vec<(usize, usize)> {
+        let count = alloc.len();
+        let mut spans = Vec::with_capacity(count);
+        let mut cum = 0.0;
+        let mut lo = 0usize;
+        for (g, (_, _, w)) in alloc.groups().enumerate() {
+            cum += w;
+            let hi = if g + 1 == count { n } else { ((cum * n as f64).round() as usize).clamp(lo, n) };
+            spans.push((lo, hi));
+            lo = hi;
+        }
+        spans
+    }
+
+    fn quantize_span(scheme: Scheme, bits: u32, span: &[f32], out: &mut [f32]) {
+        let theta_max = span.iter().fold(0.0f32, |m, w| m.max(w.abs()));
+        match scheme {
+            Scheme::Uniform => {
+                quantize_uniform_into(span, uniform_step(theta_max, bits), out)
+            }
+            Scheme::Pot => {
+                let (emin, emax) = pot_params(theta_max, bits);
+                quantize_pot_into(span, emin, emax, out)
+            }
+        }
+    }
+
+    /// In-place variant for the runtime hot path (no allocation).
+    pub fn quantize_into(&self, weights: &[f32], out: &mut [f32]) {
+        assert_eq!(weights.len(), out.len());
+        match self.cfg.bits {
+            BitDepth::Uniform(b) => Self::quantize_span(self.cfg.scheme, b, weights, out),
+            BitDepth::PerGroup(alloc) => {
+                for ((lo, hi), (bits, _, _)) in
+                    Self::group_spans(&alloc, weights.len()).into_iter().zip(alloc.groups())
+                {
+                    if lo < hi {
+                        Self::quantize_span(
+                            self.cfg.scheme,
+                            bits,
+                            &weights[lo..hi],
+                            &mut out[lo..hi],
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn quantize(&self, weights: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; weights.len()];
+        self.quantize_into(weights, &mut out);
+        out
+    }
+}
+
 /// Quantize a weight blob at total bit-width `bits` with the given scheme.
 /// `bits == 0` is rejected; `bits == 1` keeps only signs (all magnitudes
 /// collapse); `bits >= 23`-ish is effectively lossless for f32.
+///
+/// Deprecated entry point: prefer
+/// `Quantizer::new(QuantConfig { scheme, bits: BitDepth::Uniform(bits) })`,
+/// which validates once and also covers per-group mixed precision. Kept
+/// as a bit-identical wrapper for existing call sites (pinned by the
+/// `quantizer_matches_*` regression tests).
 pub fn quantize_magnitudes(weights: &[f32], bits: u32, scheme: Scheme) -> Vec<f32> {
     assert!(bits >= 1, "need at least the sign bit");
     let theta_max = weights.iter().fold(0.0f32, |m, w| m.max(w.abs()));
@@ -181,6 +305,89 @@ mod tests {
         let w = blob(9, 128);
         let q = quantize_magnitudes(&w, 1, Scheme::Uniform);
         assert!(q.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn quantizer_matches_free_fns_bit_for_bit() {
+        // the deprecated-doc'd free fns must stay bit-identical to their
+        // Quantizer forms, for every scheme and bit width
+        let w = blob(13, 2048);
+        for scheme in [Scheme::Uniform, Scheme::Pot] {
+            for bits in 1..=12u32 {
+                let q = Quantizer::new(QuantConfig { scheme, bits: BitDepth::Uniform(bits) })
+                    .unwrap();
+                let via_quantizer = q.quantize(&w);
+                let via_free = quantize_magnitudes(&w, bits, scheme);
+                assert_eq!(via_quantizer, via_free, "{scheme:?} bits={bits}");
+                // and the raw scheme fns through precomputed grids
+                let theta_max = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let via_raw = match scheme {
+                    Scheme::Uniform => quantize_uniform(&w, uniform_step(theta_max, bits)),
+                    Scheme::Pot => {
+                        let (lo, hi) = pot_params(theta_max, bits);
+                        quantize_pot(&w, lo, hi)
+                    }
+                };
+                assert_eq!(via_quantizer, via_raw, "{scheme:?} bits={bits} (raw)");
+                // _into variants agree too
+                let mut buf = vec![0.0f32; w.len()];
+                q.quantize_into(&w, &mut buf);
+                assert_eq!(buf, via_free, "{scheme:?} bits={bits} (into)");
+            }
+        }
+    }
+
+    #[test]
+    fn quantizer_validates_at_construction() {
+        assert!(Quantizer::new(QuantConfig {
+            scheme: Scheme::Uniform,
+            bits: BitDepth::Uniform(0)
+        })
+        .is_err());
+        assert!(Quantizer::new(QuantConfig {
+            scheme: Scheme::Uniform,
+            bits: BitDepth::Uniform(33)
+        })
+        .is_err());
+        assert!(Quantizer::new(QuantConfig {
+            scheme: Scheme::Pot,
+            bits: BitDepth::Uniform(8)
+        })
+        .is_ok());
+    }
+
+    #[test]
+    fn per_group_depth_scales_each_group_grid() {
+        // two groups with very different magnitude scales: a shared
+        // uniform grid wastes levels on the small group; per-group grids
+        // (same average rate) cut its distortion
+        let mut rng = Rng::new(55);
+        let n = 4096;
+        let mut w: Vec<f32> = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            w.push((2.0 * rng.normal()) as f32); // heavy group
+        }
+        for _ in 0..n {
+            w.push((0.02 * rng.normal()) as f32); // sharp group
+        }
+        let alloc = BitAllocation::new(&[6, 6], &[0.5, 50.0], &[1.0, 1.0]).unwrap();
+        let grouped = Quantizer::new(QuantConfig {
+            scheme: Scheme::Uniform,
+            bits: BitDepth::PerGroup(alloc),
+        })
+        .unwrap()
+        .quantize(&w);
+        let shared = quantize_magnitudes(&w, 6, Scheme::Uniform);
+        let sharp = n..2 * n;
+        let d_grouped = total_l1_distortion(&w[sharp.clone()], &grouped[sharp.clone()]);
+        let d_shared = total_l1_distortion(&w[sharp.clone()], &shared[sharp]);
+        assert!(
+            d_grouped < d_shared * 0.25,
+            "per-group {d_grouped} vs shared {d_shared}"
+        );
+        // group spans tile the blob exactly
+        let spans = Quantizer::group_spans(&alloc, 2 * n);
+        assert_eq!(spans, vec![(0, n), (n, 2 * n)]);
     }
 
     #[test]

@@ -15,6 +15,29 @@
 //! empirically in the Fig. 3 bench.
 
 use crate::metrics::stats;
+use crate::quant::mixed::BitAllocation;
+use crate::quant::{quantize_magnitudes, Scheme};
+
+/// One interface over the repo's distortion predictors (§III + §IV): map
+/// a per-group [`BitAllocation`] to a scalar predicted distortion. The
+/// mixed-precision allocator ([`crate::quant::mixed::allocate_bits`])
+/// and the fleet objective compare predictions, so implementations only
+/// need a consistent scale of their own — not a shared unit:
+///
+/// - [`crate::theory::rate_distortion::RateBoundModel`] — the analytic
+///   Prop. 4.2 bound Σ w_g D^U(b_g - 1, λ_g) (per-parameter units).
+/// - [`crate::quant::error::EmpiricalUniformModel`] — the numerically
+///   integrated distortion of a *real* uniform quantizer per group.
+/// - [`SurrogateModel`] — the paper's eq. 15 surrogate on actual weight
+///   blobs, one blob per group (total-L1 units).
+/// - [`OutputBoundModel`] — the Prop. 3.1 end-to-end output bound, one
+///   layer per group (output-L1 units).
+pub trait DistortionModel {
+    /// Predicted distortion of quantizing at `alloc`'s per-group
+    /// bit-widths. Must be monotone non-increasing in every group's
+    /// bits for the greedy allocator's water-filling to be meaningful.
+    fn predict(&self, alloc: &BitAllocation) -> f64;
+}
 
 /// A dense layer weight matrix, row-major, mapping x (cols) -> y (rows):
 /// y = W x.
@@ -136,6 +159,66 @@ pub fn surrogate_l1(orig: &[LayerMatrix], quant: &[LayerMatrix]) -> f64 {
 /// runtime path — per-parameter mean absolute perturbation.
 pub fn surrogate_l1_flat(orig: &[f32], quant: &[f32]) -> f64 {
     stats::l1_dist(orig, quant)
+}
+
+/// [`DistortionModel`] over the eq. 15 surrogate: one flat weight blob
+/// per allocation group, each quantized at its group's bit-width with
+/// the configured scheme; predicts the summed entrywise-L1 distortion.
+#[derive(Debug, Clone)]
+pub struct SurrogateModel {
+    groups: Vec<Vec<f32>>,
+    scheme: Scheme,
+}
+
+impl SurrogateModel {
+    pub fn new(groups: Vec<Vec<f32>>, scheme: Scheme) -> SurrogateModel {
+        assert!(!groups.is_empty() && groups.iter().all(|g| !g.is_empty()));
+        SurrogateModel { groups, scheme }
+    }
+}
+
+impl DistortionModel for SurrogateModel {
+    fn predict(&self, alloc: &BitAllocation) -> f64 {
+        assert_eq!(alloc.len(), self.groups.len(), "allocation/group count mismatch");
+        alloc
+            .groups()
+            .zip(&self.groups)
+            .map(|((bits, _, _), blob)| {
+                let q = quantize_magnitudes(blob, bits, self.scheme);
+                surrogate_l1_flat(blob, &q)
+            })
+            .sum()
+    }
+}
+
+/// [`DistortionModel`] over the Prop. 3.1 output bound: one layer per
+/// allocation group; predicts the end-to-end output-L1 bound of
+/// quantizing layer g at b_g bits.
+#[derive(Debug, Clone)]
+pub struct OutputBoundModel {
+    layers: Vec<LayerMatrix>,
+    scheme: Scheme,
+}
+
+impl OutputBoundModel {
+    pub fn new(layers: Vec<LayerMatrix>, scheme: Scheme) -> OutputBoundModel {
+        assert!(!layers.is_empty());
+        OutputBoundModel { layers, scheme }
+    }
+}
+
+impl DistortionModel for OutputBoundModel {
+    fn predict(&self, alloc: &BitAllocation) -> f64 {
+        assert_eq!(alloc.len(), self.layers.len(), "allocation/layer count mismatch");
+        let quant: Vec<LayerMatrix> = alloc
+            .groups()
+            .zip(&self.layers)
+            .map(|((bits, _, _), w)| {
+                LayerMatrix::new(w.rows, w.cols, quantize_magnitudes(&w.data, bits, self.scheme))
+            })
+            .collect();
+        output_distortion_bound(&self.layers, &quant)
+    }
 }
 
 /// Empirical first-order constant H of Remark 3.2: given measured
@@ -273,6 +356,54 @@ mod tests {
         let net = random_net(&mut rng, &[5, 7, 3], 0.5);
         assert_eq!(output_distortion_bound(&net, &net.clone()), 0.0);
         assert_eq!(surrogate_l1(&net, &net.clone()), 0.0);
+    }
+
+    #[test]
+    fn distortion_models_are_monotone_in_group_bits() {
+        let mut rng = Rng::new(41);
+        let net = random_net(&mut rng, &[6, 8, 8, 4], 0.3);
+        let blobs: Vec<Vec<f32>> = net.iter().map(|w| w.data.clone()).collect();
+        let lambdas: Vec<f64> = blobs
+            .iter()
+            .map(|b| crate::theory::expdist::ExponentialModel::fit_weights(b).lambda)
+            .collect();
+        let weights = vec![1.0; blobs.len()];
+        let surrogate = SurrogateModel::new(blobs, Scheme::Uniform);
+        let output = OutputBoundModel::new(net, Scheme::Uniform);
+        let models: [&dyn DistortionModel; 2] = [&surrogate, &output];
+        for model in models {
+            let mut prev = f64::INFINITY;
+            for bits in 2..=8u32 {
+                let alloc = BitAllocation::new(
+                    &vec![bits; lambdas.len()],
+                    &lambdas,
+                    &weights,
+                )
+                .unwrap();
+                let d = model.predict(&alloc);
+                assert!(d <= prev * 1.001 + 1e-12, "bits {bits}: {d} > {prev}");
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn surrogate_model_matches_free_fn_sum() {
+        let mut rng = Rng::new(42);
+        let blobs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..256).map(|_| (0.2 * rng.normal()) as f32).collect())
+            .collect();
+        let model = SurrogateModel::new(blobs.clone(), Scheme::Pot);
+        let alloc =
+            BitAllocation::new(&[3, 5, 7], &[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]).unwrap();
+        let expected: f64 = blobs
+            .iter()
+            .zip([3u32, 5, 7])
+            .map(|(b, bits)| {
+                surrogate_l1_flat(b, &quantize_magnitudes(b, bits, Scheme::Pot))
+            })
+            .sum();
+        assert_eq!(model.predict(&alloc), expected);
     }
 
     #[test]

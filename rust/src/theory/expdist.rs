@@ -41,6 +41,20 @@ impl ExponentialModel {
         Self::fit(weights.iter().map(|w| w.abs() as f64))
     }
 
+    /// Per-group MLE fits over `n_groups` contiguous channel groups of a
+    /// flat weight blob — the calibration step of mixed-precision
+    /// allocation (QVLA: channel groups have visibly different λ, which
+    /// is exactly the spread the per-group bit allocator exploits).
+    /// Group g covers `[g·n/n_groups, (g+1)·n/n_groups)`.
+    pub fn fit_channel_groups(weights: &[f32], n_groups: usize) -> Vec<ExponentialModel> {
+        assert!(n_groups >= 1, "need at least one group");
+        assert!(weights.len() >= n_groups, "fewer weights than groups");
+        let n = weights.len();
+        (0..n_groups)
+            .map(|g| Self::fit_weights(&weights[g * n / n_groups..(g + 1) * n / n_groups]))
+            .collect()
+    }
+
     pub fn pdf(&self, theta: f64) -> f64 {
         if theta < 0.0 {
             0.0
@@ -90,6 +104,26 @@ mod tests {
         let xs: Vec<f64> = (0..100_000).map(|_| rng.exponential(truth)).collect();
         let model = ExponentialModel::fit(xs.iter().copied());
         assert!((model.lambda - truth).abs() / truth < 0.02, "{}", model.lambda);
+    }
+
+    #[test]
+    fn channel_group_fits_recover_per_group_lambdas() {
+        let mut rng = Rng::new(3);
+        let truths = [5.0, 40.0, 160.0];
+        let mut blob = Vec::new();
+        for t in truths {
+            for _ in 0..50_000 {
+                blob.push(rng.exponential(t) as f32);
+            }
+        }
+        let models = ExponentialModel::fit_channel_groups(&blob, 3);
+        assert_eq!(models.len(), 3);
+        for (m, t) in models.iter().zip(truths) {
+            assert!((m.lambda - t).abs() / t < 0.03, "{} vs {t}", m.lambda);
+        }
+        // one group collapses to the pooled fit
+        let pooled = ExponentialModel::fit_channel_groups(&blob, 1);
+        assert_eq!(pooled[0], ExponentialModel::fit_weights(&blob));
     }
 
     #[test]

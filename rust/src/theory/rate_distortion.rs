@@ -56,6 +56,19 @@ pub fn bound_gap(b_hat: f64, lambda: f64) -> f64 {
     d_upper(b_hat - 1.0, lambda) - d_lower(b_hat - 1.0, lambda)
 }
 
+/// The analytic [`DistortionModel`]: group-decomposed Prop. 4.2 bound
+/// Σ_g w_g D^U(b_g - 1, λ_g). This is what the fleet objective and the
+/// default mixed-precision allocator optimize — no weight blobs needed,
+/// only the fitted per-group λ the allocation already carries.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RateBoundModel;
+
+impl crate::theory::distortion::DistortionModel for RateBoundModel {
+    fn predict(&self, alloc: &crate::quant::mixed::BitAllocation) -> f64 {
+        alloc.d_upper_total()
+    }
+}
+
 /// SCA surrogate pieces (§V-B, eq. 33/34): the linear lower bound of
 /// D^L(b̃-1) = 1/(λ 2^{b̃}) around b_k, and the resulting convex
 /// majorant ζ̄ of the objective.

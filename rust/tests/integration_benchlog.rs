@@ -211,7 +211,10 @@ fn committed_ci_baseline_verifies_and_gates_orderings() {
     let baseline = BenchLog::open(base_path);
     let entries = baseline.entries().expect("baseline digests verify");
     let benches: Vec<&str> = entries.iter().map(|e| e.bench.as_str()).collect();
-    assert_eq!(benches, ["fleet_churn", "fleet_scale", "fleet_placement", "fleet_daemon"]);
+    assert_eq!(
+        benches,
+        ["fleet_churn", "fleet_scale", "fleet_placement", "fleet_daemon", "fleet_quant"]
+    );
 
     // an order-preserving transform of every tracked field (a "healthy
     // run on a different machine"): strictly monotone, so strict
